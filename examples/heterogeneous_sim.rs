@@ -1,0 +1,40 @@
+//! Cluster-scale heterogeneity demo: schedule MATCHNET across a 64-type
+//! pool (the paper's Grid5000-style scenario, §6.2 footnote) with RL,
+//! then replay the plan on the discrete-event simulator to see measured
+//! throughput/cost including stragglers and dispatch overheads.
+//!
+//!     cargo run --release --example heterogeneous_sim
+
+use heterps::metrics::Table;
+use heterps::prelude::*;
+use heterps::sched::rl::{RlConfig, RlScheduler};
+use heterps::simulator::{simulate_plan, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    let model = heterps::model::zoo::matchnet();
+    let mut table = Table::new(
+        "RL scheduling + DES replay across pool sizes (MATCHNET)",
+        &["types", "stages", "analytic $", "simulated $", "analytic thr", "simulated thr", "bottleneck"],
+    );
+    for types in [2usize, 8, 16, 32, 64] {
+        let pool = simulated_types(types, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = RlScheduler::lstm(RlConfig::default(), 42).schedule(&cm);
+        let sim = simulate_plan(&cm, &out.plan, &SimConfig::default(), 42);
+        let (sim_cost, sim_thr, bott) = match &sim {
+            Some(s) => (format!("{:.2}", s.cost_usd), format!("{:.0}", s.throughput), s.bottleneck_stage.to_string()),
+            None => ("/".into(), "/".into(), "/".into()),
+        };
+        table.row(&[
+            types.to_string(),
+            out.plan.stages().len().to_string(),
+            format!("{:.2}", out.eval.cost_usd),
+            sim_cost,
+            format!("{:.0}", out.eval.throughput),
+            sim_thr,
+            bott,
+        ]);
+    }
+    table.emit("heterogeneous_sim");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: schedule a CTR model onto a heterogeneous pool with the
+//! RL-LSTM scheduler, provision it, and price the training run.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (Run `make artifacts` first for the HLO LSTM policy; without artifacts
+//! the scheduler transparently falls back to the tabular policy.)
+
+use heterps::prelude::*;
+use heterps::sched::rl::{RlConfig, RlScheduler};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's default testbed: Intel 6271C CPU cores at $0.04/h and
+    // V100s at $2.42/h (§6), elastic up to the cluster limits.
+    let model = heterps::model::zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+
+    // Algorithm 1: REINFORCE over the LSTM scheduling policy.
+    let mut scheduler = RlScheduler::lstm(RlConfig::default(), 42);
+    let out = scheduler.schedule(&cm);
+
+    println!("model        : {} ({} layers)", model.name, model.num_layers());
+    println!("plan         : {}", out.plan.render());
+    for span in out.plan.stages() {
+        println!(
+            "  stage {}: layers {}..={} on {} x{}",
+            span.index,
+            span.first_layer,
+            span.last_layer,
+            pool.get(span.type_id).name,
+            out.eval.provisioning.replicas[span.index],
+        );
+    }
+    println!("ps cores     : {}", out.eval.provisioning.ps_cpu_cores);
+    println!(
+        "throughput   : {:.0} samples/s (floor {:.0})",
+        out.eval.throughput, cm.cfg.throughput_limit
+    );
+    println!("train time   : {:.0} s for {} examples", out.eval.train_time_secs, model.examples_per_epoch);
+    println!("cost         : ${:.2}", out.eval.cost_usd);
+    println!(
+        "scheduled in : {:.2} s ({} cost-model evaluations)",
+        out.wall_time.as_secs_f64(),
+        out.evaluations
+    );
+    Ok(())
+}

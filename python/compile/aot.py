@@ -1,0 +1,120 @@
+"""AOT compiler: lower every layer-2 function to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` rust crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Python never runs after this: the rust coordinator loads the artifacts
+through PJRT at startup.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """name -> (fn, example_args). Shapes are the rust-side contract."""
+    m = model
+    f32 = jnp.float32
+    return {
+        "policy_lstm_fwd": (
+            m.policy_lstm_fwd,
+            (_spec((m.LSTM_PARAMS,)), _spec((m.L_MAX, m.FEAT)), _spec((m.T_MAX,))),
+        ),
+        "policy_lstm_step": (
+            m.policy_lstm_step,
+            (
+                _spec((m.LSTM_PARAMS,)),
+                _spec((m.L_MAX, m.FEAT)),
+                _spec((m.L_MAX,)),
+                _spec((m.T_MAX,)),
+                _spec((m.L_MAX, m.T_MAX)),
+                _spec((), f32),
+                _spec((), f32),
+            ),
+        ),
+        "policy_rnn_fwd": (
+            m.policy_rnn_fwd,
+            (_spec((m.RNN_PARAMS,)), _spec((m.L_MAX, m.FEAT)), _spec((m.T_MAX,))),
+        ),
+        "policy_rnn_step": (
+            m.policy_rnn_step,
+            (
+                _spec((m.RNN_PARAMS,)),
+                _spec((m.L_MAX, m.FEAT)),
+                _spec((m.L_MAX,)),
+                _spec((m.T_MAX,)),
+                _spec((m.L_MAX, m.T_MAX)),
+                _spec((), f32),
+                _spec((), f32),
+            ),
+        ),
+        "ctr_stage1_fwd": (
+            m.ctr_stage1_fwd,
+            (_spec((m.STAGE1_PARAMS,)), _spec((m.MB, m.X_DIM))),
+        ),
+        "ctr_stage1_bwd": (
+            m.ctr_stage1_bwd,
+            (_spec((m.STAGE1_PARAMS,)), _spec((m.MB, m.X_DIM)), _spec((m.MB, m.H2))),
+        ),
+        "ctr_stage2_fwd": (
+            m.ctr_stage2_fwd,
+            (_spec((m.STAGE2_PARAMS,)), _spec((m.MB, m.H2)), _spec((m.MB,))),
+        ),
+        "ctr_stage2_bwd": (
+            m.ctr_stage2_bwd,
+            (_spec((m.STAGE2_PARAMS,)), _spec((m.MB, m.H2)), _spec((m.MB,))),
+        ),
+        "ctr_fused_step": (
+            m.ctr_fused_step,
+            (
+                _spec((m.STAGE1_PARAMS,)),
+                _spec((m.STAGE2_PARAMS,)),
+                _spec((m.MB, m.X_DIM)),
+                _spec((m.MB,)),
+                _spec((), f32),
+            ),
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, specs) in artifact_specs().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text) / 1e6:.2f} MB -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Pallas kernel: concatenated embedding lookup (the data-intensive layer).
+
+The paper's CTR models spend their IO budget here: each example gathers S
+rows from a huge table and concatenates them. On TPU the right shape is a
+grid over batch tiles with the table resident in HBM and only the touched
+rows streamed into VMEM — BlockSpec keeps the per-program footprint at
+`bm * S * D` floats regardless of vocabulary size (DESIGN.md
+§Hardware-Adaptation: this is the VMEM analogue of the paper's
+CPU-memory-bandwidth argument).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against `ref.embedding_bag`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows handled by one program instance.
+BLOCK_B = 8
+
+
+def _kernel(ids_ref, table_ref, o_ref, *, slots: int, dim: int, block_b: int):
+    """One program: gather `slots` rows for `block_b` examples.
+
+    ids_ref:   [block_b, slots] int32 (VMEM tile)
+    table_ref: [V, D] f32 (full table; rows pulled on demand)
+    o_ref:     [block_b, slots*dim] f32 (VMEM tile)
+    """
+    for b in range(block_b):
+        for s in range(slots):
+            rid = ids_ref[b, s]
+            row = pl.load(table_ref, (pl.dslice(rid, 1), slice(None)))
+            o_ref[b, s * dim : (s + 1) * dim] = row[0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def embedding_bag(ids, table):
+    """ids [B, S] int32, table [V, D] f32 -> [B, S*D] f32."""
+    b, s = ids.shape
+    v, d = table.shape
+    del v
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    return pl.pallas_call(
+        functools.partial(_kernel, slots=s, dim=d, block_b=BLOCK_B),
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, s), lambda i: (i, 0)),
+            # Full table visible to every program (HBM-resident on TPU).
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, s * d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s * d), jnp.float32),
+        interpret=True,
+    )(ids, table)

@@ -1,0 +1,57 @@
+"""Pallas kernel: one fused LSTM cell step (the scheduling policy's core).
+
+The policy LSTM (paper §5.2, Figure 3) walks the model's layers; each step
+is a small [1, F] x [F, 4H] + [1, H] x [H, 4H] matmul pair plus gate
+nonlinearities. Fusing all four gates into one kernel keeps the whole cell
+state in VMEM for the step — on TPU this is one MXU pass per weight matrix
+and zero HBM round-trips for the intermediates.
+
+interpret=True for CPU-PJRT; numerics vs `ref.lstm_cell`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out, c_out, *, hidden: int):
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    i = jax.nn.sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c_new = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, bias):
+    """x [B,F], h/c [B,H], wx [F,4H], wh [H,4H], bias [4H] -> (h', c')."""
+    b, _f = x.shape
+    hidden = h.shape[1]
+    full = lambda shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    h_new, c_new = pl.pallas_call(
+        functools.partial(_kernel, hidden=hidden),
+        in_specs=[
+            full(x.shape),
+            full(h.shape),
+            full(c.shape),
+            full(wx.shape),
+            full(wh.shape),
+            full(bias.shape),
+        ],
+        out_specs=[full((b, hidden)), full((b, hidden))],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((b, hidden), jnp.float32),
+        ],
+        interpret=True,
+    )(x, h, c, wx, wh, bias)
+    return h_new, c_new

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (layer-1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+`python/tests/test_kernels.py` sweeps shapes/dtypes with hypothesis and
+asserts allclose. The backward formulas used by the AOT stage artifacts are
+also defined against these references (pallas_call has no automatic VJP;
+forward runs the kernel, gradients use the mathematically identical ref —
+see DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(ids, table):
+    """Concatenated per-slot embedding lookup.
+
+    ids:   [B, S] int32 into the vocabulary.
+    table: [V, D] float32 embedding table.
+    returns [B, S*D]: row-major concatenation of each slot's embedding.
+    """
+    b, s = ids.shape
+    d = table.shape[1]
+    return table[ids.reshape(-1)].reshape(b, s * d)
+
+
+def fused_mlp(x, w, b, relu=True):
+    """One fused dense layer: relu(x @ w + b) (optionally linear)."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def lstm_cell(x, h, c, wx, wh, bias):
+    """One LSTM cell step (gate order: i, f, g, o).
+
+    x: [B, F], h/c: [B, H], wx: [F, 4H], wh: [H, 4H], bias: [4H].
+    returns (h', c').
+    """
+    hdim = h.shape[1]
+    gates = x @ wx + h @ wh + bias
+    i = jax.nn.sigmoid(gates[:, 0 * hdim : 1 * hdim])
+    f = jax.nn.sigmoid(gates[:, 1 * hdim : 2 * hdim])
+    g = jnp.tanh(gates[:, 2 * hdim : 3 * hdim])
+    o = jax.nn.sigmoid(gates[:, 3 * hdim : 4 * hdim])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,264 @@
+"""Layer-2 JAX definitions: the scheduling policies (LSTM + Elman RNN) and
+the CTR pipeline stages, built on the layer-1 Pallas kernels.
+
+Geometry contracts with the rust coordinator (keep in lock-step):
+  * policy: L_MAX=24, T_MAX=64, FEAT=35, HIDDEN=64
+    - LSTM params (flat, row-major): Wx [35,256] | Wh [64,256] | b [256]
+      | Wout [64,64] | bout [64]      (rust: runtime::policy::LSTM_PARAMS)
+    - RNN params: Wx [35,64] | Wh [64,64] | b [64] | Wout | bout
+  * CTR stages: MB=256, X_DIM=1664, H1=512, H2=256, H3=128
+    - params1: W1 [1664,512] | b1 [512] | W2 [512,256] | b2 [256]
+    - params2: W3 [256,128] | b3 [128] | W4 [128,1] | b4 [1]
+      (rust: train::stage::{STAGE1_PARAMS, STAGE2_PARAMS})
+
+Forward paths run the Pallas kernels; backward artifacts use explicit
+gradient formulas over the mathematically identical reference ops
+(pallas_call defines no VJP — DESIGN.md §Perf/L2 discusses the trade).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embedding_bag as k_emb  # noqa: F401  (fused-model path)
+from .kernels import fused_mlp as k_mlp
+from .kernels import lstm_cell as k_lstm
+from .kernels import ref
+
+# ---------------------------------------------------------------- policy --
+
+L_MAX = 24
+T_MAX = 64
+FEAT = L_MAX + 8 + 3  # index one-hot + kind one-hot + 3 scalars = 35
+HIDDEN = 64
+
+LSTM_SHAPES = [
+    (FEAT, 4 * HIDDEN),
+    (HIDDEN, 4 * HIDDEN),
+    (4 * HIDDEN,),
+    (HIDDEN, T_MAX),
+    (T_MAX,),
+]
+RNN_SHAPES = [
+    (FEAT, HIDDEN),
+    (HIDDEN, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, T_MAX),
+    (T_MAX,),
+]
+
+
+def _sizes(shapes):
+    out = []
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(n)
+    return out
+
+
+LSTM_PARAMS = sum(_sizes(LSTM_SHAPES))
+RNN_PARAMS = sum(_sizes(RNN_SHAPES))
+
+
+def _unpack(flat, shapes):
+    parts = []
+    off = 0
+    for s, n in zip(shapes, _sizes(shapes)):
+        parts.append(flat[off : off + n].reshape(s))
+        off += n
+    return parts
+
+
+def _masked_softmax(logits, type_mask):
+    """Softmax over types, with masked-out types at ~0 probability."""
+    neg = (1.0 - type_mask) * 1e9
+    z = logits - neg
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z) * type_mask
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _policy_logits(params, features, shapes, cell):
+    """Walk the layer sequence with a recurrent cell; emit [L_MAX, T_MAX]."""
+    wx, wh, b, wout, bout = _unpack(params, shapes)
+    h = jnp.zeros((1, HIDDEN), jnp.float32)
+    c = jnp.zeros((1, HIDDEN), jnp.float32)
+    rows = []
+    for l in range(L_MAX):
+        x = features[l][None, :]
+        h, c = cell(x, h, c, wx, wh, b)
+        rows.append((h @ wout + bout)[0])
+    return jnp.stack(rows)
+
+
+def _lstm_cell_kernel(x, h, c, wx, wh, b):
+    return k_lstm.lstm_cell(x, h, c, wx, wh, b)
+
+
+def _lstm_cell_ref(x, h, c, wx, wh, b):
+    return ref.lstm_cell(x, h, c, wx, wh, b)
+
+
+def _rnn_cell(x, h, c, wx, wh, b):
+    """Elman cell: tanh(x Wx + h Wh + b); carries no cell state."""
+    h_new = jnp.tanh(x @ wx + h @ wh + b)
+    return h_new, c
+
+
+def policy_lstm_fwd(params, features, type_mask):
+    """(params [P], features [L_MAX, FEAT], type_mask [T_MAX]) -> probs.
+
+    Forward runs the Pallas LSTM-cell kernel (layer 1).
+    """
+    logits = _policy_logits(params, features, LSTM_SHAPES, _lstm_cell_kernel)
+    return (_masked_softmax(logits, type_mask),)
+
+
+def policy_rnn_fwd(params, features, type_mask):
+    logits = _policy_logits(params, features, RNN_SHAPES, _rnn_cell)
+    return (_masked_softmax(logits, type_mask),)
+
+
+def _surrogate(params, features, layer_mask, type_mask, actions_onehot, shapes, cell):
+    """REINFORCE surrogate: sum_l mask_l * log P(a_l)  (Eq 14/15 inner term)."""
+    logits = _policy_logits(params, features, shapes, cell)
+    probs = _masked_softmax(logits, type_mask)
+    p_action = jnp.sum(probs * actions_onehot, axis=-1)  # [L_MAX]
+    logp = jnp.log(jnp.clip(p_action, 1e-12, 1.0))
+    return jnp.sum(logp * layer_mask)
+
+
+def _policy_step(params, features, layer_mask, type_mask, actions_onehot, advantage, lr, shapes, cell):
+    grad = jax.grad(_surrogate)(
+        params, features, layer_mask, type_mask, actions_onehot, shapes=shapes, cell=cell
+    )
+    # Gradient *ascent* on advantage-weighted log-likelihood (Eq 16).
+    return (params + lr * advantage * grad,)
+
+
+def policy_lstm_step(params, features, layer_mask, type_mask, actions_onehot, advantage, lr):
+    # Differentiable path uses the reference cell (identical math to the
+    # kernel, verified in python/tests/test_kernels.py).
+    return _policy_step(
+        params, features, layer_mask, type_mask, actions_onehot, advantage, lr,
+        LSTM_SHAPES, _lstm_cell_ref,
+    )
+
+
+def policy_rnn_step(params, features, layer_mask, type_mask, actions_onehot, advantage, lr):
+    return _policy_step(
+        params, features, layer_mask, type_mask, actions_onehot, advantage, lr,
+        RNN_SHAPES, _rnn_cell,
+    )
+
+
+# ------------------------------------------------------------- CTR model --
+
+MB = 256
+SLOTS = 26
+EMB_DIM = 64
+X_DIM = SLOTS * EMB_DIM  # 1664
+H1 = 512
+H2 = 256
+H3 = 128
+
+STAGE1_SHAPES = [(X_DIM, H1), (H1,), (H1, H2), (H2,)]
+STAGE2_SHAPES = [(H2, H3), (H3,), (H3, 1), (1,)]
+STAGE1_PARAMS = sum(_sizes(STAGE1_SHAPES))
+STAGE2_PARAMS = sum(_sizes(STAGE2_SHAPES))
+
+
+def ctr_stage1_fwd(params, x):
+    """Dense tower stage 1: fc(1664->512) relu, fc(512->256) relu.
+
+    Forward uses the Pallas fused-MLP kernel.
+    """
+    w1, b1, w2, b2 = _unpack(params, STAGE1_SHAPES)
+    h1 = k_mlp.fused_mlp(x, w1, b1, relu=True)
+    y = k_mlp.fused_mlp(h1, w2, b2, relu=True)
+    return (y,)
+
+
+def _stage1_ref(params, x):
+    w1, b1, w2, b2 = _unpack(params, STAGE1_SHAPES)
+    h1 = ref.fused_mlp(x, w1, b1, relu=True)
+    return ref.fused_mlp(h1, w2, b2, relu=True)
+
+
+def ctr_stage1_bwd(params, x, g):
+    """(params, x [MB, X_DIM], g [MB, H2]) -> (dparams, dx).
+
+    Recompute-in-backward: re-run the (reference) forward to rebuild
+    activations, then hand-roll the two-layer MLP gradient.
+    """
+    w1, b1, w2, b2 = _unpack(params, STAGE1_SHAPES)
+    z1 = x @ w1 + b1
+    h1 = jnp.maximum(z1, 0.0)
+    z2 = h1 @ w2 + b2
+    g2 = g * (z2 > 0.0)
+    dw2 = h1.T @ g2
+    db2 = jnp.sum(g2, axis=0)
+    dh1 = g2 @ w2.T
+    g1 = dh1 * (z1 > 0.0)
+    dw1 = x.T @ g1
+    db1 = jnp.sum(g1, axis=0)
+    dx = g1 @ w1.T
+    dparams = jnp.concatenate([dw1.reshape(-1), db1, dw2.reshape(-1), db2])
+    return (dparams, dx)
+
+
+def _stage2_logit(params, h):
+    w3, b3, w4, b4 = _unpack(params, STAGE2_SHAPES)
+    z3 = h @ w3 + b3
+    h3 = jnp.maximum(z3, 0.0)
+    return h3 @ w4 + b4, (z3, h3, w3, w4)
+
+
+def ctr_stage2_fwd(params, h, labels):
+    """Loss head: fc(256->128) relu, fc(128->1), sigmoid BCE.
+
+    -> (mean loss, probs [MB]).
+    """
+    w3, b3, w4, b4 = _unpack(params, STAGE2_SHAPES)
+    h3 = k_mlp.fused_mlp(h, w3, b3, relu=True)
+    logit = k_mlp.fused_mlp(h3, w4, b4, relu=False)[:, 0]
+    p = jax.nn.sigmoid(logit)
+    eps = 1e-7
+    loss = -jnp.mean(labels * jnp.log(p + eps) + (1.0 - labels) * jnp.log(1.0 - p + eps))
+    return (loss, p)
+
+
+def ctr_stage2_bwd(params, h, labels):
+    """-> (dparams, dh, loss): loss gradient originates here."""
+    logit, (z3, h3, w3, w4) = _stage2_logit(params, h)
+    logit = logit[:, 0]
+    p = jax.nn.sigmoid(logit)
+    eps = 1e-7
+    loss = -jnp.mean(labels * jnp.log(p + eps) + (1.0 - labels) * jnp.log(1.0 - p + eps))
+    n = labels.shape[0]
+    dlogit = ((p - labels) / n)[:, None]  # [MB, 1]
+    dw4 = h3.T @ dlogit
+    db4 = jnp.sum(dlogit, axis=0)
+    dh3 = dlogit @ w4.T
+    g3 = dh3 * (z3 > 0.0)
+    dw3 = h.T @ g3
+    db3 = jnp.sum(g3, axis=0)
+    dh = g3 @ w3.T
+    dparams = jnp.concatenate([dw3.reshape(-1), db3, dw4.reshape(-1), db4])
+    return (dparams, dh, loss)
+
+
+def _full_loss(params1, params2, x, labels):
+    h = _stage1_ref(params1, x)
+    logit, _ = _stage2_logit(params2, h)
+    p = jax.nn.sigmoid(logit[:, 0])
+    eps = 1e-7
+    return -jnp.mean(labels * jnp.log(p + eps) + (1.0 - labels) * jnp.log(1.0 - p + eps))
+
+
+def ctr_fused_step(params1, params2, x, labels, lr):
+    """Single-process fused train step (the pipeline-equivalence oracle):
+    -> (loss, params1', params2')."""
+    loss, (g1, g2) = jax.value_and_grad(_full_loss, argnums=(0, 1))(params1, params2, x, labels)
+    return (loss, params1 - lr * g1, params2 - lr * g2)

@@ -1,0 +1,69 @@
+"""§Perf L1/L2 report: HLO op census per artifact (L2 fusion health) and
+VMEM-footprint / MXU-utilization estimates per Pallas kernel tile (L1).
+
+interpret=True wallclock is CPU-numpy, NOT a TPU proxy — so the L1 numbers
+here are *structural*: bytes resident per program instance and the
+fraction of 128x128 MXU lanes a tile keeps busy. See DESIGN.md §Perf.
+
+Usage: cd python && python -m compile.perf_report [--artifacts ../artifacts]
+"""
+
+import argparse
+import collections
+import os
+import re
+
+from .kernels import fused_mlp as k_mlp
+from . import model as m
+
+
+def hlo_census(path):
+    """Count HLO opcodes in an HLO-text artifact."""
+    ops = collections.Counter()
+    # `%name = f32[128,256]{1,0} dot(...)` -> opcode after the shape spec.
+    opcode = re.compile(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([a-z][a-z0-9_-]*)\(")
+    with open(path) as f:
+        for line in f:
+            mm = opcode.search(line)
+            if mm:
+                ops[mm.group(1)] += 1
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print("== L2: HLO op census per artifact ==")
+    interesting = ["dot", "fusion", "convolution", "all-reduce", "custom-call", "while", "transpose", "reshape"]
+    for name in sorted(os.listdir(args.artifacts)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        ops = hlo_census(os.path.join(args.artifacts, name))
+        total = sum(ops.values())
+        head = ", ".join(f"{k}={ops[k]}" for k in interesting if ops[k])
+        print(f"{name:<28} {total:>5} ops   {head}")
+
+    print()
+    print("== L1: Pallas tile economics (f32) ==")
+    print(f"{'kernel/tile':<42} {'VMEM KiB':>9} {'MXU util':>9}")
+    rows = [
+        ("fused_mlp stage1 fc1 (128x128, K=1664)", k_mlp.vmem_bytes(128, 128, m.X_DIM), k_mlp.mxu_utilization(128, 128, m.X_DIM)),
+        ("fused_mlp stage1 fc2 (128x128, K=512)", k_mlp.vmem_bytes(128, 128, 512), k_mlp.mxu_utilization(128, 128, 512)),
+        ("fused_mlp stage2 fc3 (128x128, K=256)", k_mlp.vmem_bytes(128, 128, 256), k_mlp.mxu_utilization(128, 128, 256)),
+        ("fused_mlp stage2 fc4 (128x8, K=128)", k_mlp.vmem_bytes(128, 8, 128), k_mlp.mxu_utilization(128, 8, 128)),
+        ("lstm_cell policy (B=1, F=35, H=64)", 4 * (1 * 35 + 35 * 256 + 64 * 256 + 256 + 2 * 64), min(1 / 128, 1) * min(256 / 128, 1) * min(35 / 128, 1)),
+        ("embedding_bag (BLOCK_B=8, S=26, D=64)", 4 * (8 * 26 + 8 * 26 * 64), 0.0),
+    ]
+    for label, bytes_, util in rows:
+        print(f"{label:<42} {bytes_ / 1024:>9.1f} {util:>9.2f}")
+    print()
+    print("All tiles sit far under the 16 MiB VMEM budget; the two tower")
+    print("matmuls are MXU-shaped (util 1.0). The LSTM cell is B=1 control-")
+    print("plane work (latency-bound by design); embedding_bag is a gather")
+    print("(0 MXU by nature — it is the paper's data-intensive layer).")
+
+
+if __name__ == "__main__":
+    main()

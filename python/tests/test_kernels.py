@@ -1,0 +1,137 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes with hypothesis. This is the core numerics signal the
+whole stack rests on (the AOT artifacts embed these kernels)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import embedding_bag as k_emb
+from compile.kernels import fused_mlp as k_mlp
+from compile.kernels import lstm_cell as k_lstm
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------ embedding --
+
+
+@settings(**SETTINGS)
+@given(
+    b_blocks=st.integers(1, 3),
+    slots=st.integers(1, 12),
+    vocab=st.integers(4, 300),
+    dim=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embedding_bag_matches_ref(b_blocks, slots, vocab, dim, seed):
+    r = rng(seed)
+    b = b_blocks * k_emb.BLOCK_B
+    ids = jnp.asarray(r.integers(0, vocab, size=(b, slots)), jnp.int32)
+    table = jnp.asarray(r.normal(size=(vocab, dim)), jnp.float32)
+    got = k_emb.embedding_bag(ids, table)
+    want = ref.embedding_bag(ids, table)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_embedding_bag_repeated_ids():
+    ids = jnp.zeros((k_emb.BLOCK_B, 4), jnp.int32)
+    table = jnp.asarray(rng(0).normal(size=(10, 8)), jnp.float32)
+    got = k_emb.embedding_bag(ids, table)
+    for s in range(4):
+        np.testing.assert_allclose(got[:, s * 8 : (s + 1) * 8], jnp.tile(table[0], (8, 1)))
+
+
+# ------------------------------------------------------------- fused mlp --
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    k=st.integers(1, 96),
+    n=st.integers(1, 200),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_matches_ref(b, k, n, relu, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(b, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(k, n)) * 0.1, jnp.float32)
+    bias = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+    got = k_mlp.fused_mlp(x, w, bias, relu=relu)
+    want = ref.fused_mlp(x, w, bias, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_mlp_exact_tile_shapes():
+    # Shapes exactly on the 128-tile boundary (the MXU-shaped fast path).
+    r = rng(7)
+    x = jnp.asarray(r.normal(size=(256, 128)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(128, 256)) * 0.05, jnp.float32)
+    b = jnp.zeros((256,), jnp.float32)
+    np.testing.assert_allclose(
+        k_mlp.fused_mlp(x, w, b), ref.fused_mlp(x, w, b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_fused_mlp_vmem_estimate_is_sane():
+    # The default CTR tower tile must fit comfortably in a 16 MiB VMEM.
+    assert k_mlp.vmem_bytes(128, 128, 2048) < 16 * 2**20
+    assert 0.0 < k_mlp.mxu_utilization(128, 128, 2048) <= 1.0
+    assert k_mlp.mxu_utilization(8, 128, 128) < k_mlp.mxu_utilization(128, 128, 128)
+
+
+# ------------------------------------------------------------- lstm cell --
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    f=st.integers(1, 48),
+    h=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_matches_ref(b, f, h, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(b, f)), jnp.float32)
+    h0 = jnp.asarray(r.normal(size=(b, h)), jnp.float32)
+    c0 = jnp.asarray(r.normal(size=(b, h)), jnp.float32)
+    wx = jnp.asarray(r.normal(size=(f, 4 * h)) * 0.2, jnp.float32)
+    wh = jnp.asarray(r.normal(size=(h, 4 * h)) * 0.2, jnp.float32)
+    bias = jnp.asarray(r.normal(size=(4 * h,)) * 0.1, jnp.float32)
+    got_h, got_c = k_lstm.lstm_cell(x, h0, c0, wx, wh, bias)
+    want_h, want_c = ref.lstm_cell(x, h0, c0, wx, wh, bias)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_cell_state_bounded():
+    # tanh/sigmoid gates keep h in (-1, 1) whatever the inputs.
+    r = rng(3)
+    h, _ = k_lstm.lstm_cell(
+        jnp.asarray(r.normal(size=(4, 16)) * 100, jnp.float32),
+        jnp.zeros((4, 8), jnp.float32),
+        jnp.zeros((4, 8), jnp.float32),
+        jnp.asarray(r.normal(size=(16, 32)), jnp.float32),
+        jnp.asarray(r.normal(size=(8, 32)), jnp.float32),
+        jnp.zeros((32,), jnp.float32),
+    )
+    assert jnp.all(jnp.abs(h) <= 1.0)
+
+
+def test_kernels_are_jittable_and_stable():
+    # Repeated jit execution returns identical results (no hidden state).
+    r = rng(11)
+    x = jnp.asarray(r.normal(size=(16, 8)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(8, 8)), jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    a = k_mlp.fused_mlp(x, w, b)
+    bb = k_mlp.fused_mlp(x, w, b)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))

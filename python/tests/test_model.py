@@ -1,0 +1,156 @@
+"""Layer-2 correctness: policy probabilities/REINFORCE step semantics and
+CTR stage forward/backward vs jax autodiff of the fused model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _params(n, seed=0, scale=0.08):
+    return jnp.asarray(rng(seed).uniform(-scale, scale, size=(n,)), jnp.float32)
+
+
+def _features(num_layers, seed=1):
+    f = np.zeros((m.L_MAX, m.FEAT), np.float32)
+    r = rng(seed)
+    for l in range(num_layers):
+        f[l, l] = 1.0
+        f[l, m.L_MAX + r.integers(0, 8)] = 1.0
+        f[l, m.L_MAX + 8 :] = r.uniform(0, 2, size=3)
+    return jnp.asarray(f)
+
+
+def _masks(num_layers, num_types):
+    lm = np.zeros((m.L_MAX,), np.float32)
+    lm[:num_layers] = 1.0
+    tm = np.zeros((m.T_MAX,), np.float32)
+    tm[:num_types] = 1.0
+    return jnp.asarray(lm), jnp.asarray(tm)
+
+
+# ----------------------------------------------------------------- policy --
+
+
+@pytest.mark.parametrize("arch", ["lstm", "rnn"])
+def test_policy_fwd_is_masked_distribution(arch):
+    fwd = m.policy_lstm_fwd if arch == "lstm" else m.policy_rnn_fwd
+    n_params = m.LSTM_PARAMS if arch == "lstm" else m.RNN_PARAMS
+    params = _params(n_params)
+    feats = _features(10)
+    _, tm = _masks(10, 3)
+    (probs,) = jax.jit(fwd)(params, feats, tm)
+    assert probs.shape == (m.L_MAX, m.T_MAX)
+    np.testing.assert_allclose(jnp.sum(probs, axis=-1), 1.0, rtol=1e-5)
+    # Masked-out types get (numerically) zero probability.
+    assert float(jnp.max(probs[:, 3:])) < 1e-6
+
+
+@pytest.mark.parametrize("arch", ["lstm", "rnn"])
+def test_policy_step_increases_chosen_logprob(arch):
+    fwd = m.policy_lstm_fwd if arch == "lstm" else m.policy_rnn_fwd
+    step = m.policy_lstm_step if arch == "lstm" else m.policy_rnn_step
+    n_params = m.LSTM_PARAMS if arch == "lstm" else m.RNN_PARAMS
+    params = _params(n_params, seed=2)
+    feats = _features(8, seed=3)
+    lm, tm = _masks(8, 4)
+    actions = np.zeros((m.L_MAX, m.T_MAX), np.float32)
+    chosen = rng(4).integers(0, 4, size=8)
+    for l, a in enumerate(chosen):
+        actions[l, a] = 1.0
+    actions = jnp.asarray(actions)
+
+    def chosen_logprob(p):
+        (probs,) = fwd(p, feats, tm)
+        sel = jnp.sum(probs * actions, axis=-1)
+        return float(jnp.sum(jnp.log(jnp.clip(sel, 1e-12, 1.0)) * lm))
+
+    before = chosen_logprob(params)
+    (params2,) = jax.jit(step)(params, feats, lm, tm, actions, jnp.float32(1.0), jnp.float32(0.5))
+    after = chosen_logprob(params2)
+    assert after > before, f"{before} -> {after}"
+    # Negative advantage moves the other way.
+    (params3,) = jax.jit(step)(params, feats, lm, tm, actions, jnp.float32(-1.0), jnp.float32(0.5))
+    assert chosen_logprob(params3) < before
+
+
+def test_lstm_step_gradient_matches_kernel_forward():
+    # The step differentiates the reference cell; its forward must agree
+    # with the Pallas-kernel forward the scheduler samples from.
+    params = _params(m.LSTM_PARAMS, seed=5)
+    feats = _features(6, seed=6)
+    _, tm = _masks(6, 2)
+    (p_kernel,) = m.policy_lstm_fwd(params, feats, tm)
+    logits = m._policy_logits(params, feats, m.LSTM_SHAPES, m._lstm_cell_ref)
+    p_ref = m._masked_softmax(logits, tm)
+    np.testing.assert_allclose(p_kernel, p_ref, rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------- CTR model --
+
+
+def _ctr_inputs(seed=0):
+    r = rng(seed)
+    p1 = _params(m.STAGE1_PARAMS, seed=seed, scale=0.05)
+    p2 = _params(m.STAGE2_PARAMS, seed=seed + 1, scale=0.05)
+    x = jnp.asarray(r.normal(size=(m.MB, m.X_DIM)) * 0.1, jnp.float32)
+    y = jnp.asarray(r.integers(0, 2, size=(m.MB,)), jnp.float32)
+    return p1, p2, x, y
+
+
+def test_stage1_fwd_kernel_matches_ref():
+    p1, _, x, _ = _ctr_inputs(7)
+    (got,) = jax.jit(m.ctr_stage1_fwd)(p1, x)
+    want = m._stage1_ref(p1, x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_stage_backwards_match_autodiff():
+    p1, p2, x, y = _ctr_inputs(8)
+
+    # End-to-end autodiff of the fused loss.
+    g1_auto, g2_auto, gx_auto = jax.grad(m._full_loss, argnums=(0, 1, 2))(p1, p2, x, y)
+
+    # Chained stage artifacts: stage2 originates the gradient.
+    h = m._stage1_ref(p1, x)
+    dp2, dh, loss = jax.jit(m.ctr_stage2_bwd)(p2, h, y)
+    dp1, dx = jax.jit(m.ctr_stage1_bwd)(p1, x, dh)
+
+    np.testing.assert_allclose(dp2, g2_auto, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dp1, g1_auto, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dx, gx_auto, rtol=1e-4, atol=1e-6)
+    assert float(loss) > 0.0
+
+
+def test_stage2_fwd_reports_bce():
+    p1, p2, x, y = _ctr_inputs(9)
+    h = m._stage1_ref(p1, x)
+    loss, probs = jax.jit(m.ctr_stage2_fwd)(p2, h, y)
+    assert probs.shape == (m.MB,)
+    assert jnp.all(probs >= 0) and jnp.all(probs <= 1)
+    # Near-random init => loss near ln(2).
+    assert 0.3 < float(loss) < 1.5
+
+
+def test_fused_step_decreases_loss():
+    p1, p2, x, y = _ctr_inputs(10)
+    step = jax.jit(m.ctr_fused_step)
+    loss0, p1n, p2n = step(p1, p2, x, y, jnp.float32(0.5))
+    loss1, _, _ = step(p1n, p2n, x, y, jnp.float32(0.5))
+    assert float(loss1) < float(loss0)
+
+
+def test_geometry_contract_with_rust():
+    # These constants are duplicated in rust; a drift here breaks FFI.
+    assert m.FEAT == 35 and m.L_MAX == 24 and m.T_MAX == 64 and m.HIDDEN == 64
+    assert m.LSTM_PARAMS == 35 * 256 + 64 * 256 + 256 + 64 * 64 + 64
+    assert m.RNN_PARAMS == 35 * 64 + 64 * 64 + 64 + 64 * 64 + 64
+    assert m.X_DIM == 1664
+    assert m.STAGE1_PARAMS == 1664 * 512 + 512 + 512 * 256 + 256
+    assert m.STAGE2_PARAMS == 256 * 128 + 128 + 128 + 1

@@ -1,0 +1,54 @@
+//! Shared bench-harness helpers (criterion is unavailable offline; this
+//! provides the warmup/repeat/summarize loop the benches share, plus the
+//! §6.2 method runner used by the figure benches).
+
+#![allow(dead_code)]
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::ModelSpec;
+use heterps::resources::ResourcePool;
+use heterps::sched::{self, ScheduleOutcome};
+use heterps::util::stats::{mean, stddev};
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `reps` runs; returns (mean, std) in seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (mean(&samples), stddev(&samples))
+}
+
+/// Run one named scheduler on a (model, pool) pair with the default cost
+/// config except the given floor; the RL variants fall back to tabular
+/// automatically when artifacts are missing.
+pub fn run_method(
+    method: &str,
+    model: &ModelSpec,
+    pool: &ResourcePool,
+    throughput_limit: f64,
+    seed: u64,
+) -> ScheduleOutcome {
+    let cfg = CostConfig { throughput_limit, ..Default::default() };
+    let cm = CostModel::new(model, pool, cfg);
+    let mut s = sched::by_name(method, seed).unwrap_or_else(|| panic!("scheduler {method}"));
+    s.schedule(&cm)
+}
+
+/// The §6.2 comparison methods in paper order.
+pub fn methods() -> &'static [&'static str] {
+    sched::comparison_methods()
+}
+
+/// Normalize a cost column by its minimum (the paper's figures normalize
+/// "by multiplying a constant value for the sake of easy comparison").
+pub fn normalize(costs: &[f64]) -> Vec<f64> {
+    let min = costs.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-12);
+    costs.iter().map(|c| c / min).collect()
+}

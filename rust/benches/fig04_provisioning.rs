@@ -1,0 +1,44 @@
+//! Figure 4: monetary cost of our load-balancing provisioner vs the static
+//! ratio heuristics StaRatio (GPU:CPU = 1:6, [61]) and StaPSRatio
+//! (1:6:6 with dedicated PS cores, [26]) on CTRDNN across throughput
+//! floors. Expected shape: ours <= StaPSRatio <= StaRatio.
+
+mod common;
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::provision::provision_static_ratio;
+use heterps::resources::paper_testbed;
+use heterps::sched::rl::{RlConfig, RlScheduler};
+use heterps::sched::Scheduler;
+
+fn main() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let mut table = Table::new(
+        "Figure 4 — provisioning cost (USD): ours vs static ratios (CTRDNN)",
+        &["floor (samples/s)", "ours", "StaRatio", "StaPSRatio", "ours saves vs StaRatio"],
+    );
+    for floor in [5_000.0f64, 10_000.0, 20_000.0, 40_000.0] {
+        let cfg = CostConfig { throughput_limit: floor, ..Default::default() };
+        let cm = CostModel::new(&model, &pool, cfg);
+        // The paper uses its RL scheduler for the plan, then compares
+        // provisioning policies on it.
+        let out = RlScheduler::lstm(RlConfig::default(), 42).schedule(&cm);
+        let plan: SchedulingPlan = out.plan.clone();
+        let ours = out.eval.cost_usd;
+        let sta = provision_static_ratio(&cm, &plan, false).map(|e| e.cost_usd);
+        let staps = provision_static_ratio(&cm, &plan, true).map(|e| e.cost_usd);
+        let saving = sta.map(|s| format!("{:.1}%", (s - ours) / s * 100.0));
+        table.row(&[
+            format!("{floor:.0}"),
+            format!("{ours:.2}"),
+            sta.map(|c| format!("{c:.2}")).unwrap_or_else(|| "/".into()),
+            staps.map(|c| format!("{c:.2}")).unwrap_or_else(|| "/".into()),
+            saving.unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.emit("fig04_provisioning");
+}

@@ -1,0 +1,45 @@
+//! Figure 5: normalized training cost per scheduling method as the number
+//! of resource types grows (1–16, 32, 64), CPU included. MATCHNET profile,
+//! as in §6.2. Expected shape: RL lowest everywhere; CPU-only worst; the
+//! gap widens as the catalog grows (RL exploits the price-performance
+//! frontier, heuristics can't).
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let include_cpu = true;
+    let name = "fig05_cost_types";
+    let title = "Figure 5 — normalized cost vs #types (with CPU)";
+    let model = zoo::matchnet();
+    let mut columns = vec!["types"];
+    columns.extend(common::methods());
+    let mut table = Table::new(title, &columns);
+    for types in [1usize, 2, 4, 8, 16, 32, 64] {
+        if !include_cpu && types == 1 {
+            continue; // a 1-type pool without CPU equals GPU-only everywhere
+        }
+        let pool = simulated_types(types, include_cpu);
+        let mut costs = Vec::new();
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            costs.push(if out.eval.feasible { out.eval.cost_usd } else { f64::NAN });
+        }
+        let valid: Vec<f64> = costs.iter().cloned().filter(|c| c.is_finite()).collect();
+        let norm = common::normalize(&valid);
+        let mut it = norm.into_iter();
+        let mut cells = vec![types.to_string()];
+        for c in &costs {
+            cells.push(if c.is_finite() {
+                format!("{:.2}", it.next().unwrap())
+            } else {
+                "inf".into() // infeasible (pool limit), as in Fig 10's CPU bar
+            });
+        }
+        table.row(&cells);
+    }
+    table.emit(name);
+}

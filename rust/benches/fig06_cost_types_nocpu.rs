@@ -1,0 +1,37 @@
+//! Figure 6: the Figure-5 comparison without any CPU type in the pool
+//! (accelerator-only catalogs). The CPU-only method degenerates to the
+//! anchor accelerator, as in the paper's figure.
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let model = zoo::matchnet();
+    let mut columns = vec!["types"];
+    columns.extend(common::methods());
+    let mut table = Table::new("Figure 6 — normalized cost vs #types (no CPU)", &columns);
+    for types in [2usize, 4, 8, 16, 32, 64] {
+        let pool = simulated_types(types, false);
+        let mut costs = Vec::new();
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            costs.push(if out.eval.feasible { out.eval.cost_usd } else { f64::NAN });
+        }
+        let valid: Vec<f64> = costs.iter().cloned().filter(|c| c.is_finite()).collect();
+        let norm = common::normalize(&valid);
+        let mut it = norm.into_iter();
+        let mut cells = vec![types.to_string()];
+        for c in &costs {
+            cells.push(if c.is_finite() {
+                format!("{:.2}", it.next().unwrap())
+            } else {
+                "inf".into()
+            });
+        }
+        table.row(&cells);
+    }
+    table.emit("fig06_cost_types_nocpu");
+}

@@ -1,0 +1,32 @@
+//! Figure 7: normalized throughput (throughput / floor) per scheduling
+//! method. Every feasible plan must sit at >= 1.0 — the provisioner
+//! enforces the constraint regardless of which scheduler chose the plan.
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let model = zoo::matchnet();
+    let floor = 20_000.0;
+    let mut columns = vec!["types"];
+    columns.extend(common::methods());
+    let mut table = Table::new("Figure 7 — normalized throughput (>= 1.0 means floor met)", &columns);
+    for types in [2usize, 4, 8, 16] {
+        let pool = simulated_types(types, true);
+        let mut cells = vec![types.to_string()];
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, floor, 42);
+            let norm = out.eval.throughput / floor;
+            cells.push(if out.eval.feasible {
+                format!("{norm:.2}")
+            } else {
+                format!("{norm:.2}*") // * = constraint violated (pool limit)
+            });
+        }
+        table.row(&cells);
+    }
+    table.emit("fig07_throughput");
+}

@@ -1,0 +1,34 @@
+//! Figure 8: normalized training cost per model (MATCHNET, CTRDNN, 2EMB,
+//! NCE) per scheduling method, CPU included. Expected shape: RL lowest on
+//! every model; BO close on the small models (NCE/2EMB) but off on the
+//! complex ones; GPU-only and Heuristic pay the accelerator premium.
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let mut columns = vec!["model"];
+    columns.extend(common::methods());
+    let mut table = Table::new("Figure 8 — normalized cost per model (with CPU)", &columns);
+    for model_name in ["matchnet", "ctrdnn", "2emb", "nce"] {
+        let model = zoo::by_name(model_name).unwrap();
+        let pool = simulated_types(4, true);
+        let mut costs = Vec::new();
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            costs.push(if out.eval.feasible { out.eval.cost_usd } else { f64::NAN });
+        }
+        let valid: Vec<f64> = costs.iter().cloned().filter(|c| c.is_finite()).collect();
+        let norm = common::normalize(&valid);
+        let mut it = norm.into_iter();
+        let mut cells = vec![model_name.to_string()];
+        for c in &costs {
+            cells.push(if c.is_finite() { format!("{:.2}", it.next().unwrap()) } else { "inf".into() });
+        }
+        table.row(&cells);
+    }
+    table.emit("fig08_cost_models");
+}

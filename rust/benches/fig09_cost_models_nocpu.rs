@@ -1,0 +1,31 @@
+//! Figure 9: the Figure-8 per-model comparison without CPU types.
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let mut columns = vec!["model"];
+    columns.extend(common::methods());
+    let mut table = Table::new("Figure 9 — normalized cost per model (no CPU)", &columns);
+    for model_name in ["matchnet", "ctrdnn", "2emb", "nce"] {
+        let model = zoo::by_name(model_name).unwrap();
+        let pool = simulated_types(4, false);
+        let mut costs = Vec::new();
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            costs.push(if out.eval.feasible { out.eval.cost_usd } else { f64::NAN });
+        }
+        let valid: Vec<f64> = costs.iter().cloned().filter(|c| c.is_finite()).collect();
+        let norm = common::normalize(&valid);
+        let mut it = norm.into_iter();
+        let mut cells = vec![model_name.to_string()];
+        for c in &costs {
+            cells.push(if c.is_finite() { format!("{:.2}", it.next().unwrap()) } else { "inf".into() });
+        }
+        table.row(&cells);
+    }
+    table.emit("fig09_cost_models_nocpu");
+}

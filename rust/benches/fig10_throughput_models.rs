@@ -1,0 +1,34 @@
+//! Figure 10: normalized throughput per model per method. The paper's
+//! signature detail: every bar sits at/above 1.0 *except CPU-only on
+//! CTRDNN*, where the CPU pool limit makes the floor unreachable — the
+//! same violation should reproduce here (marked `*`).
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+
+fn main() {
+    let floor = 20_000.0;
+    let mut columns = vec!["model"];
+    columns.extend(common::methods());
+    let mut table =
+        Table::new("Figure 10 — normalized throughput per model (* = floor violated)", &columns);
+    for model_name in ["matchnet", "ctrdnn", "2emb", "nce"] {
+        let model = zoo::by_name(model_name).unwrap();
+        let pool = simulated_types(4, true);
+        let mut cells = vec![model_name.to_string()];
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, floor, 42);
+            let norm = out.eval.throughput / floor;
+            cells.push(if out.eval.feasible {
+                format!("{norm:.2}")
+            } else {
+                format!("{norm:.2}*")
+            });
+        }
+        table.row(&cells);
+    }
+    table.emit("fig10_throughput_models");
+}

@@ -1,0 +1,40 @@
+//! Figure 11: "real execution" cost per model per method. The paper ran
+//! the plans on its physical cluster; here the discrete-event simulator
+//! replays each provisioned plan with stragglers + dispatch overheads
+//! (DESIGN.md §Hardware-Adaptation). Expected shape: same ranking as the
+//! analytic Figure 8, but costs inflated — most for CPU-heavy plans (the
+//! paper saw up to 17.4x inflation on CPU from small-batch overheads).
+
+mod common;
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+use heterps::simulator::{simulate_plan, SimConfig};
+
+fn main() {
+    let mut columns = vec!["model"];
+    columns.extend(common::methods());
+    let mut table = Table::new(
+        "Figure 11 — real-execution (DES) cost in USD per model",
+        &columns,
+    );
+    let sim_cfg = SimConfig::default();
+    for model_name in ["matchnet", "ctrdnn", "2emb", "nce"] {
+        let model = zoo::by_name(model_name).unwrap();
+        let pool = simulated_types(2, true);
+        let cfg = CostConfig { throughput_limit: 20_000.0, ..Default::default() };
+        let cm = CostModel::new(&model, &pool, cfg);
+        let mut cells = vec![model_name.to_string()];
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            match simulate_plan(&cm, &out.plan, &sim_cfg, 42) {
+                Some(sim) => cells.push(format!("{:.2}", sim.cost_usd)),
+                None => cells.push("/".into()),
+            }
+        }
+        table.row(&cells);
+    }
+    table.emit("fig11_real_execution");
+}

@@ -1,0 +1,109 @@
+//! Figure 12: training throughput of HeterPS (pipelined, heterogeneous)
+//! vs the synchronous monolithic baseline ("TF" in the paper; here the
+//! SyncBaselineRuntime executing the identical stage ops — DESIGN.md
+//! §Hardware-Adaptation) on CTRDNN1 (IO-heavy) and CTRDNN2-like load
+//! (compute-heavy).
+//!
+//! Heterogeneity is emulated with per-stage speed factors: a "CPU"
+//! deployment slows the dense tower, a "GPU" deployment slows the sparse
+//! front (accelerators are poor at sparse lookups over PCIe), and HeterPS
+//! places each stage on its best resource (no slowdown) *and* pipelines.
+//!
+//! Requires `make artifacts`. Expected shape, as in the paper:
+//!   HeterPS > HeterPS-CPU/GPU > TF-CPU/GPU (several-fold).
+
+use heterps::data::dataset::{CtrDataset, DatasetConfig};
+use heterps::metrics::Table;
+use heterps::runtime::artifacts_dir;
+use heterps::train::pipeline::{PipelineConfig, PipelineTrainer};
+use heterps::train::stage::{EmbeddingStage, HloStage, StageOp, EMB_DIM, MB_ROWS, SLOTS};
+use heterps::train::sync_baseline::SyncBaselineRuntime;
+use heterps::train::ParamServer;
+use std::sync::Arc;
+
+/// Per-microbatch *device* time (ms) of (embedding, tower, head) under a
+/// deployment, added on top of the real (host) HLO execution. Absolute
+/// delays emulate what each stage would cost on its assigned resource —
+/// sparse lookups are cheap on CPUs and terrible over PCIe on GPUs; wide
+/// GEMMs are the reverse — without the host-contention noise a
+/// multiplicative factor amplifies. See DESIGN.md §Hardware-Adaptation.
+fn device_profile(config: &str) -> (f64, f64, f64) {
+    match config {
+        "cpu" => (15.0, 50.0, 40.0),  // dense tower crawls on CPU cores
+        "gpu" => (45.0, 10.0, 8.0),   // sparse pulls crawl over PCIe
+        _ => (15.0, 10.0, 8.0),       // heterogeneous: each stage at its best
+    }
+}
+
+fn stages(profile: (f64, f64, f64), lr: f32) -> Vec<Box<dyn StageOp>> {
+    let (emb_ms, s1_ms, s2_ms) = profile;
+    let ps = Arc::new(ParamServer::new(EMB_DIM, 16, lr, 7));
+    let mut emb = EmbeddingStage::new(ps);
+    emb.set_extra_delay_ms(emb_ms);
+    let mut s1 = HloStage::ctr_stage1(lr, 31).expect("artifacts");
+    s1.set_extra_delay_ms(s1_ms);
+    let mut s2 = HloStage::ctr_stage2(lr, 32).expect("artifacts");
+    s2.set_extra_delay_ms(s2_ms);
+    vec![Box::new(emb), Box::new(s1), Box::new(s2)]
+}
+
+fn run(runtime: &str, config: &str, steps: usize, microbatches: usize) -> f64 {
+    let profile = device_profile(config);
+    let mut ds = CtrDataset::new(
+        DatasetConfig { slots: SLOTS, vocab: 50_000, ..Default::default() },
+        13,
+    );
+    let thr;
+    if runtime == "pipeline" {
+        let mut t = PipelineTrainer::new(stages(profile, 0.2), PipelineConfig { microbatches });
+        for _ in 0..steps {
+            let b = ds.next_batch(microbatches * MB_ROWS);
+            let mbs = PipelineTrainer::microbatches(&b, SLOTS);
+            t.train_step(&mbs).expect("step");
+        }
+        thr = t.stats.throughput();
+    } else {
+        let mut t = SyncBaselineRuntime::new(stages(profile, 0.2));
+        for _ in 0..steps {
+            let b = ds.next_batch(microbatches * MB_ROWS);
+            let mbs = PipelineTrainer::microbatches(&b, SLOTS);
+            t.train_step(&mbs).expect("step");
+        }
+        thr = t.stats.throughput();
+    }
+    thr
+}
+
+fn main() {
+    if !artifacts_dir().join("ctr_stage1_fwd.hlo.txt").exists() {
+        eprintln!("fig12: artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let steps = 5;
+    let microbatches = 8;
+    let mut table = Table::new(
+        "Figure 12 — throughput (samples/s): HeterPS vs sync baseline",
+        &["system", "deployment", "samples/s", "vs TF same-deployment"],
+    );
+    let tf_cpu = run("sync", "cpu", steps, microbatches);
+    let tf_gpu = run("sync", "gpu", steps, microbatches);
+    let h_cpu = run("pipeline", "cpu", steps, microbatches);
+    let h_gpu = run("pipeline", "gpu", steps, microbatches);
+    let h_het = run("pipeline", "hetero", steps, microbatches);
+    let rows = [
+        ("TF-CPU (sync)", "cpu", tf_cpu, 1.0),
+        ("TF-GPU (sync)", "gpu", tf_gpu, 1.0),
+        ("HeterPS-CPU", "cpu", h_cpu, h_cpu / tf_cpu),
+        ("HeterPS-GPU", "gpu", h_gpu, h_gpu / tf_gpu),
+        ("HeterPS (hetero)", "cpu+gpu", h_het, h_het / tf_cpu.min(tf_gpu)),
+    ];
+    for (name, dep, thr, speedup) in rows {
+        table.row(&[
+            name.to_string(),
+            dep.to_string(),
+            format!("{thr:.0}"),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    table.emit("fig12_heterps_vs_tf");
+}

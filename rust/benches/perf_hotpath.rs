@@ -1,0 +1,116 @@
+//! §Perf micro-benchmarks: the hot paths the optimization pass tracks.
+//!
+//! * cost-model evaluation (the inner loop of every scheduler)
+//! * provisioning (Newton search per plan)
+//! * policy forward/step through PJRT (RL round latency)
+//! * PS pull/push, ring-allreduce, compression (training-path primitives)
+//!
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::data::compress::{compress_f32, decompress_f32, Codec};
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::resources::simulated_types;
+use heterps::runtime::artifacts_dir;
+use heterps::sched::rl::policy::{featurize, Policy, Sample};
+use heterps::train::allreduce::ring_allreduce;
+use heterps::train::ParamServer;
+use heterps::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new(
+        "§Perf hot paths",
+        &["op", "mean", "std", "unit"],
+    );
+    let mut row = |name: &str, mean: f64, std: f64, unit: &str| {
+        table.row(&[name.to_string(), format!("{mean:.3}"), format!("{std:.3}"), unit.to_string()]);
+    };
+
+    // Cost-model evaluation.
+    let model = zoo::matchnet();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let mut rng = Rng::new(1);
+    let plans: Vec<SchedulingPlan> = (0..64)
+        .map(|_| SchedulingPlan::new((0..16).map(|_| rng.below(4)).collect()))
+        .collect();
+    let mut i = 0;
+    let (m, s) = common::time_it(50, 2000, || {
+        let e = cm.evaluate(&plans[i % plans.len()]);
+        std::hint::black_box(e.cost_usd);
+        i += 1;
+    });
+    row("cost_model.evaluate (16 layers, 4 types)", m * 1e6, s * 1e6, "us");
+
+    // Stage profile derivation alone.
+    let plan = &plans[0];
+    let (m, s) = common::time_it(50, 2000, || {
+        for span in plan.stages() {
+            std::hint::black_box(cm.stage_profile(&span));
+        }
+    });
+    row("cost_model.stage_profiles", m * 1e6, s * 1e6, "us");
+
+    // PS pull/push (26 slots x 256 rows, dim 64).
+    let ps = ParamServer::new(64, 32, 0.1, 3);
+    let ids: Vec<u32> = (0..26 * 256).map(|j| (j * 7919 % 100_000) as u32).collect();
+    let grads = vec![0.01f32; ids.len() * 64];
+    let (m, s) = common::time_it(3, 50, || {
+        std::hint::black_box(ps.pull(&ids));
+    });
+    row("ps.pull (6656 rows x 64)", m * 1e3, s * 1e3, "ms");
+    let (m, s) = common::time_it(3, 50, || {
+        ps.push(&ids, &grads);
+    });
+    row("ps.push (6656 rows x 64)", m * 1e3, s * 1e3, "ms");
+
+    // Ring allreduce, 4 ranks x 1M floats.
+    let (m, s) = common::time_it(1, 10, || {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1_000_000]).collect();
+        ring_allreduce(&mut bufs);
+        std::hint::black_box(bufs[0][0]);
+    });
+    row("ring_allreduce (4 x 1M f32)", m * 1e3, s * 1e3, "ms");
+
+    // Compression codecs, 1M floats (10% dense).
+    let mut rng = Rng::new(4);
+    let data: Vec<f32> = (0..1_000_000)
+        .map(|_| if rng.chance(0.1) { rng.f32() - 0.5 } else { 0.0 })
+        .collect();
+    for codec in [Codec::F32, Codec::F16, Codec::SparseF16] {
+        let frame = compress_f32(&data, codec);
+        let label = format!("compress {:?} (1M f32, ratio {:.1}x)", codec, 4e6 / frame.len() as f64);
+        let (m, s) = common::time_it(1, 10, || {
+            std::hint::black_box(compress_f32(&data, codec).len());
+        });
+        row(&label, m * 1e3, s * 1e3, "ms");
+        let (m, s) = common::time_it(1, 10, || {
+            std::hint::black_box(decompress_f32(&frame).unwrap().len());
+        });
+        row(&format!("decompress {codec:?}"), m * 1e3, s * 1e3, "ms");
+    }
+
+    // Policy fwd/step through PJRT (needs artifacts).
+    if artifacts_dir().join("policy_lstm_fwd.hlo.txt").exists() {
+        let mut rng = Rng::new(5);
+        let mut pol = heterps::runtime::policy::HloPolicy::load_lstm(&mut rng).unwrap();
+        let feats = featurize(&cm);
+        let (m, s) = common::time_it(3, 50, || {
+            std::hint::black_box(pol.probs(&feats).len());
+        });
+        row("policy_lstm.probs (PJRT)", m * 1e3, s * 1e3, "ms");
+        let actions: Vec<usize> = (0..feats.num_layers).map(|l| l % 4).collect();
+        let (m, s) = common::time_it(3, 50, || {
+            pol.update(&feats, &[Sample { actions: actions.clone(), advantage: 0.1 }], 0.1);
+        });
+        row("policy_lstm.step (PJRT)", m * 1e3, s * 1e3, "ms");
+    } else {
+        eprintln!("(policy PJRT rows skipped: run `make artifacts`)");
+    }
+
+    table.emit("perf_hotpath");
+}

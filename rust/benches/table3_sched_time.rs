@@ -1,0 +1,49 @@
+//! Table 3: scheduling time (s) of every method on every model, including
+//! the 32- and 64-type MATCHNET rows. The paper's shape: RL-LSTM in the
+//! tens of seconds (flat in the type count), RL-RNN slower, BO slowest of
+//! the learned methods, Genetic tens of seconds, Greedy/GPU/CPU/Heuristic
+//! effectively instant.
+
+mod common;
+
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+use heterps::util::fmt_secs;
+
+fn main() {
+    let rows: Vec<(&str, &str, usize)> = vec![
+        ("MATCHNET", "matchnet", 2),
+        ("MATCHNET (32)", "matchnet", 32),
+        ("MATCHNET (64)", "matchnet", 64),
+        ("CTRDNN", "ctrdnn", 2),
+        ("2EMB", "2emb", 2),
+        ("NCE", "nce", 2),
+    ];
+    let mut columns = vec!["model"];
+    let headers = ["RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU", "Heuristic"];
+    columns.extend(headers);
+    let mut table = Table::new("Table 3 — scheduling time (s) per method", &columns);
+
+    // Warm the PJRT executable cache (one-time policy compilation) so the
+    // first row's RL timings are comparable to the rest.
+    {
+        let model = zoo::nce();
+        let pool = simulated_types(2, true);
+        for method in ["rl", "rl-rnn"] {
+            let _ = common::run_method(method, &model, &pool, 20_000.0, 1);
+        }
+    }
+
+    for (label, model_name, types) in rows {
+        let model = zoo::by_name(model_name).unwrap();
+        let pool = simulated_types(types, true);
+        let mut cells = vec![label.to_string()];
+        for method in common::methods() {
+            let out = common::run_method(method, &model, &pool, 20_000.0, 42);
+            cells.push(fmt_secs(out.wall_time.as_secs_f64()));
+        }
+        table.row(&cells);
+    }
+    table.emit("table3_sched_time");
+}

@@ -1,0 +1,229 @@
+//! Command-line argument parsing. `clap` is not available offline, so this
+//! is a compact GNU-style parser: subcommands, `--flag`, `--key value`,
+//! `--key=value`, positional arguments, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` when the option takes a value (`--key v`); `false` for flags.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative spec for a subcommand.
+#[derive(Clone, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+/// Error from parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown subcommand `{0}`")]
+    UnknownCommand(String),
+    #[error("unknown option `--{0}` for `{1}`")]
+    UnknownOption(String, String),
+    #[error("option `--{0}` requires a value")]
+    MissingValue(String),
+    #[error("help requested")]
+    Help(String),
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl Cli {
+    /// Render `--help` for the whole binary or one subcommand.
+    pub fn help(&self, cmd: Option<&str>) -> String {
+        let mut out = String::new();
+        match cmd.and_then(|c| self.commands.iter().find(|s| s.name == c)) {
+            Some(spec) => {
+                let _ = writeln!(out, "{} {} — {}", self.bin, spec.name, spec.about);
+                let _ = writeln!(out, "\nUSAGE:\n  {} {} [OPTIONS]", self.bin, spec.name);
+                if !spec.positionals.is_empty() {
+                    let _ = writeln!(out, "\nARGS:");
+                    for (name, help) in &spec.positionals {
+                        let _ = writeln!(out, "  <{name}>  {help}");
+                    }
+                }
+                if !spec.opts.is_empty() {
+                    let _ = writeln!(out, "\nOPTIONS:");
+                    for o in &spec.opts {
+                        let v = if o.takes_value { " <VALUE>" } else { "" };
+                        let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                        let _ = writeln!(out, "  --{}{v}  {}{d}", o.name, o.help);
+                    }
+                }
+            }
+            None => {
+                let _ = writeln!(out, "{} — {}", self.bin, self.about);
+                let _ = writeln!(out, "\nUSAGE:\n  {} <COMMAND> [OPTIONS]", self.bin);
+                let _ = writeln!(out, "\nCOMMANDS:");
+                for c in &self.commands {
+                    let _ = writeln!(out, "  {:<16} {}", c.name, c.about);
+                }
+                let _ = writeln!(out, "\nRun `{} <COMMAND> --help` for command options.", self.bin);
+            }
+        }
+        out
+    }
+
+    /// Parse a raw argv (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(CliError::Help(self.help(None)));
+        }
+        let cmd_name = argv[0].clone();
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.clone()))?;
+        let mut args = Args { command: cmd_name.clone(), ..Default::default() };
+        // Seed defaults.
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.help(Some(&cmd_name))));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone(), cmd_name.clone()))?;
+                if opt.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or(CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, value);
+                } else {
+                    args.flags.insert(key, true);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "heterps",
+            about: "test",
+            commands: vec![CmdSpec {
+                name: "schedule",
+                about: "run a scheduler",
+                opts: vec![
+                    OptSpec { name: "model", help: "model name", takes_value: true, default: Some("ctrdnn") },
+                    OptSpec { name: "types", help: "resource types", takes_value: true, default: Some("4") },
+                    OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+                ],
+                positionals: vec![("method", "scheduler name")],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let args = cli().parse(&sv(&["schedule", "rl", "--model", "nce", "--verbose"])).unwrap();
+        assert_eq!(args.command, "schedule");
+        assert_eq!(args.positionals, vec!["rl"]);
+        assert_eq!(args.str_or("model", "?"), "nce");
+        assert_eq!(args.usize_or("types", 0), 4); // default
+        assert!(args.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_key_equals_value() {
+        let args = cli().parse(&sv(&["schedule", "--model=2emb"])).unwrap();
+        assert_eq!(args.str_or("model", "?"), "2emb");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(matches!(cli().parse(&sv(&["nope"])), Err(CliError::UnknownCommand(_))));
+        assert!(matches!(
+            cli().parse(&sv(&["schedule", "--bogus", "x"])),
+            Err(CliError::UnknownOption(..))
+        ));
+        assert!(matches!(
+            cli().parse(&sv(&["schedule", "--model"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_lists_commands_and_options() {
+        let h = cli().help(None);
+        assert!(h.contains("schedule"));
+        let h = cli().help(Some("schedule"));
+        assert!(h.contains("--model") && h.contains("default: ctrdnn"));
+    }
+}

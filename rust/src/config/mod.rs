@@ -1,0 +1,282 @@
+//! Experiment configuration: a TOML-subset parser plus typed experiment
+//! configs. `serde`/`toml` are not available offline, so HeterPS parses the
+//! subset it needs itself: `[section]` headers, `key = value` pairs with
+//! string / float / int / bool / flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed config: `section.key -> Value`. Keys outside any section live
+/// under the empty section name.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ParseError {
+                        line: ln + 1,
+                        message: "unterminated section header".into(),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: ln + 1, message: "empty section name".into() });
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: ln + 1,
+                message: "expected `key = value`".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError { line: ln + 1, message: "empty key".into() });
+            }
+            let value = parse_value(line[eq + 1..].trim(), ln + 1)?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            cfg.values.insert(full, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from a file path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_i64).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys under a section prefix (e.g. "resources.").
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        self.values.keys().filter(|k| k.starts_with(prefix)).map(|k| k.as_str()).collect()
+    }
+
+    pub fn insert(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |m: &str| ParseError { line, message: m.to_string() };
+    if text.is_empty() {
+        return Err(err("empty value"));
+    }
+    if text.starts_with('"') {
+        if text.len() < 2 || !text.ends_with('"') {
+            return Err(err("unterminated string"));
+        }
+        return Ok(Value::Str(text[1..text.len() - 1].to_string()));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if text.starts_with('[') {
+        if !text.ends_with(']') {
+            return Err(err("unterminated array"));
+        }
+        let inner = text[1..text.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("cannot parse value `{text}`")))
+}
+
+/// Split on commas that are not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let cfg = Config::parse(
+            "top = 1\n[cluster]\nname = \"dev\" # trailing comment\ncpu_servers = 10\nprice = 0.04\nelastic = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(cfg.str_or("cluster.name", "?"), "dev");
+        assert_eq!(cfg.usize_or("cluster.cpu_servers", 0), 10);
+        assert!((cfg.f64_or("cluster.price", 0.0) - 0.04).abs() < 1e-12);
+        assert!(cfg.bool_or("cluster.elastic", false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let cfg = Config::parse("xs = [1, 2.5, \"a,b\", [3, 4]]").unwrap();
+        let arr = cfg.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].as_i64(), Some(1));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2].as_str(), Some("a,b"));
+        assert_eq!(arr[3].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[open").is_err());
+        assert!(Config::parse("keyonly").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.str_or("a.b", "dflt"), "dflt");
+        assert_eq!(cfg.usize_or("a.c", 7), 7);
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let cfg = Config::parse("k = \"a # b\"").unwrap();
+        assert_eq!(cfg.get("k").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let cfg = Config::parse("[r]\na = 1\nb = 2\n[s]\nc = 3").unwrap();
+        let keys = cfg.keys_under("r.");
+        assert_eq!(keys, vec!["r.a", "r.b"]);
+    }
+}

@@ -1,0 +1,332 @@
+//! The analytic cost model of §4.1 (Equations 1–7).
+//!
+//! Given a scheduling plan, the model derives per-stage profiles
+//! (`OCT_i`, `ODT_i`, `alpha_i`, `beta_i`) from layer volumes and resource
+//! rates, then estimates per-stage compute/communication time under
+//! Amdahl's law, pipeline throughput (min over stages) and the monetary
+//! cost of the full training run. This evaluator is the inner loop of
+//! every scheduler, so it is deliberately allocation-light.
+
+use crate::model::{LayerKind, ModelSpec};
+use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
+use crate::resources::{ResourcePool, ResourceType};
+
+/// Fixed evaluation parameters (batch sizes, constraint, horizon).
+#[derive(Clone, Debug)]
+pub struct CostConfig {
+    /// Production batch size `B` per pipeline iteration.
+    pub batch_size: u64,
+    /// Profiling batch size `B_o` used to measure `OCT`/`ODT`.
+    pub profile_batch: u64,
+    /// Throughput floor `Throughput_limit` in samples/sec (Eq 10).
+    pub throughput_limit: f64,
+    /// Penalty factor applied to infeasible plans' cost so search methods
+    /// can still rank them (the paper rejects them outright; a smooth
+    /// penalty keeps REINFORCE/BO/GA gradients informative).
+    pub infeasible_penalty: f64,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            batch_size: 8192,
+            profile_batch: 256,
+            throughput_limit: 20_000.0,
+            infeasible_penalty: 10.0,
+        }
+    }
+}
+
+/// Per-stage profile measured (here: derived) at batch `B_o` on one unit of
+/// the stage's resource type — the `OCT_i`/`ODT_i`/`alpha_i`/`beta_i`
+/// quadruple of Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct StageProfile {
+    pub oct: f64,
+    pub odt: f64,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// Result of evaluating a full plan.
+#[derive(Clone, Debug)]
+pub struct PlanEval {
+    pub provisioning: ProvisioningPlan,
+    /// Samples/sec of the provisioned pipeline (Eq 5).
+    pub throughput: f64,
+    /// End-to-end training wall time in seconds (Eq 6).
+    pub train_time_secs: f64,
+    /// Monetary cost in USD (Eq 7), including the infeasibility penalty
+    /// when `feasible` is false.
+    pub cost_usd: f64,
+    pub feasible: bool,
+}
+
+/// The §4.1 cost model bound to a model, pool and config.
+pub struct CostModel<'a> {
+    pub model: &'a ModelSpec,
+    pub pool: &'a ResourcePool,
+    pub cfg: CostConfig,
+    /// Cached per-(layer, type) compute seconds at batch `B_o`.
+    layer_ct: Vec<f64>,
+    /// Cached per-(layer, type) stage-boundary transfer seconds at `B_o`
+    /// (activations forward + gradients back; paid only by a stage's LAST
+    /// layer — intra-stage activations never cross the network).
+    layer_boundary: Vec<f64>,
+    /// Cached per-(layer, type) weight-synchronization seconds at `B_o`
+    /// (PS push/pull for sparse, ring-allreduce volume for dense; paid by
+    /// every layer regardless of stage shape).
+    layer_sync: Vec<f64>,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(model: &'a ModelSpec, pool: &'a ResourcePool, cfg: CostConfig) -> Self {
+        let nt = pool.num_types();
+        let nl = model.num_layers();
+        let mut layer_ct = vec![0.0; nl * nt];
+        let mut layer_boundary = vec![0.0; nl * nt];
+        let mut layer_sync = vec![0.0; nl * nt];
+        for (l, layer) in model.layers.iter().enumerate() {
+            for t in 0..nt {
+                let rt = pool.get(t);
+                layer_ct[l * nt + t] = layer_compute_secs(layer, rt, cfg.profile_batch);
+                let (boundary, sync) = layer_comm_secs(layer, rt, cfg.profile_batch);
+                layer_boundary[l * nt + t] = boundary;
+                layer_sync[l * nt + t] = sync;
+            }
+        }
+        CostModel { model, pool, cfg, layer_ct, layer_boundary, layer_sync }
+    }
+
+    #[inline]
+    fn ct(&self, layer: usize, type_id: usize) -> f64 {
+        self.layer_ct[layer * self.pool.num_types() + type_id]
+    }
+
+    #[inline]
+    fn dt(&self, layer: usize, type_id: usize) -> f64 {
+        let i = layer * self.pool.num_types() + type_id;
+        self.layer_boundary[i] + self.layer_sync[i]
+    }
+
+    /// Profile one stage (Table 1's `OCT_i`, `ODT_i`, `alpha_i`, `beta_i`).
+    pub fn stage_profile(&self, span: &StageSpan) -> StageProfile {
+        let rt = self.pool.get(span.type_id);
+        let mut oct = 0.0;
+        for l in span.layers() {
+            oct += self.ct(l, span.type_id);
+        }
+        // ODT: the boundary transfer to the next stage (only the LAST
+        // layer's activations/gradients cross the network) plus every
+        // layer's weight synchronization (PS for sparse, ring-allreduce
+        // for dense).
+        let nt = self.pool.num_types();
+        let mut odt = self.layer_boundary[span.last_layer * nt + span.type_id];
+        for l in span.layers() {
+            odt += self.layer_sync[l * nt + span.type_id];
+        }
+        StageProfile { oct: oct.max(1e-12), odt: odt.max(1e-12), alpha: rt.alpha, beta: rt.beta }
+    }
+
+    /// Eq 1: stage compute time for one iteration of batch `B` with `k`
+    /// replicas. `OCT` is measured at `B_o`; time scales linearly in batch.
+    pub fn stage_ct(&self, prof: &StageProfile, k: f64) -> f64 {
+        let scale = self.cfg.batch_size as f64 / self.cfg.profile_batch as f64;
+        prof.oct * scale * (1.0 - prof.alpha + prof.alpha / k)
+    }
+
+    /// Eq 2: stage communication time analogously.
+    pub fn stage_dt(&self, prof: &StageProfile, k: f64) -> f64 {
+        let scale = self.cfg.batch_size as f64 / self.cfg.profile_batch as f64;
+        prof.odt * scale * (1.0 - prof.beta + prof.beta / k)
+    }
+
+    /// Eq 3: computation and communication overlap; the stage time is the
+    /// max of the two.
+    pub fn stage_et(&self, prof: &StageProfile, k: f64) -> f64 {
+        self.stage_ct(prof, k).max(self.stage_dt(prof, k))
+    }
+
+    /// Eq 4–5: pipeline throughput (samples/sec) for a provisioned plan.
+    pub fn throughput(&self, stages: &[StageSpan], prov: &ProvisioningPlan) -> f64 {
+        let mut worst_et = 0.0f64;
+        for (span, &k) in stages.iter().zip(&prov.replicas) {
+            let prof = self.stage_profile(span);
+            worst_et = worst_et.max(self.stage_et(&prof, k as f64));
+        }
+        if worst_et <= 0.0 {
+            return 0.0;
+        }
+        self.cfg.batch_size as f64 / worst_et
+    }
+
+    /// Eq 6: wall-clock training time for `epochs * examples_per_epoch`
+    /// samples at a given throughput.
+    pub fn train_time_secs(&self, throughput: f64) -> f64 {
+        if throughput <= 0.0 {
+            return f64::INFINITY;
+        }
+        (self.model.epochs * self.model.examples_per_epoch) as f64 / throughput
+    }
+
+    /// Eq 7: monetary cost in USD of holding `units_per_type` for
+    /// `train_time_secs`.
+    pub fn monetary_cost(&self, train_time_secs: f64, units_per_type: &[usize]) -> f64 {
+        let hourly: f64 = units_per_type
+            .iter()
+            .enumerate()
+            .map(|(t, &k)| self.pool.get(t).price_per_hour * k as f64)
+            .sum();
+        train_time_secs / 3600.0 * hourly
+    }
+
+    /// Full evaluation: provision (via [`crate::provision`]) then price.
+    /// This is the reward signal for every scheduler.
+    pub fn evaluate(&self, plan: &SchedulingPlan) -> PlanEval {
+        crate::provision::provision_and_price(self, plan)
+    }
+
+    /// Communication time (seconds at `B_o`) from the layer's boundary on a
+    /// type — exposed for the policy's feature vector (§5.2 feature 5).
+    pub fn layer_comm_feature(&self, layer: usize) -> f64 {
+        // Feature uses the *cheapest* network path as a scale-free proxy;
+        // the policy sees relative magnitudes, not absolute seconds.
+        (0..self.pool.num_types()).map(|t| self.dt(layer, t)).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Compute seconds for one layer's fwd+bwd of a `batch` on one unit.
+fn layer_compute_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch: u64) -> f64 {
+    let b = batch as f64;
+    if layer.kind.data_intensive() {
+        // IO-bound: time = bytes touched / io rate (embedding lookups,
+        // pooling reads). Weight bytes are touched sparsely: only the rows
+        // hit by the batch, proportional to input volume, not table size.
+        let bytes = (layer.input_bytes + layer.output_bytes) as f64 * b;
+        bytes / rt.io_bytes_per_sec
+    } else {
+        let flops = layer.flops as f64 * b;
+        flops / rt.flops_per_sec
+            // Dense layers still stream activations through memory.
+            + (layer.input_bytes + layer.output_bytes) as f64 * b / (10.0 * rt.io_bytes_per_sec)
+    }
+}
+
+/// Communication seconds for one layer, split into (boundary, sync):
+/// boundary = activation + gradient transfer to the next stage (paid only
+/// when this layer ends a stage); sync = weight-synchronization traffic
+/// (PS pull/push for sparse layers, ring-allreduce volume for dense).
+fn layer_comm_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch: u64) -> (f64, f64) {
+    let b = batch as f64;
+    let boundary = 2.0 * layer.output_bytes as f64 * b; // activation fwd + grad bwd
+    let weight_sync = match layer.kind {
+        // Sparse tables sync only touched rows: proportional to batch.
+        LayerKind::Embedding => 2.0 * layer.input_bytes as f64 * b,
+        // Dense weights allreduce once per iteration (2x volume for
+        // reduce-scatter + all-gather), independent of batch.
+        _ => 2.0 * layer.weight_bytes as f64,
+    };
+    (boundary / rt.net_bytes_per_sec, weight_sync / rt.net_bytes_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+
+    fn fixture() -> (ModelSpec, ResourcePool) {
+        (zoo::ctrdnn(), paper_testbed())
+    }
+
+    #[test]
+    fn amdahl_equations_match_hand_computation() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let prof = StageProfile { oct: 2.0, odt: 1.0, alpha: 0.9, beta: 0.8 };
+        let scale = cm.cfg.batch_size as f64 / cm.cfg.profile_batch as f64;
+        // Eq 1 at k=4: 2 * scale * (0.1 + 0.9/4)
+        let ct = cm.stage_ct(&prof, 4.0);
+        assert!((ct - 2.0 * scale * (0.1 + 0.225)).abs() < 1e-9);
+        // Eq 2 at k=4: 1 * scale * (0.2 + 0.8/4)
+        let dt = cm.stage_dt(&prof, 4.0);
+        assert!((dt - scale * 0.4).abs() < 1e-9);
+        // Eq 3: overlap -> max
+        assert!((cm.stage_et(&prof, 4.0) - ct.max(dt)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_replicas_never_slower() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = SchedulingPlan::new(vec![0; 16]);
+        let prof = cm.stage_profile(&plan.stages()[0]);
+        let mut last = f64::INFINITY;
+        for k in 1..=64 {
+            let et = cm.stage_et(&prof, k as f64);
+            assert!(et <= last + 1e-12, "k={k}: {et} > {last}");
+            last = et;
+        }
+    }
+
+    #[test]
+    fn amdahl_has_serial_floor() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let prof = StageProfile { oct: 1.0, odt: 0.1, alpha: 0.9, beta: 0.9 };
+        let scale = cm.cfg.batch_size as f64 / cm.cfg.profile_batch as f64;
+        let floor = 1.0 * scale * (1.0 - 0.9);
+        assert!(cm.stage_ct(&prof, 1e9) >= floor * 0.999);
+    }
+
+    #[test]
+    fn embedding_cheaper_on_cpu_fc_cheaper_on_gpu() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        // Layer 0 is the embedding; compare single-layer stage profiles.
+        let emb_cpu = cm.stage_profile(&StageSpan { index: 0, type_id: 0, first_layer: 0, last_layer: 0 });
+        let emb_gpu = cm.stage_profile(&StageSpan { index: 0, type_id: 1, first_layer: 0, last_layer: 0 });
+        assert!(emb_cpu.oct < emb_gpu.oct, "embedding should be faster on CPU");
+        // A mid-tower FC layer must be faster on GPU.
+        let fc_idx = m.layers.iter().position(|l| l.kind == LayerKind::FullyConnected).unwrap();
+        let fc_cpu = cm.stage_profile(&StageSpan { index: 0, type_id: 0, first_layer: fc_idx, last_layer: fc_idx });
+        let fc_gpu = cm.stage_profile(&StageSpan { index: 0, type_id: 1, first_layer: fc_idx, last_layer: fc_idx });
+        assert!(fc_gpu.oct < fc_cpu.oct, "FC should be faster on GPU");
+    }
+
+    #[test]
+    fn throughput_is_min_over_stages() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = SchedulingPlan::new(
+            (0..16).map(|l| if l < 2 { 0 } else { 1 }).collect::<Vec<_>>(),
+        );
+        let stages = plan.stages();
+        let prov = ProvisioningPlan { replicas: vec![1, 1], ps_cpu_cores: 0 };
+        let thr = cm.throughput(&stages, &prov);
+        // Manually: min of per-stage B/ET.
+        let expect = stages
+            .iter()
+            .map(|s| cm.cfg.batch_size as f64 / cm.stage_et(&cm.stage_profile(s), 1.0))
+            .fold(f64::INFINITY, f64::min);
+        assert!((thr - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn monetary_cost_eq7() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        // 2 CPU units + 3 GPU units for 7200s: (2*0.04 + 3*2.42) * 2h.
+        let cost = cm.monetary_cost(7200.0, &[2, 3]);
+        assert!((cost - (2.0 * 0.04 + 3.0 * 2.42) * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn train_time_eq6() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let t = cm.train_time_secs(100_000.0);
+        assert!((t - (m.examples_per_epoch * m.epochs) as f64 / 100_000.0).abs() < 1e-9);
+        assert!(cm.train_time_secs(0.0).is_infinite());
+    }
+}

@@ -1,0 +1,337 @@
+//! Communication aggregation + compression (§3 data management): "the data
+//! management module dynamically aggregates the data to send to reduce the
+//! overhead ... we also exploit data compression during the data
+//! communication."
+//!
+//! Gradients tolerate lossy transport; parameters do not. Three codecs:
+//! * `F32` — identity (exact).
+//! * `F16` — IEEE half quantization, 2x smaller, ~1e-3 relative error.
+//! * `SparseF16` — drop near-zero entries then F16 the survivors: the
+//!   right codec for embedding-gradient traffic, which is overwhelmingly
+//!   zero outside the touched rows.
+
+/// Compression codec selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    F32,
+    F16,
+    /// Sparse + f16 with the given zero threshold encoded at compress time.
+    SparseF16,
+}
+
+const MAGIC_F32: u8 = 0;
+const MAGIC_F16: u8 = 1;
+const MAGIC_SPARSE: u8 = 2;
+
+/// f32 -> IEEE 754 half bits (round-to-nearest-even via the bit trick).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let mut mant = bits & 0x7f_ffff;
+    if ((bits >> 23) & 0xff) == 0xff {
+        // Inf/NaN.
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow -> 0
+        }
+        // Subnormal half.
+        mant |= 0x80_0000;
+        let shift = (14 - exp) as u32;
+        let half_mant = mant >> shift;
+        // Round to nearest.
+        let round_bit = 1u32 << (shift - 1);
+        let rounded = if (mant & round_bit) != 0 && (mant & (round_bit - 1) | (half_mant & 1)) != 0 {
+            half_mant + 1
+        } else {
+            half_mant
+        };
+        return sign | rounded as u16;
+    }
+    // Normal: round mantissa from 23 to 10 bits.
+    let round_bit = 0x1000u32;
+    if (mant & round_bit) != 0 && ((mant & (round_bit - 1)) != 0 || (mant & (round_bit << 1)) != 0) {
+        mant += round_bit << 1;
+        if mant & 0x80_0000 != 0 {
+            mant = 0;
+            exp += 1;
+            if exp >= 0x1f {
+                return sign | 0x7c00;
+            }
+        }
+    }
+    sign | ((exp as u16) << 10) | ((mant >> 13) as u16)
+}
+
+/// IEEE 754 half bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 10 + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Compress a gradient/parameter vector. The frame is self-describing:
+/// `[magic u8][len u64][payload]`.
+pub fn compress_f32(data: &[f32], codec: Codec) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8 + data.len() * 2);
+    let push_len = |out: &mut Vec<u8>, n: usize| out.extend_from_slice(&(n as u64).to_le_bytes());
+    match codec {
+        Codec::F32 => {
+            out.push(MAGIC_F32);
+            push_len(&mut out, data.len());
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Codec::F16 => {
+            out.push(MAGIC_F16);
+            push_len(&mut out, data.len());
+            for v in data {
+                out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+            }
+        }
+        Codec::SparseF16 => {
+            out.push(MAGIC_SPARSE);
+            push_len(&mut out, data.len());
+            // Indices as delta-varint, values as f16.
+            let nz: Vec<(usize, f32)> = data
+                .iter()
+                .copied()
+                .enumerate()
+                .filter(|(_, v)| v.abs() > 1e-8)
+                .collect();
+            push_len(&mut out, nz.len());
+            let mut prev = 0usize;
+            for (i, _) in &nz {
+                let mut delta = (i - prev) as u64;
+                prev = *i;
+                loop {
+                    let byte = (delta & 0x7f) as u8;
+                    delta >>= 7;
+                    if delta == 0 {
+                        out.push(byte);
+                        break;
+                    }
+                    out.push(byte | 0x80);
+                }
+            }
+            for (_, v) in &nz {
+                out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Decompress a frame produced by [`compress_f32`].
+pub fn decompress_f32(frame: &[u8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(frame.len() >= 9, "truncated frame");
+    let magic = frame[0];
+    let read_u64 = |b: &[u8]| u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
+    let len = read_u64(&frame[1..9]);
+    let body = &frame[9..];
+    match magic {
+        MAGIC_F32 => {
+            anyhow::ensure!(body.len() == len * 4, "f32 payload size");
+            Ok(body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        }
+        MAGIC_F16 => {
+            anyhow::ensure!(body.len() == len * 2, "f16 payload size");
+            Ok(body
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect())
+        }
+        MAGIC_SPARSE => {
+            anyhow::ensure!(body.len() >= 8, "sparse header");
+            let nz = read_u64(&body[..8]);
+            let mut pos = 8usize;
+            let mut indices = Vec::with_capacity(nz);
+            let mut acc = 0usize;
+            for _ in 0..nz {
+                let mut shift = 0u32;
+                let mut delta = 0u64;
+                loop {
+                    anyhow::ensure!(pos < body.len(), "truncated varint");
+                    let byte = body[pos];
+                    pos += 1;
+                    delta |= ((byte & 0x7f) as u64) << shift;
+                    shift += 7;
+                    if byte & 0x80 == 0 {
+                        break;
+                    }
+                }
+                acc += delta as usize;
+                indices.push(acc);
+            }
+            anyhow::ensure!(body.len() - pos == nz * 2, "sparse values size");
+            let mut out = vec![0f32; len];
+            for (k, idx) in indices.iter().enumerate() {
+                anyhow::ensure!(*idx < len, "index out of range");
+                let c = &body[pos + 2 * k..pos + 2 * k + 2];
+                out[*idx] = f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+        _ => anyhow::bail!("unknown codec magic {magic}"),
+    }
+}
+
+/// Aggregate many small messages into one frame (the §3 "dynamically
+/// aggregates the data to send" path): plain length-prefixed packing.
+pub fn aggregate(messages: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(messages.len() as u64).to_le_bytes());
+    for m in messages {
+        out.extend_from_slice(&(m.len() as u64).to_le_bytes());
+        out.extend_from_slice(m);
+    }
+    out
+}
+
+/// Inverse of [`aggregate`].
+pub fn disaggregate(frame: &[u8]) -> anyhow::Result<Vec<Vec<u8>>> {
+    anyhow::ensure!(frame.len() >= 8, "truncated aggregate");
+    let n = u64::from_le_bytes(frame[..8].try_into().unwrap()) as usize;
+    let mut pos = 8usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        anyhow::ensure!(frame.len() >= pos + 8, "truncated message header");
+        let len = u64::from_le_bytes(frame[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        anyhow::ensure!(frame.len() >= pos + len, "truncated message body");
+        out.push(frame[pos..pos + len].to_vec());
+        pos += len;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_roundtrip_known_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, 1e-4, -3.14159] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let err = (back - v).abs() / v.abs().max(1.0);
+            assert!(err < 1e-3, "{v} -> {back}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e20)).is_infinite()); // overflow
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-12)), 0.0); // underflow
+    }
+
+    #[test]
+    fn exact_codec_roundtrips_exactly() {
+        let data: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+        let frame = compress_f32(&data, Codec::F32);
+        assert_eq!(decompress_f32(&frame).unwrap(), data);
+    }
+
+    #[test]
+    fn f16_codec_halves_size_with_small_error() {
+        let data: Vec<f32> = (0..1024).map(|i| ((i as f32) * 0.01).sin()).collect();
+        let frame = compress_f32(&data, Codec::F16);
+        assert!(frame.len() < data.len() * 4 / 2 + 16);
+        let back = decompress_f32(&frame).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_codec_wins_on_sparse_gradients() {
+        let mut data = vec![0f32; 10_000];
+        data[17] = 1.5;
+        data[9_000] = -2.25;
+        let frame = compress_f32(&data, Codec::SparseF16);
+        assert!(frame.len() < 64, "sparse frame should be tiny: {}", frame.len());
+        let back = decompress_f32(&frame).unwrap();
+        assert_eq!(back.len(), data.len());
+        assert!((back[17] - 1.5).abs() < 1e-3);
+        assert!((back[9_000] + 2.25).abs() < 1e-2);
+        assert!(back.iter().enumerate().all(|(i, &v)| v == 0.0 || i == 17 || i == 9_000));
+    }
+
+    #[test]
+    fn property_all_codecs_roundtrip_within_tolerance() {
+        propcheck::check_result(
+            0xC0DEC,
+            128,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 300);
+                let sparse = rng.chance(0.5);
+                let data: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if sparse && rng.chance(0.8) {
+                            0.0
+                        } else {
+                            (rng.f32() - 0.5) * 20.0
+                        }
+                    })
+                    .collect();
+                data
+            },
+            |data| {
+                for codec in [Codec::F32, Codec::F16, Codec::SparseF16] {
+                    let back = decompress_f32(&compress_f32(data, codec))
+                        .map_err(|e| e.to_string())?;
+                    if back.len() != data.len() {
+                        return Err(format!("{codec:?}: length changed"));
+                    }
+                    let tol = if codec == Codec::F32 { 0.0 } else { 0.02 };
+                    for (a, b) in data.iter().zip(&back) {
+                        if (a - b).abs() > tol * a.abs().max(1.0) + 1e-3 {
+                            return Err(format!("{codec:?}: {a} vs {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn aggregate_roundtrips() {
+        let msgs = vec![vec![1u8, 2, 3], vec![], vec![9u8; 100]];
+        let frame = aggregate(&msgs);
+        assert_eq!(disaggregate(&frame).unwrap(), msgs);
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        assert!(decompress_f32(&[]).is_err());
+        assert!(decompress_f32(&[42, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        let mut frame = compress_f32(&[1.0, 2.0], Codec::F16);
+        frame.truncate(frame.len() - 1);
+        assert!(decompress_f32(&frame).is_err());
+    }
+}

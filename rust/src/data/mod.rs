@@ -1,0 +1,23 @@
+//! Data management (§3): the module that feeds the training pipeline and
+//! keeps parameter state on the right storage tier.
+//!
+//! * [`dataset`] — synthetic CTR click-log generator (zipfian sparse slots
+//!   + dense features), standing in for the paper's production logs.
+//! * [`cache`] — the prefetching LRU cache that stages training batches in
+//!   CPU-worker memory ahead of consumption.
+//! * [`hotcold`] — access-frequency-tiered parameter storage (hot rows in
+//!   memory, cold rows spilled to SSD), §3's hot/cold parameter monitor.
+//! * [`compress`] — communication aggregation + compression (fp16
+//!   quantization and sparse delta encoding) for inter-worker traffic.
+
+pub mod cache;
+pub mod compress;
+pub mod dataset;
+pub mod loader;
+pub mod hotcold;
+
+pub use cache::PrefetchCache;
+pub use loader::PrefetchLoader;
+pub use compress::{compress_f32, decompress_f32, Codec};
+pub use dataset::{Batch, CtrDataset, DatasetConfig};
+pub use hotcold::HotColdStore;

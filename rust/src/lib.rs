@@ -1,0 +1,60 @@
+//! # HeterPS — distributed deep learning with RL-based scheduling in
+//! heterogeneous environments
+//!
+//! A production-grade reproduction of *HeterPS* (Liu et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the Amdahl cost model
+//!   (§4.1), the load-balancing provisioner with Newton search (§5.1), the
+//!   REINFORCE scheduler with an LSTM policy plus seven baselines (§5.2,
+//!   §6.2), the pipeline+data-parallel training runtime with parameter
+//!   server and ring-allreduce (§3), the data-management module (prefetch,
+//!   hot/cold tiering, aggregation+compression), a discrete-event cluster
+//!   simulator, and the profiler.
+//! * **Layer 2 (python/compile)** — JAX definitions of the CTR models and
+//!   the scheduling policy, AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
+//!   embedding bag, fused MLP and LSTM cell, verified against pure-jnp
+//!   oracles.
+//!
+//! The rust binary never runs Python: artifacts in `artifacts/*.hlo.txt`
+//! are loaded through PJRT (`runtime` module) and executed natively.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use heterps::prelude::*;
+//!
+//! let model = heterps::model::zoo::ctrdnn();
+//! let pool = heterps::resources::paper_testbed();
+//! let cm = CostModel::new(&model, &pool, CostConfig::default());
+//! let mut scheduler = heterps::sched::rl::RlScheduler::tabular(Default::default(), 42);
+//! let outcome = scheduler.schedule(&cm);
+//! println!("plan {} costs ${:.2}", outcome.plan.render(), outcome.eval.cost_usd);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod plan;
+pub mod profiler;
+pub mod provision;
+pub mod resources;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;
+pub mod train;
+pub mod util;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::cost::{CostConfig, CostModel, PlanEval};
+    pub use crate::model::{LayerKind, LayerSpec, ModelSpec};
+    pub use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
+    pub use crate::resources::{paper_testbed, simulated_types, ResourceKind, ResourcePool};
+    pub use crate::sched::{ScheduleOutcome, Scheduler};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,273 @@
+//! `heterps` — the HeterPS coordinator CLI.
+//!
+//! Subcommands mirror the framework's lifecycle: `schedule` a model onto a
+//! heterogeneous pool, `compare` the full §6.2 scheduler suite, `simulate`
+//! a plan on a virtual cluster, `info` the catalogs.
+
+use heterps::cli::{Cli, CliError, CmdSpec, OptSpec};
+use heterps::cost::{CostConfig, CostModel};
+use heterps::metrics::Table;
+use heterps::model::zoo;
+use heterps::resources::simulated_types;
+use heterps::sched;
+use heterps::simulator::{simulate_plan, SimConfig};
+
+fn cli() -> Cli {
+    let common = || {
+        vec![
+            OptSpec { name: "model", help: "zoo model (ctrdnn|matchnet|2emb|nce|ctrdnn1|ctrdnn2|ctrdnn8|ctrdnn12|ctrdnn20)", takes_value: true, default: Some("ctrdnn") },
+            OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
+            OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
+            OptSpec { name: "throughput", help: "throughput floor, samples/sec (default 20000; config file wins if set)", takes_value: true, default: None },
+            OptSpec { name: "seed", help: "seed for stochastic schedulers", takes_value: true, default: Some("42") },
+            OptSpec { name: "config", help: "TOML config file (see configs/default.toml)", takes_value: true, default: None },
+        ]
+    };
+    Cli {
+        bin: "heterps",
+        about: "distributed DNN training with RL-based scheduling in heterogeneous environments",
+        commands: vec![
+            CmdSpec {
+                name: "schedule",
+                about: "run one scheduler and print the plan, provisioning and cost",
+                opts: common(),
+                positionals: vec![("method", "rl|rl-rnn|rl-tabular|bf|bo|genetic|greedy|cpu|gpu|heuristic")],
+            },
+            CmdSpec {
+                name: "compare",
+                about: "run the full §6.2 scheduler comparison",
+                opts: common(),
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "simulate",
+                about: "schedule with RL, then replay on the discrete-event cluster simulator",
+                opts: common(),
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "train",
+                about: "run the pipeline trainer (PS + HLO stages) on synthetic CTR data",
+                opts: vec![
+                    OptSpec { name: "steps", help: "training steps", takes_value: true, default: Some("20") },
+                    OptSpec { name: "microbatches", help: "microbatches per step", takes_value: true, default: Some("2") },
+                    OptSpec { name: "vocab", help: "embedding vocabulary", takes_value: true, default: Some("100000") },
+                    OptSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "info",
+                about: "print the model zoo and resource catalog",
+                opts: vec![],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::Help(h)) => {
+            print!("{h}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", cli.help(None));
+            std::process::exit(2);
+        }
+    };
+
+    let run = || -> anyhow::Result<()> {
+        match args.command.as_str() {
+            "info" => {
+                let mut t = Table::new("Model zoo", &["name", "layers", "params (MB)"]);
+                for name in ["ctrdnn", "matchnet", "2emb", "nce", "ctrdnn1", "ctrdnn2"] {
+                    let m = zoo::by_name(name).unwrap();
+                    t.row(&[
+                        name.to_string(),
+                        m.num_layers().to_string(),
+                        format!("{:.1}", m.total_weight_bytes() as f64 / 1e6),
+                    ]);
+                }
+                println!("{}", t.render());
+                let pool = simulated_types(4, true);
+                let mut t = Table::new(
+                    "Resource catalog (first 4 types)",
+                    &["id", "name", "$/h", "TFLOP/s", "IO GB/s"],
+                );
+                for ty in &pool.types {
+                    t.row(&[
+                        ty.id.to_string(),
+                        ty.name.clone(),
+                        format!("{:.2}", ty.price_per_hour),
+                        format!("{:.1}", ty.flops_per_sec / 1e12),
+                        format!("{:.1}", ty.io_bytes_per_sec / 1e9),
+                    ]);
+                }
+                println!("{}", t.render());
+                Ok(())
+            }
+            "train" => {
+                let file = args.get("config").map(heterps::config::Config::load).transpose()?;
+                let cfg_get = |k: &str, d: usize| {
+                    file.as_ref().map(|c| c.usize_or(k, d)).unwrap_or(d)
+                };
+                let steps = args.usize_or("steps", cfg_get("train.steps", 20));
+                let microbatches = args.usize_or("microbatches", cfg_get("train.microbatches", 2));
+                let vocab = args.usize_or("vocab", cfg_get("train.vocab", 100_000));
+                run_train(steps, microbatches, vocab)?;
+                Ok(())
+            }
+            "schedule" | "compare" | "simulate" => {
+                let file = args.get("config").map(heterps::config::Config::load).transpose()?;
+                let model_name = args.str_or("model", "ctrdnn");
+                let model = zoo::by_name(model_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+                let n_types = match &file {
+                    Some(c) => c.usize_or("pool.types", args.usize_or("types", 2)),
+                    None => args.usize_or("types", 2),
+                }
+                .max(1);
+                let include_cpu = match &file {
+                    Some(c) => c.bool_or("pool.include_cpu", !args.flag("no-cpu")),
+                    None => !args.flag("no-cpu"),
+                };
+                let pool = simulated_types(n_types, include_cpu);
+                let mut cfg = CostConfig::default();
+                if let Some(c) = &file {
+                    cfg.batch_size = c.usize_or("cost.batch_size", cfg.batch_size as usize) as u64;
+                    cfg.profile_batch =
+                        c.usize_or("cost.profile_batch", cfg.profile_batch as usize) as u64;
+                    cfg.throughput_limit = c.f64_or("cost.throughput_limit", cfg.throughput_limit);
+                    cfg.infeasible_penalty =
+                        c.f64_or("cost.infeasible_penalty", cfg.infeasible_penalty);
+                }
+                cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit);
+                let cm = CostModel::new(&model, &pool, cfg);
+                let seed = args.u64_or("seed", 42);
+
+                match args.command.as_str() {
+                    "schedule" => {
+                        let method =
+                            args.positionals.first().map(|s| s.as_str()).unwrap_or("rl");
+                        let mut s = sched::by_name(method, seed)
+                            .ok_or_else(|| anyhow::anyhow!("unknown scheduler {method}"))?;
+                        let out = s.schedule(&cm);
+                        println!("method      : {}", s.name());
+                        println!("plan        : {}", out.plan.render());
+                        println!("stages      : {}", out.plan.stages().len());
+                        println!("replicas    : {:?}", out.eval.provisioning.replicas);
+                        println!("ps cores    : {}", out.eval.provisioning.ps_cpu_cores);
+                        println!(
+                            "throughput  : {:.0} samples/s (floor {:.0})",
+                            out.eval.throughput, cm.cfg.throughput_limit
+                        );
+                        println!("train time  : {:.1} s", out.eval.train_time_secs);
+                        println!(
+                            "cost        : ${:.2}{}",
+                            out.eval.cost_usd,
+                            if out.eval.feasible { "" } else { "  (INFEASIBLE, penalized)" }
+                        );
+                        println!(
+                            "sched time  : {:.3} s ({} evaluations)",
+                            out.wall_time.as_secs_f64(),
+                            out.evaluations
+                        );
+                    }
+                    "compare" => {
+                        let mut t = Table::new(
+                            format!("Scheduler comparison — {model_name}, {n_types} types"),
+                            &["method", "cost ($)", "throughput", "feasible", "sched time (s)"],
+                        );
+                        for m in sched::comparison_methods() {
+                            let mut s = sched::by_name(m, seed).unwrap();
+                            let out = s.schedule(&cm);
+                            t.row(&[
+                                m.to_string(),
+                                format!("{:.2}", out.eval.cost_usd),
+                                format!("{:.0}", out.eval.throughput),
+                                out.eval.feasible.to_string(),
+                                format!("{:.3}", out.wall_time.as_secs_f64()),
+                            ]);
+                        }
+                        println!("{}", t.render());
+                    }
+                    _ => {
+                        let mut s = sched::by_name("rl", seed).unwrap();
+                        let out = s.schedule(&cm);
+                        println!("plan: {}", out.plan.render());
+                        match simulate_plan(&cm, &out.plan, &SimConfig::default(), seed) {
+                            Some(sim) => {
+                                println!("analytic throughput : {:.0} samples/s", out.eval.throughput);
+                                println!("simulated throughput: {:.0} samples/s", sim.throughput);
+                                println!("analytic cost       : ${:.2}", out.eval.cost_usd);
+                                println!("simulated cost      : ${:.2}", sim.cost_usd);
+                                println!("bottleneck stage    : {}", sim.bottleneck_stage);
+                            }
+                            None => println!("plan not provisionable on this pool"),
+                        }
+                    }
+                }
+                Ok(())
+            }
+            other => anyhow::bail!("unhandled command {other}"),
+        }
+    };
+
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+
+/// `heterps train`: a short pipeline-training run (PS embedding + HLO
+/// dense stages) on synthetic CTR data — the CLI face of the
+/// `train_ctr` example. Requires `make artifacts`.
+fn run_train(steps: usize, microbatches: usize, vocab: usize) -> anyhow::Result<()> {
+    use heterps::data::dataset::{CtrDataset, DatasetConfig};
+    use heterps::data::PrefetchLoader;
+    use heterps::train::pipeline::{PipelineConfig, PipelineTrainer};
+    use heterps::train::stage::{EmbeddingStage, HloStage, EMB_DIM, MB_ROWS, SLOTS};
+    use heterps::train::ParamServer;
+    use std::sync::Arc;
+
+    let ps = Arc::new(ParamServer::new(EMB_DIM, 32, 0.3, 7));
+    let mut trainer = PipelineTrainer::new(
+        vec![
+            Box::new(EmbeddingStage::new(ps.clone())),
+            Box::new(HloStage::ctr_stage1(0.2, 101)?),
+            Box::new(HloStage::ctr_stage2(0.2, 202)?),
+        ],
+        PipelineConfig { microbatches },
+    );
+    let ds = CtrDataset::new(
+        DatasetConfig { slots: SLOTS, vocab, ..Default::default() },
+        13,
+    );
+    let mut loader = PrefetchLoader::start(ds, microbatches * MB_ROWS, 4);
+    for step in 0..steps {
+        let batch = loader.next_batch();
+        let mbs = PipelineTrainer::microbatches(&batch, SLOTS);
+        let loss = trainer.train_step(&mbs)?;
+        if step % 5 == 0 || step + 1 == steps {
+            println!(
+                "step {step:>4}  loss {loss:.4}  {:>7.0} samples/s  ps rows {}",
+                trainer.stats.throughput(),
+                ps.rows()
+            );
+        }
+    }
+    println!(
+        "[train] {} steps, {} samples, {:.0} samples/s",
+        trainer.stats.steps,
+        trainer.stats.samples,
+        trainer.stats.throughput()
+    );
+    Ok(())
+}

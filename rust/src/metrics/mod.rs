@@ -1,0 +1,208 @@
+//! Metrics, result tables and CSV emission.
+//!
+//! The bench harness regenerates every table/figure from the paper; this
+//! module renders aligned markdown-ish tables on stdout (matching the rows
+//! the paper reports) and writes machine-readable CSV next to them under
+//! `results/`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A simple monotonically-increasing counter (thread-safe), used by the
+/// training runtime for samples/bytes processed.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Throughput meter: samples per wall-clock second since creation/reset.
+#[derive(Debug)]
+pub struct Throughput {
+    started: Instant,
+    samples: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { started: Instant::now(), samples: Counter::new() }
+    }
+    pub fn record(&self, n: u64) {
+        self.samples.add(n);
+    }
+    pub fn per_sec(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.samples.get() as f64 / dt
+        }
+    }
+}
+
+/// A rectangular results table with a title; renders aligned text and CSV.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let hdr: Vec<String> =
+            self.columns.iter().enumerate().map(|(i, c)| format!("{:<w$}", c, w = widths[i])).collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().enumerate().map(|(i, c)| format!("{:<w$}", c, w = widths[i])).collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let quote = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.columns.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under `results/<name>.csv`.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.render());
+        let dir = Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{name}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            } else {
+                println!("[results] wrote {}", path.display());
+            }
+        }
+    }
+}
+
+/// Labeled scalar metrics registry, rendered as `key = value` lines.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    items: BTreeMap<String, f64>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.items.insert(key.to_string(), v);
+    }
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.items.get(key).copied()
+    }
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.items {
+            let _ = writeln!(out, "{k} = {v:.6}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv_quotes() {
+        let mut t = Table::new("Demo", &["name", "cost"]);
+        t.row_strs(&["rl,lstm", "1.0"]);
+        t.row_strs(&["greedy", "2.25"]);
+        let text = t.render();
+        assert!(text.contains("== Demo =="));
+        assert!(text.contains("| name"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,cost\n"));
+        assert!(csv.contains("\"rl,lstm\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new();
+        r.set("throughput", 123.5);
+        assert_eq!(r.get("throughput"), Some(123.5));
+        assert!(r.render().contains("throughput = 123.5"));
+    }
+}

@@ -1,0 +1,174 @@
+//! DNN model descriptions.
+//!
+//! HeterPS schedules at the *layer* level: each layer carries the five
+//! features the paper's LSTM policy consumes (§5.2) — index, layer type,
+//! input size, weight size, and communication time — plus the raw
+//! compute/IO volumes the cost model needs to derive `OCT`/`ODT` per
+//! resource type (§4.1).
+
+pub mod zoo;
+
+pub use zoo::{by_name, ctrdnn, ctrdnn1, ctrdnn2, ctrdnn_with_layers, matchnet, nce, two_emb};
+
+/// Kind of a layer. Mirrors the structures in the paper's appendix
+/// (Figures 13–16): embedding / FC towers with pooling, concat, similarity
+/// and loss heads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Sparse-feature embedding lookup (data-intensive: huge IO, light compute).
+    Embedding,
+    /// Dense fully-connected layer (compute-intensive).
+    FullyConnected,
+    /// Sequence/bag pooling (sum/mean) over embedded features.
+    Pooling,
+    /// Feature concatenation.
+    Concat,
+    /// Batch/layer normalization.
+    Norm,
+    /// Cosine-similarity head (MATCHNET's matching layer).
+    Similarity,
+    /// Softmax + cross-entropy (CTR) loss head.
+    Loss,
+    /// Noise-contrastive estimation head (NCE model).
+    NceLoss,
+}
+
+impl LayerKind {
+    /// Total number of kinds (one-hot width for the policy features).
+    pub const COUNT: usize = 8;
+
+    /// Stable index for one-hot encoding.
+    pub fn index(self) -> usize {
+        match self {
+            LayerKind::Embedding => 0,
+            LayerKind::FullyConnected => 1,
+            LayerKind::Pooling => 2,
+            LayerKind::Concat => 3,
+            LayerKind::Norm => 4,
+            LayerKind::Similarity => 5,
+            LayerKind::Loss => 6,
+            LayerKind::NceLoss => 7,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::Embedding => "embedding",
+            LayerKind::FullyConnected => "fc",
+            LayerKind::Pooling => "pooling",
+            LayerKind::Concat => "concat",
+            LayerKind::Norm => "norm",
+            LayerKind::Similarity => "similarity",
+            LayerKind::Loss => "loss",
+            LayerKind::NceLoss => "nce_loss",
+        }
+    }
+
+    /// Whether the paper classifies the layer as data-intensive (IO-bound)
+    /// rather than compute-intensive (§1).
+    pub fn data_intensive(self) -> bool {
+        matches!(self, LayerKind::Embedding | LayerKind::Pooling | LayerKind::Concat)
+    }
+}
+
+/// One layer of a model, with the volumes the cost model and the policy
+/// features are derived from. Sizes are per-sample; times are measured at
+/// the profiling batch size `B_o`.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    /// Position in the model (the LSTM's "time" axis).
+    pub index: usize,
+    pub kind: LayerKind,
+    /// Bytes of input activation per sample.
+    pub input_bytes: u64,
+    /// Bytes of trainable weights (total, not per sample).
+    pub weight_bytes: u64,
+    /// Forward+backward floating-point operations per sample.
+    pub flops: u64,
+    /// Bytes crossing to the next layer per sample (activation + the
+    /// gradient coming back) — drives the stage-boundary `ODT`.
+    pub output_bytes: u64,
+}
+
+impl LayerSpec {
+    pub fn new(
+        index: usize,
+        kind: LayerKind,
+        input_bytes: u64,
+        weight_bytes: u64,
+        flops: u64,
+        output_bytes: u64,
+    ) -> Self {
+        LayerSpec { index, kind, input_bytes, weight_bytes, flops, output_bytes }
+    }
+}
+
+/// A whole model: an ordered list of layers (the pipeline order).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    /// Total training examples per epoch (drives Eq 6).
+    pub examples_per_epoch: u64,
+    /// Epochs (`L` in Eq 6).
+    pub epochs: u64,
+}
+
+impl ModelSpec {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total trainable parameters in bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes).sum()
+    }
+
+    /// Validate structural invariants (indices contiguous, non-empty).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "model {} has no layers", self.name);
+        for (i, l) in self.layers.iter().enumerate() {
+            anyhow::ensure!(l.index == i, "layer index {} at position {i} in {}", l.index, self.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_indices_are_unique_and_dense() {
+        let kinds = [
+            LayerKind::Embedding,
+            LayerKind::FullyConnected,
+            LayerKind::Pooling,
+            LayerKind::Concat,
+            LayerKind::Norm,
+            LayerKind::Similarity,
+            LayerKind::Loss,
+            LayerKind::NceLoss,
+        ];
+        let mut seen = vec![false; LayerKind::COUNT];
+        for k in kinds {
+            assert!(!seen[k.index()], "duplicate index {}", k.index());
+            seen[k.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn embedding_is_data_intensive_fc_is_not() {
+        assert!(LayerKind::Embedding.data_intensive());
+        assert!(!LayerKind::FullyConnected.data_intensive());
+    }
+
+    #[test]
+    fn validate_catches_bad_indices() {
+        let mut m = zoo::nce();
+        assert!(m.validate().is_ok());
+        m.layers[0].index = 5;
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! The model zoo used throughout the paper's evaluation (§6, Appendix):
+//!
+//! * `CTRDNN(16)`  — embedding front + FC tower (Figure 14)
+//! * `MATCHNET(16)` — two-tower match network with similarity head (Fig 13)
+//! * `2EMB(10)`     — two embedding branches concatenated (Figure 15)
+//! * `NCE(5)`       — embedding + NCE head (Figure 16)
+//! * `ctrdnn_with_layers(n)` — the Table-2 variants (8/12/16/20 layers)
+//! * `CTRDNN1/2`    — the 7-layer low/high-dimension variants of §6.3
+//!
+//! The paper's appendix gives structures but not sizes; the volumes below
+//! are chosen to reproduce the *regimes* the paper describes: the embedding
+//! front processes orders of magnitude more bytes than it computes (IO
+//! bound), the FC tower is the opposite, and CTRDNN2 is a high-dimension
+//! (compute-heavy) variant of CTRDNN1.
+
+use super::{LayerKind, LayerSpec, ModelSpec};
+
+const F32: u64 = 4;
+
+/// Embedding layer: `slots` sparse slots, each looked up in a `vocab x dim`
+/// table and summed. Input is the raw sparse IDs (data-intensive).
+fn emb(index: usize, slots: u64, vocab: u64, dim: u64) -> LayerSpec {
+    LayerSpec::new(
+        index,
+        LayerKind::Embedding,
+        // Raw sparse features dominate input IO (ids + offsets per slot).
+        slots * 64,
+        vocab * dim * F32,
+        // Lookup + bag-sum is cheap: ~2 flops per embedded element.
+        2 * slots * dim,
+        slots * dim * F32,
+    )
+}
+
+/// Fully-connected `in_dim -> out_dim` layer (fwd+bwd ≈ 6*in*out flops).
+fn fc(index: usize, in_dim: u64, out_dim: u64) -> LayerSpec {
+    LayerSpec::new(
+        index,
+        LayerKind::FullyConnected,
+        in_dim * F32,
+        (in_dim * out_dim + out_dim) * F32,
+        6 * in_dim * out_dim,
+        out_dim * F32,
+    )
+}
+
+fn pooling(index: usize, dim: u64, groups: u64) -> LayerSpec {
+    LayerSpec::new(index, LayerKind::Pooling, groups * dim * F32, 0, groups * dim, dim * F32)
+}
+
+fn concat(index: usize, dims: &[u64]) -> LayerSpec {
+    let total: u64 = dims.iter().sum();
+    LayerSpec::new(index, LayerKind::Concat, total * F32, 0, total, total * F32)
+}
+
+fn norm(index: usize, dim: u64) -> LayerSpec {
+    LayerSpec::new(index, LayerKind::Norm, dim * F32, 2 * dim * F32, 10 * dim, dim * F32)
+}
+
+fn similarity(index: usize, dim: u64) -> LayerSpec {
+    LayerSpec::new(index, LayerKind::Similarity, 2 * dim * F32, 0, 6 * dim, F32)
+}
+
+fn loss(index: usize, dim: u64) -> LayerSpec {
+    LayerSpec::new(index, LayerKind::Loss, dim * F32, 0, 8 * dim, F32)
+}
+
+fn nce_loss(index: usize, dim: u64, negatives: u64) -> LayerSpec {
+    LayerSpec::new(
+        index,
+        LayerKind::NceLoss,
+        dim * F32,
+        negatives * dim * F32,
+        6 * dim * negatives,
+        F32,
+    )
+}
+
+fn model(name: &str, layers: Vec<LayerSpec>) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        layers,
+        // One epoch over a 10M-example synthetic CTR shard, 1 epoch by
+        // default; experiments override as needed.
+        examples_per_epoch: 10_000_000,
+        epochs: 1,
+    }
+}
+
+/// CTRDNN with 16 layers (Figure 14): one big sparse embedding, pooling,
+/// then a deep FC tower ending in the CTR loss.
+pub fn ctrdnn() -> ModelSpec {
+    ctrdnn_with_layers(16)
+}
+
+/// CTRDNN variant with `n` total layers, as used for Table 2
+/// (8/12/16/20 layers): FC layers are added/removed in the tower.
+pub fn ctrdnn_with_layers(n: usize) -> ModelSpec {
+    assert!(n >= 4, "CTRDNN needs at least emb/pool/fc/loss");
+    let mut layers = Vec::new();
+    layers.push(emb(0, 400, 1_000_000, 64));
+    layers.push(pooling(1, 64, 400));
+    let fc_count = n - 3;
+    let mut dim_in = 64 * 8; // pooled concat width of slot groups
+    let mut idx = 2;
+    for i in 0..fc_count {
+        // Taper the tower: 512 -> ... -> 64.
+        let dim_out = match fc_count - i {
+            1 => 64,
+            2 => 128,
+            3 => 256,
+            _ => 512,
+        };
+        layers.push(fc(idx, dim_in, dim_out));
+        dim_in = dim_out;
+        idx += 1;
+    }
+    layers.push(loss(idx, dim_in));
+    model(&format!("ctrdnn{n}"), layers)
+}
+
+/// MATCHNET (Figure 13): query/title two-tower network — two embeddings,
+/// per-tower pooling + FC stacks with norms, cosine similarity + loss.
+/// 16 layers with more *diverse* kinds than CTRDNN (the paper notes it is
+/// the more complex schedule despite equal layer count).
+pub fn matchnet() -> ModelSpec {
+    let mut l = Vec::new();
+    let mut i = 0;
+    // Query tower.
+    l.push(emb(i, 200, 500_000, 64));
+    i += 1;
+    l.push(pooling(i, 64, 200));
+    i += 1;
+    l.push(norm(i, 64));
+    i += 1;
+    l.push(fc(i, 64, 512));
+    i += 1;
+    l.push(fc(i, 512, 256));
+    i += 1;
+    // Title tower.
+    l.push(emb(i, 200, 500_000, 64));
+    i += 1;
+    l.push(pooling(i, 64, 200));
+    i += 1;
+    l.push(norm(i, 64));
+    i += 1;
+    l.push(fc(i, 64, 512));
+    i += 1;
+    l.push(fc(i, 512, 256));
+    i += 1;
+    // Interaction head.
+    l.push(concat(i, &[256, 256]));
+    i += 1;
+    l.push(fc(i, 512, 512));
+    i += 1;
+    l.push(norm(i, 512));
+    i += 1;
+    l.push(fc(i, 512, 256));
+    i += 1;
+    l.push(similarity(i, 256));
+    i += 1;
+    l.push(loss(i, 1));
+    model("matchnet", l)
+}
+
+/// 2EMB (Figure 15): two embedding branches of different widths feeding a
+/// shared FC head. 10 layers.
+pub fn two_emb() -> ModelSpec {
+    let mut l = Vec::new();
+    let mut i = 0;
+    l.push(emb(i, 300, 2_000_000, 32));
+    i += 1;
+    l.push(pooling(i, 32, 300));
+    i += 1;
+    l.push(emb(i, 100, 200_000, 64));
+    i += 1;
+    l.push(pooling(i, 64, 100));
+    i += 1;
+    l.push(concat(i, &[32, 64]));
+    i += 1;
+    l.push(fc(i, 96, 512));
+    i += 1;
+    l.push(fc(i, 512, 512));
+    i += 1;
+    l.push(fc(i, 512, 256));
+    i += 1;
+    l.push(fc(i, 256, 128));
+    i += 1;
+    l.push(loss(i, 128));
+    model("2emb", l)
+}
+
+/// NCE (Figure 16): embedding + pooling + FC + NCE head. 5 layers.
+pub fn nce() -> ModelSpec {
+    let mut l = Vec::new();
+    l.push(emb(0, 150, 800_000, 128));
+    l.push(pooling(1, 128, 150));
+    l.push(fc(2, 128, 512));
+    l.push(fc(3, 512, 256));
+    l.push(nce_loss(4, 256, 64));
+    model("nce", l)
+}
+
+/// CTRDNN1 (§6.3): 7 layers, low-dimension — the IO-dominated variant the
+/// paper runs against TF-CPU.
+pub fn ctrdnn1() -> ModelSpec {
+    let mut l = Vec::new();
+    l.push(emb(0, 400, 1_000_000, 16));
+    l.push(pooling(1, 16, 400));
+    l.push(fc(2, 128, 128));
+    l.push(fc(3, 128, 64));
+    l.push(fc(4, 64, 32));
+    l.push(fc(5, 32, 16));
+    l.push(loss(6, 16));
+    let mut m = model("ctrdnn1", l);
+    m.examples_per_epoch = 2_000_000;
+    m
+}
+
+/// CTRDNN2 (§6.3): 7 layers, high-dimension — the compute-dominated
+/// variant the paper runs against TF-GPU.
+pub fn ctrdnn2() -> ModelSpec {
+    let mut l = Vec::new();
+    l.push(emb(0, 400, 1_000_000, 128));
+    l.push(pooling(1, 128, 400));
+    l.push(fc(2, 1024, 2048));
+    l.push(fc(3, 2048, 1024));
+    l.push(fc(4, 1024, 512));
+    l.push(fc(5, 512, 256));
+    l.push(loss(6, 256));
+    let mut m = model("ctrdnn2", l);
+    m.examples_per_epoch = 2_000_000;
+    m
+}
+
+/// Look up a zoo model by its evaluation name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "ctrdnn" | "ctrdnn16" => Some(ctrdnn()),
+        "ctrdnn8" => Some(ctrdnn_with_layers(8)),
+        "ctrdnn12" => Some(ctrdnn_with_layers(12)),
+        "ctrdnn20" => Some(ctrdnn_with_layers(20)),
+        "matchnet" => Some(matchnet()),
+        "2emb" => Some(two_emb()),
+        "nce" => Some(nce()),
+        "ctrdnn1" => Some(ctrdnn1()),
+        "ctrdnn2" => Some(ctrdnn2()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_the_paper() {
+        assert_eq!(ctrdnn().num_layers(), 16);
+        assert_eq!(matchnet().num_layers(), 16);
+        assert_eq!(two_emb().num_layers(), 10);
+        assert_eq!(nce().num_layers(), 5);
+        assert_eq!(ctrdnn1().num_layers(), 7);
+        assert_eq!(ctrdnn2().num_layers(), 7);
+        for n in [8, 12, 16, 20] {
+            assert_eq!(ctrdnn_with_layers(n).num_layers(), n);
+        }
+    }
+
+    #[test]
+    fn all_models_validate() {
+        for name in ["ctrdnn", "matchnet", "2emb", "nce", "ctrdnn1", "ctrdnn2"] {
+            by_name(name).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn embedding_layers_are_io_dominated() {
+        // Bytes in vs flops: the embedding front must be data-intensive.
+        let m = ctrdnn();
+        let e = &m.layers[0];
+        assert!(e.kind == LayerKind::Embedding);
+        assert!(e.input_bytes > 0 && e.flops / e.input_bytes < 10);
+        // And an interior FC must be compute-dominated.
+        let f = m.layers.iter().find(|l| l.kind == LayerKind::FullyConnected).unwrap();
+        assert!(f.flops / f.input_bytes.max(1) > 100);
+    }
+
+    #[test]
+    fn ctrdnn2_is_heavier_than_ctrdnn1() {
+        let flops1: u64 = ctrdnn1().layers.iter().map(|l| l.flops).sum();
+        let flops2: u64 = ctrdnn2().layers.iter().map(|l| l.flops).sum();
+        assert!(flops2 > 10 * flops1);
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("resnet50").is_none());
+    }
+}

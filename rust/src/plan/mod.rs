@@ -1,0 +1,179 @@
+//! Scheduling and provisioning plans (§4.2).
+//!
+//! A [`SchedulingPlan`] maps every layer to one resource type (the decision
+//! matrix of Eq 8, stored densely as `layer -> type`). Consecutive layers
+//! on the same type form a *stage*; provisioning then assigns each stage a
+//! replica count `k_i` (§5.1). Scheduling is at layer granularity,
+//! provisioning at stage granularity — exactly the paper's split.
+
+use crate::model::ModelSpec;
+use crate::resources::ResourcePool;
+
+/// Layer -> resource-type assignment.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SchedulingPlan {
+    pub assignment: Vec<usize>,
+}
+
+impl SchedulingPlan {
+    pub fn new(assignment: Vec<usize>) -> Self {
+        SchedulingPlan { assignment }
+    }
+
+    /// All layers on a single type (the CPU/GPU-only baselines).
+    pub fn uniform(num_layers: usize, type_id: usize) -> Self {
+        SchedulingPlan { assignment: vec![type_id; num_layers] }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Check the plan is well-formed for a model/pool pair.
+    pub fn validate(&self, model: &ModelSpec, pool: &ResourcePool) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.assignment.len() == model.num_layers(),
+            "plan covers {} layers, model {} has {}",
+            self.assignment.len(),
+            model.name,
+            model.num_layers()
+        );
+        for (l, &t) in self.assignment.iter().enumerate() {
+            anyhow::ensure!(t < pool.num_types(), "layer {l} scheduled to unknown type {t}");
+        }
+        Ok(())
+    }
+
+    /// Derive stages: maximal runs of consecutive layers on one type.
+    pub fn stages(&self) -> Vec<StageSpan> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for l in 1..=self.assignment.len() {
+            if l == self.assignment.len() || self.assignment[l] != self.assignment[start] {
+                out.push(StageSpan {
+                    index: out.len(),
+                    type_id: self.assignment[start],
+                    first_layer: start,
+                    last_layer: l - 1,
+                });
+                start = l;
+            }
+        }
+        out
+    }
+
+    /// Compact text form, e.g. `[0 0 1 1 1 0]`.
+    pub fn render(&self) -> String {
+        let items: Vec<String> = self.assignment.iter().map(|t| t.to_string()).collect();
+        format!("[{}]", items.join(" "))
+    }
+}
+
+/// A stage: the contiguous layer span `[first_layer, last_layer]` scheduled
+/// to `type_id`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageSpan {
+    pub index: usize,
+    pub type_id: usize,
+    pub first_layer: usize,
+    pub last_layer: usize,
+}
+
+impl StageSpan {
+    pub fn num_layers(&self) -> usize {
+        self.last_layer - self.first_layer + 1
+    }
+    pub fn layers(&self) -> std::ops::RangeInclusive<usize> {
+        self.first_layer..=self.last_layer
+    }
+}
+
+/// Provisioned replica counts per stage plus parameter-server CPU cores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProvisioningPlan {
+    /// `k_i` per stage (parallel replicas of that stage).
+    pub replicas: Vec<usize>,
+    /// Extra CPU cores acting as parameter servers for sparse tables.
+    pub ps_cpu_cores: usize,
+}
+
+impl ProvisioningPlan {
+    /// Total units of each resource type consumed (for Eq 7's `k_t`),
+    /// indexed by type id. `cpu_type` receives the PS cores.
+    pub fn units_per_type(
+        &self,
+        stages: &[StageSpan],
+        num_types: usize,
+        cpu_type: Option<usize>,
+    ) -> Vec<usize> {
+        assert_eq!(stages.len(), self.replicas.len());
+        let mut units = vec![0usize; num_types];
+        for (s, &k) in stages.iter().zip(&self.replicas) {
+            units[s.type_id] += k;
+        }
+        if let Some(c) = cpu_type {
+            units[c] += self.ps_cpu_cores;
+        }
+        units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::resources::simulated_types;
+
+    #[test]
+    fn stage_derivation_merges_runs() {
+        let p = SchedulingPlan::new(vec![0, 0, 1, 1, 1, 0]);
+        let s = p.stages();
+        assert_eq!(s.len(), 3);
+        assert_eq!((s[0].type_id, s[0].first_layer, s[0].last_layer), (0, 0, 1));
+        assert_eq!((s[1].type_id, s[1].first_layer, s[1].last_layer), (1, 2, 4));
+        assert_eq!((s[2].type_id, s[2].first_layer, s[2].last_layer), (0, 5, 5));
+    }
+
+    #[test]
+    fn stages_partition_all_layers() {
+        let p = SchedulingPlan::new(vec![2, 1, 1, 0, 2, 2, 2]);
+        let s = p.stages();
+        let total: usize = s.iter().map(|x| x.num_layers()).sum();
+        assert_eq!(total, 7);
+        for w in s.windows(2) {
+            assert_eq!(w[0].last_layer + 1, w[1].first_layer);
+        }
+        assert_eq!(s[0].first_layer, 0);
+        assert_eq!(s.last().unwrap().last_layer, 6);
+    }
+
+    #[test]
+    fn uniform_plan_has_one_stage() {
+        let p = SchedulingPlan::uniform(10, 3);
+        assert_eq!(p.stages().len(), 1);
+        assert_eq!(p.stages()[0].type_id, 3);
+    }
+
+    #[test]
+    fn validate_checks_arity_and_types() {
+        let model = zoo::nce();
+        let pool = simulated_types(2, true);
+        assert!(SchedulingPlan::uniform(5, 0).validate(&model, &pool).is_ok());
+        assert!(SchedulingPlan::uniform(4, 0).validate(&model, &pool).is_err());
+        assert!(SchedulingPlan::uniform(5, 9).validate(&model, &pool).is_err());
+    }
+
+    #[test]
+    fn units_per_type_accumulates_and_adds_ps() {
+        let p = SchedulingPlan::new(vec![0, 1, 1, 0]);
+        let stages = p.stages();
+        let prov = ProvisioningPlan { replicas: vec![2, 3, 4], ps_cpu_cores: 5 };
+        let units = prov.units_per_type(&stages, 2, Some(0));
+        assert_eq!(units, vec![2 + 4 + 5, 3]);
+    }
+
+    #[test]
+    fn render_is_stable() {
+        assert_eq!(SchedulingPlan::new(vec![0, 2, 1]).render(), "[0 2 1]");
+    }
+}

@@ -1,0 +1,117 @@
+//! Profiler (§4.1): "we assume that we have the profiling information of
+//! each Stage with the computing resource of a single unit and a small
+//! batch size B_o, e.g. the Original Computation Time (OCT) and the
+//! Original Time for Data Communication (ODT)".
+//!
+//! Two entry points:
+//! * [`profile_executable`] — wall-clock timing of an HLO stage executable
+//!   at `B_o` on the PJRT CPU (the "single server with limited resources"
+//!   launch the paper describes).
+//! * [`fit_amdahl`] — recover the parallelizable fraction `alpha`/`beta`
+//!   from (k, time) observations, per the multisite-cloud method [35] the
+//!   paper cites: `T(k) = T*(1-a) + T*a/k` is linear in `1/k`.
+
+use crate::runtime::Executable;
+use crate::util::stats::{linfit, Welford};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Timing summary of a profiled executable.
+#[derive(Clone, Debug)]
+pub struct ProfileResult {
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub runs: usize,
+}
+
+/// Time `exe` over `runs` executions after `warmup` discarded ones.
+pub fn profile_executable(
+    exe: &Executable,
+    inputs: &[xla::Literal],
+    warmup: usize,
+    runs: usize,
+) -> Result<ProfileResult> {
+    for _ in 0..warmup {
+        exe.run(inputs)?;
+    }
+    let mut w = Welford::new();
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        exe.run(inputs)?;
+        w.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(ProfileResult { mean_secs: w.mean(), stddev_secs: w.stddev(), runs: runs.max(1) })
+}
+
+/// Fit Amdahl's law to (k, time) samples: returns `(base_time, alpha)`
+/// where `T(k) = base*(1-alpha) + base*alpha/k`.
+///
+/// Linearize with `x = 1/k`: `T = base*(1-alpha) + base*alpha * x`, i.e.
+/// intercept `= base*(1-alpha)`, slope `= base*alpha`.
+pub fn fit_amdahl(ks: &[f64], times: &[f64]) -> (f64, f64) {
+    assert_eq!(ks.len(), times.len());
+    assert!(ks.len() >= 2, "need at least two (k, time) points");
+    let xs: Vec<f64> = ks.iter().map(|k| 1.0 / k).collect();
+    let (intercept, slope) = linfit(&xs, times);
+    let base = intercept + slope; // T(1)
+    if base <= 0.0 {
+        return (times[0].max(1e-12), 1.0);
+    }
+    let alpha = (slope / base).clamp(0.0, 1.0);
+    (base, alpha)
+}
+
+/// Synthetic strong-scaling measurement: run a closure at several worker
+/// counts and fit alpha (used by tests and the profiling CLI against the
+/// thread-pool pipeline).
+pub fn measure_alpha<F: FnMut(usize) -> f64>(ks: &[usize], mut run_at: F) -> (f64, f64) {
+    let kf: Vec<f64> = ks.iter().map(|&k| k as f64).collect();
+    let ts: Vec<f64> = ks.iter().map(|&k| run_at(k)).collect();
+    fit_amdahl(&kf, &ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_known_alpha() {
+        // T(k) = 10*(0.25 + 0.75/k).
+        let ks = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let ts: Vec<f64> = ks.iter().map(|k| 10.0 * (0.25 + 0.75 / k)).collect();
+        let (base, alpha) = fit_amdahl(&ks, &ts);
+        assert!((base - 10.0).abs() < 1e-9, "base={base}");
+        assert!((alpha - 0.75).abs() < 1e-9, "alpha={alpha}");
+    }
+
+    #[test]
+    fn fit_is_robust_to_noise() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let ks: Vec<f64> = (1..=16).map(|k| k as f64).collect();
+        let ts: Vec<f64> = ks
+            .iter()
+            .map(|k| 4.0 * (0.1 + 0.9 / k) * (1.0 + 0.02 * (rng.f64() - 0.5)))
+            .collect();
+        let (base, alpha) = fit_amdahl(&ks, &ts);
+        assert!((base - 4.0).abs() < 0.2);
+        assert!((alpha - 0.9).abs() < 0.05);
+    }
+
+    #[test]
+    fn fully_serial_and_fully_parallel_edges() {
+        let ks = [1.0, 2.0, 4.0];
+        let serial: Vec<f64> = ks.iter().map(|_| 3.0).collect();
+        let (_, a) = fit_amdahl(&ks, &serial);
+        assert!(a < 0.01);
+        let parallel: Vec<f64> = ks.iter().map(|k| 3.0 / k).collect();
+        let (_, a) = fit_amdahl(&ks, &parallel);
+        assert!(a > 0.99);
+    }
+
+    #[test]
+    fn measure_alpha_plumbs_through() {
+        let (base, alpha) = measure_alpha(&[1, 2, 4, 8], |k| 2.0 * (0.5 + 0.5 / k as f64));
+        assert!((base - 2.0).abs() < 1e-9);
+        assert!((alpha - 0.5).abs() < 1e-9);
+    }
+}

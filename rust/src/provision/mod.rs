@@ -1,0 +1,524 @@
+//! Provisioning (§5.1): choose the replica count `k_i` of every stage so
+//! stage throughputs balance (Eq 11–12), the throughput floor holds
+//! (Eq 13), pool limits hold (Eq 10), and monetary cost is minimized via a
+//! Newton search on `k_1` — plus the two static baselines of §6.1
+//! (StaRatio 1:6 and StaPSRatio 1:6:6).
+
+use crate::cost::{CostModel, PlanEval, StageProfile};
+use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
+use crate::resources::ResourceKind;
+
+/// Smallest integer `k` with `stage_et(prof, k) <= target_et`, or `None`
+/// when even infinite parallelism cannot reach the target (the Amdahl
+/// serial floor exceeds it). This inverts Eq 1–3 in closed form.
+pub fn min_replicas_for_target(
+    cm: &CostModel,
+    prof: &StageProfile,
+    target_et: f64,
+) -> Option<usize> {
+    let scale = cm.cfg.batch_size as f64 / cm.cfg.profile_batch as f64;
+    // Compute branch: scale*oct*(1-a) + scale*oct*a/k <= target.
+    let k_ct = invert_amdahl(scale * prof.oct, prof.alpha, target_et)?;
+    let k_dt = invert_amdahl(scale * prof.odt, prof.beta, target_et)?;
+    let k = k_ct.max(k_dt).max(1.0);
+    let mut ki = k.ceil() as usize;
+    // Guard against float edge: ensure the inequality really holds.
+    while cm.stage_et(prof, ki as f64) > target_et * (1.0 + 1e-9) {
+        ki += 1;
+        if ki > 1 << 22 {
+            return None;
+        }
+    }
+    Some(ki)
+}
+
+/// Solve `base*(1-frac) + base*frac/k <= target` for the continuous k.
+/// Returns None when the serial part alone exceeds the target.
+fn invert_amdahl(base: f64, frac: f64, target: f64) -> Option<f64> {
+    let serial = base * (1.0 - frac);
+    if target <= serial {
+        return if frac < 1.0 && serial > target { None } else { Some(f64::INFINITY) };
+    }
+    if frac <= 0.0 {
+        return Some(1.0);
+    }
+    Some((base * frac / (target - serial)).max(1.0))
+}
+
+/// Provision all stages against the pipeline target set by the `anchor`
+/// stage running with `ka` replicas (the generalization of Eq 12 that
+/// balances `ET` = max(CT, DT) rather than CT alone, with any stage as the
+/// bottleneck). Returns None if any stage cannot meet the target within
+/// its pool limit.
+fn provision_for_anchor(
+    cm: &CostModel,
+    stages: &[StageSpan],
+    profs: &[StageProfile],
+    anchor: usize,
+    ka: usize,
+) -> Option<ProvisioningPlan> {
+    provision_for_anchor_inner(cm, stages, profs, anchor, ka, sparse_bytes_per_iter(cm))
+        .map(|(p, _)| p)
+}
+
+/// Core of [`provision_for_anchor`] with the sparse-traffic volume
+/// precomputed; also returns the pipeline target ET (the anchor stage is
+/// the bottleneck by construction, so callers can price without
+/// recomputing stage times — §Perf).
+fn provision_for_anchor_inner(
+    cm: &CostModel,
+    stages: &[StageSpan],
+    profs: &[StageProfile],
+    anchor: usize,
+    ka: usize,
+    sparse_bytes: f64,
+) -> Option<(ProvisioningPlan, f64)> {
+    let target = cm.stage_et(&profs[anchor], ka as f64);
+    let mut replicas = Vec::with_capacity(stages.len());
+    for (i, (span, prof)) in stages.iter().zip(profs).enumerate() {
+        let k = if i == anchor { ka } else { min_replicas_for_target(cm, prof, target)? };
+        if k > cm.pool.get(span.type_id).max_units {
+            return None;
+        }
+        replicas.push(k);
+    }
+    let ps = ps_cores_for(cm, sparse_bytes, target);
+    let plan = ProvisioningPlan { replicas, ps_cpu_cores: ps };
+    if !within_pool_limits(cm, stages, &plan) {
+        return None;
+    }
+    Some((plan, target))
+}
+
+/// Sparse-table PS traffic per iteration in bytes (push gradients + pull
+/// fresh rows for the touched ids) — constant per plan, so precomputed
+/// once per provisioning search (§Perf).
+fn sparse_bytes_per_iter(cm: &CostModel) -> f64 {
+    cm.model
+        .layers
+        .iter()
+        .filter(|l| l.kind == crate::model::LayerKind::Embedding)
+        .map(|l| 2.0 * l.input_bytes as f64 * cm.cfg.batch_size as f64)
+        .sum()
+}
+
+/// Parameter-server CPU cores (§5.1: "we add an appropriate number of CPU
+/// cores to perform the functionality of parameter servers, based on
+/// historical profiling results"): size them to absorb the sparse-table
+/// push/pull traffic at the pipeline rate.
+fn ps_cores_for(cm: &CostModel, sparse_bytes: f64, target_et: f64) -> usize {
+    if sparse_bytes == 0.0 {
+        return 0;
+    }
+    let cpu = match cm.pool.cpu_type() {
+        Some(c) => c,
+        None => cm.pool.get(0),
+    };
+    let bytes_per_sec = sparse_bytes / target_et.max(1e-9);
+    (bytes_per_sec / cpu.net_bytes_per_sec).ceil() as usize
+}
+
+/// Back-compat wrapper used by the static-ratio baselines.
+fn ps_cores(cm: &CostModel, _stages: &[StageSpan], target_et: f64) -> usize {
+    ps_cores_for(cm, sparse_bytes_per_iter(cm), target_et)
+}
+
+/// Check aggregated per-type consumption against `N_{t,limit}` (Eq 10).
+fn within_pool_limits(cm: &CostModel, stages: &[StageSpan], plan: &ProvisioningPlan) -> bool {
+    let cpu_id = cm.pool.cpu_type().map(|c| c.id);
+    let units = plan.units_per_type(stages, cm.pool.num_types(), cpu_id);
+    units.iter().enumerate().all(|(t, &k)| k <= cm.pool.get(t).max_units)
+}
+
+/// Price a provisioning plan (Eq 5–7) from precomputed stage profiles
+/// (recomputing profiles per candidate dominated the provisioning loop —
+/// see EXPERIMENTS.md §Perf).
+fn price_profs(
+    cm: &CostModel,
+    stages: &[StageSpan],
+    profs: &[StageProfile],
+    plan: &ProvisioningPlan,
+) -> (f64, f64, f64) {
+    let mut worst_et = 0.0f64;
+    for (prof, &k) in profs.iter().zip(&plan.replicas) {
+        worst_et = worst_et.max(cm.stage_et(prof, k as f64));
+    }
+    let throughput =
+        if worst_et > 0.0 { cm.cfg.batch_size as f64 / worst_et } else { 0.0 };
+    let train_time = cm.train_time_secs(throughput);
+    let cpu_id = cm.pool.cpu_type().map(|c| c.id);
+    let units = plan.units_per_type(stages, cm.pool.num_types(), cpu_id);
+    let cost = cm.monetary_cost(train_time, &units);
+    (throughput, train_time, cost)
+}
+
+/// Price a provisioning plan (Eq 5–7).
+fn price(cm: &CostModel, stages: &[StageSpan], plan: &ProvisioningPlan) -> (f64, f64, f64) {
+    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
+    price_profs(cm, stages, &profs, plan)
+}
+
+/// The §5.1 provisioner: Eq 13 floor for `k_1`, then a Newton search (with
+/// an integer refinement pass) for the `k_1` minimizing monetary cost
+/// subject to the throughput floor and pool limits.
+pub fn provision(cm: &CostModel, plan: &SchedulingPlan) -> Option<(Vec<StageSpan>, ProvisioningPlan)> {
+    let stages = plan.stages();
+    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
+    let target_et_max = cm.cfg.batch_size as f64 / cm.cfg.throughput_limit;
+
+    let sparse_bytes = sparse_bytes_per_iter(cm);
+    let mut best: Option<(f64, usize, usize)> = None; // (cost, anchor, ka)
+    for anchor in 0..stages.len() {
+        // Eq 13 for this anchor: the pipeline rate is B / ET_a(k_a); the
+        // throughput floor is a ceiling on ET_a, hence a floor on k_a.
+        let Some(ka_min) = min_replicas_for_target(cm, &profs[anchor], target_et_max) else {
+            continue;
+        };
+        let ka_max = cm.pool.get(stages[anchor].type_id).max_units;
+        if ka_min > ka_max {
+            continue;
+        }
+        let cost_of = |ka: usize| -> Option<f64> {
+            let (p, target) =
+                provision_for_anchor_inner(cm, &stages, &profs, anchor, ka, sparse_bytes)?;
+            // Anchor = bottleneck: throughput is B/target directly; price
+            // allocation-free from the stage replicas (§Perf).
+            let throughput = cm.cfg.batch_size as f64 / target.max(1e-12);
+            let train_time = cm.train_time_secs(throughput);
+            let mut hourly = 0.0;
+            for (span, &k) in stages.iter().zip(&p.replicas) {
+                hourly += cm.pool.get(span.type_id).price_per_hour * k as f64;
+            }
+            let cpu = cm.pool.cpu_type().unwrap_or_else(|| cm.pool.get(0));
+            hourly += cpu.price_per_hour * p.ps_cpu_cores as f64;
+            Some(train_time / 3600.0 * hourly)
+        };
+
+        // Sweep: cost(k_a) is near-unimodal (shorter train time amortizes
+        // the integer-provisioned peers vs more hourly units), but its
+        // minimum can sit well above the Eq-13 floor. A geometric sweep
+        // (x1.15) brackets the basin in ~O(log range) evaluations; a
+        // +-8 linear pass then pins the integer minimum (§Perf: an exact
+        // scan here cost 0.64 ms/eval and dominated every scheduler).
+        let mut sweep_best = ka_min;
+        let mut sweep_cost = f64::INFINITY;
+        let consider = |k: usize, best: &mut usize, cost: &mut f64| {
+            if let Some(c) = cost_of(k) {
+                if c < *cost {
+                    *cost = c;
+                    *best = k;
+                }
+            }
+        };
+        let mut k = ka_min;
+        while k <= ka_max {
+            consider(k, &mut sweep_best, &mut sweep_cost);
+            k = ((k as f64 * 1.25) as usize).max(k + 1);
+        }
+        let lo = sweep_best.saturating_sub(8).max(ka_min);
+        let hi = (sweep_best + 8).min(ka_max);
+        for k in lo..=hi {
+            consider(k, &mut sweep_best, &mut sweep_cost);
+        }
+
+        // Newton on the smoothed objective around the sweep minimum (the
+        // §5.1 refinement; protects corners where a larger k_a
+        // re-balances a cheaper type mix).
+        let mut kc = sweep_best as f64;
+        for _ in 0..6 {
+            let h = 1.0;
+            let f = |x: f64| {
+                let k = x.round().max(ka_min as f64).min(ka_max as f64) as usize;
+                cost_of(k).unwrap_or(f64::INFINITY)
+            };
+            let d1 = (f(kc + h) - f(kc - h)) / (2.0 * h);
+            let d2 = (f(kc + h) - 2.0 * f(kc) + f(kc - h)) / (h * h);
+            if !d1.is_finite() || !d2.is_finite() || d2.abs() < 1e-12 {
+                break;
+            }
+            let next = (kc - d1 / d2).max(ka_min as f64).min(ka_max as f64);
+            if (next - kc).abs() < 0.5 {
+                kc = next;
+                break;
+            }
+            kc = next;
+        }
+
+        // Integer refinement around the Newton point plus the floor.
+        let center = kc.round() as i64;
+        let mut candidates: Vec<usize> = (-3i64..=3)
+            .map(|d| (center + d).clamp(ka_min as i64, ka_max as i64) as usize)
+            .collect();
+        candidates.push(ka_min);
+        candidates.push(sweep_best);
+        candidates.sort_unstable();
+        candidates.dedup();
+        for ka in candidates {
+            if let Some(c) = cost_of(ka) {
+                if best.map_or(true, |(bc, _, _)| c < bc) {
+                    best = Some((c, anchor, ka));
+                }
+            }
+        }
+    }
+    let (_, anchor, ka) = best?;
+    let prov = provision_for_anchor(cm, &stages, &profs, anchor, ka)?;
+    Some((stages, prov))
+}
+
+/// Provision + price a scheduling plan; this is `CostModel::evaluate`.
+/// Infeasible plans get a best-effort provisioning and a penalized cost so
+/// search methods can still rank them.
+pub fn provision_and_price(cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
+    if let Some((stages, prov)) = provision(cm, plan) {
+        let (throughput, train_time, cost) = price(cm, &stages, &prov);
+        return PlanEval {
+            provisioning: prov,
+            throughput,
+            train_time_secs: train_time,
+            cost_usd: cost,
+            feasible: true,
+        };
+    }
+    // Best effort: every stage at its type's limit (shared across stages of
+    // the same type by even division).
+    let stages = plan.stages();
+    let mut per_type_stages = vec![0usize; cm.pool.num_types()];
+    for s in &stages {
+        per_type_stages[s.type_id] += 1;
+    }
+    let replicas: Vec<usize> = stages
+        .iter()
+        .map(|s| (cm.pool.get(s.type_id).max_units / per_type_stages[s.type_id]).max(1))
+        .collect();
+    let prov = ProvisioningPlan { replicas, ps_cpu_cores: 0 };
+    let (throughput, train_time, cost) = price(cm, &stages, &prov);
+    let shortfall = (cm.cfg.throughput_limit / throughput.max(1e-9)).max(1.0);
+    PlanEval {
+        provisioning: prov,
+        throughput,
+        train_time_secs: train_time,
+        cost_usd: cost * cm.cfg.infeasible_penalty * shortfall,
+        feasible: false,
+    }
+}
+
+/// §6.1 static baseline "StaRatio": GPU cards : CPU cores fixed at 1:6
+/// (the default in-server ratio of [61]); and "StaPSRatio": 1:6:6 adding
+/// dedicated PS cores [26]. The GPU count grows until the throughput floor
+/// is met; no load balancing.
+pub fn provision_static_ratio(
+    cm: &CostModel,
+    plan: &SchedulingPlan,
+    with_ps: bool,
+) -> Option<PlanEval> {
+    let stages = plan.stages();
+    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
+    let target = cm.cfg.batch_size as f64 / cm.cfg.throughput_limit;
+    let gpu_limit: usize = cm
+        .pool
+        .types
+        .iter()
+        .filter(|t| t.kind != ResourceKind::Cpu)
+        .map(|t| t.max_units)
+        .sum();
+    for n_gpu in 1..=gpu_limit.max(1) {
+        let mut cpu_budget = 6 * n_gpu;
+        // Sparse-table PS work always exists. StaPSRatio provisions
+        // dedicated cores for it (1:6:6); StaRatio doesn't, so the PS work
+        // cannibalizes the training cores — the reason the paper finds
+        // StaPSRatio ahead of StaRatio (§6.1).
+        let ps_need = ps_cores(cm, &stages, target);
+        // StaPSRatio rents a *dedicated* 1:6 PS block; StaRatio's PS work
+        // runs on (and is charged as part of) the rented training cores.
+        let ps = if with_ps { 6 * n_gpu } else { ps_need };
+        if !with_ps {
+            cpu_budget = cpu_budget.saturating_sub(ps_need).max(1);
+        }
+        // Distribute: every accelerator stage gets n_gpu, CPU stages split the
+        // 1:6 core budget evenly — the point of the baseline is that it
+        // does NOT balance load.
+        let cpu_stages = stages
+            .iter()
+            .filter(|s| cm.pool.get(s.type_id).kind == ResourceKind::Cpu)
+            .count();
+        let replicas: Vec<usize> = stages
+            .iter()
+            .map(|s| {
+                if cm.pool.get(s.type_id).kind == ResourceKind::Cpu {
+                    (cpu_budget / cpu_stages.max(1)).max(1)
+                } else {
+                    n_gpu
+                }
+            })
+            .collect();
+        let prov = ProvisioningPlan { replicas, ps_cpu_cores: ps };
+        if !within_pool_limits(cm, &stages, &prov) {
+            return None;
+        }
+        let worst = stages
+            .iter()
+            .zip(&profs)
+            .zip(&prov.replicas)
+            .map(|((_, p), &k)| cm.stage_et(p, k as f64))
+            .fold(0.0f64, f64::max);
+        if worst <= target {
+            let (throughput, train_time, cost) = price(cm, &stages, &prov);
+            return Some(PlanEval {
+                provisioning: prov,
+                throughput,
+                train_time_secs: train_time,
+                cost_usd: cost,
+                feasible: true,
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+    use crate::util::propcheck;
+
+    fn cm_fixture<'a>(
+        model: &'a crate::model::ModelSpec,
+        pool: &'a crate::resources::ResourcePool,
+    ) -> CostModel<'a> {
+        CostModel::new(model, pool, CostConfig::default())
+    }
+
+    /// The canonical "embedding on CPU, tower on GPU" plan for CTRDNN-16.
+    fn split_plan() -> SchedulingPlan {
+        SchedulingPlan::new((0..16).map(|l| if l < 2 { 0 } else { 1 }).collect())
+    }
+
+    #[test]
+    fn invert_amdahl_roundtrips() {
+        // base=10, frac=0.8: T(k) = 2 + 8/k. Target 4 -> k = 4.
+        let k = invert_amdahl(10.0, 0.8, 4.0).unwrap();
+        assert!((k - 4.0).abs() < 1e-9);
+        // Target below serial floor -> None.
+        assert!(invert_amdahl(10.0, 0.8, 1.9).is_none());
+        // Fully parallel: any target reachable.
+        assert!(invert_amdahl(10.0, 1.0, 0.001).unwrap().is_finite());
+    }
+
+    #[test]
+    fn provision_meets_throughput_floor() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm_fixture(&model, &pool);
+        let plan = split_plan();
+        let eval = cm.evaluate(&plan);
+        assert!(eval.feasible, "split plan should be provisionable");
+        assert!(
+            eval.throughput >= cm.cfg.throughput_limit * 0.999,
+            "throughput {} < limit {}",
+            eval.throughput,
+            cm.cfg.throughput_limit
+        );
+    }
+
+    #[test]
+    fn provisioned_stages_are_balanced() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm_fixture(&model, &pool);
+        let plan = split_plan();
+        let (stages, prov) = provision(&cm, &plan).unwrap();
+        // Bottleneck target = slowest provisioned stage.
+        let ets: Vec<f64> = stages
+            .iter()
+            .zip(&prov.replicas)
+            .map(|(s, &k)| cm.stage_et(&cm.stage_profile(s), k as f64))
+            .collect();
+        let target = ets.iter().cloned().fold(0.0f64, f64::max);
+        for ((s, &k), &et) in stages.iter().zip(&prov.replicas).zip(&ets) {
+            // Every non-bottleneck stage is minimally provisioned: one
+            // replica fewer would make it the (worse) bottleneck.
+            if k > 1 && et < target * (1.0 - 1e-9) {
+                let et_less = cm.stage_et(&cm.stage_profile(s), (k - 1) as f64);
+                assert!(et_less > target * (1.0 - 1e-9), "stage {} over-provisioned", s.index);
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_throughput_costs_more() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let mut cfg = CostConfig::default();
+        cfg.throughput_limit = 20_000.0;
+        let cm_loose = CostModel::new(&model, &pool, cfg.clone());
+        cfg.throughput_limit = 60_000.0;
+        let cm_tight = CostModel::new(&model, &pool, cfg);
+        let plan = split_plan();
+        let loose = cm_loose.evaluate(&plan);
+        let tight = cm_tight.evaluate(&plan);
+        assert!(loose.feasible && tight.feasible);
+        // Both meet their own floors...
+        assert!(loose.throughput >= 20_000.0 * 0.999);
+        assert!(tight.throughput >= 60_000.0 * 0.999);
+        // ...and relaxing the constraint can never increase optimal cost.
+        assert!(loose.cost_usd <= tight.cost_usd * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn impossible_throughput_is_infeasible_with_penalty() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let mut cfg = CostConfig::default();
+        cfg.throughput_limit = 1e12; // beyond any pool
+        let cm = CostModel::new(&model, &pool, cfg);
+        let eval = cm.evaluate(&split_plan());
+        assert!(!eval.feasible);
+        assert!(eval.cost_usd.is_finite() && eval.cost_usd > 0.0);
+    }
+
+    #[test]
+    fn static_ratio_never_cheaper_than_optimized() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm_fixture(&model, &pool);
+        let plan = split_plan();
+        let ours = cm.evaluate(&plan);
+        if let Some(sta) = provision_static_ratio(&cm, &plan, false) {
+            // Near-dominance: StaRatio sizes its PS block at the floor
+            // throughput while ours sizes at the *achieved* throughput, so
+            // the naive policy can under-pay PS by a few percent; beyond
+            // that margin ours must win (the paper reports up to 57.9%).
+            assert!(ours.cost_usd <= sta.cost_usd * 1.05,
+                "ours={} sta={}", ours.cost_usd, sta.cost_usd);
+        }
+    }
+
+    #[test]
+    fn provisioning_property_random_plans_meet_floor_or_report_infeasible() {
+        let model = zoo::matchnet();
+        let pool = crate::resources::simulated_types(4, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        propcheck::check_result(
+            0xBEEF,
+            64,
+            |rng| (0..16).map(|_| rng.below(4)).collect::<Vec<usize>>(),
+            |assign| {
+                let plan = SchedulingPlan::new(assign.clone());
+                let eval = cm.evaluate(&plan);
+                if eval.feasible && eval.throughput < cm.cfg.throughput_limit * 0.999 {
+                    return Err(format!(
+                        "feasible plan below floor: {} < {}",
+                        eval.throughput, cm.cfg.throughput_limit
+                    ));
+                }
+                if !eval.cost_usd.is_finite() || eval.cost_usd <= 0.0 {
+                    return Err(format!("bad cost {}", eval.cost_usd));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Heterogeneous computing resources: type catalog, prices and elastic
+//! pool limits.
+//!
+//! The paper's testbed mixes Intel 6271C CPU servers (0.04 USD/core/h) and
+//! V100 GPU servers (2.42 USD/card/h), and §6.2 simulates up to 64 resource
+//! *types* by varying GPU price/speed. Scheduling only consumes the profile
+//! numbers (per-kind compute/IO rates and prices), which is exactly what
+//! this module provides; see DESIGN.md §Hardware-Adaptation.
+
+use crate::model::LayerKind;
+
+/// Broad class of a resource type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    Cpu,
+    Gpu,
+    /// Other accelerators (Kunlun etc.) — GPU-like compute, different price.
+    Xpu,
+}
+
+/// One *type* of computing resource (the scheduling target `t` in Eq 8).
+#[derive(Clone, Debug)]
+pub struct ResourceType {
+    pub id: usize,
+    pub name: String,
+    pub kind: ResourceKind,
+    /// Price per unit (core or card) per hour, USD — `p_t` in Eq 7.
+    pub price_per_hour: f64,
+    /// Dense-compute rate in FLOP/s per unit.
+    pub flops_per_sec: f64,
+    /// Effective IO/lookup bandwidth in bytes/s per unit (host-memory +
+    /// storage path for embedding-style access).
+    pub io_bytes_per_sec: f64,
+    /// Network bandwidth in bytes/s per unit for inter-stage transfer.
+    pub net_bytes_per_sec: f64,
+    /// Amdahl parallelizable fraction for computation on this type
+    /// (`alpha` in Eq 1).
+    pub alpha: f64,
+    /// Amdahl parallelizable fraction for communication (`beta` in Eq 2).
+    pub beta: f64,
+    /// Elastic pool limit `N_{t,limit}` (max units of this type).
+    pub max_units: usize,
+}
+
+impl ResourceType {
+    /// Per-kind effective compute rate: CPUs keep full IO bandwidth but a
+    /// fraction of the dense rate; accelerators invert that. This encodes
+    /// the paper's data-intensive vs compute-intensive split (§1).
+    pub fn compute_rate(&self, kind: LayerKind) -> f64 {
+        if kind.data_intensive() {
+            // IO-bound layers are limited by lookup bandwidth; expressed as
+            // "flops equivalent" via bytes moved (1 flop ~ 1 byte here; the
+            // cost model works with bytes for these layers directly).
+            self.io_bytes_per_sec
+        } else {
+            self.flops_per_sec
+        }
+    }
+}
+
+/// The elastic resource pool: a catalog of types plus cluster-wide limits.
+#[derive(Clone, Debug)]
+pub struct ResourcePool {
+    pub types: Vec<ResourceType>,
+}
+
+impl ResourcePool {
+    pub fn num_types(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn get(&self, id: usize) -> &ResourceType {
+        &self.types[id]
+    }
+
+    pub fn cpu_type(&self) -> Option<&ResourceType> {
+        self.types.iter().find(|t| t.kind == ResourceKind::Cpu)
+    }
+
+    /// Drop CPU types (Figures 6 & 9 run the comparison "without CPU").
+    pub fn without_cpu(&self) -> ResourcePool {
+        let mut types: Vec<ResourceType> =
+            self.types.iter().filter(|t| t.kind != ResourceKind::Cpu).cloned().collect();
+        for (i, t) in types.iter_mut().enumerate() {
+            t.id = i;
+        }
+        ResourcePool { types }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.types.is_empty(), "empty resource pool");
+        for (i, t) in self.types.iter().enumerate() {
+            anyhow::ensure!(t.id == i, "resource id {} at position {i}", t.id);
+            anyhow::ensure!(t.price_per_hour > 0.0, "{}: non-positive price", t.name);
+            anyhow::ensure!(t.flops_per_sec > 0.0, "{}: non-positive flops", t.name);
+            anyhow::ensure!((0.0..=1.0).contains(&t.alpha), "{}: alpha out of range", t.name);
+            anyhow::ensure!((0.0..=1.0).contains(&t.beta), "{}: beta out of range", t.name);
+            anyhow::ensure!(t.max_units > 0, "{}: zero max_units", t.name);
+        }
+        Ok(())
+    }
+}
+
+/// The paper's default testbed: 10 CPU servers (2x24 cores) + 4 GPU servers
+/// (8x V100). Prices from §6: 0.04 USD/core/h and 2.42 USD/card/h.
+pub fn paper_testbed() -> ResourcePool {
+    ResourcePool {
+        types: vec![
+            ResourceType {
+                id: 0,
+                name: "cpu-6271c-core".into(),
+                kind: ResourceKind::Cpu,
+                price_per_hour: 0.04,
+                flops_per_sec: 4.0e9,     // one core's dense GEMM rate
+                io_bytes_per_sec: 8.0e9,  // host memory + NVMe lookup path
+                net_bytes_per_sec: 1.25e9, // share of the 100 Gbps NIC
+                alpha: 0.95,
+                beta: 0.95,
+                max_units: 10 * 48,
+            },
+            ResourceType {
+                id: 1,
+                name: "gpu-v100".into(),
+                kind: ResourceKind::Gpu,
+                price_per_hour: 2.42,
+                flops_per_sec: 1.2e13,    // achievable V100 training rate
+                io_bytes_per_sec: 2.0e9,  // sparse lookup over PCIe is poor
+                net_bytes_per_sec: 6.0e9,
+                alpha: 0.92,
+                beta: 0.92,
+                max_units: 4 * 8,
+            },
+        ],
+    }
+}
+
+/// Extend the testbed to `n` types by adding simulated GPU variants with
+/// scaled price/speed, as §6.2 does ("we take the V100 GPU with different
+/// prices to simulate multiple types of GPUs"). Type 0 stays the CPU unless
+/// `include_cpu` is false.
+pub fn simulated_types(n: usize, include_cpu: bool) -> ResourcePool {
+    assert!(n >= 1);
+    let base = paper_testbed();
+    let cpu = base.types[0].clone();
+    let v100 = base.types[1].clone();
+    let mut types = Vec::new();
+    if include_cpu {
+        types.push(cpu);
+    }
+    let mut i = types.len();
+    while types.len() < n {
+        let g = i - if include_cpu { 1 } else { 0 };
+        // Alternate faster/cheaper variants around the V100 anchor so the
+        // catalog spans a real price-performance frontier. The scale
+        // factors are deterministic in the type index.
+        let speed = 0.5 + 0.25 * (g % 8) as f64; // 0.5x .. 2.25x
+        let price_eff = 0.8 + 0.1 * ((g / 2) % 7) as f64; // $/perf spread
+        let mut t = v100.clone();
+        t.id = i;
+        t.name = format!("gpu-sim-{g}");
+        t.flops_per_sec = v100.flops_per_sec * speed;
+        t.io_bytes_per_sec = v100.io_bytes_per_sec * (0.8 + 0.05 * (g % 5) as f64);
+        t.price_per_hour = v100.price_per_hour * speed * price_eff;
+        t.alpha = (0.88 + 0.02 * (g % 5) as f64).min(0.97);
+        t.beta = (0.90 + 0.01 * (g % 6) as f64).min(0.95);
+        t.max_units = 32;
+        types.push(t);
+        i += 1;
+    }
+    for (j, t) in types.iter_mut().enumerate() {
+        t.id = j;
+    }
+    ResourcePool { types }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_validates_and_has_cpu() {
+        let p = paper_testbed();
+        p.validate().unwrap();
+        assert_eq!(p.num_types(), 2);
+        assert!(p.cpu_type().is_some());
+        assert!((p.get(0).price_per_hour - 0.04).abs() < 1e-12);
+        assert!((p.get(1).price_per_hour - 2.42).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_wins_io_gpu_wins_compute() {
+        let p = paper_testbed();
+        let cpu = p.get(0);
+        let gpu = p.get(1);
+        assert!(cpu.compute_rate(LayerKind::Embedding) > gpu.compute_rate(LayerKind::Embedding));
+        assert!(
+            gpu.compute_rate(LayerKind::FullyConnected)
+                > cpu.compute_rate(LayerKind::FullyConnected)
+        );
+    }
+
+    #[test]
+    fn simulated_types_scale_to_64() {
+        for n in [1, 2, 4, 16, 32, 64] {
+            let p = simulated_types(n, true);
+            p.validate().unwrap();
+            assert_eq!(p.num_types(), n);
+        }
+        let p = simulated_types(8, false);
+        p.validate().unwrap();
+        assert!(p.cpu_type().is_none());
+    }
+
+    #[test]
+    fn without_cpu_reindexes() {
+        let p = simulated_types(4, true).without_cpu();
+        p.validate().unwrap();
+        assert_eq!(p.num_types(), 3);
+        assert!(p.cpu_type().is_none());
+    }
+
+    #[test]
+    fn simulated_variants_differ() {
+        let p = simulated_types(6, true);
+        let a = p.get(1);
+        let b = p.get(2);
+        assert!(
+            (a.flops_per_sec - b.flops_per_sec).abs() > 1.0
+                || (a.price_per_hour - b.price_per_hour).abs() > 1e-9
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the rust hot path.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is
+//! the request-path bridge: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
+//! the interchange format — jax ≥ 0.5 emits protos with 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects, while the text parser reassigns
+//! ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod policy;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Directory holding `*.hlo.txt` artifacts; override with `HETERPS_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("HETERPS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // Resolve relative to the workspace root so examples/benches work
+        // from any cwd inside the repo.
+        let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        d.push("artifacts");
+        d
+    })
+}
+
+/// Shared PJRT CPU client + executable cache. Compiling an HLO module is
+/// expensive (~10–100 ms); every artifact is compiled once per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+// The PJRT client is internally synchronized; executions are guarded by
+// the executable-level mutex below.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+static GLOBAL: OnceLock<std::result::Result<Arc<Runtime>, String>> = OnceLock::new();
+
+impl Runtime {
+    /// Create a fresh CPU runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Process-wide shared runtime (PJRT clients are heavy; one is enough).
+    pub fn global() -> Result<Arc<Runtime>> {
+        let r = GLOBAL.get_or_init(|| Runtime::cpu().map(Arc::new).map_err(|e| format!("{e:#}")));
+        r.clone().map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.lock().unwrap().get(&path) {
+            return Ok(e.clone());
+        }
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let wrapped = Arc::new(Executable { exe: Mutex::new(exe), path: path.clone() });
+        self.cache.lock().unwrap().insert(path, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Load an artifact by bare name from [`artifacts_dir`], e.g.
+    /// `"policy_lstm_fwd"` → `artifacts/policy_lstm_fwd.hlo.txt`.
+    pub fn load_named(&self, name: &str) -> Result<Arc<Executable>> {
+        self.load(artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+/// A compiled HLO module. All artifacts are lowered with
+/// `return_tuple=True`, so outputs always arrive as a tuple.
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    pub path: PathBuf,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute expecting exactly one output tensor.
+    pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut out = self.run(inputs)?;
+        anyhow::ensure!(
+            out.len() == 1,
+            "{}: expected 1 output, got {}",
+            self.path.display(),
+            out.len()
+        );
+        Ok(out.pop().unwrap())
+    }
+}
+
+/// Literal constructors/readers for the f32 tensors all artifacts use.
+pub mod lit {
+    use anyhow::Result;
+
+    pub fn scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn vec1(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    pub fn mat(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(v.len() == rows * cols, "matrix data/shape mismatch");
+        Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    pub fn to_f32s(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves_under_workspace_by_default() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("HETERPS_ARTIFACTS").is_ok());
+    }
+
+    #[test]
+    fn load_missing_artifact_reports_make_hint() {
+        let rt = match Runtime::global() {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT on this host; covered by integration tests
+        };
+        let err = match rt.load("/nonexistent/nope.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing artifact must fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // Full load/execute round-trips live in rust/tests/ (they need
+    // `make artifacts` to have produced the HLO files).
+}

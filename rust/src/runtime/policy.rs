@@ -1,0 +1,161 @@
+//! The HLO-backed scheduling policies: the paper's LSTM (§5.2, Figure 3)
+//! and the Elman-RNN baseline (§6.2), authored in JAX (layer-2) with the
+//! Pallas LSTM-cell kernel (layer-1), AOT-lowered by `python/compile/aot.py`
+//! and executed here through PJRT.
+//!
+//! Two artifacts per architecture:
+//! * `policy_{lstm,rnn}_fwd`  — `(params, features, type_mask) -> probs`
+//! * `policy_{lstm,rnn}_step` — `(params, features, layer_mask, type_mask,
+//!    actions_onehot, advantage, lr) -> params'` (one REINFORCE ascent
+//!    step on the surrogate `advantage * sum_l log P(a_l)`, Eq 15–16).
+//!
+//! The parameter vector layout is defined by python/compile/model.py; rust
+//! only ever treats it as an opaque flat `f32` buffer, initialized here
+//! with the same uniform(-0.08, 0.08) scheme the paper's NAS lineage uses.
+
+use super::{lit, Executable, Runtime};
+use crate::sched::rl::policy::{FeatureMatrix, Policy, Sample, FEAT_DIM, L_MAX, T_MAX};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// LSTM hidden width (must match python/compile/model.py::HIDDEN).
+pub const HIDDEN: usize = 64;
+
+/// Flat parameter count of the LSTM policy.
+pub const LSTM_PARAMS: usize =
+    FEAT_DIM * 4 * HIDDEN + HIDDEN * 4 * HIDDEN + 4 * HIDDEN + HIDDEN * T_MAX + T_MAX;
+
+/// Flat parameter count of the Elman RNN policy.
+pub const RNN_PARAMS: usize =
+    FEAT_DIM * HIDDEN + HIDDEN * HIDDEN + HIDDEN + HIDDEN * T_MAX + T_MAX;
+
+/// A policy whose forward pass and REINFORCE step run as compiled HLO.
+pub struct HloPolicy {
+    label: &'static str,
+    fwd: Arc<Executable>,
+    step: Arc<Executable>,
+    params: Vec<f32>,
+}
+
+impl HloPolicy {
+    fn load(
+        label: &'static str,
+        fwd_name: &str,
+        step_name: &str,
+        n_params: usize,
+        rng: &mut Rng,
+    ) -> Result<HloPolicy> {
+        let rt = Runtime::global()?;
+        let fwd = rt.load_named(fwd_name)?;
+        let step = rt.load_named(step_name)?;
+        let params: Vec<f32> = (0..n_params).map(|_| (rng.f32() * 2.0 - 1.0) * 0.08).collect();
+        Ok(HloPolicy { label, fwd, step, params })
+    }
+
+    /// The paper's LSTM policy.
+    pub fn load_lstm(rng: &mut Rng) -> Result<HloPolicy> {
+        Self::load("rl-lstm-hlo", "policy_lstm_fwd", "policy_lstm_step", LSTM_PARAMS, rng)
+    }
+
+    /// The RL-RNN baseline policy.
+    pub fn load_rnn(rng: &mut Rng) -> Result<HloPolicy> {
+        Self::load("rl-rnn-hlo", "policy_rnn_fwd", "policy_rnn_step", RNN_PARAMS, rng)
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn type_mask(num_types: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; T_MAX];
+        for t in 0..num_types.min(T_MAX) {
+            m[t] = 1.0;
+        }
+        m
+    }
+
+    fn layer_mask(num_layers: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; L_MAX];
+        for l in 0..num_layers.min(L_MAX) {
+            m[l] = 1.0;
+        }
+        m
+    }
+}
+
+impl Policy for HloPolicy {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn probs(&mut self, feats: &FeatureMatrix) -> Vec<Vec<f64>> {
+        let inputs = [
+            lit::vec1(&self.params),
+            lit::mat(&feats.data, L_MAX, FEAT_DIM).expect("feature shape"),
+            lit::vec1(&Self::type_mask(feats.num_types)),
+        ];
+        let out = self.fwd.run1(&inputs).expect("policy fwd failed");
+        let flat = lit::to_f32s(&out).expect("policy fwd output");
+        assert_eq!(flat.len(), L_MAX * T_MAX, "probs shape mismatch");
+        (0..feats.num_layers)
+            .map(|l| {
+                let row = &flat[l * T_MAX..l * T_MAX + feats.num_types];
+                // Renormalize defensively (masked softmax in HLO is exact,
+                // but f32->f64 conversion can drift at the 1e-7 level).
+                let sum: f64 = row.iter().map(|&x| x as f64).sum();
+                row.iter().map(|&x| (x as f64 / sum.max(1e-30)).max(1e-12)).collect()
+            })
+            .collect()
+    }
+
+    fn update(&mut self, feats: &FeatureMatrix, samples: &[Sample], lr: f64) {
+        let n = samples.len().max(1) as f32;
+        let features = lit::mat(&feats.data, L_MAX, FEAT_DIM).expect("feature shape");
+        let lmask = lit::vec1(&Self::layer_mask(feats.num_layers));
+        let tmask = lit::vec1(&Self::type_mask(feats.num_types));
+        for s in samples {
+            let mut onehot = vec![0.0f32; L_MAX * T_MAX];
+            for (l, &a) in s.actions.iter().enumerate() {
+                onehot[l * T_MAX + a] = 1.0;
+            }
+            let inputs = [
+                lit::vec1(&self.params),
+                features.clone(),
+                lmask.clone(),
+                tmask.clone(),
+                lit::mat(&onehot, L_MAX, T_MAX).expect("onehot shape"),
+                lit::scalar(s.advantage as f32),
+                lit::scalar(lr as f32 / n),
+            ];
+            let out = self.step.run1(&inputs).expect("policy step failed");
+            self.params = lit::to_f32s(&out).expect("policy step output");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_layout() {
+        // Keep in lock-step with python/compile/model.py.
+        assert_eq!(FEAT_DIM, 35);
+        assert_eq!(LSTM_PARAMS, 35 * 256 + 64 * 256 + 256 + 64 * 64 + 64);
+        assert_eq!(RNN_PARAMS, 35 * 64 + 64 * 64 + 64 + 64 * 64 + 64);
+    }
+
+    #[test]
+    fn masks_have_expected_shape() {
+        let t = HloPolicy::type_mask(3);
+        assert_eq!(t.len(), T_MAX);
+        assert_eq!(t.iter().sum::<f32>(), 3.0);
+        let l = HloPolicy::layer_mask(5);
+        assert_eq!(l.len(), L_MAX);
+        assert_eq!(l.iter().sum::<f32>(), 5.0);
+    }
+
+    // Execution tests (probs sum to one, step ascends log-prob) live in
+    // rust/tests/policy_hlo.rs, gated on `make artifacts` having run.
+}

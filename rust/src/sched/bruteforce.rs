@@ -1,0 +1,131 @@
+//! Brute-force enumeration of the whole `T^L` plan space (Table 2's "BF").
+//!
+//! Guaranteed optimal; used by the evaluation to (a) verify that RL finds
+//! the optimum on small instances and (b) demonstrate the combinatorial
+//! blow-up that makes exhaustive search impractical past ~16 layers with
+//! 4 types — exactly the paper's Table 2 story.
+
+use super::{BestTracker, ScheduleOutcome, Scheduler};
+use crate::cost::CostModel;
+use crate::plan::SchedulingPlan;
+use std::time::Instant;
+
+pub struct BruteForce {
+    /// Optional cap on evaluations (safety valve for benches; `None`
+    /// reproduces the paper's unbounded enumeration).
+    pub max_evaluations: Option<usize>,
+}
+
+impl BruteForce {
+    pub fn new() -> Self {
+        BruteForce { max_evaluations: None }
+    }
+
+    pub fn with_cap(max_evaluations: usize) -> Self {
+        BruteForce { max_evaluations: Some(max_evaluations) }
+    }
+
+    /// Number of plans the exhaustive search would visit.
+    pub fn search_space(num_layers: usize, num_types: usize) -> f64 {
+        (num_types as f64).powi(num_layers as i32)
+    }
+}
+
+impl Default for BruteForce {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for BruteForce {
+    fn name(&self) -> &str {
+        "bf"
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let started = Instant::now();
+        let nl = cm.model.num_layers();
+        let nt = cm.pool.num_types();
+        let mut bt = BestTracker::new();
+        // Odometer enumeration to avoid recursion and re-allocation.
+        let mut assignment = vec![0usize; nl];
+        loop {
+            bt.consider(cm, &SchedulingPlan::new(assignment.clone()));
+            if let Some(cap) = self.max_evaluations {
+                if bt.evaluations >= cap {
+                    break;
+                }
+            }
+            // Increment the odometer.
+            let mut pos = 0;
+            loop {
+                if pos == nl {
+                    return bt.finish(started);
+                }
+                assignment[pos] += 1;
+                if assignment[pos] < nt {
+                    break;
+                }
+                assignment[pos] = 0;
+                pos += 1;
+            }
+        }
+        bt.finish(started)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+    use crate::sched::fixed::{CpuOnly, GpuOnly, Heuristic};
+
+    #[test]
+    fn enumerates_exactly_t_pow_l() {
+        let model = zoo::nce(); // 5 layers
+        let pool = paper_testbed(); // 2 types
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = BruteForce::new().schedule(&cm);
+        assert_eq!(out.evaluations, 32);
+    }
+
+    #[test]
+    fn optimum_beats_every_fixed_baseline() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let bf = BruteForce::new().schedule(&cm);
+        for out in [
+            CpuOnly.schedule(&cm),
+            GpuOnly.schedule(&cm),
+            Heuristic.schedule(&cm),
+        ] {
+            if out.eval.feasible {
+                assert!(
+                    bf.eval.cost_usd <= out.eval.cost_usd * (1.0 + 1e-9),
+                    "bf {} > baseline {}",
+                    bf.eval.cost_usd,
+                    out.eval.cost_usd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cap_limits_work() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = BruteForce::with_cap(7).schedule(&cm);
+        assert_eq!(out.evaluations, 7);
+    }
+
+    #[test]
+    fn search_space_matches_table2() {
+        // Table 2's scale: 4 types x 16 layers ~ 4.3e9 plans.
+        assert_eq!(BruteForce::search_space(16, 4), 4f64.powi(16));
+        assert_eq!(BruteForce::search_space(8, 2), 256.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! The non-searching baselines of §6.2: CPU-only, GPU-only, and the
+//! AIBox/BytePS-style static heuristic (data-intensive front on CPUs,
+//! everything else on the accelerator) [61].
+
+use super::{BestTracker, ScheduleOutcome, Scheduler};
+use crate::cost::CostModel;
+use crate::plan::SchedulingPlan;
+use crate::resources::ResourceKind;
+use std::time::Instant;
+
+/// All layers on the CPU type (falls back to type 0 in CPU-less pools).
+pub struct CpuOnly;
+
+impl Scheduler for CpuOnly {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let started = Instant::now();
+        let t = cm.pool.cpu_type().map(|c| c.id).unwrap_or(0);
+        let mut bt = BestTracker::new();
+        bt.consider(cm, &SchedulingPlan::uniform(cm.model.num_layers(), t));
+        bt.finish(started)
+    }
+}
+
+/// All layers on the anchor accelerator type (the first non-CPU type —
+/// the V100 in the paper's testbed).
+pub struct GpuOnly;
+
+/// The anchor GPU: first non-CPU type, or type 0 when the pool is all-CPU.
+pub(crate) fn anchor_gpu(cm: &CostModel) -> usize {
+    cm.pool
+        .types
+        .iter()
+        .find(|t| t.kind != ResourceKind::Cpu)
+        .map(|t| t.id)
+        .unwrap_or(0)
+}
+
+impl Scheduler for GpuOnly {
+    fn name(&self) -> &str {
+        "gpu"
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let started = Instant::now();
+        let t = anchor_gpu(cm);
+        let mut bt = BestTracker::new();
+        bt.consider(cm, &SchedulingPlan::uniform(cm.model.num_layers(), t));
+        bt.finish(started)
+    }
+}
+
+/// The static "Heuristic" baseline exactly as §6.2 evaluates it:
+/// "the execution of the first layer is carried out in GPUs and the rest
+/// is carried out in CPUs" — a fixed split that ignores layer
+/// characteristics (the embedding lands on the accelerator, the compute
+/// tower on CPUs), which is why the paper finds it up to 312.3% more
+/// expensive than RL. With no CPU in the pool it degenerates to GPU-only.
+pub struct Heuristic;
+
+impl Scheduler for Heuristic {
+    fn name(&self) -> &str {
+        "heuristic"
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let started = Instant::now();
+        let gpu = anchor_gpu(cm);
+        let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
+        let assignment: Vec<usize> = cm
+            .model
+            .layers
+            .iter()
+            .map(|l| if l.index == 0 { gpu } else { cpu })
+            .collect();
+        let mut bt = BestTracker::new();
+        bt.consider(cm, &SchedulingPlan::new(assignment));
+        bt.finish(started)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::{paper_testbed, simulated_types};
+
+    #[test]
+    fn cpu_only_is_uniform_cpu() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = CpuOnly.schedule(&cm);
+        assert!(out.plan.assignment.iter().all(|&t| t == 0));
+        assert_eq!(out.evaluations, 1);
+    }
+
+    #[test]
+    fn gpu_only_picks_first_accelerator() {
+        let model = zoo::ctrdnn();
+        let pool = simulated_types(8, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = GpuOnly.schedule(&cm);
+        assert!(out.plan.assignment.iter().all(|&t| t == 1));
+    }
+
+    #[test]
+    fn heuristic_is_first_layer_gpu_rest_cpu() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = Heuristic.schedule(&cm);
+        // §6.2's definition: first layer on the GPU, everything else CPU.
+        assert_eq!(out.plan.assignment[0], 1);
+        assert!(out.plan.assignment[1..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn heuristic_degrades_to_gpu_without_cpu() {
+        let model = zoo::ctrdnn();
+        let pool = simulated_types(4, false);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = Heuristic.schedule(&cm);
+        assert!(out.plan.assignment.iter().all(|&t| t == 0));
+    }
+}

@@ -1,0 +1,124 @@
+//! Greedy scheduling [51] (§6.2 baseline).
+//!
+//! Two phases, both intentionally myopic (the paper's point is that greedy
+//! "may fall into local optimal, corresponding to a high cost"):
+//! 1. per-layer myopic assignment — each layer goes to the type with the
+//!    lowest isolated compute-dollar rate for that layer, ignoring stage
+//!    fusion and boundary traffic;
+//! 2. one coordinate-descent sweep — revisit layers in order, keeping a
+//!    flip only when the *full* plan evaluation improves. A single sweep
+//!    terminates in the nearest local optimum.
+
+use super::{BestTracker, ScheduleOutcome, Scheduler};
+use crate::cost::CostModel;
+use crate::plan::{SchedulingPlan, StageSpan};
+use std::time::Instant;
+
+pub struct Greedy;
+
+impl Greedy {
+    pub fn new() -> Self {
+        Greedy
+    }
+}
+
+impl Default for Greedy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Greedy {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let started = Instant::now();
+        let nl = cm.model.num_layers();
+        let nt = cm.pool.num_types();
+
+        // Phase 1: isolated per-layer dollar rate = price_t * OCT(l, t)
+        // (dollars to push one profiling batch through layer l on type t).
+        let mut assignment = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let mut best_t = 0;
+            let mut best_rate = f64::INFINITY;
+            for t in 0..nt {
+                let span = StageSpan { index: 0, type_id: t, first_layer: l, last_layer: l };
+                let prof = cm.stage_profile(&span);
+                let rate = cm.pool.get(t).price_per_hour * prof.oct.max(prof.odt);
+                if rate < best_rate {
+                    best_rate = rate;
+                    best_t = t;
+                }
+            }
+            assignment.push(best_t);
+        }
+
+        let mut bt = BestTracker::new();
+        let mut current = SchedulingPlan::new(assignment);
+        let mut current_eval = bt.consider(cm, &current);
+
+        // Phase 2: single coordinate-descent sweep.
+        for l in 0..nl {
+            let orig = current.assignment[l];
+            for t in 0..nt {
+                if t == orig {
+                    continue;
+                }
+                let mut cand = current.clone();
+                cand.assignment[l] = t;
+                let eval = bt.consider(cm, &cand);
+                let better = (eval.feasible && !current_eval.feasible)
+                    || (eval.feasible == current_eval.feasible
+                        && eval.cost_usd < current_eval.cost_usd);
+                if better {
+                    current = cand;
+                    current_eval = eval;
+                }
+            }
+        }
+        bt.finish(started)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+    use crate::sched::bruteforce::BruteForce;
+
+    #[test]
+    fn greedy_never_beats_bruteforce() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let g = Greedy::new().schedule(&cm);
+        let bf = BruteForce::new().schedule(&cm);
+        assert!(bf.eval.cost_usd <= g.eval.cost_usd * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn greedy_produces_valid_plan() {
+        let model = zoo::matchnet();
+        let pool = crate::resources::simulated_types(4, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = Greedy::new().schedule(&cm);
+        out.plan.validate(&model, &pool).unwrap();
+        assert!(out.evaluations >= 1);
+    }
+
+    #[test]
+    fn greedy_uses_cpu_for_embedding_on_paper_testbed() {
+        // The myopic rate strongly favors CPU for the IO-bound embedding:
+        // CPU is both faster at IO and 60x cheaper.
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = Greedy::new().schedule(&cm);
+        assert_eq!(out.plan.assignment[0], 0, "embedding should sit on CPU");
+    }
+}

@@ -1,0 +1,131 @@
+//! Layer scheduling (§4.2, §5, §6.2).
+//!
+//! A [`Scheduler`] searches the `T^L` space of layer→type assignments for
+//! the plan minimizing monetary cost subject to the throughput floor, using
+//! the cost model as its oracle. The suite mirrors the paper's evaluation:
+//! RL with an LSTM policy (ours), RL with an Elman RNN, Brute Force,
+//! Bayesian Optimization, Genetic, Greedy, CPU-only, GPU-only and the
+//! AIBox/BytePS heuristic.
+
+pub mod bayesian;
+pub mod bruteforce;
+pub mod fixed;
+pub mod genetic;
+pub mod greedy;
+pub mod rl;
+
+use crate::cost::{CostModel, PlanEval};
+use crate::plan::SchedulingPlan;
+use std::time::{Duration, Instant};
+
+/// What a scheduling run produced.
+#[derive(Clone, Debug)]
+pub struct ScheduleOutcome {
+    pub plan: SchedulingPlan,
+    pub eval: PlanEval,
+    /// Wall-clock scheduling time (the quantity of Tables 2–3).
+    pub wall_time: Duration,
+    /// Cost-model evaluations consumed (search effort).
+    pub evaluations: usize,
+}
+
+/// A scheduling method.
+pub trait Scheduler {
+    fn name(&self) -> &str;
+    /// Produce a plan for the cost model's (model, pool, config) triple.
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome;
+}
+
+/// Helper: evaluate a candidate, tracking the incumbent best.
+pub(crate) struct BestTracker {
+    pub best_plan: Option<SchedulingPlan>,
+    pub best_eval: Option<PlanEval>,
+    pub evaluations: usize,
+}
+
+impl BestTracker {
+    pub fn new() -> Self {
+        BestTracker { best_plan: None, best_eval: None, evaluations: 0 }
+    }
+
+    /// Returns the eval of this candidate (and keeps it if it leads).
+    /// Feasible plans always beat infeasible ones; ties break on cost.
+    pub fn consider(&mut self, cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
+        let eval = cm.evaluate(plan);
+        self.evaluations += 1;
+        let better = match &self.best_eval {
+            None => true,
+            Some(b) => {
+                (eval.feasible && !b.feasible)
+                    || (eval.feasible == b.feasible && eval.cost_usd < b.cost_usd)
+            }
+        };
+        if better {
+            self.best_plan = Some(plan.clone());
+            self.best_eval = Some(eval.clone());
+        }
+        eval
+    }
+
+    pub fn finish(self, started: Instant) -> ScheduleOutcome {
+        ScheduleOutcome {
+            plan: self.best_plan.expect("scheduler evaluated no plans"),
+            eval: self.best_eval.expect("scheduler evaluated no plans"),
+            wall_time: started.elapsed(),
+            evaluations: self.evaluations,
+        }
+    }
+}
+
+/// Construct every scheduler of the paper's §6.2 comparison by name.
+/// `seed` controls the stochastic methods.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "rl" | "rl-lstm" => Some(Box::new(rl::RlScheduler::lstm(rl::RlConfig::default(), seed))),
+        "rl-tabular" => Some(Box::new(rl::RlScheduler::tabular(rl::RlConfig::default(), seed))),
+        "rl-rnn" => Some(Box::new(rl::RlScheduler::rnn(rl::RlConfig::default(), seed))),
+        "bf" | "bruteforce" => Some(Box::new(bruteforce::BruteForce::new())),
+        "bo" | "bayesian" => Some(Box::new(bayesian::BayesianOpt::new(Default::default(), seed))),
+        "genetic" => Some(Box::new(genetic::Genetic::new(Default::default(), seed))),
+        "greedy" => Some(Box::new(greedy::Greedy::new())),
+        "cpu" => Some(Box::new(fixed::CpuOnly)),
+        "gpu" => Some(Box::new(fixed::GpuOnly)),
+        "heuristic" => Some(Box::new(fixed::Heuristic)),
+        _ => None,
+    }
+}
+
+/// The method names of the Figure 5–11 comparison, in paper order.
+pub fn comparison_methods() -> &'static [&'static str] {
+    &["rl", "rl-rnn", "bo", "genetic", "greedy", "gpu", "cpu", "heuristic"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+
+    #[test]
+    fn best_tracker_prefers_feasible_then_cheap() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut bt = BestTracker::new();
+        bt.consider(&cm, &SchedulingPlan::uniform(5, 1));
+        let first_cost = bt.best_eval.as_ref().unwrap().cost_usd;
+        bt.consider(&cm, &SchedulingPlan::new(vec![0, 0, 1, 1, 1]));
+        let best = bt.best_eval.as_ref().unwrap();
+        assert!(best.cost_usd <= first_cost);
+        assert_eq!(bt.evaluations, 2);
+    }
+
+    #[test]
+    fn by_name_covers_comparison_set() {
+        for m in comparison_methods() {
+            assert!(by_name(m, 1).is_some(), "missing scheduler {m}");
+        }
+        assert!(by_name("nope", 1).is_none());
+    }
+}

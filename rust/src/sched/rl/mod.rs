@@ -1,0 +1,252 @@
+//! Reinforcement-learning-based scheduling (§5.2, Algorithm 1).
+//!
+//! REINFORCE [57] over a layer-sequential policy: each round samples `N`
+//! scheduling plans from the policy, scores them with the cost model
+//! (reward = negative monetary cost), subtracts a moving-average baseline
+//! (Eq 15) and ascends the log-likelihood-weighted advantage (Eq 16).
+//!
+//! The policy itself is pluggable (see [`policy`]): the paper's LSTM and
+//! the RL-RNN baseline execute as AOT-compiled HLO through PJRT; a tabular
+//! softmax policy provides an artifact-free ablation and test target.
+
+pub mod policy;
+
+use super::{BestTracker, ScheduleOutcome, Scheduler};
+use crate::cost::CostModel;
+use crate::plan::SchedulingPlan;
+use crate::util::rng::Rng;
+use crate::util::stats::Ema;
+use policy::{featurize, sample_actions, Policy, Sample, TabularPolicy};
+use std::time::Instant;
+
+/// Algorithm 1 hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct RlConfig {
+    /// `I`: training rounds.
+    pub rounds: usize,
+    /// `N`: plans sampled per round.
+    pub samples_per_round: usize,
+    /// `gamma`: baseline EMA rate (Alg 1 line 8).
+    pub baseline_gamma: f64,
+    /// `eta`: policy learning rate (Eq 16).
+    pub learning_rate: f64,
+    /// Linear learning-rate decay to this fraction at the final round.
+    pub lr_final_frac: f64,
+}
+
+impl Default for RlConfig {
+    fn default() -> Self {
+        RlConfig {
+            rounds: 60,
+            samples_per_round: 8,
+            baseline_gamma: 0.3,
+            learning_rate: 1.2,
+            lr_final_frac: 0.2,
+        }
+    }
+}
+
+/// Which policy architecture backs the scheduler.
+enum PolicyKind {
+    Tabular,
+    /// LSTM via HLO artifacts; falls back to tabular when artifacts are
+    /// absent (logged once) so library tests run without `make artifacts`.
+    HloLstm,
+    HloRnn,
+}
+
+pub struct RlScheduler {
+    cfg: RlConfig,
+    kind: PolicyKind,
+    rng: Rng,
+    label: &'static str,
+}
+
+impl RlScheduler {
+    pub fn tabular(cfg: RlConfig, seed: u64) -> Self {
+        RlScheduler { cfg, kind: PolicyKind::Tabular, rng: Rng::new(seed), label: "rl-tabular" }
+    }
+
+    /// The paper's method: REINFORCE + LSTM policy (§5.2).
+    pub fn lstm(cfg: RlConfig, seed: u64) -> Self {
+        RlScheduler { cfg, kind: PolicyKind::HloLstm, rng: Rng::new(seed), label: "rl" }
+    }
+
+    /// The RL-RNN baseline (Elman RNN [54]).
+    pub fn rnn(cfg: RlConfig, seed: u64) -> Self {
+        RlScheduler { cfg, kind: PolicyKind::HloRnn, rng: Rng::new(seed), label: "rl-rnn" }
+    }
+
+    fn make_policy(&mut self) -> Box<dyn Policy> {
+        match self.kind {
+            PolicyKind::Tabular => Box::new(TabularPolicy::new(&mut self.rng)),
+            PolicyKind::HloLstm => match crate::runtime::policy::HloPolicy::load_lstm(&mut self.rng)
+            {
+                Ok(p) => Box::new(p),
+                Err(e) => {
+                    eprintln!(
+                        "[rl] LSTM policy artifacts unavailable ({e}); falling back to tabular"
+                    );
+                    Box::new(TabularPolicy::new(&mut self.rng))
+                }
+            },
+            PolicyKind::HloRnn => match crate::runtime::policy::HloPolicy::load_rnn(&mut self.rng) {
+                Ok(p) => Box::new(p),
+                Err(e) => {
+                    eprintln!(
+                        "[rl] RNN policy artifacts unavailable ({e}); falling back to tabular"
+                    );
+                    Box::new(TabularPolicy::new(&mut self.rng))
+                }
+            },
+        }
+    }
+
+    /// Run Algorithm 1 and return the trained policy alongside the search
+    /// outcome (exposed for the pre-train / reuse flow of §6.2, where one
+    /// trained LSTM schedules multiple inputs).
+    pub fn train(&mut self, cm: &CostModel) -> (Box<dyn Policy>, ScheduleOutcome) {
+        let started = Instant::now();
+        let feats = featurize(cm);
+        let mut pol = self.make_policy();
+        let mut bt = BestTracker::new();
+        // Warm-start candidates: the degenerate plans any deployment would
+        // try first (every uniform single-type plan + the data-intensity
+        // split). The policy search must only ever improve on these.
+        let nl = cm.model.num_layers();
+        for t in 0..cm.pool.num_types() {
+            bt.consider(cm, &SchedulingPlan::uniform(nl, t));
+        }
+        let gpu = crate::sched::fixed::anchor_gpu(cm);
+        let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
+        bt.consider(
+            cm,
+            &SchedulingPlan::new(
+                cm.model
+                    .layers
+                    .iter()
+                    .map(|l| if l.kind.data_intensive() { cpu } else { gpu })
+                    .collect(),
+            ),
+        );
+        let mut baseline = Ema::new(self.cfg.baseline_gamma);
+        // Reward scale: normalize by the first round's mean |cost| so the
+        // advantage magnitude is architecture-independent.
+        let mut reward_scale: Option<f64> = None;
+
+        for round in 0..self.cfg.rounds {
+            let probs = pol.probs(&feats);
+            let mut rewards = Vec::with_capacity(self.cfg.samples_per_round);
+            let mut actions_batch = Vec::with_capacity(self.cfg.samples_per_round);
+            for _ in 0..self.cfg.samples_per_round {
+                let actions = sample_actions(&probs, &mut self.rng);
+                let eval = bt.consider(cm, &SchedulingPlan::new(actions.clone()));
+                // Alg 1 line 5: R_n <- Cost(SP); we ascend -cost.
+                rewards.push(-eval.cost_usd);
+                actions_batch.push(actions);
+            }
+            let scale = *reward_scale.get_or_insert_with(|| {
+                rewards.iter().map(|r| r.abs()).sum::<f64>() / rewards.len() as f64 + 1e-9
+            });
+            let mean_r = crate::util::stats::mean(&rewards);
+            // Alg 1 line 8 — note the baseline update uses this round's
+            // mean; the advantage uses the baseline *before* folding it in
+            // (moving average of previous batches, as §5.2 specifies).
+            let b_prev = if round == 0 { mean_r } else { baseline.get() };
+            let samples: Vec<Sample> = actions_batch
+                .into_iter()
+                .zip(&rewards)
+                .map(|(actions, &r)| Sample { actions, advantage: (r - b_prev) / scale })
+                .collect();
+            let frac = round as f64 / self.cfg.rounds.max(1) as f64;
+            let lr = self.cfg.learning_rate
+                * (1.0 - (1.0 - self.cfg.lr_final_frac) * frac);
+            pol.update(&feats, &samples, lr);
+            baseline.update(mean_r);
+        }
+
+        // Final greedy decode is also a candidate (the deployed plan).
+        let probs = pol.probs(&feats);
+        let decoded = policy::decode_actions(&probs);
+        bt.consider(cm, &SchedulingPlan::new(decoded));
+        (pol, bt.finish(started))
+    }
+}
+
+impl Scheduler for RlScheduler {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        self.train(cm).1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+    use crate::sched::bruteforce::BruteForce;
+    use crate::sched::fixed::{CpuOnly, GpuOnly};
+
+    fn cm<'a>(
+        model: &'a crate::model::ModelSpec,
+        pool: &'a crate::resources::ResourcePool,
+    ) -> CostModel<'a> {
+        CostModel::new(model, pool, CostConfig::default())
+    }
+
+    #[test]
+    fn rl_tabular_matches_bruteforce_on_nce() {
+        // Table 2's key claim: "the scheduling plans generated by the RL
+        // method are the same as the optimal plans generated by BF".
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let bf = BruteForce::new().schedule(&cm);
+        let rl = RlScheduler::tabular(RlConfig::default(), 42).schedule(&cm);
+        assert!(
+            rl.eval.cost_usd <= bf.eval.cost_usd * 1.001,
+            "rl={} bf={}",
+            rl.eval.cost_usd,
+            bf.eval.cost_usd
+        );
+    }
+
+    #[test]
+    fn rl_beats_single_type_baselines_on_ctrdnn() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let rl = RlScheduler::tabular(RlConfig::default(), 7).schedule(&cm);
+        let cpu = CpuOnly.schedule(&cm);
+        let gpu = GpuOnly.schedule(&cm);
+        assert!(rl.eval.feasible);
+        assert!(rl.eval.cost_usd <= cpu.eval.cost_usd);
+        assert!(rl.eval.cost_usd <= gpu.eval.cost_usd);
+    }
+
+    #[test]
+    fn rl_is_deterministic_per_seed() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let a = RlScheduler::tabular(RlConfig::default(), 9).schedule(&cm);
+        let b = RlScheduler::tabular(RlConfig::default(), 9).schedule(&cm);
+        assert_eq!(a.plan, b.plan);
+    }
+
+    #[test]
+    fn rl_evaluation_budget_is_bounded() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let cfg = RlConfig { rounds: 10, samples_per_round: 4, ..Default::default() };
+        let out = RlScheduler::tabular(cfg, 1).schedule(&cm);
+        // rounds*samples + warm starts (2 uniform + 1 split) + final decode.
+        assert_eq!(out.evaluations, 10 * 4 + 2 + 1 + 1);
+    }
+}

@@ -1,0 +1,215 @@
+//! Scheduling policies for the REINFORCE trainer (§5.2).
+//!
+//! The paper's policy is an LSTM whose "time" axis is the layer index; each
+//! cell consumes the five layer features and emits a softmax over resource
+//! types. HeterPS keeps the policy behind a trait so the trainer can drive:
+//!
+//! * [`TabularPolicy`] — pure-rust per-layer logits (no cross-layer
+//!   coupling). Used for unit tests and as the ablation showing why the
+//!   LSTM's inter-layer awareness matters.
+//! * `HloLstmPolicy` / `HloRnnPolicy` (in [`crate::runtime::policy`]) — the
+//!   paper's LSTM and the RL-RNN baseline, AOT-compiled from JAX/Pallas to
+//!   HLO and executed through PJRT.
+
+use crate::cost::CostModel;
+use crate::util::{rng::Rng, softmax};
+
+/// Fixed feature geometry shared with the AOT-lowered policy artifacts
+/// (python/compile/model.py must agree with these).
+pub const L_MAX: usize = 24;
+pub const T_MAX: usize = 64;
+pub const KIND_ONEHOT: usize = crate::model::LayerKind::COUNT;
+/// index one-hot + kind one-hot + {input size, weight size, comm time}.
+pub const FEAT_DIM: usize = L_MAX + KIND_ONEHOT + 3;
+
+/// The §5.2 feature matrix: one row per layer, padded/masked to `L_MAX`.
+#[derive(Clone, Debug)]
+pub struct FeatureMatrix {
+    /// `[L_MAX * FEAT_DIM]` row-major.
+    pub data: Vec<f32>,
+    pub num_layers: usize,
+    pub num_types: usize,
+}
+
+impl FeatureMatrix {
+    pub fn row(&self, l: usize) -> &[f32] {
+        &self.data[l * FEAT_DIM..(l + 1) * FEAT_DIM]
+    }
+}
+
+/// Build the five §5.2 features for every layer of the cost model's model:
+/// 1. layer index (one-hot), 2. layer type (one-hot), 3. input size,
+/// 4. weight size, 5. data-communication time. Scalars are log-scaled so
+/// the 10^0..10^10 byte range stays in a trainable band.
+pub fn featurize(cm: &CostModel) -> FeatureMatrix {
+    let nl = cm.model.num_layers();
+    assert!(nl <= L_MAX, "model has {nl} layers; policy supports {L_MAX}");
+    let mut data = vec![0.0f32; L_MAX * FEAT_DIM];
+    for (l, layer) in cm.model.layers.iter().enumerate() {
+        let row = &mut data[l * FEAT_DIM..(l + 1) * FEAT_DIM];
+        row[l] = 1.0; // index one-hot
+        row[L_MAX + layer.kind.index()] = 1.0; // type one-hot
+        let s = L_MAX + KIND_ONEHOT;
+        row[s] = ((layer.input_bytes as f32) + 1.0).ln() / 16.0;
+        row[s + 1] = ((layer.weight_bytes as f32) + 1.0).ln() / 16.0;
+        row[s + 2] = ((cm.layer_comm_feature(l) as f32) * 1e6 + 1.0).ln() / 16.0;
+    }
+    FeatureMatrix { data, num_layers: nl, num_types: cm.pool.num_types() }
+}
+
+/// One REINFORCE sample: the actions taken and the (baselined) advantage.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub actions: Vec<usize>,
+    pub advantage: f64,
+}
+
+/// A trainable scheduling policy.
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Per-layer action distributions, `num_layers x num_types`, each row
+    /// summing to 1 over the first `num_types` entries.
+    fn probs(&mut self, feats: &FeatureMatrix) -> Vec<Vec<f64>>;
+
+    /// REINFORCE update (Eq 15–16): ascend
+    /// `(1/N) * sum_n adv_n * sum_l grad log P(a_l^n)` with step `lr`.
+    fn update(&mut self, feats: &FeatureMatrix, samples: &[Sample], lr: f64);
+}
+
+/// Independent per-layer logits — REINFORCE without any inter-layer model.
+pub struct TabularPolicy {
+    /// `[L_MAX][T_MAX]` logits.
+    logits: Vec<Vec<f64>>,
+}
+
+impl TabularPolicy {
+    pub fn new(rng: &mut Rng) -> Self {
+        let logits = (0..L_MAX)
+            .map(|_| (0..T_MAX).map(|_| 0.01 * rng.normal()).collect())
+            .collect();
+        TabularPolicy { logits }
+    }
+}
+
+impl Policy for TabularPolicy {
+    fn name(&self) -> &str {
+        "tabular"
+    }
+
+    fn probs(&mut self, feats: &FeatureMatrix) -> Vec<Vec<f64>> {
+        (0..feats.num_layers)
+            .map(|l| softmax(&self.logits[l][..feats.num_types]))
+            .collect()
+    }
+
+    fn update(&mut self, feats: &FeatureMatrix, samples: &[Sample], lr: f64) {
+        let probs = self.probs(feats);
+        let n = samples.len().max(1) as f64;
+        for s in samples {
+            for (l, &a) in s.actions.iter().enumerate() {
+                for t in 0..feats.num_types {
+                    let indicator = if t == a { 1.0 } else { 0.0 };
+                    // d log softmax / d logit = onehot - probs.
+                    self.logits[l][t] += lr * s.advantage * (indicator - probs[l][t]) / n;
+                }
+            }
+        }
+    }
+}
+
+/// Sample one plan from per-layer distributions.
+pub fn sample_actions(probs: &[Vec<f64>], rng: &mut Rng) -> Vec<usize> {
+    probs.iter().map(|p| rng.weighted(p)).collect()
+}
+
+/// Greedy (argmax) decode of a plan.
+pub fn decode_actions(probs: &[Vec<f64>]) -> Vec<usize> {
+    probs.iter().map(|p| crate::util::argmax(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostConfig, CostModel};
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+
+    fn feats() -> FeatureMatrix {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        featurize(&cm)
+    }
+
+    #[test]
+    fn featurize_encodes_onehots_and_scalars() {
+        let f = feats();
+        assert_eq!(f.num_layers, 16);
+        assert_eq!(f.data.len(), L_MAX * FEAT_DIM);
+        // Row 0: index one-hot at 0, embedding kind at L_MAX + 0.
+        assert_eq!(f.row(0)[0], 1.0);
+        assert_eq!(f.row(0)[L_MAX], 1.0);
+        // Scalars are positive and bounded.
+        for l in 0..f.num_layers {
+            for s in 0..3 {
+                let v = f.row(l)[L_MAX + KIND_ONEHOT + s];
+                assert!((0.0..4.0).contains(&v), "feature out of band: {v}");
+            }
+        }
+        // Padding rows are zero.
+        assert!(f.row(L_MAX - 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn tabular_probs_are_distributions() {
+        let f = feats();
+        let mut p = TabularPolicy::new(&mut Rng::new(1));
+        let probs = p.probs(&f);
+        assert_eq!(probs.len(), 16);
+        for row in &probs {
+            assert_eq!(row.len(), 2);
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn update_moves_probability_toward_rewarded_actions() {
+        let f = feats();
+        let mut p = TabularPolicy::new(&mut Rng::new(2));
+        let actions: Vec<usize> = vec![1; f.num_layers];
+        let before = p.probs(&f)[0][1];
+        for _ in 0..50 {
+            p.update(&f, &[Sample { actions: actions.clone(), advantage: 1.0 }], 0.5);
+        }
+        let after = p.probs(&f)[0][1];
+        assert!(after > before, "prob should rise: {before} -> {after}");
+        assert!(after > 0.9);
+    }
+
+    #[test]
+    fn negative_advantage_pushes_away() {
+        let f = feats();
+        let mut p = TabularPolicy::new(&mut Rng::new(3));
+        let actions: Vec<usize> = vec![0; f.num_layers];
+        for _ in 0..50 {
+            p.update(&f, &[Sample { actions: actions.clone(), advantage: -1.0 }], 0.5);
+        }
+        let probs = p.probs(&f);
+        assert!(probs[0][0] < 0.1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng::new(4);
+        let probs = vec![vec![0.99, 0.01]; 4];
+        let mut zero_hits = 0;
+        for _ in 0..100 {
+            let a = sample_actions(&probs, &mut rng);
+            zero_hits += a.iter().filter(|&&x| x == 0).count();
+        }
+        assert!(zero_hits > 380, "{zero_hits}");
+        assert_eq!(decode_actions(&probs), vec![0, 0, 0, 0]);
+    }
+}

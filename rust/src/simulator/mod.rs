@@ -1,0 +1,216 @@
+//! Discrete-event cluster simulator: "real execution" at cluster scale.
+//!
+//! The analytic cost model (§4.1) assumes perfect overlap and no variance;
+//! the paper's Figure 11 shows real executions deviate (their CPU runs
+//! diverged up to 17.4x from simulation because of small-batch overheads).
+//! This simulator replays a provisioned pipeline with the effects the
+//! closed form ignores — per-replica speed jitter (stragglers), a fixed
+//! per-iteration dispatch overhead, and pipeline fill/drain — to produce
+//! "measured" throughput/cost on any virtual cluster, standing in for the
+//! paper's physical testbed (DESIGN.md §Hardware-Adaptation).
+
+use crate::cost::CostModel;
+use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
+use crate::util::rng::Rng;
+
+/// Simulation knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Iterations (pipeline steps) simulated.
+    pub iterations: usize,
+    /// Straggler model: each replica's speed is `1 + jitter*U[0,1)` slower.
+    pub straggler_jitter: f64,
+    /// Fixed per-iteration dispatch/synchronization overhead in seconds
+    /// (the small-batch overhead the paper observed on CPU clusters).
+    pub dispatch_overhead: f64,
+    /// Extra per-stage overhead proportional to replica count (coordination
+    /// fan-out: k workers need k control messages).
+    pub per_replica_overhead: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            iterations: 50,
+            straggler_jitter: 0.15,
+            dispatch_overhead: 2e-3,
+            per_replica_overhead: 2e-5,
+        }
+    }
+}
+
+/// Result of a simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Measured samples/sec over the steady-state window.
+    pub throughput: f64,
+    /// Measured monetary cost for the model's full training run (Eq 6–7
+    /// with the measured throughput).
+    pub cost_usd: f64,
+    /// Mean iteration latency (fill/drain included).
+    pub iter_latency: f64,
+    /// Slowest-stage index (the bottleneck the provisioner balanced for).
+    pub bottleneck_stage: usize,
+}
+
+/// Event-driven replay of a provisioned pipeline.
+///
+/// Model: each stage is a server with `k` replicas; a batch's stage work
+/// splits across replicas (Amdahl, as Eq 1–2) but each replica draws its
+/// own speed jitter per iteration and the stage completes at the slowest
+/// replica (synchronous data parallelism). Stages form a pipeline with
+/// unbounded queues; iteration `n` enters stage `i` when both stage `i`
+/// finished iteration `n-1` and stage `i-1` finished iteration `n`.
+pub fn simulate(
+    cm: &CostModel,
+    plan: &SchedulingPlan,
+    prov: &ProvisioningPlan,
+    cfg: &SimConfig,
+    seed: u64,
+) -> SimResult {
+    let stages: Vec<StageSpan> = plan.stages();
+    assert_eq!(stages.len(), prov.replicas.len());
+    let mut rng = Rng::new(seed);
+    let n_stages = stages.len();
+
+    // Per-stage base execution time at the provisioned k (Eq 1–3).
+    let base_et: Vec<f64> = stages
+        .iter()
+        .zip(&prov.replicas)
+        .map(|(s, &k)| {
+            let prof = cm.stage_profile(s);
+            cm.stage_et(&prof, k as f64)
+        })
+        .collect();
+
+    // stage_free[i] = when stage i's servers next become free;
+    // iter_done[i] = completion time of the current iteration at stage i.
+    let mut stage_free = vec![0.0f64; n_stages];
+    let mut completion = vec![0.0f64; n_stages];
+    let mut total_busy = vec![0.0f64; n_stages];
+    let mut first_exit = 0.0f64;
+    let mut last_exit = 0.0f64;
+
+    for iter in 0..cfg.iterations {
+        let mut upstream_done = 0.0f64;
+        for (i, span) in stages.iter().enumerate() {
+            let k = prov.replicas[i];
+            // Synchronous replicas: stage latency = slowest replica draw.
+            let mut worst = 0.0f64;
+            for _ in 0..k.min(64) {
+                // Cap draws; beyond 64 replicas the max concentrates.
+                let jitter = 1.0 + cfg.straggler_jitter * rng.f64();
+                worst = worst.max(jitter);
+            }
+            let service = base_et[i] * worst
+                + cfg.dispatch_overhead
+                + cfg.per_replica_overhead * k as f64;
+            let start = upstream_done.max(stage_free[i]);
+            let done = start + service;
+            stage_free[i] = done;
+            completion[i] = done;
+            total_busy[i] += service;
+            upstream_done = done;
+            let _ = span;
+        }
+        let exit = completion[n_stages - 1];
+        if iter == 0 {
+            first_exit = exit;
+        }
+        last_exit = exit;
+    }
+
+    // Steady-state throughput: ignore the fill (first iteration).
+    let iters = cfg.iterations.max(2) as f64;
+    let steady = (last_exit - first_exit) / (iters - 1.0).max(1.0);
+    let throughput = cm.cfg.batch_size as f64 / steady.max(1e-12);
+    let train_time = cm.train_time_secs(throughput);
+    let cpu_id = cm.pool.cpu_type().map(|c| c.id);
+    let units = prov.units_per_type(&stages, cm.pool.num_types(), cpu_id);
+    let cost_usd = cm.monetary_cost(train_time, &units);
+    let bottleneck_stage = total_busy
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    SimResult { throughput, cost_usd, iter_latency: last_exit / iters, bottleneck_stage }
+}
+
+/// Convenience: schedule-plan in, measured eval out (provisioning via the
+/// §5.1 provisioner, measurement via the simulator).
+pub fn simulate_plan(cm: &CostModel, plan: &SchedulingPlan, cfg: &SimConfig, seed: u64) -> Option<SimResult> {
+    let (_stages, prov) = crate::provision::provision(cm, plan)?;
+    Some(simulate(cm, plan, &prov, cfg, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::paper_testbed;
+
+    fn fixture() -> (crate::model::ModelSpec, crate::resources::ResourcePool) {
+        (zoo::ctrdnn(), paper_testbed())
+    }
+
+    fn split_plan() -> SchedulingPlan {
+        SchedulingPlan::new((0..16).map(|l| if l < 2 { 0 } else { 1 }).collect())
+    }
+
+    #[test]
+    fn simulated_throughput_close_to_analytic_without_noise() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let (stages, prov) = crate::provision::provision(&cm, &plan).unwrap();
+        let analytic = cm.throughput(&stages, &prov);
+        let cfg = SimConfig {
+            straggler_jitter: 0.0,
+            dispatch_overhead: 0.0,
+            per_replica_overhead: 0.0,
+            iterations: 50,
+        };
+        let sim = simulate(&cm, &plan, &prov, &cfg, 1);
+        let ratio = sim.throughput / analytic;
+        assert!((0.95..=1.05).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn stragglers_and_overheads_reduce_throughput() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let clean = simulate_plan(
+            &cm,
+            &plan,
+            &SimConfig { straggler_jitter: 0.0, dispatch_overhead: 0.0, per_replica_overhead: 0.0, iterations: 50 },
+            2,
+        )
+        .unwrap();
+        let noisy = simulate_plan(&cm, &plan, &SimConfig::default(), 2).unwrap();
+        assert!(noisy.throughput < clean.throughput);
+        assert!(noisy.cost_usd > clean.cost_usd);
+    }
+
+    #[test]
+    fn simulation_is_deterministic_per_seed() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let a = simulate_plan(&cm, &plan, &SimConfig::default(), 9).unwrap();
+        let b = simulate_plan(&cm, &plan, &SimConfig::default(), 9).unwrap();
+        assert_eq!(a.throughput, b.throughput);
+    }
+
+    #[test]
+    fn bottleneck_is_a_valid_stage() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let sim = simulate_plan(&cm, &plan, &SimConfig::default(), 3).unwrap();
+        assert!(sim.bottleneck_stage < plan.stages().len());
+        assert!(sim.iter_latency > 0.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Ring-allreduce for dense gradients (§2.1, §3): "the same types of
+//! GPU/XPU workers take advantage of ring-allreduce architecture, which
+//! corresponds to smaller data transfer and balanced workload."
+//!
+//! A real ring over in-process links: `n` participants connected by
+//! channels run reduce-scatter then all-gather, each link carrying
+//! `size/n` elements per step — the same 2*(n-1)/n * size traffic pattern
+//! as NCCL's ring. Single-host substitution for the paper's NIC ring; the
+//! chunked schedule (and its bugs, were there any) is identical.
+
+use std::sync::mpsc;
+use std::thread;
+
+/// In-place ring-allreduce (sum) across `buffers`; every buffer ends up
+/// holding the element-wise sum. Buffers must share a length.
+pub fn ring_allreduce(buffers: &mut [Vec<f32>]) {
+    let n = buffers.len();
+    if n <= 1 {
+        return;
+    }
+    let len = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == len), "length mismatch");
+    if len == 0 {
+        return;
+    }
+
+    // Chunk boundaries: n chunks, last absorbs the remainder.
+    let chunk_bounds: Vec<(usize, usize)> = (0..n)
+        .map(|c| {
+            let per = len / n;
+            let start = c * per;
+            let end = if c == n - 1 { len } else { start + per };
+            (start, end)
+        })
+        .collect();
+
+    // Links: rank r sends to (r+1) % n.
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<Vec<f32>>();
+        senders.push(Some(tx));
+        receivers.push(Some(rx));
+    }
+
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (r, buf) in buffers.iter_mut().enumerate() {
+            let tx = senders[(r + 1) % n].take().unwrap();
+            let rx = receivers[r].take().unwrap();
+            let bounds = chunk_bounds.clone();
+            handles.push(scope.spawn(move || {
+                // Reduce-scatter: n-1 steps. At step s, rank r sends chunk
+                // (r - s) mod n and receives + reduces chunk (r - s - 1).
+                for s in 0..n - 1 {
+                    let send_c = (r + n - s) % n;
+                    let (a, b) = bounds[send_c];
+                    tx.send(buf[a..b].to_vec()).unwrap();
+                    let recv_c = (r + n - s - 1) % n;
+                    let incoming = rx.recv().unwrap();
+                    let (a, b) = bounds[recv_c];
+                    for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+                        *dst += src;
+                    }
+                }
+                // All-gather: n-1 steps. At step s, rank r sends chunk
+                // (r + 1 - s) mod n (fully reduced) and installs the one it
+                // receives.
+                for s in 0..n - 1 {
+                    let send_c = (r + 1 + n - s) % n;
+                    let (a, b) = bounds[send_c];
+                    tx.send(buf[a..b].to_vec()).unwrap();
+                    let recv_c = (r + n - s) % n;
+                    let incoming = rx.recv().unwrap();
+                    let (a, b) = bounds[recv_c];
+                    buf[a..b].copy_from_slice(&incoming);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Allreduce then divide by the participant count (gradient averaging).
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let n = buffers.len() as f32;
+    ring_allreduce(buffers);
+    for buf in buffers.iter_mut() {
+        for v in buf.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_ranks_sum() {
+        let mut bufs = vec![vec![1.0, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
+        ring_allreduce(&mut bufs);
+        assert_eq!(bufs[0], vec![11.0, 22.0, 33.0]);
+        assert_eq!(bufs[1], vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut bufs = vec![vec![5.0, 6.0]];
+        ring_allreduce(&mut bufs);
+        assert_eq!(bufs[0], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn length_not_divisible_by_ranks() {
+        let mut bufs = vec![vec![1.0; 7], vec![2.0; 7], vec![3.0; 7]];
+        ring_allreduce(&mut bufs);
+        for b in &bufs {
+            assert!(b.iter().all(|&v| (v - 6.0).abs() < 1e-6), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn mean_divides() {
+        let mut bufs = vec![vec![2.0, 4.0], vec![4.0, 8.0]];
+        ring_allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn property_matches_sequential_sum() {
+        propcheck::check_result(
+            0xA11,
+            32,
+            |rng: &mut Rng| {
+                let n = rng.range(2, 7);
+                let len = rng.range(1, 50);
+                let bufs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..len).map(|_| rng.f32() * 4.0 - 2.0).collect())
+                    .collect();
+                bufs
+            },
+            |bufs| {
+                let len = bufs[0].len();
+                let mut expect = vec![0f32; len];
+                for b in bufs {
+                    for (e, v) in expect.iter_mut().zip(b) {
+                        *e += v;
+                    }
+                }
+                let mut got = bufs.clone();
+                ring_allreduce(&mut got);
+                for b in &got {
+                    for (x, e) in b.iter().zip(&expect) {
+                        if (x - e).abs() > 1e-4 {
+                            return Err(format!("{x} != {e}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! The distributed training module (§3): pipeline + data parallelism over
+//! heterogeneous workers, a parameter server for sparse state, and
+//! ring-allreduce for dense state — with computation/communication overlap.
+//!
+//! Process topology (one process, thread-per-worker — DESIGN.md explains
+//! the single-host substitution): the coordinator spawns one worker thread
+//! per stage replica, connected by channels that carry microbatch
+//! activations forward and gradients backward (GPipe-style schedule). CPU
+//! stages talk to the in-process [`ps::ParamServer`]; same-type dense
+//! replicas synchronize through [`allreduce::ring_allreduce`].
+
+pub mod allreduce;
+pub mod pipeline;
+pub mod ps;
+pub mod stage;
+pub mod sync_baseline;
+pub mod tiered_ps;
+
+pub use pipeline::{PipelineConfig, PipelineTrainer, TrainStats};
+pub use ps::ParamServer;
+pub use tiered_ps::TieredParamServer;
+pub use stage::{EmbeddingStage, HloStage, StageOp, Tensor};
+
+#[cfg(test)]
+mod tests {
+    // Cross-module integration tests live in rust/tests/.
+}

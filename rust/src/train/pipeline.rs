@@ -1,0 +1,338 @@
+//! The pipeline trainer: GPipe-style microbatch schedule over stage worker
+//! threads with channel links (§2.1, §3).
+//!
+//! Each training step splits the batch into `M` microbatches. Stage `i`'s
+//! worker runs all its forwards as activations arrive (stage `i+1` starts
+//! microbatch 0 while stage `i` is already on microbatch 1 — computation
+//! and communication overlap across stages exactly as §3 describes), then
+//! runs backwards in reverse order as gradients flow back. After the step,
+//! dense stages average gradients across data-parallel replicas with
+//! ring-allreduce and apply SGD; the sparse stage has already pushed to
+//! the parameter server.
+
+use super::allreduce::ring_allreduce_mean;
+use super::stage::{MicroBatch, StageOp, Tensor, MB_ROWS, SLOTS};
+use crate::data::dataset::Batch;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Microbatches per step (pipeline depth utilization).
+    pub microbatches: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { microbatches: 4 }
+    }
+}
+
+/// Step statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub samples: u64,
+    pub last_loss: f32,
+    pub wall_secs: f64,
+}
+
+impl TrainStats {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / self.wall_secs
+        }
+    }
+}
+
+/// Messages on forward links: (microbatch index, activation).
+type FwdMsg = (usize, Tensor);
+/// Messages on backward links: (microbatch index, gradient).
+type BwdMsg = (usize, Tensor);
+
+/// A pipeline of stages; replicas of the whole pipeline can be run by
+/// cloning stages externally — within one pipeline each stage is single.
+pub struct PipelineTrainer {
+    stages: Vec<Box<dyn StageOp>>,
+    pub cfg: PipelineConfig,
+    pub stats: TrainStats,
+}
+
+impl PipelineTrainer {
+    pub fn new(stages: Vec<Box<dyn StageOp>>, cfg: PipelineConfig) -> Self {
+        assert!(!stages.is_empty());
+        PipelineTrainer { stages, cfg, stats: TrainStats::default() }
+    }
+
+    pub fn stages(&self) -> &[Box<dyn StageOp>] {
+        &self.stages
+    }
+
+    pub fn stages_mut(&mut self) -> &mut Vec<Box<dyn StageOp>> {
+        &mut self.stages
+    }
+
+    /// Split a batch into microbatches of exactly `MB_ROWS` rows (the
+    /// geometry all dense artifacts are lowered at). The batch size must be
+    /// a multiple of `MB_ROWS`.
+    pub fn microbatches(batch: &Batch, slots: usize) -> Vec<MicroBatch> {
+        assert_eq!(batch.size % MB_ROWS, 0, "batch must be a multiple of {MB_ROWS}");
+        assert_eq!(slots, SLOTS);
+        (0..batch.size / MB_ROWS)
+            .map(|j| MicroBatch {
+                index: j,
+                sparse_ids: batch.sparse_ids[j * MB_ROWS * slots..(j + 1) * MB_ROWS * slots].to_vec(),
+                labels: batch.labels[j * MB_ROWS..(j + 1) * MB_ROWS].to_vec(),
+            })
+            .collect()
+    }
+
+    /// One pipelined training step over `mbs` microbatches; returns the
+    /// mean loss. Worker threads are scoped per step — stage compute
+    /// dominates (HLO executions), so spawn cost is noise.
+    pub fn train_step(&mut self, mbs: &[MicroBatch]) -> Result<f32> {
+        let t0 = Instant::now();
+        let n_stages = self.stages.len();
+        let m = mbs.len();
+        anyhow::ensure!(m > 0, "no microbatches");
+
+        // Forward links 0->1->..., backward links ...->1->0.
+        let mut fwd_tx = Vec::new();
+        let mut fwd_rx = Vec::new();
+        let mut bwd_tx = Vec::new();
+        let mut bwd_rx = Vec::new();
+        for _ in 0..n_stages.saturating_sub(1) {
+            let (tx, rx) = mpsc::channel::<FwdMsg>();
+            fwd_tx.push(tx);
+            fwd_rx.push(rx);
+            let (tx, rx) = mpsc::channel::<BwdMsg>();
+            bwd_tx.push(tx);
+            bwd_rx.push(rx);
+        }
+
+        let mut fwd_rx_iter = fwd_rx.into_iter();
+        let mut bwd_rx_iter = bwd_rx.into_iter();
+        let mut fwd_rx_slots: Vec<Option<mpsc::Receiver<FwdMsg>>> = Vec::new();
+        let mut bwd_rx_slots: Vec<Option<mpsc::Receiver<BwdMsg>>> = Vec::new();
+        for i in 0..n_stages {
+            fwd_rx_slots.push(if i > 0 { fwd_rx_iter.next() } else { None });
+            bwd_rx_slots.push(if i < n_stages - 1 { bwd_rx_iter.next() } else { None });
+        }
+
+        let mut losses: Vec<f32> = Vec::new();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for (i, stage) in self.stages.iter_mut().enumerate() {
+                let fwd_in = fwd_rx_slots[i].take();
+                let fwd_out = if i + 1 < n_stages { Some(fwd_tx[i].clone()) } else { None };
+                let bwd_in = bwd_rx_slots[i].take();
+                let bwd_out = if i > 0 { Some(bwd_tx[i - 1].clone()) } else { None };
+                let is_first = i == 0;
+                let is_last = i + 1 == n_stages;
+                handles.push(scope.spawn(move || -> Result<Vec<f32>> {
+                    // Saved inputs per microbatch for the backward pass.
+                    let mut saved: Vec<Option<Tensor>> = (0..m).map(|_| None).collect();
+                    // Forward phase.
+                    for j in 0..m {
+                        let input: Option<Tensor> = if is_first {
+                            None
+                        } else {
+                            let (idx, act) = fwd_in.as_ref().unwrap().recv()?;
+                            debug_assert_eq!(idx, j, "in-order pipeline");
+                            Some(act)
+                        };
+                        let out = stage.forward(&mbs[j], input.as_ref())?;
+                        saved[j] = input;
+                        if let Some(tx) = &fwd_out {
+                            tx.send((j, out)).map_err(|_| anyhow::anyhow!("fwd link closed"))?;
+                        }
+                    }
+                    // Backward phase (reverse microbatch order, 1F1B tail).
+                    let mut stage_losses = Vec::new();
+                    for j in (0..m).rev() {
+                        let grad: Option<Tensor> = if is_last {
+                            None
+                        } else {
+                            let (idx, g) = bwd_in.as_ref().unwrap().recv()?;
+                            debug_assert_eq!(idx, j);
+                            Some(g)
+                        };
+                        let out = stage.backward(&mbs[j], saved[j].as_ref(), grad.as_ref())?;
+                        if let Some(l) = out.loss {
+                            stage_losses.push(l);
+                        }
+                        if let Some(tx) = &bwd_out {
+                            let dinput = out
+                                .dinput
+                                .ok_or_else(|| anyhow::anyhow!("interior stage must emit dinput"))?;
+                            tx.send((j, dinput)).map_err(|_| anyhow::anyhow!("bwd link closed"))?;
+                        }
+                    }
+                    Ok(stage_losses)
+                }));
+            }
+            drop(fwd_tx);
+            drop(bwd_tx);
+            for h in handles {
+                let stage_losses = h.join().map_err(|_| anyhow::anyhow!("stage thread panicked"))??;
+                losses.extend(stage_losses);
+            }
+            Ok(())
+        })?;
+
+        // Optimizer step on every stage.
+        for stage in self.stages.iter_mut() {
+            stage.apply_update()?;
+        }
+
+        let mean_loss = if losses.is_empty() {
+            0.0
+        } else {
+            losses.iter().sum::<f32>() / losses.len() as f32
+        };
+        self.stats.steps += 1;
+        self.stats.samples += (m * MB_ROWS) as u64;
+        self.stats.last_loss = mean_loss;
+        self.stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(mean_loss)
+    }
+
+    /// Synchronize dense gradients across data-parallel pipeline replicas
+    /// (call between `backward` and `apply_update` when running several
+    /// trainers over the same model). Exposed for the replicated driver.
+    pub fn allreduce_dense(trainers: &mut [&mut PipelineTrainer]) {
+        if trainers.len() < 2 {
+            return;
+        }
+        let n_stages = trainers[0].stages.len();
+        for s in 0..n_stages {
+            // Collect each replica's grad buffer for stage s.
+            let mut bufs: Vec<Vec<f32>> = Vec::new();
+            let mut owners: Vec<usize> = Vec::new();
+            for (r, t) in trainers.iter_mut().enumerate() {
+                if let Some(g) = t.stages[s].dense_grads_mut() {
+                    bufs.push(std::mem::take(g));
+                    owners.push(r);
+                }
+            }
+            if bufs.len() >= 2 {
+                ring_allreduce_mean(&mut bufs);
+            }
+            for (buf, r) in bufs.into_iter().zip(owners) {
+                if let Some(g) = trainers[r].stages[s].dense_grads_mut() {
+                    *g = buf;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::stage::BackwardOut;
+
+    /// A stage multiplying by a constant; backward scales grads likewise.
+    struct MulStage {
+        factor: f32,
+        dim: usize,
+        applied: usize,
+        grads: Vec<f32>,
+    }
+
+    impl StageOp for MulStage {
+        fn name(&self) -> &str {
+            "mul"
+        }
+        fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> Result<Tensor> {
+            let rows = mb.labels.len();
+            let x = match input {
+                Some(t) => t.clone(),
+                None => Tensor::from_vec(vec![1.0; rows * self.dim], rows, self.dim),
+            };
+            Ok(Tensor::from_vec(x.data.iter().map(|v| v * self.factor).collect(), x.rows, x.cols))
+        }
+        fn backward(
+            &mut self,
+            mb: &MicroBatch,
+            input: Option<&Tensor>,
+            grad: Option<&Tensor>,
+        ) -> Result<BackwardOut> {
+            let rows = mb.labels.len();
+            let g = match grad {
+                Some(t) => t.clone(),
+                None => Tensor::from_vec(vec![1.0; rows * self.dim], rows, self.dim),
+            };
+            let _ = input;
+            self.grads.iter_mut().for_each(|x| *x += 1.0);
+            Ok(BackwardOut {
+                dinput: Some(Tensor::from_vec(
+                    g.data.iter().map(|v| v * self.factor).collect(),
+                    g.rows,
+                    g.cols,
+                )),
+                loss: if grad.is_none() { Some(self.factor) } else { None },
+            })
+        }
+        fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+            Some(&mut self.grads)
+        }
+        fn apply_update(&mut self) -> Result<()> {
+            self.applied += 1;
+            Ok(())
+        }
+        fn set_speed_factor(&mut self, _f: f64) {}
+    }
+
+    fn mb(n: usize) -> Vec<MicroBatch> {
+        (0..n)
+            .map(|j| MicroBatch { index: j, sparse_ids: vec![], labels: vec![0.0; 4] })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_runs_all_microbatches_through_all_stages() {
+        let stages: Vec<Box<dyn StageOp>> = vec![
+            Box::new(MulStage { factor: 2.0, dim: 3, applied: 0, grads: vec![0.0; 2] }),
+            Box::new(MulStage { factor: 3.0, dim: 3, applied: 0, grads: vec![0.0; 2] }),
+        ];
+        let mut t = PipelineTrainer::new(stages, PipelineConfig { microbatches: 4 });
+        let loss = t.train_step(&mb(4)).unwrap();
+        assert_eq!(loss, 3.0); // loss-originating stage reports its factor
+        assert_eq!(t.stats.steps, 1);
+        // Each stage saw 4 backwards and applied once.
+        for s in t.stages_mut() {
+            assert_eq!(s.dense_grads_mut().unwrap()[0], 4.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_dense_averages_across_replicas() {
+        let mk = |g: f32| {
+            PipelineTrainer::new(
+                vec![Box::new(MulStage { factor: 1.0, dim: 2, applied: 0, grads: vec![g; 3] })
+                    as Box<dyn StageOp>],
+                PipelineConfig::default(),
+            )
+        };
+        let mut a = mk(1.0);
+        let mut b = mk(3.0);
+        PipelineTrainer::allreduce_dense(&mut [&mut a, &mut b]);
+        assert_eq!(a.stages_mut()[0].dense_grads_mut().unwrap()[0], 2.0);
+        assert_eq!(b.stages_mut()[0].dense_grads_mut().unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn single_stage_pipeline_works() {
+        let mut t = PipelineTrainer::new(
+            vec![Box::new(MulStage { factor: 5.0, dim: 2, applied: 0, grads: vec![0.0] })],
+            PipelineConfig::default(),
+        );
+        let loss = t.train_step(&mb(2)).unwrap();
+        assert_eq!(loss, 5.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Sharded parameter server for sparse (embedding) state (§2.1, §3).
+//!
+//! The paper's CPU workers use the PS architecture for sparse tables:
+//! workers `pull` the rows their batch touches and `push` gradients back;
+//! the server applies the optimizer. Rows are created lazily (a production
+//! table has billions of slots, almost all never touched), sharded by id
+//! hash so pushes from different workers contend on different locks.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sharded, thread-safe embedding parameter server.
+pub struct ParamServer {
+    shards: Vec<Mutex<HashMap<u32, Vec<f32>>>>,
+    pub dim: usize,
+    /// SGD learning rate applied on push.
+    pub lr: f32,
+    /// Initialization scale for lazily-created rows.
+    init_scale: f32,
+    seed: u64,
+    pulls: AtomicU64,
+    pushes: AtomicU64,
+}
+
+impl ParamServer {
+    pub fn new(dim: usize, shards: usize, lr: f32, seed: u64) -> Self {
+        ParamServer {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            dim,
+            lr,
+            init_scale: 0.01,
+            seed,
+            pulls: AtomicU64::new(0),
+            pushes: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u32) -> usize {
+        (id as u64).wrapping_mul(0x9E3779B97F4A7C15) as usize % self.shards.len()
+    }
+
+    /// Deterministic per-row init so runs are reproducible regardless of
+    /// which worker first touches a row.
+    fn init_row(&self, id: u32) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(self.seed ^ id as u64);
+        (0..self.dim).map(|_| (rng.f32() * 2.0 - 1.0) * self.init_scale).collect()
+    }
+
+    /// Pull rows for `ids` (deduplicated internally); output is
+    /// `ids.len() * dim`, aligned with the input order.
+    pub fn pull(&self, ids: &[u32]) -> Vec<f32> {
+        self.pulls.fetch_add(1, Ordering::Relaxed);
+        let mut out = vec![0f32; ids.len() * self.dim];
+        for (i, &id) in ids.iter().enumerate() {
+            let shard = &self.shards[self.shard_of(id)];
+            let mut guard = shard.lock().unwrap();
+            let row = guard.entry(id).or_insert_with(|| self.init_row(id));
+            out[i * self.dim..(i + 1) * self.dim].copy_from_slice(row);
+        }
+        out
+    }
+
+    /// Push gradients for `ids` (`grads.len() == ids.len() * dim`);
+    /// duplicate ids accumulate before the SGD step, matching what a
+    /// dedup-at-server production PS does.
+    pub fn push(&self, ids: &[u32], grads: &[f32]) {
+        assert_eq!(grads.len(), ids.len() * self.dim);
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        // Aggregate duplicates first (cheaper + deterministic).
+        let mut agg: HashMap<u32, Vec<f32>> = HashMap::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            let g = &grads[i * self.dim..(i + 1) * self.dim];
+            match agg.get_mut(&id) {
+                Some(acc) => {
+                    for (a, b) in acc.iter_mut().zip(g) {
+                        *a += b;
+                    }
+                }
+                None => {
+                    agg.insert(id, g.to_vec());
+                }
+            }
+        }
+        for (id, g) in agg {
+            let shard = &self.shards[self.shard_of(id)];
+            let mut guard = shard.lock().unwrap();
+            let row = guard.entry(id).or_insert_with(|| self.init_row(id));
+            for (w, gv) in row.iter_mut().zip(&g) {
+                *w -= self.lr * gv;
+            }
+        }
+    }
+
+    /// Number of materialized rows (lazily created so far).
+    pub fn rows(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn pull_count(&self) -> u64 {
+        self.pulls.load(Ordering::Relaxed)
+    }
+
+    pub fn push_count(&self) -> u64 {
+        self.pushes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pull_initializes_lazily_and_deterministically() {
+        let ps = ParamServer::new(4, 8, 0.1, 42);
+        let a = ps.pull(&[7, 9]);
+        assert_eq!(a.len(), 8);
+        assert_eq!(ps.rows(), 2);
+        // Same row again: identical values.
+        let b = ps.pull(&[7]);
+        assert_eq!(&a[0..4], &b[..]);
+        // A different server with the same seed initializes identically.
+        let ps2 = ParamServer::new(4, 3, 0.1, 42);
+        assert_eq!(ps2.pull(&[7]), b);
+    }
+
+    #[test]
+    fn push_applies_sgd() {
+        let ps = ParamServer::new(2, 4, 0.5, 1);
+        let before = ps.pull(&[3]);
+        ps.push(&[3], &[1.0, -2.0]);
+        let after = ps.pull(&[3]);
+        assert!((after[0] - (before[0] - 0.5)).abs() < 1e-6);
+        assert!((after[1] - (before[1] + 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_ids_accumulate() {
+        let ps = ParamServer::new(1, 4, 1.0, 2);
+        let before = ps.pull(&[5])[0];
+        ps.push(&[5, 5, 5], &[1.0, 1.0, 1.0]);
+        let after = ps.pull(&[5])[0];
+        assert!((after - (before - 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn concurrent_pushes_do_not_lose_updates() {
+        use std::sync::Arc;
+        let ps = Arc::new(ParamServer::new(1, 16, 1.0, 3));
+        let before = ps.pull(&[0])[0];
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let ps = ps.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        ps.push(&[0], &[0.01]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let after = ps.pull(&[0])[0];
+        assert!((before - after - 8.0).abs() < 1e-3, "lost updates: {}", before - after);
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let ps = ParamServer::new(2, 2, 0.1, 4);
+        ps.pull(&[1]);
+        ps.push(&[1], &[0.0, 0.0]);
+        assert_eq!(ps.pull_count(), 1);
+        assert_eq!(ps.push_count(), 1);
+    }
+}

@@ -1,0 +1,390 @@
+//! Pipeline stages: the units the trainer schedules.
+//!
+//! * [`EmbeddingStage`] — the sparse front (rust-native lookup against the
+//!   [`super::ps::ParamServer`]; the *compiled* embedding path lives in the
+//!   Pallas `embedding_bag` kernel inside the fused-model artifact).
+//! * [`HloStage`] — a dense stage whose forward/backward are AOT-compiled
+//!   HLO (JAX layer-2 calling the Pallas `fused_mlp` kernel at layer-1),
+//!   executed through PJRT. Loss stages fold the loss gradient into their
+//!   backward artifact.
+//!
+//! Geometry constants must match `python/compile/model.py`.
+
+use crate::runtime::{lit, Executable, Runtime};
+use crate::train::ps::ParamServer;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Microbatch rows every CTR artifact is lowered at.
+pub const MB_ROWS: usize = 256;
+/// Sparse slots per example.
+pub const SLOTS: usize = 26;
+/// Embedding dimension per slot.
+pub const EMB_DIM: usize = 64;
+/// Dense input width (concatenated slot embeddings).
+pub const X_DIM: usize = SLOTS * EMB_DIM; // 1664
+/// Stage-1 output width.
+pub const H_DIM: usize = 256;
+/// Stage-1 parameter count: fc(1664->512) + fc(512->256).
+pub const STAGE1_PARAMS: usize = X_DIM * 512 + 512 + 512 * H_DIM + H_DIM;
+/// Stage-2 parameter count: fc(256->128) + fc(128->1).
+pub const STAGE2_PARAMS: usize = H_DIM * 128 + 128 + 128 + 1;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Tensor { rows, cols, data }
+    }
+}
+
+/// One microbatch travelling through the pipeline.
+#[derive(Clone, Debug)]
+pub struct MicroBatch {
+    pub index: usize,
+    /// `MB_ROWS * SLOTS` sparse ids.
+    pub sparse_ids: Vec<u32>,
+    /// `MB_ROWS` labels.
+    pub labels: Vec<f32>,
+}
+
+/// What a stage hands back from `backward`.
+pub struct BackwardOut {
+    /// Gradient w.r.t. the stage input (None for the first stage).
+    pub dinput: Option<Tensor>,
+    /// Mean loss (Some only for the loss stage).
+    pub loss: Option<f32>,
+}
+
+/// A pipeline stage.
+pub trait StageOp: Send {
+    fn name(&self) -> &str;
+
+    /// Forward for one microbatch; `input` is None for the first stage.
+    fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> Result<Tensor>;
+
+    /// Backward for one microbatch. `input` is the tensor `forward` saw;
+    /// `grad` is the output gradient (None for the loss stage, which
+    /// originates it). Accumulates parameter gradients internally.
+    fn backward(
+        &mut self,
+        mb: &MicroBatch,
+        input: Option<&Tensor>,
+        grad: Option<&Tensor>,
+    ) -> Result<BackwardOut>;
+
+    /// Dense accumulated gradient buffer, if this stage has one (used by
+    /// the trainer to ring-allreduce across data-parallel replicas).
+    fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>>;
+
+    /// Apply the optimizer step and clear accumulators.
+    fn apply_update(&mut self) -> Result<()>;
+
+    /// Emulated heterogeneity: a slowdown factor multiplied onto the
+    /// stage's compute wall-time (1.0 = native speed). See DESIGN.md.
+    fn set_speed_factor(&mut self, f: f64);
+
+    /// Emulated heterogeneity, absolute form: a fixed per-microbatch
+    /// device time (ms) added to each forward/backward. Unlike the
+    /// multiplicative factor this is insensitive to host contention, so
+    /// throughput comparisons between runtimes are stable (Figure 12).
+    fn set_extra_delay_ms(&mut self, _ms: f64) {}
+}
+
+/// Sparse embedding front: pull rows from the PS, concatenate per-slot
+/// embeddings; backward scatters `dx` back as sparse pushes.
+pub struct EmbeddingStage {
+    ps: Arc<ParamServer>,
+    speed_factor: f64,
+    extra_delay_ms: f64,
+}
+
+impl EmbeddingStage {
+    pub fn new(ps: Arc<ParamServer>) -> Self {
+        assert_eq!(ps.dim, EMB_DIM);
+        EmbeddingStage { ps, speed_factor: 1.0, extra_delay_ms: 0.0 }
+    }
+}
+
+fn emulate_slowdown(started: std::time::Instant, factor: f64, extra_ms: f64) {
+    if factor > 1.0 {
+        let extra = started.elapsed().mul_f64(factor - 1.0);
+        std::thread::sleep(extra);
+    }
+    if extra_ms > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(extra_ms / 1e3));
+    }
+}
+
+impl StageOp for EmbeddingStage {
+    fn name(&self) -> &str {
+        "embedding"
+    }
+
+    fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        anyhow::ensure!(input.is_none(), "embedding stage is first");
+        let rows = mb.labels.len();
+        anyhow::ensure!(mb.sparse_ids.len() == rows * SLOTS, "sparse id shape");
+        let pulled = self.ps.pull(&mb.sparse_ids); // rows*SLOTS*EMB_DIM
+        // Concatenate per-slot embeddings into [rows, X_DIM].
+        let out = Tensor::from_vec(pulled, rows, X_DIM);
+        emulate_slowdown(t0, self.speed_factor, self.extra_delay_ms);
+        Ok(out)
+    }
+
+    fn backward(
+        &mut self,
+        mb: &MicroBatch,
+        _input: Option<&Tensor>,
+        grad: Option<&Tensor>,
+    ) -> Result<BackwardOut> {
+        let t0 = std::time::Instant::now();
+        let grad = grad.ok_or_else(|| anyhow::anyhow!("embedding backward needs grad"))?;
+        anyhow::ensure!(grad.cols == X_DIM, "grad width");
+        // dx[row, slot*EMB_DIM..] is exactly the gradient of that slot's row.
+        self.ps.push(&mb.sparse_ids, &grad.data);
+        emulate_slowdown(t0, self.speed_factor, self.extra_delay_ms);
+        Ok(BackwardOut { dinput: None, loss: None })
+    }
+
+    fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+        None // sparse state syncs through the PS, not allreduce
+    }
+
+    fn apply_update(&mut self) -> Result<()> {
+        Ok(()) // PS applies updates on push
+    }
+
+    fn set_speed_factor(&mut self, f: f64) {
+        self.speed_factor = f;
+    }
+
+    fn set_extra_delay_ms(&mut self, ms: f64) {
+        self.extra_delay_ms = ms;
+    }
+}
+
+/// A dense stage backed by HLO artifacts.
+///
+/// Non-loss stage artifacts:
+///   fwd: `(params, x) -> (y,)`
+///   bwd: `(params, x, g) -> (dparams, dx)`
+/// Loss stage artifacts:
+///   fwd: `(params, x, labels) -> (loss, probs)`
+///   bwd: `(params, x, labels) -> (dparams, dx, loss)`
+pub struct HloStage {
+    label: String,
+    fwd: Arc<Executable>,
+    bwd: Arc<Executable>,
+    pub params: Vec<f32>,
+    grad_acc: Vec<f32>,
+    acc_steps: usize,
+    pub lr: f32,
+    in_dim: usize,
+    out_dim: usize,
+    is_loss: bool,
+    speed_factor: f64,
+    extra_delay_ms: f64,
+}
+
+impl HloStage {
+    /// Load a dense stage from named artifacts; parameters are
+    /// deterministically initialized (He-style scale on a seeded RNG).
+    pub fn load(
+        label: &str,
+        fwd_name: &str,
+        bwd_name: &str,
+        n_params: usize,
+        in_dim: usize,
+        out_dim: usize,
+        lr: f32,
+        is_loss: bool,
+        seed: u64,
+    ) -> Result<HloStage> {
+        let rt = Runtime::global()?;
+        let fwd = rt.load_named(fwd_name)?;
+        let bwd = rt.load_named(bwd_name)?;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let scale = (2.0 / in_dim as f32).sqrt() * 0.5;
+        let params = (0..n_params).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+        Ok(HloStage {
+            label: label.to_string(),
+            fwd,
+            bwd,
+            params,
+            grad_acc: vec![0.0; n_params],
+            acc_steps: 0,
+            lr,
+            in_dim,
+            out_dim,
+            is_loss,
+            speed_factor: 1.0,
+            extra_delay_ms: 0.0,
+        })
+    }
+
+    /// CTR tower stage 1 (fc 1664→512→relu→512→256→relu).
+    pub fn ctr_stage1(lr: f32, seed: u64) -> Result<HloStage> {
+        Self::load("ctr_stage1", "ctr_stage1_fwd", "ctr_stage1_bwd", STAGE1_PARAMS, X_DIM, H_DIM, lr, false, seed)
+    }
+
+    /// CTR head stage 2 (fc 256→128→relu→128→1 + sigmoid BCE loss).
+    pub fn ctr_stage2(lr: f32, seed: u64) -> Result<HloStage> {
+        Self::load("ctr_stage2", "ctr_stage2_fwd", "ctr_stage2_bwd", STAGE2_PARAMS, H_DIM, 1, lr, true, seed)
+    }
+
+    /// Evaluation-only forward for the loss stage: returns (loss, probs).
+    pub fn eval_loss(&self, x: &Tensor, labels: &[f32]) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(self.is_loss);
+        let out = self.fwd.run(&[
+            lit::vec1(&self.params),
+            lit::mat(&x.data, x.rows, x.cols)?,
+            lit::vec1(labels),
+        ])?;
+        let loss = lit::to_f32s(&out[0])?[0];
+        let probs = lit::to_f32s(&out[1])?;
+        Ok((loss, probs))
+    }
+}
+
+impl StageOp for HloStage {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> Result<Tensor> {
+        let t0 = std::time::Instant::now();
+        let x = input.ok_or_else(|| anyhow::anyhow!("{}: dense stage needs input", self.label))?;
+        anyhow::ensure!(x.cols == self.in_dim, "{}: input width {} != {}", self.label, x.cols, self.in_dim);
+        if self.is_loss {
+            // The loss stage's real work happens in backward (one fused
+            // call computes loss + both gradients); forward is a no-op
+            // pass-through so the pipeline schedule stays uniform.
+            let _ = mb;
+            let out = Tensor::zeros(x.rows, 1);
+            emulate_slowdown(t0, self.speed_factor, self.extra_delay_ms);
+            return Ok(out);
+        }
+        let y = self.fwd.run1(&[lit::vec1(&self.params), lit::mat(&x.data, x.rows, x.cols)?])?;
+        let data = lit::to_f32s(&y)?;
+        let out = Tensor::from_vec(data, x.rows, self.out_dim);
+        emulate_slowdown(t0, self.speed_factor, self.extra_delay_ms);
+        Ok(out)
+    }
+
+    fn backward(
+        &mut self,
+        mb: &MicroBatch,
+        input: Option<&Tensor>,
+        grad: Option<&Tensor>,
+    ) -> Result<BackwardOut> {
+        let t0 = std::time::Instant::now();
+        let x = input.ok_or_else(|| anyhow::anyhow!("{}: backward needs saved input", self.label))?;
+        let params = lit::vec1(&self.params);
+        let xlit = lit::mat(&x.data, x.rows, x.cols)?;
+        let (dparams, dx, loss) = if self.is_loss {
+            let out = self.bwd.run(&[params, xlit, lit::vec1(&mb.labels)])?;
+            anyhow::ensure!(out.len() == 3, "loss bwd arity");
+            (
+                lit::to_f32s(&out[0])?,
+                lit::to_f32s(&out[1])?,
+                Some(lit::to_f32s(&out[2])?[0]),
+            )
+        } else {
+            let g = grad.ok_or_else(|| anyhow::anyhow!("{}: backward needs grad", self.label))?;
+            let glit = lit::mat(&g.data, g.rows, g.cols)?;
+            let out = self.bwd.run(&[params, xlit, glit])?;
+            anyhow::ensure!(out.len() == 2, "dense bwd arity");
+            (lit::to_f32s(&out[0])?, lit::to_f32s(&out[1])?, None)
+        };
+        anyhow::ensure!(dparams.len() == self.params.len(), "dparams length");
+        for (a, g) in self.grad_acc.iter_mut().zip(&dparams) {
+            *a += g;
+        }
+        self.acc_steps += 1;
+        let dinput = Tensor::from_vec(dx, x.rows, x.cols);
+        emulate_slowdown(t0, self.speed_factor, self.extra_delay_ms);
+        Ok(BackwardOut { dinput: Some(dinput), loss })
+    }
+
+    fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+        Some(&mut self.grad_acc)
+    }
+
+    fn apply_update(&mut self) -> Result<()> {
+        if self.acc_steps == 0 {
+            return Ok(());
+        }
+        let scale = self.lr / self.acc_steps as f32;
+        for (w, g) in self.params.iter_mut().zip(&self.grad_acc) {
+            *w -= scale * g;
+        }
+        self.grad_acc.iter_mut().for_each(|g| *g = 0.0);
+        self.acc_steps = 0;
+        Ok(())
+    }
+
+    fn set_speed_factor(&mut self, f: f64) {
+        self.speed_factor = f;
+    }
+
+    fn set_extra_delay_ms(&mut self, ms: f64) {
+        self.extra_delay_ms = ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_constants_are_consistent() {
+        assert_eq!(X_DIM, 1664);
+        assert_eq!(STAGE1_PARAMS, 1664 * 512 + 512 + 512 * 256 + 256);
+        assert_eq!(STAGE2_PARAMS, 256 * 128 + 128 + 128 + 1);
+    }
+
+    #[test]
+    fn embedding_stage_roundtrip_without_hlo() {
+        let ps = Arc::new(ParamServer::new(EMB_DIM, 4, 0.5, 9));
+        let mut stage = EmbeddingStage::new(ps.clone());
+        let rows = 3;
+        let mb = MicroBatch {
+            index: 0,
+            sparse_ids: (0..rows * SLOTS).map(|i| (i % 7) as u32).collect(),
+            labels: vec![1.0; rows],
+        };
+        let x = stage.forward(&mb, None).unwrap();
+        assert_eq!((x.rows, x.cols), (rows, X_DIM));
+        // Slot 0 of row 0 must equal the PS row for its id.
+        let id0 = mb.sparse_ids[0];
+        let ps_row = ps.pull(&[id0]);
+        assert_eq!(&x.data[0..EMB_DIM], &ps_row[..]);
+        // Backward pushes: the touched row moves.
+        let before = ps.pull(&[id0]);
+        let grad = Tensor::from_vec(vec![1.0; rows * X_DIM], rows, X_DIM);
+        stage.backward(&mb, None, Some(&grad)).unwrap();
+        let after = ps.pull(&[id0]);
+        assert!(before.iter().zip(&after).any(|(b, a)| (b - a).abs() > 1e-7));
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::from_vec(vec![0.0; 6], 2, 3);
+        assert_eq!(t.rows * t.cols, t.data.len());
+    }
+
+    // HloStage execution tests live in rust/tests/ (need artifacts).
+}

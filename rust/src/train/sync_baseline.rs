@@ -1,0 +1,140 @@
+//! The synchronous, non-pipelined comparator for Figure 12's
+//! "TensorFlow" baseline (see DESIGN.md §Hardware-Adaptation: the paper's
+//! point in §6.3 is pipeline+heterogeneity vs a monolithic synchronous
+//! runtime; this runtime executes the *same* stage ops with no microbatch
+//! overlap, no compute/communication overlap and no stage concurrency).
+
+use super::stage::{MicroBatch, StageOp, Tensor};
+use super::TrainStats;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Strictly sequential trainer over the same stages.
+pub struct SyncBaselineRuntime {
+    stages: Vec<Box<dyn StageOp>>,
+    pub stats: TrainStats,
+}
+
+impl SyncBaselineRuntime {
+    pub fn new(stages: Vec<Box<dyn StageOp>>) -> Self {
+        assert!(!stages.is_empty());
+        SyncBaselineRuntime { stages, stats: TrainStats::default() }
+    }
+
+    pub fn stages_mut(&mut self) -> &mut Vec<Box<dyn StageOp>> {
+        &mut self.stages
+    }
+
+    /// One synchronous step: every microbatch runs forward through all
+    /// stages and backward through all stages before the next starts.
+    pub fn train_step(&mut self, mbs: &[MicroBatch]) -> Result<f32> {
+        let t0 = Instant::now();
+        let n = self.stages.len();
+        let mut losses = Vec::new();
+        for mb in mbs {
+            // Forward through all stages, saving inputs.
+            let mut saved: Vec<Option<Tensor>> = Vec::with_capacity(n);
+            let mut act: Option<Tensor> = None;
+            for stage in self.stages.iter_mut() {
+                let out = stage.forward(mb, act.as_ref())?;
+                saved.push(act.take());
+                act = Some(out);
+            }
+            // Backward in reverse.
+            let mut grad: Option<Tensor> = None;
+            for (i, stage) in self.stages.iter_mut().enumerate().rev() {
+                let out = stage.backward(mb, saved[i].as_ref(), grad.as_ref())?;
+                if let Some(l) = out.loss {
+                    losses.push(l);
+                }
+                grad = out.dinput;
+            }
+        }
+        for stage in self.stages.iter_mut() {
+            stage.apply_update()?;
+        }
+        let mean = if losses.is_empty() { 0.0 } else { losses.iter().sum::<f32>() / losses.len() as f32 };
+        self.stats.steps += 1;
+        self.stats.samples += mbs.iter().map(|m| m.labels.len() as u64).sum::<u64>();
+        self.stats.last_loss = mean;
+        self.stats.wall_secs += t0.elapsed().as_secs_f64();
+        Ok(mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::stage::BackwardOut;
+
+    struct SleepStage {
+        ms: u64,
+    }
+
+    impl StageOp for SleepStage {
+        fn name(&self) -> &str {
+            "sleep"
+        }
+        fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> Result<Tensor> {
+            std::thread::sleep(std::time::Duration::from_millis(self.ms));
+            let rows = mb.labels.len();
+            Ok(input.cloned().unwrap_or_else(|| Tensor::zeros(rows, 1)))
+        }
+        fn backward(
+            &mut self,
+            _mb: &MicroBatch,
+            input: Option<&Tensor>,
+            grad: Option<&Tensor>,
+        ) -> Result<BackwardOut> {
+            std::thread::sleep(std::time::Duration::from_millis(self.ms));
+            let t = grad.or(input).cloned().unwrap_or_else(|| Tensor::zeros(1, 1));
+            Ok(BackwardOut { dinput: Some(t), loss: if grad.is_none() { Some(1.0) } else { None } })
+        }
+        fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+            None
+        }
+        fn apply_update(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn set_speed_factor(&mut self, _f: f64) {}
+    }
+
+    fn mbs(n: usize) -> Vec<MicroBatch> {
+        (0..n).map(|j| MicroBatch { index: j, sparse_ids: vec![], labels: vec![0.0; 2] }).collect()
+    }
+
+    #[test]
+    fn sync_baseline_steps_and_counts() {
+        let mut rt = SyncBaselineRuntime::new(vec![
+            Box::new(SleepStage { ms: 0 }),
+            Box::new(SleepStage { ms: 0 }),
+        ]);
+        let loss = rt.train_step(&mbs(3)).unwrap();
+        assert_eq!(loss, 1.0);
+        assert_eq!(rt.stats.samples, 6);
+    }
+
+    #[test]
+    fn pipeline_overlap_beats_sync_on_sleepy_stages() {
+        use crate::train::pipeline::{PipelineConfig, PipelineTrainer};
+        // 3 stages x 6 ms, 4 microbatches. Sync: 4 * 3 * 2 * 6 = 144 ms.
+        // Pipeline: stages overlap -> roughly (4 + 2) * 2 * 6 = 72 ms.
+        let mk = || -> Vec<Box<dyn StageOp>> {
+            vec![
+                Box::new(SleepStage { ms: 6 }),
+                Box::new(SleepStage { ms: 6 }),
+                Box::new(SleepStage { ms: 6 }),
+            ]
+        };
+        let mut sync = SyncBaselineRuntime::new(mk());
+        sync.train_step(&mbs(4)).unwrap();
+        let mut pipe = PipelineTrainer::new(mk(), PipelineConfig { microbatches: 4 });
+        pipe.train_step(&mbs(4)).unwrap();
+        assert!(
+            pipe.stats.wall_secs < sync.stats.wall_secs * 0.85,
+            "pipeline {}s vs sync {}s",
+            pipe.stats.wall_secs,
+            sync.stats.wall_secs
+        );
+    }
+}

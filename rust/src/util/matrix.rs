@@ -1,0 +1,219 @@
+//! Dense column-major-free small matrix algebra for the Bayesian-optimization
+//! scheduler's Gaussian-process surrogate: Cholesky factorization, triangular
+//! solves and matrix-vector products. No BLAS is available offline; the GP
+//! operates on at most a few hundred observed scheduling plans, so a simple
+//! O(n^3) Cholesky is more than fast enough.
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+///
+/// Returns `None` when `A` is not (numerically) positive definite; the GP
+/// caller responds by increasing jitter on the diagonal.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    y
+}
+
+/// Solve `L^T x = y` for lower-triangular `L` (backward substitution).
+pub fn solve_upper_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `A x = b` via Cholesky; `A` must be SPD.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Some(solve_upper_t(&l, &y))
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Squared Euclidean distance.
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9
+    }
+
+    #[test]
+    fn cholesky_of_known_matrix() {
+        // A = [[4,2],[2,3]] => L = [[2,0],[1,sqrt(2)]]
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!(approx(l[(0, 0)], 2.0));
+        assert!(approx(l[(1, 0)], 1.0));
+        assert!(approx(l[(1, 1)], 2f64.sqrt()));
+        assert!(approx(l[(0, 1)], 0.0));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_solve_roundtrip() {
+        let a = Mat::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!(approx(*xi, *ti), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert_each_other() {
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        let b = vec![10.0, 7.0];
+        let y = solve_lower(&l, &b);
+        let x = solve_upper_t(&l, &y);
+        let back = a.matvec(&x);
+        assert!(approx(back[0], 10.0) && approx(back[1], 7.0));
+    }
+
+    #[test]
+    fn identity_solves_trivially() {
+        let a = Mat::identity(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(solve_spd(&a, &b).unwrap(), b);
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn dot_and_sqdist() {
+        assert!(approx(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0));
+        assert!(approx(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0));
+    }
+}

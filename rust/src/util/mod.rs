@@ -1,0 +1,78 @@
+//! Foundational substrates shared by the whole framework.
+//!
+//! Everything here exists because the build is fully offline and only the
+//! `xla` crate's vendor tree is available: deterministic RNG (`rand` is
+//! absent), tiny linear algebra for the GP surrogate (no BLAS), statistics
+//! for the profiler/bench harness (no `criterion`), and a property-testing
+//! harness (no `proptest`).
+
+pub mod matrix;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+
+/// Softmax over a slice, numerically stabilized by max subtraction.
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    if logits.is_empty() {
+        return Vec::new();
+    }
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|x| (x - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Argmax index; ties resolve to the first maximum. Empty slice -> 0.
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Format a duration in seconds like the paper's tables (3 significant
+/// figures, seconds).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.3}", s)
+    } else {
+        format!("{:.4}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[1001.0, 1002.0, 1003.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not in the offline vendor tree, so HeterPS ships a small
+//! equivalent: run a property against many seeded random inputs and, on
+//! failure, report the failing case and the seed that reproduces it.
+//! Generation is driven by the library's own [`Rng`](super::rng::Rng) so
+//! failures are deterministic across runs.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` against `cases` inputs drawn by `gen` from seeds derived from
+/// `seed`. Panics (test failure) with the failing case's debug rendering and
+/// the exact per-case seed on the first counterexample.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified (case {case}/{cases}, seed {case_seed:#x}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for a
+/// descriptive failure message.
+pub fn check_result<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property falsified (case {case}/{cases}, seed {case_seed:#x}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Vec of length in `[min_len, max_len]` with elements from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let n = rng.range(min_len, max_len + 1);
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.f64() * (hi - lo)
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0usize;
+        check(
+            1,
+            64,
+            |rng| rng.below(100),
+            |x| {
+                ran += 1;
+                *x < 100
+            },
+        );
+        assert_eq!(ran, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics_with_case() {
+        check(2, 64, |rng| rng.below(10), |x| *x < 5);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check(
+            3,
+            128,
+            |rng| {
+                (
+                    gen::vec_of(rng, 1, 8, |r| gen::f64_in(r, -1.0, 1.0)),
+                    gen::usize_in(rng, 3, 9),
+                )
+            },
+            |(v, u)| {
+                (1..=8).contains(&v.len())
+                    && v.iter().all(|x| (-1.0..1.0).contains(x))
+                    && (3..9).contains(u)
+            },
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! Small statistics helpers used by the bench harness, the profiler and the
+//! schedulers (BO needs means/variances; the bench harness reports
+//! criterion-style summaries without criterion being available offline).
+
+/// Arithmetic mean. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (n-1 denominator). 0.0 when n < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; `q` in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Min of a slice (0.0 when empty).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+}
+
+/// Max of a slice (0.0 when empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ordinary least squares fit of `y = a + b*x`; returns `(a, b)`.
+///
+/// The profiler uses this to fit Amdahl's-law serial fractions from
+/// (1/k, time) observations: `T(k) = T_serial + T_parallel / k` is linear
+/// in `1/k`.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linfit needs >= 2 points");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Exponential moving average state, used for the REINFORCE baseline
+/// (Algorithm 1, line 8: `b <- (1-gamma)*b + gamma*mean(R)`).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    value: f64,
+    gamma: f64,
+    initialized: bool,
+}
+
+impl Ema {
+    /// `gamma` is the update rate in (0, 1].
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0);
+        Ema { value: 0.0, gamma, initialized: false }
+    }
+
+    /// Fold in a new observation and return the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        if self.initialized {
+            self.value = (1.0 - self.gamma) * self.value + self.gamma * x;
+        } else {
+            // Seed with the first observation instead of 0 to avoid a long
+            // warm-up bias in the advantage estimate.
+            self.value = x;
+            self.initialized = true;
+        }
+        self.value
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+}
+
+/// Welford online mean/variance accumulator (profiler timing streams).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile(&xs, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 40.0).abs() < 1e-12);
+        assert!((median(&xs) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_amdahl_shape() {
+        // T(k) = 2 + 8/k, sampled at k = 1,2,4,8 -> fit against x = 1/k.
+        let ks = [1.0, 2.0, 4.0, 8.0];
+        let xs: Vec<f64> = ks.iter().map(|k| 1.0 / k).collect();
+        let ys: Vec<f64> = ks.iter().map(|k| 2.0 + 8.0 / k).collect();
+        let (serial, parallel) = linfit(&xs, &ys);
+        assert!((serial - 2.0).abs() < 1e-9);
+        assert!((parallel - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_seeds_with_first_value() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        assert!((e.update(20.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_do_not_panic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: every AOT artifact loads, compiles and executes through
+//! PJRT with the shapes the rust side expects, and the policy/step
+//! semantics hold end-to-end across the FFI boundary.
+//!
+//! Requires `make artifacts`. Tests skip (not fail) when artifacts are
+//! missing so `cargo test` stays green on a fresh checkout.
+
+use heterps::runtime::{artifacts_dir, lit, Runtime};
+use heterps::sched::rl::policy::{FeatureMatrix, Policy, Sample, FEAT_DIM, L_MAX};
+use heterps::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("policy_lstm_fwd.hlo.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn demo_features(num_layers: usize, num_types: usize) -> FeatureMatrix {
+    let mut data = vec![0.0f32; L_MAX * FEAT_DIM];
+    for l in 0..num_layers {
+        data[l * FEAT_DIM + l] = 1.0;
+        data[l * FEAT_DIM + L_MAX + (l % 8)] = 1.0;
+        data[l * FEAT_DIM + L_MAX + 8] = 0.5;
+        data[l * FEAT_DIM + L_MAX + 9] = 1.0;
+        data[l * FEAT_DIM + L_MAX + 10] = 0.25;
+    }
+    FeatureMatrix { data, num_layers, num_types }
+}
+
+#[test]
+fn lstm_policy_probs_are_distributions() {
+    require_artifacts!();
+    let mut rng = Rng::new(1);
+    let mut pol = heterps::runtime::policy::HloPolicy::load_lstm(&mut rng).unwrap();
+    let feats = demo_features(10, 3);
+    let probs = pol.probs(&feats);
+    assert_eq!(probs.len(), 10);
+    for row in &probs {
+        assert_eq!(row.len(), 3);
+        let s: f64 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+        assert!(row.iter().all(|&p| p > 0.0));
+    }
+}
+
+#[test]
+fn rnn_policy_probs_are_distributions() {
+    require_artifacts!();
+    let mut rng = Rng::new(2);
+    let mut pol = heterps::runtime::policy::HloPolicy::load_rnn(&mut rng).unwrap();
+    let feats = demo_features(5, 2);
+    let probs = pol.probs(&feats);
+    assert_eq!(probs.len(), 5);
+    for row in &probs {
+        let s: f64 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn lstm_step_moves_probability_toward_positive_advantage_actions() {
+    require_artifacts!();
+    let mut rng = Rng::new(3);
+    let mut pol = heterps::runtime::policy::HloPolicy::load_lstm(&mut rng).unwrap();
+    let feats = demo_features(8, 4);
+    let actions: Vec<usize> = (0..8).map(|l| l % 4).collect();
+    let before: f64 = pol
+        .probs(&feats)
+        .iter()
+        .zip(&actions)
+        .map(|(row, &a)| row[a].ln())
+        .sum();
+    for _ in 0..10 {
+        pol.update(&feats, &[Sample { actions: actions.clone(), advantage: 1.0 }], 0.5);
+    }
+    let after: f64 = pol
+        .probs(&feats)
+        .iter()
+        .zip(&actions)
+        .map(|(row, &a)| row[a].ln())
+        .sum();
+    assert!(after > before, "log-prob should rise: {before} -> {after}");
+}
+
+#[test]
+fn fused_step_decreases_loss_across_ffi() {
+    require_artifacts!();
+    let rt = Runtime::global().unwrap();
+    let step = rt.load_named("ctr_fused_step").unwrap();
+    let mut rng = Rng::new(4);
+    use heterps::train::stage::{MB_ROWS, STAGE1_PARAMS, STAGE2_PARAMS, X_DIM};
+    let p1: Vec<f32> = (0..STAGE1_PARAMS).map(|_| (rng.f32() - 0.5) * 0.05).collect();
+    let p2: Vec<f32> = (0..STAGE2_PARAMS).map(|_| (rng.f32() - 0.5) * 0.05).collect();
+    let x: Vec<f32> = (0..MB_ROWS * X_DIM).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+    let y: Vec<f32> = (0..MB_ROWS).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }).collect();
+    let out = step
+        .run(&[
+            lit::vec1(&p1),
+            lit::vec1(&p2),
+            lit::mat(&x, MB_ROWS, X_DIM).unwrap(),
+            lit::vec1(&y),
+            lit::scalar(0.5),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let loss0 = lit::to_f32s(&out[0]).unwrap()[0];
+    let p1n = lit::to_f32s(&out[1]).unwrap();
+    let p2n = lit::to_f32s(&out[2]).unwrap();
+    assert_eq!(p1n.len(), STAGE1_PARAMS);
+    assert_eq!(p2n.len(), STAGE2_PARAMS);
+    let out2 = step
+        .run(&[
+            lit::vec1(&p1n),
+            lit::vec1(&p2n),
+            lit::mat(&x, MB_ROWS, X_DIM).unwrap(),
+            lit::vec1(&y),
+            lit::scalar(0.5),
+        ])
+        .unwrap();
+    let loss1 = lit::to_f32s(&out2[0]).unwrap()[0];
+    assert!(loss1 < loss0, "fused step should reduce loss: {loss0} -> {loss1}");
+}
+
+#[test]
+fn all_declared_artifacts_load_and_compile() {
+    require_artifacts!();
+    let rt = Runtime::global().unwrap();
+    for name in [
+        "policy_lstm_fwd",
+        "policy_lstm_step",
+        "policy_rnn_fwd",
+        "policy_rnn_step",
+        "ctr_stage1_fwd",
+        "ctr_stage1_bwd",
+        "ctr_stage2_fwd",
+        "ctr_stage2_bwd",
+        "ctr_fused_step",
+    ] {
+        rt.load_named(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration: the pipeline trainer over real HLO stages — gradient
+//! equivalence with the fused single-process step, loss descent on
+//! synthetic CTR data, pipeline-vs-sync agreement, and PS coupling.
+//!
+//! Requires `make artifacts`; tests skip when artifacts are absent.
+
+use heterps::data::dataset::{CtrDataset, DatasetConfig};
+use heterps::runtime::{artifacts_dir, lit, Runtime};
+use heterps::train::pipeline::{PipelineConfig, PipelineTrainer};
+use heterps::train::stage::{
+    BackwardOut, EmbeddingStage, HloStage, MicroBatch, StageOp, Tensor, EMB_DIM, MB_ROWS, SLOTS,
+    X_DIM,
+};
+use heterps::train::sync_baseline::SyncBaselineRuntime;
+use heterps::train::ParamServer;
+use heterps::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("ctr_stage1_fwd.hlo.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// First stage that emits a fixed dense tensor (bypasses the PS embedding
+/// so the pipeline's dense math can be compared against the fused step).
+struct FixedSource {
+    x: Vec<f32>,
+}
+
+impl StageOp for FixedSource {
+    fn name(&self) -> &str {
+        "fixed-source"
+    }
+    fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> anyhow::Result<Tensor> {
+        assert!(input.is_none());
+        let rows = mb.labels.len();
+        Ok(Tensor::from_vec(self.x.clone(), rows, X_DIM))
+    }
+    fn backward(
+        &mut self,
+        _mb: &MicroBatch,
+        _input: Option<&Tensor>,
+        _grad: Option<&Tensor>,
+    ) -> anyhow::Result<BackwardOut> {
+        Ok(BackwardOut { dinput: None, loss: None })
+    }
+    fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+        None
+    }
+    fn apply_update(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn set_speed_factor(&mut self, _f: f64) {}
+}
+
+fn demo_mb(seed: u64) -> (MicroBatch, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..MB_ROWS * X_DIM).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+    let labels: Vec<f32> = (0..MB_ROWS).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }).collect();
+    (MicroBatch { index: 0, sparse_ids: vec![0; MB_ROWS * SLOTS], labels }, x)
+}
+
+#[test]
+fn pipeline_gradients_match_fused_step() {
+    require_artifacts!();
+    let (mb, x) = demo_mb(11);
+    let lr = 0.25f32;
+
+    // Pipeline: source -> stage1 -> stage2(loss), one microbatch.
+    let s1 = HloStage::ctr_stage1(lr, 101).unwrap();
+    let s2 = HloStage::ctr_stage2(lr, 202).unwrap();
+    let p1_init = s1.params.clone();
+    let p2_init = s2.params.clone();
+    let mut trainer = PipelineTrainer::new(
+        vec![Box::new(FixedSource { x: x.clone() }), Box::new(s1), Box::new(s2)],
+        PipelineConfig { microbatches: 1 },
+    );
+    let pipe_loss = trainer.train_step(std::slice::from_ref(&mb)).unwrap();
+
+    // Fused oracle on identical inputs.
+    let rt = Runtime::global().unwrap();
+    let step = rt.load_named("ctr_fused_step").unwrap();
+    let out = step
+        .run(&[
+            lit::vec1(&p1_init),
+            lit::vec1(&p2_init),
+            lit::mat(&x, MB_ROWS, X_DIM).unwrap(),
+            lit::vec1(&mb.labels),
+            lit::scalar(lr),
+        ])
+        .unwrap();
+    let fused_loss = lit::to_f32s(&out[0]).unwrap()[0];
+    let p1_fused = lit::to_f32s(&out[1]).unwrap();
+    let p2_fused = lit::to_f32s(&out[2]).unwrap();
+
+    assert!((pipe_loss - fused_loss).abs() < 1e-4, "loss {pipe_loss} vs fused {fused_loss}");
+
+    // Updated parameters agree functionally: the pipeline's post-update
+    // stage-1 forward must equal the fused post-update forward on the same
+    // input (same gradients + same SGD step => same weights).
+    let err = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    };
+    let mut t = trainer;
+    let s1f = rt.load_named("ctr_stage1_fwd").unwrap();
+    let y_fused = s1f
+        .run1(&[lit::vec1(&p1_fused), lit::mat(&x, MB_ROWS, X_DIM).unwrap()])
+        .unwrap();
+    let y_fused = lit::to_f32s(&y_fused).unwrap();
+    let y_pipe = t.stages_mut()[1]
+        .forward(&mb, Some(&Tensor::from_vec(x.clone(), MB_ROWS, X_DIM)))
+        .unwrap();
+    assert!(
+        err(&y_pipe.data, &y_fused) < 1e-3,
+        "post-update stage1 outputs diverge by {}",
+        err(&y_pipe.data, &y_fused)
+    );
+    let _ = p2_fused;
+}
+
+#[test]
+fn full_pipeline_with_ps_embedding_reduces_loss() {
+    require_artifacts!();
+    let ps = Arc::new(ParamServer::new(EMB_DIM, 16, 0.5, 7));
+    let mut trainer = PipelineTrainer::new(
+        vec![
+            Box::new(EmbeddingStage::new(ps.clone())),
+            Box::new(HloStage::ctr_stage1(0.25, 31).unwrap()),
+            Box::new(HloStage::ctr_stage2(0.25, 32).unwrap()),
+        ],
+        PipelineConfig { microbatches: 2 },
+    );
+    let mut ds = CtrDataset::new(
+        DatasetConfig { slots: SLOTS, vocab: 5_000, ..Default::default() },
+        13,
+    );
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..12 {
+        let batch = ds.next_batch(2 * MB_ROWS);
+        let mbs = PipelineTrainer::microbatches(&batch, SLOTS);
+        let loss = trainer.train_step(&mbs).unwrap();
+        if step == 0 {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert!(ps.rows() > 0, "PS must have materialized embedding rows");
+    assert!(ps.push_count() > 0, "sparse gradients must flow to the PS");
+}
+
+#[test]
+fn sync_baseline_computes_identical_loss_math() {
+    require_artifacts!();
+    let (mb, x) = demo_mb(17);
+    let mk = |seed1, seed2| -> Vec<Box<dyn StageOp>> {
+        vec![
+            Box::new(FixedSource { x: x.clone() }),
+            Box::new(HloStage::ctr_stage1(0.1, seed1).unwrap()),
+            Box::new(HloStage::ctr_stage2(0.1, seed2).unwrap()),
+        ]
+    };
+    let mut pipe = PipelineTrainer::new(mk(51, 52), PipelineConfig { microbatches: 1 });
+    let mut sync = SyncBaselineRuntime::new(mk(51, 52));
+    let lp = pipe.train_step(std::slice::from_ref(&mb)).unwrap();
+    let ls = sync.train_step(std::slice::from_ref(&mb)).unwrap();
+    assert!((lp - ls).abs() < 1e-5, "pipeline {lp} vs sync {ls}");
+}

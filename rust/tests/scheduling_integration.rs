@@ -1,0 +1,124 @@
+//! Integration: the full scheduling story across modules — RL with the
+//! HLO LSTM policy against brute force (Table 2's optimality claim),
+//! the §6.2 comparison invariants, and provisioning + simulation coupling.
+//!
+//! RL-LSTM tests require `make artifacts` (they skip otherwise); the
+//! comparison invariants run regardless via the tabular policy.
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::resources::{paper_testbed, simulated_types};
+use heterps::runtime::artifacts_dir;
+use heterps::sched::bruteforce::BruteForce;
+use heterps::sched::rl::{RlConfig, RlScheduler};
+use heterps::sched::{self, Scheduler};
+use heterps::simulator::{simulate_plan, SimConfig};
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("policy_lstm_fwd.hlo.txt").exists()
+}
+
+#[test]
+fn rl_lstm_hlo_matches_bruteforce_on_nce() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = zoo::nce();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let bf = BruteForce::new().schedule(&cm);
+    let cfg = RlConfig { rounds: 40, samples_per_round: 6, ..Default::default() };
+    let rl = RlScheduler::lstm(cfg, 42).schedule(&cm);
+    assert!(
+        rl.eval.cost_usd <= bf.eval.cost_usd * 1.01,
+        "RL-LSTM {} vs BF {}",
+        rl.eval.cost_usd,
+        bf.eval.cost_usd
+    );
+}
+
+#[test]
+fn rl_lstm_scales_to_64_types_without_scheduling_blowup() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Table 3's point: RL-LSTM's scheduling time does not grow with the
+    // number of resource types (the policy emits a masked 64-way softmax
+    // either way).
+    let model = zoo::two_emb();
+    let cfg = RlConfig { rounds: 8, samples_per_round: 4, ..Default::default() };
+    let pool_small = simulated_types(2, true);
+    let pool_big = simulated_types(64, true);
+    let cm_small = CostModel::new(&model, &pool_small, CostConfig::default());
+    let cm_big = CostModel::new(&model, &pool_big, CostConfig::default());
+    let t_small = RlScheduler::lstm(cfg.clone(), 1).schedule(&cm_small);
+    let t_big = RlScheduler::lstm(cfg, 1).schedule(&cm_big);
+    t_big.plan.validate(&model, &pool_big).unwrap();
+    let ratio = t_big.wall_time.as_secs_f64() / t_small.wall_time.as_secs_f64().max(1e-9);
+    assert!(ratio < 5.0, "scheduling time blew up with type count: {ratio:.1}x");
+}
+
+#[test]
+fn comparison_suite_invariants_hold() {
+    let model = zoo::ctrdnn();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let mut results = Vec::new();
+    for m in sched::comparison_methods() {
+        // Use the artifact-free tabular policy for RL variants here; the
+        // HLO policies are covered above.
+        let name = match *m {
+            "rl" | "rl-rnn" => "rl-tabular",
+            other => other,
+        };
+        let mut s = sched::by_name(name, 7).unwrap();
+        let out = s.schedule(&cm);
+        out.plan.validate(&model, &pool).unwrap();
+        if out.eval.feasible {
+            assert!(
+                out.eval.throughput >= cm.cfg.throughput_limit * 0.999,
+                "{m}: feasible but under floor"
+            );
+        }
+        results.push((m.to_string(), out));
+    }
+    // The searching methods must beat (or tie) CPU-only and GPU-only.
+    let cost = |n: &str| {
+        results
+            .iter()
+            .find(|(m, _)| m == n)
+            .map(|(_, o)| o.eval.cost_usd)
+            .unwrap()
+    };
+    assert!(cost("rl") <= cost("cpu"));
+    assert!(cost("rl") <= cost("gpu"));
+}
+
+#[test]
+fn provision_then_simulate_composes() {
+    let model = zoo::matchnet();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let plan = SchedulingPlan::new(
+        model
+            .layers
+            .iter()
+            .map(|l| if l.kind.data_intensive() { 0 } else { 1 })
+            .collect(),
+    );
+    let eval = cm.evaluate(&plan);
+    if !eval.feasible {
+        // Pool too small for this floor — acceptable, but the penalty
+        // path must still price it.
+        assert!(eval.cost_usd.is_finite());
+        return;
+    }
+    let sim = simulate_plan(&cm, &plan, &SimConfig::default(), 3).unwrap();
+    // Simulation includes overheads: somewhat slower than analytic, but
+    // within a small factor (the cost model is calibrated, not fantasy).
+    let ratio = eval.throughput / sim.throughput;
+    assert!((1.0..8.0).contains(&ratio), "analytic/simulated throughput ratio {ratio}");
+}
