@@ -1,12 +1,19 @@
-//! Elasticity demo: as the throughput floor tightens, the provisioner
-//! (§5.1) scales each stage's replica count — and the cost frontier it
-//! traces beats both static-ratio heuristics (§6.1).
+//! Elasticity demo, in two acts.
+//!
+//! 1. As the throughput floor tightens, the provisioner (§5.1) scales
+//!    each stage's replica count — and the cost frontier it traces beats
+//!    both static-ratio heuristics (§6.1).
+//! 2. When the elastic pool itself changes (new accelerator types join),
+//!    a warm-started, budgeted `SearchSession` reschedules incrementally:
+//!    the old plan seeds the incumbent, so even a tiny evaluation budget
+//!    can only improve on simply keeping the old placement.
 //!
 //!     cargo run --release --example elastic_provision
 
 use heterps::metrics::Table;
 use heterps::prelude::*;
 use heterps::provision::provision_static_ratio;
+use heterps::sched;
 
 fn main() -> anyhow::Result<()> {
     let model = heterps::model::zoo::ctrdnn();
@@ -36,5 +43,54 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.emit("elastic_provision");
+
+    // Act 2: the pool grows from 2 to 4 types mid-run. Instead of a full
+    // cold search, open a budgeted session on the new pool and warm-start
+    // it with the plan currently in production. The small pool must be a
+    // prefix of the grown one so the old plan's type ids keep meaning the
+    // same hardware — `simulated_types(2)` ⊂ `simulated_types(4)`.
+    let spec = SchedulerSpec::parse("rl-tabular:rounds=30")?;
+    let small = simulated_types(2, true);
+    let cm_small = CostModel::new(&model, &small, CostConfig::default());
+    let old = spec.build(42).schedule(&cm_small);
+
+    let grown = simulated_types(4, true);
+    let cm_grown = CostModel::new(&model, &grown, CostConfig::default());
+    let old_on_grown = cm_grown.evaluate(&old.plan);
+
+    let scheduler = spec.build(42);
+    let mut session = scheduler.session(&cm_grown, Budget::evals(200));
+    session.warm_start(&old.plan);
+    let rescheduled = sched::drive(session.as_mut(), None)?;
+
+    let mut table = Table::new(
+        "Warm-started rescheduling after the pool grows 2 -> 4 types",
+        &["placement", "cost ($)", "feasible", "evaluations"],
+    );
+    table.row(&[
+        "old plan, kept as-is".into(),
+        format!("{:.2}", old_on_grown.cost_usd),
+        old_on_grown.feasible.to_string(),
+        "0".into(),
+    ]);
+    table.row(&[
+        format!("warm-started reschedule ({spec})"),
+        format!("{:.2}", rescheduled.eval.cost_usd),
+        rescheduled.eval.feasible.to_string(),
+        rescheduled.evaluations.to_string(),
+    ]);
+    table.emit("elastic_reschedule");
+    println!(
+        "reschedule spent {} evaluations and {}",
+        rescheduled.evaluations,
+        if rescheduled.eval.cost_usd < old_on_grown.cost_usd {
+            format!(
+                "cut cost {:.1}%",
+                (1.0 - rescheduled.eval.cost_usd / old_on_grown.cost_usd) * 100.0
+            )
+        } else {
+            "kept the old plan (already the incumbent)".to_string()
+        }
+    );
     Ok(())
 }

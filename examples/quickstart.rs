@@ -1,5 +1,6 @@
 //! Quickstart: schedule a CTR model onto a heterogeneous pool with the
-//! RL-LSTM scheduler, provision it, and price the training run.
+//! RL-LSTM scheduler through the typed spec + budgeted session API,
+//! provision it, and price the training run.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -7,7 +8,7 @@
 //! the scheduler transparently falls back to the tabular policy.)
 
 use heterps::prelude::*;
-use heterps::sched::rl::{RlConfig, RlScheduler};
+use heterps::sched;
 
 fn main() -> anyhow::Result<()> {
     // The paper's default testbed: Intel 6271C CPU cores at $0.04/h and
@@ -16,10 +17,30 @@ fn main() -> anyhow::Result<()> {
     let pool = paper_testbed();
     let cm = CostModel::new(&model, &pool, CostConfig::default());
 
-    // Algorithm 1: REINFORCE over the LSTM scheduling policy.
-    let mut scheduler = RlScheduler::lstm(RlConfig::default(), 42);
-    let out = scheduler.schedule(&cm);
+    // A typed spec names the method and its full configuration; the
+    // Display form (`spec.to_string()`) round-trips, so logs record
+    // exactly what ran.
+    let spec = SchedulerSpec::parse("rl:rounds=80,lr=0.6")?;
+    let scheduler = spec.build(42);
 
+    // Algorithm 1 as a budgeted session: at most 2000 cost-model
+    // evaluations, with a progress observer watching the incumbent.
+    let mut session = scheduler.session(&cm, Budget::evals(2_000));
+    // Report the incumbent each time another ~200 evaluations have been
+    // spent (steps land between milestones, so track the next threshold
+    // rather than testing divisibility).
+    let mut next_report = 200usize;
+    let mut observer = |r: &StepReport| {
+        if r.evaluations >= next_report {
+            next_report = r.evaluations - r.evaluations % 200 + 200;
+            if let Some(e) = &r.incumbent_eval {
+                println!("  ... {} evals, incumbent ${:.2}", r.evaluations, e.cost_usd);
+            }
+        }
+    };
+    let out = sched::drive(session.as_mut(), Some(&mut observer))?;
+
+    println!("spec         : {spec}");
     println!("model        : {} ({} layers)", model.name, model.num_layers());
     println!("plan         : {}", out.plan.render());
     for span in out.plan.stages() {

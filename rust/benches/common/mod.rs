@@ -1,13 +1,18 @@
 //! Shared bench-harness helpers (criterion is unavailable offline; this
 //! provides the warmup/repeat/summarize loop the benches share, plus the
 //! §6.2 method runner used by the figure benches).
+//!
+//! Methods are named by registry spec strings (`rl`, `bo:init=8`, ...), so
+//! every bench records exactly the configuration that ran, and the
+//! session-based [`anytime_costs`] helper produces the per-budget
+//! incumbent curves of the Table 2/3 reworks.
 
 #![allow(dead_code)]
 
 use heterps::cost::{CostConfig, CostModel};
 use heterps::model::ModelSpec;
 use heterps::resources::ResourcePool;
-use heterps::sched::{self, ScheduleOutcome};
+use heterps::sched::{self, Budget, ScheduleOutcome, SchedulerSpec};
 use heterps::util::stats::{mean, stddev};
 use std::time::Instant;
 
@@ -25,11 +30,15 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
     (mean(&samples), stddev(&samples))
 }
 
-/// Run one named scheduler on a (model, pool) pair with the default cost
+fn parse_spec(spec: &str) -> SchedulerSpec {
+    SchedulerSpec::parse(spec).unwrap_or_else(|e| panic!("bad scheduler spec `{spec}`: {e}"))
+}
+
+/// Run one scheduler spec on a (model, pool) pair with the default cost
 /// config except the given floor; the RL variants fall back to tabular
 /// automatically when artifacts are missing.
 pub fn run_method(
-    method: &str,
+    spec: &str,
     model: &ModelSpec,
     pool: &ResourcePool,
     throughput_limit: f64,
@@ -37,12 +46,49 @@ pub fn run_method(
 ) -> ScheduleOutcome {
     let cfg = CostConfig { throughput_limit, ..Default::default() };
     let cm = CostModel::new(model, pool, cfg);
-    let mut s = sched::by_name(method, seed).unwrap_or_else(|| panic!("scheduler {method}"));
-    s.schedule(&cm)
+    parse_spec(spec).build(seed).schedule(&cm)
 }
 
-/// The §6.2 comparison methods in paper order.
-pub fn methods() -> &'static [&'static str] {
+/// Incumbent cost after *exactly at most* `m` evaluations, for each
+/// milestone `m` — the anytime curve of the Table 2/3 reworks. Each
+/// milestone gets its own `Budget::evals(m)` session (searches are
+/// deterministic per seed, so the runs are prefixes of one search);
+/// sampling one coarse-stepping session instead would smear later-budget
+/// costs into earlier milestones. `None` marks an infeasible milestone
+/// (zero-evaluation budget).
+pub fn anytime_costs(
+    spec: &str,
+    model: &ModelSpec,
+    pool: &ResourcePool,
+    throughput_limit: f64,
+    seed: u64,
+    milestones: &[usize],
+) -> Vec<Option<f64>> {
+    let cfg = CostConfig { throughput_limit, ..Default::default() };
+    let cm = CostModel::new(model, pool, cfg);
+    let spec = parse_spec(spec);
+    milestones
+        .iter()
+        .map(|&at| {
+            let scheduler = spec.build(seed);
+            let mut session = scheduler.session(&cm, Budget::evals(at));
+            sched::drive(session.as_mut(), None).ok().map(|out| out.eval.cost_usd)
+        })
+        .collect()
+}
+
+/// Render an anytime curve as a table cell: `a / b / c`, with `/` for
+/// milestones no session could reach (zero-evaluation budget).
+pub fn fmt_curve(costs: &[Option<f64>]) -> String {
+    costs
+        .iter()
+        .map(|c| c.map(|v| format!("{v:.2}")).unwrap_or_else(|| "/".into()))
+        .collect::<Vec<_>>()
+        .join(" / ")
+}
+
+/// The §6.2 comparison methods in paper order (from the registry).
+pub fn methods() -> Vec<&'static str> {
     sched::comparison_methods()
 }
 

@@ -5,6 +5,11 @@
 //! measured per-plan evaluation rate (the paper did the same at 16 layers
 //! and gave up at 20), and RL finds the same optimum as BF wherever BF is
 //! tractable.
+//!
+//! A second table reports the *anytime* view the session API enables:
+//! each method's incumbent cost after 10 / 100 / 1k cost-model
+//! evaluations on the 2-type pool — the paper's cost-under-a-budget story
+//! in one place.
 
 mod common;
 
@@ -16,6 +21,8 @@ use heterps::sched::bruteforce::BruteForce;
 use heterps::sched::rl::{RlConfig, RlScheduler};
 use heterps::sched::Scheduler;
 use heterps::util::fmt_secs;
+
+const MILESTONES: [usize; 3] = [10, 100, 1000];
 
 fn main() {
     let mut table = Table::new(
@@ -34,6 +41,11 @@ fn main() {
         let warm = RlConfig { rounds: 1, samples_per_round: 1, ..Default::default() };
         let _ = RlScheduler::lstm(warm, 1).schedule(&cm);
     }
+
+    let mut anytime = Table::new(
+        "Table 2b — incumbent cost ($) at 10/100/1k evaluations (2 types)",
+        &["layers", "BF @10/100/1k", "RL @10/100/1k"],
+    );
 
     for layers in [8usize, 12, 16, 20] {
         let model = ctrdnn_with_layers(layers);
@@ -76,6 +88,18 @@ fn main() {
             None => "-".into(),
         });
         table.row(&cells);
+
+        // Anytime curves: same model, same 2-type pool, budgeted sessions.
+        let bf_curve =
+            common::anytime_costs("bf", &model, &pool, 20_000.0, 42, &MILESTONES);
+        let rl_curve =
+            common::anytime_costs("rl", &model, &pool, 20_000.0, 42, &MILESTONES);
+        anytime.row(&[
+            layers.to_string(),
+            common::fmt_curve(&bf_curve),
+            common::fmt_curve(&rl_curve),
+        ]);
     }
     table.emit("table2_bf_vs_rl");
+    anytime.emit("table2_anytime");
 }

@@ -3,6 +3,10 @@
 //! tens of seconds (flat in the type count), RL-RNN slower, BO slowest of
 //! the learned methods, Genetic tens of seconds, Greedy/GPU/CPU/Heuristic
 //! effectively instant.
+//!
+//! A second table reports the anytime view the session API enables: each
+//! method's incumbent cost after 10 / 100 / 1k cost-model evaluations —
+//! the per-budget rows of the cost-under-a-scheduling-time-budget story.
 
 mod common;
 
@@ -10,6 +14,8 @@ use heterps::metrics::Table;
 use heterps::model::zoo;
 use heterps::resources::simulated_types;
 use heterps::util::fmt_secs;
+
+const MILESTONES: [usize; 3] = [10, 100, 1000];
 
 fn main() {
     let rows: Vec<(&str, &str, usize)> = vec![
@@ -20,10 +26,14 @@ fn main() {
         ("2EMB", "2emb", 2),
         ("NCE", "nce", 2),
     ];
+    let methods = common::methods();
     let mut columns = vec!["model"];
-    let headers = ["RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU", "Heuristic"];
-    columns.extend(headers);
+    columns.extend(methods.iter().copied());
     let mut table = Table::new("Table 3 — scheduling time (s) per method", &columns);
+    let mut anytime = Table::new(
+        "Table 3b — incumbent cost ($) at 10/100/1k evaluations",
+        &columns,
+    );
 
     // Warm the PJRT executable cache (one-time policy compilation) so the
     // first row's RL timings are comparable to the rest.
@@ -39,11 +49,17 @@ fn main() {
         let model = zoo::by_name(model_name).unwrap();
         let pool = simulated_types(types, true);
         let mut cells = vec![label.to_string()];
-        for method in common::methods() {
+        let mut budget_cells = vec![label.to_string()];
+        for method in &methods {
             let out = common::run_method(method, &model, &pool, 20_000.0, 42);
             cells.push(fmt_secs(out.wall_time.as_secs_f64()));
+            let curve =
+                common::anytime_costs(method, &model, &pool, 20_000.0, 42, &MILESTONES);
+            budget_cells.push(common::fmt_curve(&curve));
         }
         table.row(&cells);
+        anytime.row(&budget_cells);
     }
     table.emit("table3_sched_time");
+    anytime.emit("table3_anytime");
 }

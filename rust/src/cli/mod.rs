@@ -40,14 +40,38 @@ impl Args {
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Typed accessors: an absent option yields the default, but a present
+    /// value that fails to parse is an error naming the option — never a
+    /// silent fallback (`--types foo` must not quietly become `--types 2`).
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.opt_parse(key, "an unsigned integer").map(|v| v.unwrap_or(default))
     }
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.opt_parse(key, "a number").map(|v| v.unwrap_or(default))
     }
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.opt_parse(key, "an unsigned integer").map(|v| v.unwrap_or(default))
+    }
+    /// Optional typed accessors for options with no default.
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        self.opt_parse(key, "an unsigned integer")
+    }
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.opt_parse(key, "a number")
+    }
+    fn opt_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        expected: &'static str,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => raw.parse().map(Some).map_err(|_| CliError::InvalidValue {
+                option: key.to_string(),
+                value: raw.to_string(),
+                expected,
+            }),
+        }
     }
     pub fn flag(&self, key: &str) -> bool {
         self.flags.get(key).copied().unwrap_or(false)
@@ -63,6 +87,8 @@ pub enum CliError {
     UnknownOption(String, String),
     #[error("option `--{0}` requires a value")]
     MissingValue(String),
+    #[error("option `--{option}` has invalid value `{value}` (expected {expected})")]
+    InvalidValue { option: String, value: String, expected: &'static str },
     #[error("help requested")]
     Help(String),
 }
@@ -196,8 +222,24 @@ mod tests {
         assert_eq!(args.command, "schedule");
         assert_eq!(args.positionals, vec!["rl"]);
         assert_eq!(args.str_or("model", "?"), "nce");
-        assert_eq!(args.usize_or("types", 0), 4); // default
+        assert_eq!(args.usize_or("types", 0).unwrap(), 4); // default
         assert!(args.flag("verbose"));
+    }
+
+    #[test]
+    fn unparseable_values_error_instead_of_defaulting() {
+        let args = cli().parse(&sv(&["schedule", "--types", "foo"])).unwrap();
+        match args.usize_or("types", 2) {
+            Err(CliError::InvalidValue { option, value, .. }) => {
+                assert_eq!(option, "types");
+                assert_eq!(value, "foo");
+            }
+            other => panic!("expected InvalidValue, got {other:?}"),
+        }
+        // Absent keys still fall back to the caller's default.
+        assert_eq!(args.f64_or("missing", 1.5).unwrap(), 1.5);
+        assert_eq!(args.opt_usize("missing").unwrap(), None);
+        assert!(args.opt_f64("types").is_err());
     }
 
     #[test]

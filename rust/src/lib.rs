@@ -22,15 +22,35 @@
 //!
 //! ## Quickstart
 //!
+//! Methods are named through the typed [`sched::SchedulerSpec`] registry
+//! and searched through budgeted, resumable sessions:
+//!
 //! ```no_run
 //! use heterps::prelude::*;
 //!
 //! let model = heterps::model::zoo::ctrdnn();
 //! let pool = heterps::resources::paper_testbed();
 //! let cm = CostModel::new(&model, &pool, CostConfig::default());
-//! let mut scheduler = heterps::sched::rl::RlScheduler::tabular(Default::default(), 42);
-//! let outcome = scheduler.schedule(&cm);
+//!
+//! // Typed spec from a CLI-style string; `spec.to_string()` round-trips.
+//! let spec = SchedulerSpec::parse("rl:rounds=80,lr=0.6")?;
+//! let scheduler = spec.build(42);
+//!
+//! // One-shot: drive the search to exhaustion.
+//! // (`scheduler.schedule(&cm)` is the same thing on a `mut` scheduler.)
+//! let outcome = heterps::sched::drive(
+//!     scheduler.session(&cm, Budget::unlimited()).as_mut(),
+//!     None,
+//! )?;
 //! println!("plan {} costs ${:.2}", outcome.plan.render(), outcome.eval.cost_usd);
+//!
+//! // Budgeted + warm-started: reschedule after an elastic pool change,
+//! // spending at most 500 evaluations and improving on the old plan.
+//! let mut session = scheduler.session(&cm, Budget::evals(500));
+//! session.warm_start(&outcome.plan);
+//! while !session.step().converged { /* observe session.report() */ }
+//! let rescheduled = session.outcome()?;
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 
 pub mod cli;
@@ -55,6 +75,9 @@ pub mod prelude {
     pub use crate::model::{LayerKind, LayerSpec, ModelSpec};
     pub use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
     pub use crate::resources::{paper_testbed, simulated_types, ResourceKind, ResourcePool};
-    pub use crate::sched::{ScheduleOutcome, Scheduler};
+    pub use crate::sched::{
+        Budget, ScheduleError, ScheduleOutcome, Scheduler, SchedulerSpec, SearchSession,
+        StepReport,
+    };
     pub use crate::util::rng::Rng;
 }

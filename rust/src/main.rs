@@ -2,17 +2,34 @@
 //!
 //! Subcommands mirror the framework's lifecycle: `schedule` a model onto a
 //! heterogeneous pool, `compare` the full §6.2 scheduler suite, `simulate`
-//! a plan on a virtual cluster, `info` the catalogs.
+//! a plan on a virtual cluster, `info`/`methods` the catalogs.
+//!
+//! Schedulers are named through the typed spec registry: a positional like
+//! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
+//! configures the method, and `--budget-evals` / `--budget-secs` /
+//! `--target-cost` bound the search session.
 
 use heterps::cli::{Cli, CliError, CmdSpec, OptSpec};
 use heterps::cost::{CostConfig, CostModel};
 use heterps::metrics::Table;
 use heterps::model::zoo;
 use heterps::resources::simulated_types;
-use heterps::sched;
+use heterps::sched::{self, Budget, SchedulerSpec, StepReport};
 use heterps::simulator::{simulate_plan, SimConfig};
+use std::time::Duration;
 
 fn cli() -> Cli {
+    let spec_help: &'static str = Box::leak(
+        format!(
+            "scheduler spec `name[:key=value,...]` — methods: {}",
+            sched::registry()
+                .iter()
+                .map(|m| m.canonical)
+                .collect::<Vec<_>>()
+                .join("|")
+        )
+        .into_boxed_str(),
+    );
     let common = || {
         vec![
             OptSpec { name: "model", help: "zoo model (ctrdnn|matchnet|2emb|nce|ctrdnn1|ctrdnn2|ctrdnn8|ctrdnn12|ctrdnn20)", takes_value: true, default: Some("ctrdnn") },
@@ -23,6 +40,14 @@ fn cli() -> Cli {
             OptSpec { name: "config", help: "TOML config file (see configs/default.toml)", takes_value: true, default: None },
         ]
     };
+    let budget = || {
+        vec![
+            OptSpec { name: "budget-evals", help: "stop the search after this many cost-model evaluations", takes_value: true, default: None },
+            OptSpec { name: "budget-secs", help: "wall-clock deadline for the search, in seconds", takes_value: true, default: None },
+            OptSpec { name: "target-cost", help: "stop once a feasible plan at or below this cost ($) is held", takes_value: true, default: None },
+            OptSpec { name: "progress", help: "print the incumbent after every search step", takes_value: false, default: None },
+        ]
+    };
     Cli {
         bin: "heterps",
         about: "distributed DNN training with RL-based scheduling in heterogeneous environments",
@@ -30,13 +55,13 @@ fn cli() -> Cli {
             CmdSpec {
                 name: "schedule",
                 about: "run one scheduler and print the plan, provisioning and cost",
-                opts: common(),
-                positionals: vec![("method", "rl|rl-rnn|rl-tabular|bf|bo|genetic|greedy|cpu|gpu|heuristic")],
+                opts: common().into_iter().chain(budget()).collect(),
+                positionals: vec![("spec", spec_help)],
             },
             CmdSpec {
                 name: "compare",
                 about: "run the full §6.2 scheduler comparison",
-                opts: common(),
+                opts: common().into_iter().chain(budget()).collect(),
                 positionals: vec![],
             },
             CmdSpec {
@@ -58,7 +83,13 @@ fn cli() -> Cli {
             },
             CmdSpec {
                 name: "info",
-                about: "print the model zoo and resource catalog",
+                about: "print the model zoo, resource catalog and scheduler registry",
+                opts: vec![],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "methods",
+                about: "list registered scheduler methods (canonical names, one per line)",
                 opts: vec![],
                 positionals: vec![],
             },
@@ -84,6 +115,12 @@ fn main() {
 
     let run = || -> anyhow::Result<()> {
         match args.command.as_str() {
+            "methods" => {
+                for m in sched::registry() {
+                    println!("{}", m.canonical);
+                }
+                Ok(())
+            }
             "info" => {
                 let mut t = Table::new("Model zoo", &["name", "layers", "params (MB)"]);
                 for name in ["ctrdnn", "matchnet", "2emb", "nce", "ctrdnn1", "ctrdnn2"] {
@@ -110,6 +147,19 @@ fn main() {
                     ]);
                 }
                 println!("{}", t.render());
+                let mut t = Table::new(
+                    "Scheduler registry",
+                    &["method", "aliases", "options", "about"],
+                );
+                for m in sched::registry() {
+                    t.row(&[
+                        m.canonical.to_string(),
+                        m.aliases.join(", "),
+                        m.options.join(","),
+                        m.about.to_string(),
+                    ]);
+                }
+                println!("{}", t.render());
                 Ok(())
             }
             "train" => {
@@ -117,9 +167,10 @@ fn main() {
                 let cfg_get = |k: &str, d: usize| {
                     file.as_ref().map(|c| c.usize_or(k, d)).unwrap_or(d)
                 };
-                let steps = args.usize_or("steps", cfg_get("train.steps", 20));
-                let microbatches = args.usize_or("microbatches", cfg_get("train.microbatches", 2));
-                let vocab = args.usize_or("vocab", cfg_get("train.vocab", 100_000));
+                let steps = args.usize_or("steps", cfg_get("train.steps", 20))?;
+                let microbatches =
+                    args.usize_or("microbatches", cfg_get("train.microbatches", 2))?;
+                let vocab = args.usize_or("vocab", cfg_get("train.vocab", 100_000))?;
                 run_train(steps, microbatches, vocab)?;
                 Ok(())
             }
@@ -129,8 +180,8 @@ fn main() {
                 let model = zoo::by_name(model_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
                 let n_types = match &file {
-                    Some(c) => c.usize_or("pool.types", args.usize_or("types", 2)),
-                    None => args.usize_or("types", 2),
+                    Some(c) => c.usize_or("pool.types", args.usize_or("types", 2)?),
+                    None => args.usize_or("types", 2)?,
                 }
                 .max(1);
                 let include_cpu = match &file {
@@ -147,18 +198,65 @@ fn main() {
                     cfg.infeasible_penalty =
                         c.f64_or("cost.infeasible_penalty", cfg.infeasible_penalty);
                 }
-                cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit);
+                cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit)?;
                 let cm = CostModel::new(&model, &pool, cfg);
-                let seed = args.u64_or("seed", 42);
+                let seed = args.u64_or("seed", 42)?;
+
+                let budget_from_args = || -> anyhow::Result<Budget> {
+                    let mut budget = Budget::unlimited();
+                    if let Some(n) = args.opt_usize("budget-evals")? {
+                        budget.max_evaluations = Some(n);
+                    }
+                    if let Some(secs) = args.opt_f64("budget-secs")? {
+                        // from_secs_f64 panics on negative/NaN/infinite input.
+                        if !secs.is_finite() || secs < 0.0 {
+                            anyhow::bail!(
+                                "option `--budget-secs` has invalid value `{secs}` \
+                                 (expected a non-negative number of seconds)"
+                            );
+                        }
+                        budget.deadline = Some(Duration::from_secs_f64(secs));
+                    }
+                    if let Some(cost) = args.opt_f64("target-cost")? {
+                        budget.target_cost = Some(cost);
+                    }
+                    Ok(budget)
+                };
 
                 match args.command.as_str() {
                     "schedule" => {
-                        let method =
-                            args.positionals.first().map(|s| s.as_str()).unwrap_or("rl");
-                        let mut s = sched::by_name(method, seed)
-                            .ok_or_else(|| anyhow::anyhow!("unknown scheduler {method}"))?;
-                        let out = s.schedule(&cm);
-                        println!("method      : {}", s.name());
+                        // Positional spec wins; else `[scheduler]` in the
+                        // config file; else the paper's default method.
+                        let spec = match args.positionals.first() {
+                            Some(s) => SchedulerSpec::parse(s)?,
+                            None => match &file {
+                                Some(c) => SchedulerSpec::from_config(c)?
+                                    .map_or_else(|| SchedulerSpec::parse("rl"), Ok)?,
+                                None => SchedulerSpec::parse("rl")?,
+                            },
+                        };
+                        let budget = budget_from_args()?;
+                        let scheduler = spec.build(seed);
+                        let mut session = scheduler.session(&cm, budget.clone());
+                        let progress = args.flag("progress");
+                        let mut observer = |r: &StepReport| {
+                            if progress {
+                                if let Some(e) = &r.incumbent_eval {
+                                    println!(
+                                        "  [{:>7} evals] incumbent ${:.2}{}",
+                                        r.evaluations,
+                                        e.cost_usd,
+                                        if e.feasible { "" } else { " (infeasible)" }
+                                    );
+                                }
+                            }
+                        };
+                        let out = sched::drive(session.as_mut(), Some(&mut observer))?;
+                        println!("spec        : {spec}");
+                        if !budget.is_unlimited() {
+                            println!("budget      : evals {:?}, deadline {:?}, target {:?}",
+                                budget.max_evaluations, budget.deadline, budget.target_cost);
+                        }
                         println!("plan        : {}", out.plan.render());
                         println!("stages      : {}", out.plan.stages().len());
                         println!("replicas    : {:?}", out.eval.provisioning.replicas);
@@ -180,25 +278,40 @@ fn main() {
                         );
                     }
                     "compare" => {
+                        let budget = budget_from_args()?;
                         let mut t = Table::new(
                             format!("Scheduler comparison — {model_name}, {n_types} types"),
-                            &["method", "cost ($)", "throughput", "feasible", "sched time (s)"],
+                            &["spec", "cost ($)", "throughput", "feasible", "sched time (s)", "evals"],
                         );
+                        let progress = args.flag("progress");
                         for m in sched::comparison_methods() {
-                            let mut s = sched::by_name(m, seed).unwrap();
-                            let out = s.schedule(&cm);
+                            let spec = SchedulerSpec::parse(m)?;
+                            let scheduler = spec.build(seed);
+                            let mut session = scheduler.session(&cm, budget.clone());
+                            let mut observer = |r: &StepReport| {
+                                if progress {
+                                    if let Some(e) = &r.incumbent_eval {
+                                        println!(
+                                            "  [{m}] {:>7} evals, incumbent ${:.2}",
+                                            r.evaluations, e.cost_usd
+                                        );
+                                    }
+                                }
+                            };
+                            let out = sched::drive(session.as_mut(), Some(&mut observer))?;
                             t.row(&[
-                                m.to_string(),
+                                spec.to_string(),
                                 format!("{:.2}", out.eval.cost_usd),
                                 format!("{:.0}", out.eval.throughput),
                                 out.eval.feasible.to_string(),
                                 format!("{:.3}", out.wall_time.as_secs_f64()),
+                                out.evaluations.to_string(),
                             ]);
                         }
                         println!("{}", t.render());
                     }
                     _ => {
-                        let mut s = sched::by_name("rl", seed).unwrap();
+                        let mut s = SchedulerSpec::parse("rl")?.build(seed);
                         let out = s.schedule(&cm);
                         println!("plan: {}", out.plan.render());
                         match simulate_plan(&cm, &out.plan, &SimConfig::default(), seed) {

@@ -5,16 +5,17 @@
 //! acquisition, maximized by random candidate sampling plus a local
 //! mutation pass around the incumbent. The paper observes BO's sampling
 //! randomness gives it high variance and occasionally poor corner-case
-//! plans — the same behaviour emerges here.
+//! plans — the same behaviour emerges here. As a session, the first step
+//! evaluates the random initial design and every following step runs one
+//! GP-guided acquisition iteration.
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
+use super::{session_delegate, Budget, Scheduler, SearchSession, SessionCore, StepReport};
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
 use crate::util::matrix::{cholesky, solve_lower, solve_upper_t, sqdist, Mat};
 use crate::util::rng::Rng;
-use std::time::Instant;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BoConfig {
     /// Random plans evaluated before the GP takes over.
     pub init_samples: usize,
@@ -42,12 +43,12 @@ impl Default for BoConfig {
 
 pub struct BayesianOpt {
     cfg: BoConfig,
-    rng: Rng,
+    seed: u64,
 }
 
 impl BayesianOpt {
     pub fn new(cfg: BoConfig, seed: u64) -> Self {
-        BayesianOpt { cfg, rng: Rng::new(seed) }
+        BayesianOpt { cfg, seed }
     }
 
     fn encode(assignment: &[usize], nt: usize) -> Vec<f64> {
@@ -57,9 +58,23 @@ impl BayesianOpt {
         }
         x
     }
+}
 
-    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
-        (-sqdist(a, b) / (2.0 * self.cfg.length_scale * self.cfg.length_scale)).exp()
+impl Scheduler for BayesianOpt {
+    fn name(&self) -> &str {
+        "bo"
+    }
+
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        Box::new(BoSession {
+            core: SessionCore::new(cm, budget),
+            cfg: self.cfg.clone(),
+            rng: Rng::new(self.seed),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            initialized: false,
+            iteration: 0,
+        })
     }
 }
 
@@ -80,101 +95,168 @@ fn big_phi(x: f64) -> f64 {
     }
 }
 
-impl Scheduler for BayesianOpt {
+/// A Bayesian-optimization search in progress.
+pub struct BoSession<'a> {
+    core: SessionCore<'a>,
+    cfg: BoConfig,
+    rng: Rng,
+    /// Encoded observations.
+    xs: Vec<Vec<f64>>,
+    /// Observed log-costs.
+    ys: Vec<f64>,
+    initialized: bool,
+    iteration: usize,
+}
+
+impl BoSession<'_> {
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        (-sqdist(a, b) / (2.0 * self.cfg.length_scale * self.cfg.length_scale)).exp()
+    }
+
+    fn observe(&mut self, assignment: Vec<usize>) -> bool {
+        let nt = self.core.cm().pool.num_types();
+        match self.core.try_consider(&SchedulingPlan::new(assignment.clone())) {
+            Some(eval) => {
+                self.xs.push(BayesianOpt::encode(&assignment, nt));
+                self.ys.push(eval.cost_usd.ln());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// One GP iteration: condition on all observations, maximize EI over a
+    /// random + local-mutation candidate pool, evaluate the winner.
+    fn gp_iteration(&mut self) {
+        let nl = self.core.cm().model.num_layers();
+        let nt = self.core.cm().pool.num_types();
+        if self.xs.is_empty() {
+            // Degenerate design (init_samples = 0 and no warm start):
+            // continue with pure random sampling.
+            let a: Vec<usize> = (0..nl).map(|_| self.rng.below(nt)).collect();
+            self.observe(a);
+            return;
+        }
+        // Normalize targets for GP conditioning.
+        let ymean = crate::util::stats::mean(&self.ys);
+        let ystd = crate::util::stats::stddev(&self.ys).max(1e-9);
+        let yn: Vec<f64> = self.ys.iter().map(|y| (y - ymean) / ystd).collect();
+
+        // K + noise*I, Cholesky; on failure, inflate jitter.
+        let n = self.xs.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&self.xs[i], &self.xs[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        let mut jitter = self.cfg.noise;
+        let l = loop {
+            let mut kj = k.clone();
+            for i in 0..n {
+                kj[(i, i)] += jitter;
+            }
+            if let Some(l) = cholesky(&kj) {
+                break l;
+            }
+            jitter *= 10.0;
+            if jitter > 1.0 {
+                // Degenerate design; fall back to random continuation.
+                break Mat::identity(n);
+            }
+        };
+        let alpha = solve_upper_t(&l, &solve_lower(&l, &yn));
+
+        // Candidate pool: uniform random + mutations of the incumbent.
+        let incumbent =
+            self.core.best_plan().expect("BO incumbent after init").assignment.clone();
+        let mut best_cand: Option<(f64, Vec<usize>)> = None;
+        let y_best = yn.iter().cloned().fold(f64::INFINITY, f64::min);
+        for c in 0..self.cfg.candidates {
+            let cand: Vec<usize> = if c % 2 == 0 {
+                (0..nl).map(|_| self.rng.below(nt)).collect()
+            } else {
+                let mut m = incumbent.clone();
+                let flips = 1 + self.rng.below(3);
+                for _ in 0..flips {
+                    let pos = self.rng.below(nl);
+                    m[pos] = self.rng.below(nt);
+                }
+                m
+            };
+            let xc = BayesianOpt::encode(&cand, nt);
+            // GP posterior at xc.
+            let kstar: Vec<f64> = self.xs.iter().map(|x| self.kernel(x, &xc)).collect();
+            let mu: f64 = kstar.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            let v = solve_lower(&l, &kstar);
+            let var =
+                (self.kernel(&xc, &xc) - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+            let sigma = var.sqrt();
+            // EI for minimization.
+            let z = (y_best - mu) / sigma;
+            let ei = sigma * (z * big_phi(z) + phi(z));
+            if best_cand.as_ref().map_or(true, |(b, _)| ei > *b) {
+                best_cand = Some((ei, cand));
+            }
+        }
+        let (_, chosen) = best_cand.expect("candidate pool is non-empty");
+        self.observe(chosen);
+    }
+}
+
+impl SearchSession for BoSession<'_> {
     fn name(&self) -> &str {
         "bo"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
-        let nl = cm.model.num_layers();
-        let nt = cm.pool.num_types();
-        let mut bt = BestTracker::new();
-
-        let mut xs: Vec<Vec<f64>> = Vec::new(); // encoded observations
-        let mut plans: Vec<Vec<usize>> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new(); // observed (normalized) costs
-
-        // Initial random design.
-        for _ in 0..self.cfg.init_samples {
-            let a: Vec<usize> = (0..nl).map(|_| self.rng.below(nt)).collect();
-            let eval = bt.consider(cm, &SchedulingPlan::new(a.clone()));
-            xs.push(Self::encode(&a, nt));
-            plans.push(a);
-            ys.push(eval.cost_usd.ln());
+    fn step(&mut self) -> StepReport {
+        if self.core.is_done() {
+            return self.core.report();
         }
-
-        for _ in 0..self.cfg.iterations {
-            // Normalize targets for GP conditioning.
-            let ymean = crate::util::stats::mean(&ys);
-            let ystd = crate::util::stats::stddev(&ys).max(1e-9);
-            let yn: Vec<f64> = ys.iter().map(|y| (y - ymean) / ystd).collect();
-
-            // K + noise*I, Cholesky; on failure, inflate jitter.
-            let n = xs.len();
-            let mut k = Mat::zeros(n, n);
-            for i in 0..n {
-                for j in 0..=i {
-                    let v = self.kernel(&xs[i], &xs[j]);
-                    k[(i, j)] = v;
-                    k[(j, i)] = v;
+        if !self.initialized {
+            // Initial random design.
+            let nl = self.core.cm().model.num_layers();
+            let nt = self.core.cm().pool.num_types();
+            for _ in 0..self.cfg.init_samples {
+                let a: Vec<usize> = (0..nl).map(|_| self.rng.below(nt)).collect();
+                if !self.observe(a) {
+                    break;
                 }
             }
-            let mut jitter = self.cfg.noise;
-            let l = loop {
-                let mut kj = k.clone();
-                for i in 0..n {
-                    kj[(i, i)] += jitter;
-                }
-                if let Some(l) = cholesky(&kj) {
-                    break l;
-                }
-                jitter *= 10.0;
-                if jitter > 1.0 {
-                    // Degenerate design; fall back to random continuation.
-                    break Mat::identity(n);
-                }
-            };
-            let alpha = solve_upper_t(&l, &solve_lower(&l, &yn));
-
-            // Candidate pool: uniform random + mutations of the incumbent.
-            let incumbent = bt.best_plan.as_ref().unwrap().assignment.clone();
-            let mut best_cand: Option<(f64, Vec<usize>)> = None;
-            let y_best = yn.iter().cloned().fold(f64::INFINITY, f64::min);
-            for c in 0..self.cfg.candidates {
-                let cand: Vec<usize> = if c % 2 == 0 {
-                    (0..nl).map(|_| self.rng.below(nt)).collect()
-                } else {
-                    let mut m = incumbent.clone();
-                    let flips = 1 + self.rng.below(3);
-                    for _ in 0..flips {
-                        let pos = self.rng.below(nl);
-                        m[pos] = self.rng.below(nt);
-                    }
-                    m
-                };
-                let xc = Self::encode(&cand, nt);
-                // GP posterior at xc.
-                let kstar: Vec<f64> = xs.iter().map(|x| self.kernel(x, &xc)).collect();
-                let mu: f64 = kstar.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-                let v = solve_lower(&l, &kstar);
-                let var = (self.kernel(&xc, &xc) - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
-                let sigma = var.sqrt();
-                // EI for minimization.
-                let z = (y_best - mu) / sigma;
-                let ei = sigma * (z * big_phi(z) + phi(z));
-                if best_cand.as_ref().map_or(true, |(b, _)| ei > *b) {
-                    best_cand = Some((ei, cand));
+            self.initialized = true;
+            if self.cfg.iterations == 0 {
+                self.core.mark_done();
+            }
+        } else {
+            self.gp_iteration();
+            if !self.core.is_done() {
+                self.iteration += 1;
+                if self.iteration >= self.cfg.iterations {
+                    self.core.mark_done();
                 }
             }
-            let (_, chosen) = best_cand.unwrap();
-            let eval = bt.consider(cm, &SchedulingPlan::new(chosen.clone()));
-            xs.push(Self::encode(&chosen, nt));
-            plans.push(chosen);
-            ys.push(eval.cost_usd.ln());
         }
-        bt.finish(started)
+        self.core.report()
     }
+
+    /// Beyond seeding the incumbent, the warm plan becomes a GP
+    /// observation, so acquisition immediately models the region around
+    /// the production plan instead of starting blind. Plans that don't
+    /// fit this model/pool shape are ignored.
+    fn warm_start(&mut self, plan: &SchedulingPlan) {
+        if !self.core.plan_fits(plan) {
+            return;
+        }
+        let nt = self.core.cm().pool.num_types();
+        if let Some(eval) = self.core.try_consider(plan) {
+            self.xs.push(BayesianOpt::encode(&plan.assignment, nt));
+            self.ys.push(eval.cost_usd.ln());
+        }
+    }
+
+    session_delegate!();
 }
 
 #[cfg(test)]
@@ -222,5 +304,27 @@ mod tests {
         // Different seeds may land on different plans (the paper's
         // "randomness of the sampling process") — but both are finite-cost.
         assert!(a.eval.cost_usd.is_finite() && b.eval.cost_usd.is_finite());
+    }
+
+    #[test]
+    fn zero_iterations_evaluates_only_the_init_design() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let cfg = BoConfig { iterations: 0, ..Default::default() };
+        let out = BayesianOpt::new(cfg.clone(), 11).schedule(&cm);
+        assert_eq!(out.evaluations, cfg.init_samples);
+    }
+
+    #[test]
+    fn bo_session_respects_budget_mid_init() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        // Default init design is 24 samples; a budget of 10 cuts it short.
+        let mut session =
+            BayesianOpt::new(Default::default(), 11).session(&cm, Budget::evals(10));
+        let out = crate::sched::drive(session.as_mut(), None).unwrap();
+        assert_eq!(out.evaluations, 10);
     }
 }

@@ -3,16 +3,24 @@
 //! Guaranteed optimal; used by the evaluation to (a) verify that RL finds
 //! the optimum on small instances and (b) demonstrate the combinatorial
 //! blow-up that makes exhaustive search impractical past ~16 layers with
-//! 4 types — exactly the paper's Table 2 story.
+//! 4 types — exactly the paper's Table 2 story. As a session the odometer
+//! enumerates in chunks, so a [`Budget`] turns BF into the anytime
+//! truncated-enumeration baseline of the per-budget tables.
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
+use super::{
+    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
+    StepReport,
+};
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
-use std::time::Instant;
+
+/// Plans enumerated per [`SearchSession::step`] call.
+const STEP_CHUNK: usize = 1024;
 
 pub struct BruteForce {
     /// Optional cap on evaluations (safety valve for benches; `None`
-    /// reproduces the paper's unbounded enumeration).
+    /// reproduces the paper's unbounded enumeration). Folded into the
+    /// session budget as an additional `max_evaluations` bound.
     pub max_evaluations: Option<usize>,
 }
 
@@ -42,36 +50,69 @@ impl Scheduler for BruteForce {
         "bf"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
-        let nl = cm.model.num_layers();
-        let nt = cm.pool.num_types();
-        let mut bt = BestTracker::new();
-        // Odometer enumeration to avoid recursion and re-allocation.
-        let mut assignment = vec![0usize; nl];
-        loop {
-            bt.consider(cm, &SchedulingPlan::new(assignment.clone()));
-            if let Some(cap) = self.max_evaluations {
-                if bt.evaluations >= cap {
-                    break;
-                }
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        let mut budget = budget;
+        if let Some(cap) = self.max_evaluations {
+            // Legacy `with_cap` semantics evaluated the first plan before
+            // checking the cap, so a zero cap still yields one evaluation
+            // (and `schedule()` never panics). An explicit zero-evaluation
+            // session budget still wins and degrades gracefully.
+            let legacy = cap.max(1);
+            budget.max_evaluations =
+                Some(budget.max_evaluations.map_or(legacy, |b| b.min(legacy)));
+        }
+        Box::new(BruteForceSession {
+            core: SessionCore::new(cm, budget),
+            assignment: vec![0; cm.model.num_layers()],
+        })
+    }
+}
+
+/// Odometer enumeration in progress (no recursion, no re-allocation).
+pub struct BruteForceSession<'a> {
+    core: SessionCore<'a>,
+    assignment: Vec<usize>,
+}
+
+impl BruteForceSession<'_> {
+    /// Increment the odometer; `false` once the space is exhausted.
+    fn advance(&mut self) -> bool {
+        let nt = self.core.cm().pool.num_types();
+        for pos in 0..self.assignment.len() {
+            self.assignment[pos] += 1;
+            if self.assignment[pos] < nt {
+                return true;
             }
-            // Increment the odometer.
-            let mut pos = 0;
-            loop {
-                if pos == nl {
-                    return bt.finish(started);
-                }
-                assignment[pos] += 1;
-                if assignment[pos] < nt {
-                    break;
-                }
-                assignment[pos] = 0;
-                pos += 1;
+            self.assignment[pos] = 0;
+        }
+        false
+    }
+}
+
+impl SearchSession for BruteForceSession<'_> {
+    fn name(&self) -> &str {
+        "bf"
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.core.is_done() {
+            return self.core.report();
+        }
+        for _ in 0..STEP_CHUNK {
+            let plan = SchedulingPlan::new(self.assignment.clone());
+            if self.core.try_consider(&plan).is_none() {
+                break; // budget hit; the core already marked the session done
+            }
+            if !self.advance() {
+                self.core.mark_done();
+                break;
             }
         }
-        bt.finish(started)
+        self.core.report()
     }
+
+    session_delegate!();
+    session_warm_start!();
 }
 
 #[cfg(test)]
@@ -120,6 +161,31 @@ mod tests {
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         let out = BruteForce::with_cap(7).schedule(&cm);
         assert_eq!(out.evaluations, 7);
+    }
+
+    #[test]
+    fn session_budget_tightens_the_cap() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        // The session budget and the legacy cap compose: min wins.
+        let mut session = BruteForce::with_cap(20).session(&cm, Budget::evals(5));
+        let out = crate::sched::drive(session.as_mut(), None).unwrap();
+        assert_eq!(out.evaluations, 5);
+        let mut session = BruteForce::with_cap(5).session(&cm, Budget::evals(20));
+        let out = crate::sched::drive(session.as_mut(), None).unwrap();
+        assert_eq!(out.evaluations, 5);
+    }
+
+    #[test]
+    fn with_cap_zero_still_evaluates_once() {
+        // Legacy semantics: the pre-session code evaluated the first plan
+        // before checking the cap, so `schedule()` must not panic here.
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let out = BruteForce::with_cap(0).schedule(&cm);
+        assert_eq!(out.evaluations, 1);
     }
 
     #[test]

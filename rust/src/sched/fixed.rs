@@ -1,33 +1,15 @@
 //! The non-searching baselines of §6.2: CPU-only, GPU-only, and the
 //! AIBox/BytePS-style static heuristic (data-intensive front on CPUs,
-//! everything else on the accelerator) [61].
+//! everything else on the accelerator) [61]. Each opens a single-step
+//! session that evaluates its one fixed plan and converges.
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
+use super::{
+    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
+    StepReport,
+};
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
 use crate::resources::ResourceKind;
-use std::time::Instant;
-
-/// All layers on the CPU type (falls back to type 0 in CPU-less pools).
-pub struct CpuOnly;
-
-impl Scheduler for CpuOnly {
-    fn name(&self) -> &str {
-        "cpu"
-    }
-
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
-        let t = cm.pool.cpu_type().map(|c| c.id).unwrap_or(0);
-        let mut bt = BestTracker::new();
-        bt.consider(cm, &SchedulingPlan::uniform(cm.model.num_layers(), t));
-        bt.finish(started)
-    }
-}
-
-/// All layers on the anchor accelerator type (the first non-CPU type —
-/// the V100 in the paper's testbed).
-pub struct GpuOnly;
 
 /// The anchor GPU: first non-CPU type, or type 0 when the pool is all-CPU.
 pub(crate) fn anchor_gpu(cm: &CostModel) -> usize {
@@ -39,17 +21,65 @@ pub(crate) fn anchor_gpu(cm: &CostModel) -> usize {
         .unwrap_or(0)
 }
 
+/// Session shared by every fixed baseline: one plan, one evaluation.
+struct FixedSession<'a> {
+    core: SessionCore<'a>,
+    plan: SchedulingPlan,
+    label: &'static str,
+}
+
+impl SearchSession for FixedSession<'_> {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn step(&mut self) -> StepReport {
+        if !self.core.is_done() {
+            let _ = self.core.try_consider(&self.plan);
+            self.core.mark_done();
+        }
+        self.core.report()
+    }
+
+    session_delegate!();
+    session_warm_start!();
+}
+
+fn fixed_session<'a>(
+    cm: &'a CostModel<'a>,
+    budget: Budget,
+    plan: SchedulingPlan,
+    label: &'static str,
+) -> Box<dyn SearchSession + 'a> {
+    Box::new(FixedSession { core: SessionCore::new(cm, budget), plan, label })
+}
+
+/// All layers on the CPU type (falls back to type 0 in CPU-less pools).
+pub struct CpuOnly;
+
+impl Scheduler for CpuOnly {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        let t = cm.pool.cpu_type().map(|c| c.id).unwrap_or(0);
+        fixed_session(cm, budget, SchedulingPlan::uniform(cm.model.num_layers(), t), "cpu")
+    }
+}
+
+/// All layers on the anchor accelerator type (the first non-CPU type —
+/// the V100 in the paper's testbed).
+pub struct GpuOnly;
+
 impl Scheduler for GpuOnly {
     fn name(&self) -> &str {
         "gpu"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
         let t = anchor_gpu(cm);
-        let mut bt = BestTracker::new();
-        bt.consider(cm, &SchedulingPlan::uniform(cm.model.num_layers(), t));
-        bt.finish(started)
+        fixed_session(cm, budget, SchedulingPlan::uniform(cm.model.num_layers(), t), "gpu")
     }
 }
 
@@ -66,8 +96,7 @@ impl Scheduler for Heuristic {
         "heuristic"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
         let gpu = anchor_gpu(cm);
         let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
         let assignment: Vec<usize> = cm
@@ -76,9 +105,7 @@ impl Scheduler for Heuristic {
             .iter()
             .map(|l| if l.index == 0 { gpu } else { cpu })
             .collect();
-        let mut bt = BestTracker::new();
-        bt.consider(cm, &SchedulingPlan::new(assignment));
-        bt.finish(started)
+        fixed_session(cm, budget, SchedulingPlan::new(assignment), "heuristic")
     }
 }
 
@@ -126,5 +153,19 @@ mod tests {
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         let out = Heuristic.schedule(&cm);
         assert!(out.plan.assignment.iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn fixed_session_is_single_step() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut session = GpuOnly.session(&cm, Budget::unlimited());
+        let report = session.step();
+        assert!(report.converged);
+        assert!(!report.budget_exhausted);
+        assert_eq!(report.evaluations, 1);
+        // Stepping past convergence is a no-op.
+        assert_eq!(session.step().evaluations, 1);
     }
 }

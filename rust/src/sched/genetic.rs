@@ -1,13 +1,14 @@
 //! Genetic-algorithm scheduling [3] (§6.2 baseline): tournament selection,
-//! one-point crossover, per-gene mutation, elitism.
+//! one-point crossover, per-gene mutation, elitism. As a session, the
+//! first step evaluates the random initial population and every following
+//! step breeds and evaluates one generation.
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
+use super::{session_delegate, Budget, Scheduler, SearchSession, SessionCore, StepReport};
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
 use crate::util::rng::Rng;
-use std::time::Instant;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GeneticConfig {
     pub population: usize,
     pub generations: usize,
@@ -32,12 +33,12 @@ impl Default for GeneticConfig {
 
 pub struct Genetic {
     cfg: GeneticConfig,
-    rng: Rng,
+    seed: u64,
 }
 
 impl Genetic {
     pub fn new(cfg: GeneticConfig, seed: u64) -> Self {
-        Genetic { cfg, rng: Rng::new(seed) }
+        Genetic { cfg, seed }
     }
 }
 
@@ -46,69 +47,148 @@ impl Scheduler for Genetic {
         "genetic"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
-        let nl = cm.model.num_layers();
-        let nt = cm.pool.num_types();
-        let cfg = self.cfg.clone();
-        let mut bt = BestTracker::new();
-
-        // Fitness: negative cost, with infeasible plans already penalized
-        // by the evaluator.
-        let mut population: Vec<Vec<usize>> = (0..cfg.population)
-            .map(|_| (0..nl).map(|_| self.rng.below(nt)).collect())
-            .collect();
-        let mut fitness: Vec<f64> = population
-            .iter()
-            .map(|a| -bt.consider(cm, &SchedulingPlan::new(a.clone())).cost_usd)
-            .collect();
-
-        for _gen in 0..cfg.generations {
-            // Elitism: carry the top `elites` genomes unchanged.
-            let mut order: Vec<usize> = (0..population.len()).collect();
-            order.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
-            let mut next: Vec<Vec<usize>> =
-                order.iter().take(cfg.elites).map(|&i| population[i].clone()).collect();
-
-            while next.len() < cfg.population {
-                let pa = self.tournament_pick(&fitness);
-                let pb = self.tournament_pick(&fitness);
-                let mut child = if self.rng.chance(cfg.crossover_prob) {
-                    let cut = self.rng.range(1, nl.max(2));
-                    let mut c = population[pa][..cut.min(nl)].to_vec();
-                    c.extend_from_slice(&population[pb][cut.min(nl)..]);
-                    c
-                } else {
-                    population[pa].clone()
-                };
-                for gene in child.iter_mut() {
-                    if self.rng.chance(cfg.mutation_prob) {
-                        *gene = self.rng.below(nt);
-                    }
-                }
-                next.push(child);
-            }
-            population = next;
-            fitness = population
-                .iter()
-                .map(|a| -bt.consider(cm, &SchedulingPlan::new(a.clone())).cost_usd)
-                .collect();
-        }
-        bt.finish(started)
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        Box::new(GeneticSession {
+            core: SessionCore::new(cm, budget),
+            cfg: self.cfg.clone(),
+            rng: Rng::new(self.seed),
+            population: Vec::new(),
+            fitness: Vec::new(),
+            warm_genomes: Vec::new(),
+            generation: 0,
+            initialized: false,
+        })
     }
 }
 
-impl Genetic {
-    fn tournament_pick(&mut self, fitness: &[f64]) -> usize {
-        let mut best = self.rng.below(fitness.len());
-        for _ in 1..self.cfg.tournament {
-            let c = self.rng.below(fitness.len());
-            if fitness[c] > fitness[best] {
-                best = c;
+fn tournament_pick(rng: &mut Rng, fitness: &[f64], rounds: usize) -> usize {
+    let mut best = rng.below(fitness.len());
+    for _ in 1..rounds {
+        let c = rng.below(fitness.len());
+        if fitness[c] > fitness[best] {
+            best = c;
+        }
+    }
+    best
+}
+
+/// A genetic search in progress.
+pub struct GeneticSession<'a> {
+    core: SessionCore<'a>,
+    cfg: GeneticConfig,
+    rng: Rng,
+    population: Vec<Vec<usize>>,
+    fitness: Vec<f64>,
+    /// Warm-start plans with their (already-paid-for) fitness: besides
+    /// seeding the incumbent, they join the generation-0 gene pool so
+    /// crossover/mutation search *around* them.
+    warm_genomes: Vec<(Vec<usize>, f64)>,
+    generation: usize,
+    initialized: bool,
+}
+
+impl GeneticSession<'_> {
+    /// Fitness: negative cost, with infeasible plans already penalized by
+    /// the evaluator. `false` when the budget cut the evaluation short.
+    fn evaluate_population(&mut self) -> bool {
+        self.fitness.clear();
+        for genome in &self.population {
+            match self.core.try_consider(&SchedulingPlan::new(genome.clone())) {
+                Some(eval) => self.fitness.push(-eval.cost_usd),
+                None => return false,
             }
         }
-        best
+        true
     }
+
+    fn breed_next_generation(&mut self) {
+        let nl = self.core.cm().model.num_layers();
+        let nt = self.core.cm().pool.num_types();
+        // Elitism: carry the top `elites` genomes unchanged.
+        let mut order: Vec<usize> = (0..self.population.len()).collect();
+        order.sort_by(|&a, &b| self.fitness[b].partial_cmp(&self.fitness[a]).unwrap());
+        let mut next: Vec<Vec<usize>> =
+            order.iter().take(self.cfg.elites).map(|&i| self.population[i].clone()).collect();
+
+        while next.len() < self.cfg.population {
+            let pa = tournament_pick(&mut self.rng, &self.fitness, self.cfg.tournament);
+            let pb = tournament_pick(&mut self.rng, &self.fitness, self.cfg.tournament);
+            let mut child = if self.rng.chance(self.cfg.crossover_prob) {
+                let cut = self.rng.range(1, nl.max(2));
+                let mut c = self.population[pa][..cut.min(nl)].to_vec();
+                c.extend_from_slice(&self.population[pb][cut.min(nl)..]);
+                c
+            } else {
+                self.population[pa].clone()
+            };
+            for gene in child.iter_mut() {
+                if self.rng.chance(self.cfg.mutation_prob) {
+                    *gene = self.rng.below(nt);
+                }
+            }
+            next.push(child);
+        }
+        self.population = next;
+    }
+}
+
+impl SearchSession for GeneticSession<'_> {
+    fn name(&self) -> &str {
+        "genetic"
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.core.is_done() {
+            return self.core.report();
+        }
+        if !self.initialized {
+            let nl = self.core.cm().model.num_layers();
+            let nt = self.core.cm().pool.num_types();
+            self.population = (0..self.cfg.population)
+                .map(|_| (0..nl).map(|_| self.rng.below(nt)).collect())
+                .collect();
+            self.evaluate_population();
+            // Warm-start genomes (validated and already evaluated at
+            // warm_start time) join the generation-0 gene pool with their
+            // cached fitness — no second evaluation, so tight budgets
+            // keep every evaluation for new candidates. The pool shrinks
+            // back to `population` at the first breeding.
+            for (genome, fit) in std::mem::take(&mut self.warm_genomes) {
+                self.population.push(genome);
+                self.fitness.push(fit);
+            }
+            self.initialized = true;
+            if self.cfg.generations == 0 {
+                self.core.mark_done();
+            }
+        } else {
+            self.breed_next_generation();
+            if self.evaluate_population() {
+                self.generation += 1;
+                if self.generation >= self.cfg.generations {
+                    self.core.mark_done();
+                }
+            }
+        }
+        self.core.report()
+    }
+
+    /// Beyond seeding the incumbent, the warm plan joins the generation-0
+    /// gene pool (if the session has not started evolving yet), so the
+    /// genetic operators search around it rather than from scratch.
+    /// Plans that don't fit this model/pool shape are ignored.
+    fn warm_start(&mut self, plan: &SchedulingPlan) {
+        if !self.core.plan_fits(plan) {
+            return;
+        }
+        if let Some(eval) = self.core.try_consider(plan) {
+            if !self.initialized {
+                self.warm_genomes.push((plan.assignment.clone(), -eval.cost_usd));
+            }
+        }
+    }
+
+    session_delegate!();
 }
 
 #[cfg(test)]
@@ -151,5 +231,42 @@ mod tests {
         let out = Genetic::new(Default::default(), 5).schedule(&cm);
         out.plan.validate(&model, &pool).unwrap();
         assert!(out.eval.cost_usd.is_finite());
+    }
+
+    #[test]
+    fn zero_generations_evaluates_only_the_initial_population() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let cfg = GeneticConfig { generations: 0, ..Default::default() };
+        let out = Genetic::new(cfg.clone(), 1).schedule(&cm);
+        assert_eq!(out.evaluations, cfg.population);
+    }
+
+    #[test]
+    fn warm_start_joins_the_gene_pool_without_a_second_evaluation() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let cfg = GeneticConfig { generations: 0, ..Default::default() };
+        let scheduler = Genetic::new(cfg.clone(), 1);
+        let mut session = scheduler.session(&cm, Budget::unlimited());
+        session.warm_start(&crate::plan::SchedulingPlan::uniform(5, 0));
+        let out = crate::sched::drive(session.as_mut(), None).unwrap();
+        // 1 warm evaluation + the random initial population; the warm
+        // genome's fitness is reused, not re-evaluated.
+        assert_eq!(out.evaluations, 1 + cfg.population);
+    }
+
+    #[test]
+    fn genetic_session_stops_mid_generation_on_budget() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        // 50 is not a multiple of the 48-genome population: the budget must
+        // cut a generation partway through.
+        let mut session = Genetic::new(Default::default(), 3).session(&cm, Budget::evals(50));
+        let out = crate::sched::drive(session.as_mut(), None).unwrap();
+        assert_eq!(out.evaluations, 50);
     }
 }

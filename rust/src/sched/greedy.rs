@@ -8,11 +8,16 @@
 //! 2. one coordinate-descent sweep — revisit layers in order, keeping a
 //!    flip only when the *full* plan evaluation improves. A single sweep
 //!    terminates in the nearest local optimum.
+//!
+//! As a session, step 1 computes and evaluates the myopic assignment and
+//! each following step sweeps one layer.
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
-use crate::cost::CostModel;
+use super::{
+    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
+    StepReport,
+};
+use crate::cost::{CostModel, PlanEval};
 use crate::plan::{SchedulingPlan, StageSpan};
-use std::time::Instant;
 
 pub struct Greedy;
 
@@ -33,13 +38,33 @@ impl Scheduler for Greedy {
         "greedy"
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        let started = Instant::now();
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        Box::new(GreedySession {
+            core: SessionCore::new(cm, budget),
+            current: SchedulingPlan::new(Vec::new()),
+            current_eval: None,
+            layer: 0,
+            initialized: false,
+        })
+    }
+}
+
+/// A greedy search in progress.
+pub struct GreedySession<'a> {
+    core: SessionCore<'a>,
+    current: SchedulingPlan,
+    current_eval: Option<PlanEval>,
+    layer: usize,
+    initialized: bool,
+}
+
+impl GreedySession<'_> {
+    /// Phase 1: isolated per-layer dollar rate = price_t * OCT(l, t)
+    /// (dollars to push one profiling batch through layer l on type t).
+    fn myopic_assignment(&self) -> Vec<usize> {
+        let cm = self.core.cm();
         let nl = cm.model.num_layers();
         let nt = cm.pool.num_types();
-
-        // Phase 1: isolated per-layer dollar rate = price_t * OCT(l, t)
-        // (dollars to push one profiling batch through layer l on type t).
         let mut assignment = Vec::with_capacity(nl);
         for l in 0..nl {
             let mut best_t = 0;
@@ -55,32 +80,65 @@ impl Scheduler for Greedy {
             }
             assignment.push(best_t);
         }
+        assignment
+    }
 
-        let mut bt = BestTracker::new();
-        let mut current = SchedulingPlan::new(assignment);
-        let mut current_eval = bt.consider(cm, &current);
-
-        // Phase 2: single coordinate-descent sweep.
-        for l in 0..nl {
-            let orig = current.assignment[l];
-            for t in 0..nt {
-                if t == orig {
-                    continue;
-                }
-                let mut cand = current.clone();
-                cand.assignment[l] = t;
-                let eval = bt.consider(cm, &cand);
-                let better = (eval.feasible && !current_eval.feasible)
-                    || (eval.feasible == current_eval.feasible
-                        && eval.cost_usd < current_eval.cost_usd);
-                if better {
-                    current = cand;
-                    current_eval = eval;
+    /// Phase 2 unit: coordinate-descent over one layer's type choices.
+    fn sweep_layer(&mut self) {
+        let nt = self.core.cm().pool.num_types();
+        let l = self.layer;
+        let orig = self.current.assignment[l];
+        for t in 0..nt {
+            if t == orig {
+                continue;
+            }
+            let mut cand = self.current.clone();
+            cand.assignment[l] = t;
+            match self.core.try_consider(&cand) {
+                None => return,
+                Some(eval) => {
+                    let cur = self.current_eval.as_ref().expect("initialized before sweep");
+                    let better = (eval.feasible && !cur.feasible)
+                        || (eval.feasible == cur.feasible && eval.cost_usd < cur.cost_usd);
+                    if better {
+                        self.current = cand;
+                        self.current_eval = Some(eval);
+                    }
                 }
             }
         }
-        bt.finish(started)
     }
+}
+
+impl SearchSession for GreedySession<'_> {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.core.is_done() {
+            return self.core.report();
+        }
+        if !self.initialized {
+            self.current = SchedulingPlan::new(self.myopic_assignment());
+            let plan = self.current.clone();
+            self.current_eval = self.core.try_consider(&plan);
+            self.initialized = true;
+            if self.current.num_layers() == 0 {
+                self.core.mark_done();
+            }
+        } else {
+            self.sweep_layer();
+            self.layer += 1;
+            if self.layer >= self.current.num_layers() {
+                self.core.mark_done();
+            }
+        }
+        self.core.report()
+    }
+
+    session_delegate!();
+    session_warm_start!();
 }
 
 #[cfg(test)]
@@ -120,5 +178,20 @@ mod tests {
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         let out = Greedy::new().schedule(&cm);
         assert_eq!(out.plan.assignment[0], 0, "embedding should sit on CPU");
+    }
+
+    #[test]
+    fn greedy_session_steps_once_per_layer() {
+        let model = zoo::nce(); // 5 layers
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut session = Greedy::new().session(&cm, Budget::unlimited());
+        let mut steps = 0;
+        while !session.step().converged {
+            steps += 1;
+            assert!(steps < 100);
+        }
+        // 1 init step + 5 sweep steps (the final one reports converged).
+        assert_eq!(session.evaluations(), 1 + 5);
     }
 }

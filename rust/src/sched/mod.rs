@@ -6,6 +6,20 @@
 //! RL with an LSTM policy (ours), RL with an Elman RNN, Brute Force,
 //! Bayesian Optimization, Genetic, Greedy, CPU-only, GPU-only and the
 //! AIBox/BytePS heuristic.
+//!
+//! Two entry points:
+//!
+//! * [`Scheduler::schedule`] — the one-shot convenience call: drive the
+//!   search to its own exhaustion and return the best plan found.
+//! * [`Scheduler::session`] — an interruptible [`SearchSession`] bounded by
+//!   a [`Budget`] (evaluation cap, wall-clock deadline, target cost).
+//!   Tables 2–3 compare schedulers *under a scheduling-time budget*, and
+//!   the elastic-provisioning path reschedules incrementally via
+//!   [`SearchSession::warm_start`] when the resource pool changes.
+//!
+//! Methods are named and configured through the typed [`SchedulerSpec`]
+//! registry (see [`spec`]), parseable from CLI strings
+//! (`rl:rounds=80,lr=0.6`) and `[scheduler]` config sections.
 
 pub mod bayesian;
 pub mod bruteforce;
@@ -13,6 +27,9 @@ pub mod fixed;
 pub mod genetic;
 pub mod greedy;
 pub mod rl;
+pub mod spec;
+
+pub use spec::{lookup, registry, FixedKind, MethodInfo, RlVariant, SchedulerSpec, SpecError};
 
 use crate::cost::{CostModel, PlanEval};
 use crate::plan::SchedulingPlan;
@@ -29,11 +46,145 @@ pub struct ScheduleOutcome {
     pub evaluations: usize,
 }
 
+/// Scheduling failed to produce any plan.
+#[derive(Debug, thiserror::Error)]
+pub enum ScheduleError {
+    /// The session stopped before its first cost-model evaluation — a
+    /// zero-evaluation budget or an already-expired deadline.
+    #[error("scheduler evaluated no plans (budget exhausted before the first evaluation?)")]
+    NoPlansEvaluated,
+}
+
+/// Limits on a [`SearchSession`]. The default is unlimited: the session
+/// runs until the search itself converges.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Budget {
+    /// Stop before exceeding this many cost-model evaluations.
+    pub max_evaluations: Option<usize>,
+    /// Stop once this much wall-clock time has elapsed since the session
+    /// was opened.
+    pub deadline: Option<Duration>,
+    /// Stop as soon as a *feasible* plan at or below this cost is held.
+    pub target_cost: Option<f64>,
+}
+
+impl Budget {
+    /// No limits: the session runs to the search's own exhaustion.
+    pub fn unlimited() -> Self {
+        Budget::default()
+    }
+
+    /// Cap on cost-model evaluations.
+    pub fn evals(n: usize) -> Self {
+        Budget { max_evaluations: Some(n), ..Default::default() }
+    }
+
+    pub fn with_max_evaluations(mut self, n: usize) -> Self {
+        self.max_evaluations = Some(n);
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_target_cost(mut self, cost: f64) -> Self {
+        self.target_cost = Some(cost);
+        self
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_evaluations.is_none() && self.deadline.is_none() && self.target_cost.is_none()
+    }
+}
+
+/// Snapshot returned by every [`SearchSession::step`].
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Best plan found so far (`None` until the first evaluation).
+    pub incumbent_plan: Option<SchedulingPlan>,
+    /// Evaluation of the incumbent plan.
+    pub incumbent_eval: Option<PlanEval>,
+    /// Cumulative cost-model evaluations consumed.
+    pub evaluations: usize,
+    /// The session will do no further work: the search exhausted itself,
+    /// the budget ran out, or the target cost was reached.
+    pub converged: bool,
+    /// The stop (when `converged`) was forced by the [`Budget`] rather
+    /// than the search's own termination.
+    pub budget_exhausted: bool,
+}
+
+/// An interruptible, warm-startable scheduling search.
+///
+/// Obtained from [`Scheduler::session`]. Each `step()` performs one unit
+/// of search work — a training round for RL, a generation for Genetic, a
+/// GP iteration for BO, an enumeration chunk for BF — and reports the
+/// incumbent, so callers can stop anytime, record anytime curves, or
+/// interleave scheduling with other work (the DL2-style online setting).
+pub trait SearchSession {
+    /// Canonical method name (matches the registry).
+    fn name(&self) -> &str;
+
+    /// Perform one unit of search work. Returns the post-step snapshot;
+    /// once `converged` is reported, further calls are no-ops returning
+    /// the same snapshot.
+    fn step(&mut self) -> StepReport;
+
+    /// Seed the search with an externally supplied plan — typically the
+    /// plan in production before an elastic pool change. The plan is
+    /// evaluated under the session's cost model (consuming one evaluation,
+    /// subject to the budget) and becomes the incumbent if it leads.
+    /// Sessions integrate it as deeply as their search state allows:
+    /// Genetic seeds its initial population with it, BO adds it as a GP
+    /// observation; the others keep it as the incumbent to beat. Plans
+    /// that don't fit the session's model/pool shape are ignored.
+    fn warm_start(&mut self, plan: &SchedulingPlan);
+
+    /// Cumulative cost-model evaluations consumed.
+    fn evaluations(&self) -> usize;
+
+    /// Current snapshot without doing any work.
+    fn report(&self) -> StepReport;
+
+    /// Build the outcome from the current incumbent.
+    fn outcome(&self) -> Result<ScheduleOutcome, ScheduleError>;
+}
+
+/// Observer invoked after every step of [`drive`].
+pub type ProgressObserver<'o> = &'o mut dyn FnMut(&StepReport);
+
+/// Drive a session until it converges, invoking `observer` (when given)
+/// after every step, then return the outcome.
+pub fn drive(
+    session: &mut dyn SearchSession,
+    mut observer: Option<ProgressObserver<'_>>,
+) -> Result<ScheduleOutcome, ScheduleError> {
+    loop {
+        let report = session.step();
+        if let Some(obs) = observer.as_mut() {
+            obs(&report);
+        }
+        if report.converged {
+            return session.outcome();
+        }
+    }
+}
+
 /// A scheduling method.
 pub trait Scheduler {
     fn name(&self) -> &str;
-    /// Produce a plan for the cost model's (model, pool, config) triple.
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome;
+
+    /// Open an interruptible search session over `cm`, bounded by `budget`.
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a>;
+
+    /// Convenience wrapper: drive an unlimited session to exhaustion.
+    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
+        let mut session = self.session(cm, Budget::unlimited());
+        drive(session.as_mut(), None)
+            .expect("unlimited session must evaluate at least one plan")
+    }
 }
 
 /// Helper: evaluate a candidate, tracking the incumbent best.
@@ -67,37 +218,180 @@ impl BestTracker {
         eval
     }
 
-    pub fn finish(self, started: Instant) -> ScheduleOutcome {
-        ScheduleOutcome {
-            plan: self.best_plan.expect("scheduler evaluated no plans"),
-            eval: self.best_eval.expect("scheduler evaluated no plans"),
-            wall_time: started.elapsed(),
-            evaluations: self.evaluations,
+    /// One-shot outcome construction; sessions go through
+    /// [`SessionCore::outcome`] instead, so this is kept for direct
+    /// `BestTracker` users (and its tests).
+    #[allow(dead_code)]
+    pub fn finish(self, started: Instant) -> Result<ScheduleOutcome, ScheduleError> {
+        match (self.best_plan, self.best_eval) {
+            (Some(plan), Some(eval)) => Ok(ScheduleOutcome {
+                plan,
+                eval,
+                wall_time: started.elapsed(),
+                evaluations: self.evaluations,
+            }),
+            _ => Err(ScheduleError::NoPlansEvaluated),
         }
     }
 }
 
-/// Construct every scheduler of the paper's §6.2 comparison by name.
-/// `seed` controls the stochastic methods.
-pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
-    match name {
-        "rl" | "rl-lstm" => Some(Box::new(rl::RlScheduler::lstm(rl::RlConfig::default(), seed))),
-        "rl-tabular" => Some(Box::new(rl::RlScheduler::tabular(rl::RlConfig::default(), seed))),
-        "rl-rnn" => Some(Box::new(rl::RlScheduler::rnn(rl::RlConfig::default(), seed))),
-        "bf" | "bruteforce" => Some(Box::new(bruteforce::BruteForce::new())),
-        "bo" | "bayesian" => Some(Box::new(bayesian::BayesianOpt::new(Default::default(), seed))),
-        "genetic" => Some(Box::new(genetic::Genetic::new(Default::default(), seed))),
-        "greedy" => Some(Box::new(greedy::Greedy::new())),
-        "cpu" => Some(Box::new(fixed::CpuOnly)),
-        "gpu" => Some(Box::new(fixed::GpuOnly)),
-        "heuristic" => Some(Box::new(fixed::Heuristic)),
-        _ => None,
+/// Shared session state: the cost model, the incumbent tracker and the
+/// budget gate every evaluation passes through.
+pub(crate) struct SessionCore<'a> {
+    cm: &'a CostModel<'a>,
+    bt: BestTracker,
+    budget: Budget,
+    started: Instant,
+    done: bool,
+    budget_stop: bool,
+}
+
+impl<'a> SessionCore<'a> {
+    pub(crate) fn new(cm: &'a CostModel<'a>, budget: Budget) -> Self {
+        SessionCore {
+            cm,
+            bt: BestTracker::new(),
+            budget,
+            started: Instant::now(),
+            done: false,
+            budget_stop: false,
+        }
+    }
+
+    pub(crate) fn cm(&self) -> &'a CostModel<'a> {
+        self.cm
+    }
+
+    /// Evaluate a candidate unless the budget is spent. `None` means the
+    /// session just became done (budget/deadline/target hit); the caller
+    /// must abandon its current unit of work.
+    pub(crate) fn try_consider(&mut self, plan: &SchedulingPlan) -> Option<PlanEval> {
+        if self.done {
+            return None;
+        }
+        if self.budget_spent() {
+            self.done = true;
+            self.budget_stop = true;
+            return None;
+        }
+        Some(self.bt.consider(self.cm, plan))
+    }
+
+    fn budget_spent(&self) -> bool {
+        if let Some(max) = self.budget.max_evaluations {
+            if self.bt.evaluations >= max {
+                return true;
+            }
+        }
+        if let Some(deadline) = self.budget.deadline {
+            if self.started.elapsed() >= deadline {
+                return true;
+            }
+        }
+        if let Some(target) = self.budget.target_cost {
+            if let Some(best) = &self.bt.best_eval {
+                if best.feasible && best.cost_usd <= target {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// The search finished its own work (distinct from a budget stop).
+    pub(crate) fn mark_done(&mut self) {
+        self.done = true;
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// `true` when the plan fits this session's model/pool shape — warm
+    /// starts arriving after an elastic pool change may be stale.
+    pub(crate) fn plan_fits(&self, plan: &SchedulingPlan) -> bool {
+        plan.num_layers() == self.cm.model.num_layers()
+            && plan.assignment.iter().all(|&t| t < self.cm.pool.num_types())
+    }
+
+    pub(crate) fn warm_start(&mut self, plan: &SchedulingPlan) {
+        if self.plan_fits(plan) {
+            let _ = self.try_consider(plan);
+        }
+    }
+
+    pub(crate) fn evaluations(&self) -> usize {
+        self.bt.evaluations
+    }
+
+    pub(crate) fn best_plan(&self) -> Option<&SchedulingPlan> {
+        self.bt.best_plan.as_ref()
+    }
+
+    pub(crate) fn report(&self) -> StepReport {
+        StepReport {
+            incumbent_plan: self.bt.best_plan.clone(),
+            incumbent_eval: self.bt.best_eval.clone(),
+            evaluations: self.bt.evaluations,
+            converged: self.done,
+            budget_exhausted: self.budget_stop,
+        }
+    }
+
+    pub(crate) fn outcome(&self) -> Result<ScheduleOutcome, ScheduleError> {
+        match (&self.bt.best_plan, &self.bt.best_eval) {
+            (Some(plan), Some(eval)) => Ok(ScheduleOutcome {
+                plan: plan.clone(),
+                eval: eval.clone(),
+                wall_time: self.started.elapsed(),
+                evaluations: self.bt.evaluations,
+            }),
+            _ => Err(ScheduleError::NoPlansEvaluated),
+        }
     }
 }
 
-/// The method names of the Figure 5–11 comparison, in paper order.
-pub fn comparison_methods() -> &'static [&'static str] {
-    &["rl", "rl-rnn", "bo", "genetic", "greedy", "gpu", "cpu", "heuristic"]
+/// Implements the [`SearchSession`] bookkeeping methods every session
+/// delegates to its `core` field, so each session only writes `name()`,
+/// `step()` and (when it integrates the plan into its search state, like
+/// Genetic and BO) `warm_start()` itself.
+macro_rules! session_delegate {
+    () => {
+        fn evaluations(&self) -> usize {
+            self.core.evaluations()
+        }
+        fn report(&self) -> crate::sched::StepReport {
+            self.core.report()
+        }
+        fn outcome(
+            &self,
+        ) -> Result<crate::sched::ScheduleOutcome, crate::sched::ScheduleError> {
+            self.core.outcome()
+        }
+    };
+}
+
+/// The default incumbent-only [`SearchSession::warm_start`].
+macro_rules! session_warm_start {
+    () => {
+        fn warm_start(&mut self, plan: &crate::plan::SchedulingPlan) {
+            self.core.warm_start(plan);
+        }
+    };
+}
+pub(crate) use {session_delegate, session_warm_start};
+
+/// Construct every scheduler of the paper's §6.2 comparison by name.
+/// `seed` controls the stochastic methods.
+#[deprecated(note = "use `sched::SchedulerSpec::parse(name)?.build(seed)` via the registry")]
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    SchedulerSpec::parse(name).ok().map(|s| s.build(seed))
+}
+
+/// The method names of the Figure 5–11 comparison, in paper order,
+/// derived from the registry.
+pub fn comparison_methods() -> Vec<&'static str> {
+    registry().iter().filter(|m| m.in_comparison).map(|m| m.canonical).collect()
 }
 
 #[cfg(test)]
@@ -122,10 +416,51 @@ mod tests {
     }
 
     #[test]
-    fn by_name_covers_comparison_set() {
+    fn best_tracker_finish_is_non_panicking() {
+        let started = Instant::now();
+        assert!(matches!(
+            BestTracker::new().finish(started),
+            Err(ScheduleError::NoPlansEvaluated)
+        ));
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut bt = BestTracker::new();
+        bt.consider(&cm, &SchedulingPlan::uniform(5, 0));
+        let out = bt.finish(started).unwrap();
+        assert_eq!(out.evaluations, 1);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn by_name_shim_covers_comparison_set() {
         for m in comparison_methods() {
             assert!(by_name(m, 1).is_some(), "missing scheduler {m}");
         }
         assert!(by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn budget_constructors_compose() {
+        assert!(Budget::unlimited().is_unlimited());
+        let b = Budget::evals(10)
+            .with_deadline(Duration::from_secs(1))
+            .with_target_cost(5.0);
+        assert_eq!(b.max_evaluations, Some(10));
+        assert_eq!(b.deadline, Some(Duration::from_secs(1)));
+        assert_eq!(b.target_cost, Some(5.0));
+        assert!(!b.is_unlimited());
+    }
+
+    #[test]
+    fn zero_eval_budget_yields_no_plans_error() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut core = SessionCore::new(&cm, Budget::evals(0));
+        assert!(core.try_consider(&SchedulingPlan::uniform(5, 0)).is_none());
+        assert!(core.is_done());
+        assert!(core.report().budget_exhausted);
+        assert!(matches!(core.outcome(), Err(ScheduleError::NoPlansEvaluated)));
     }
 }

@@ -8,19 +8,26 @@
 //! The policy itself is pluggable (see [`policy`]): the paper's LSTM and
 //! the RL-RNN baseline execute as AOT-compiled HLO through PJRT; a tabular
 //! softmax policy provides an artifact-free ablation and test target.
+//!
+//! The search runs as a [`SearchSession`]: step 1 evaluates the warm-start
+//! candidates, each following step is one Algorithm 1 training round, and
+//! the final step greedily decodes the trained policy. A [`Budget`] can
+//! cut the session anywhere; the incumbent is always the best plan seen.
 
 pub mod policy;
 
-use super::{BestTracker, ScheduleOutcome, Scheduler};
+use super::{
+    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
+    StepReport,
+};
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
 use crate::util::rng::Rng;
 use crate::util::stats::Ema;
-use policy::{featurize, sample_actions, Policy, Sample, TabularPolicy};
-use std::time::Instant;
+use policy::{featurize, sample_actions, FeatureMatrix, Policy, Sample, TabularPolicy};
 
 /// Algorithm 1 hyper-parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RlConfig {
     /// `I`: training rounds.
     pub rounds: usize,
@@ -47,6 +54,7 @@ impl Default for RlConfig {
 }
 
 /// Which policy architecture backs the scheduler.
+#[derive(Clone, Copy)]
 enum PolicyKind {
     Tabular,
     /// LSTM via HLO artifacts; falls back to tabular when artifacts are
@@ -58,118 +66,80 @@ enum PolicyKind {
 pub struct RlScheduler {
     cfg: RlConfig,
     kind: PolicyKind,
-    rng: Rng,
+    seed: u64,
     label: &'static str,
+}
+
+fn make_policy(kind: PolicyKind, rng: &mut Rng) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Tabular => Box::new(TabularPolicy::new(rng)),
+        PolicyKind::HloLstm => match crate::runtime::policy::HloPolicy::load_lstm(rng) {
+            Ok(p) => Box::new(p),
+            Err(e) => {
+                eprintln!(
+                    "[rl] LSTM policy artifacts unavailable ({e}); falling back to tabular"
+                );
+                Box::new(TabularPolicy::new(rng))
+            }
+        },
+        PolicyKind::HloRnn => match crate::runtime::policy::HloPolicy::load_rnn(rng) {
+            Ok(p) => Box::new(p),
+            Err(e) => {
+                eprintln!(
+                    "[rl] RNN policy artifacts unavailable ({e}); falling back to tabular"
+                );
+                Box::new(TabularPolicy::new(rng))
+            }
+        },
+    }
 }
 
 impl RlScheduler {
     pub fn tabular(cfg: RlConfig, seed: u64) -> Self {
-        RlScheduler { cfg, kind: PolicyKind::Tabular, rng: Rng::new(seed), label: "rl-tabular" }
+        RlScheduler { cfg, kind: PolicyKind::Tabular, seed, label: "rl-tabular" }
     }
 
     /// The paper's method: REINFORCE + LSTM policy (§5.2).
     pub fn lstm(cfg: RlConfig, seed: u64) -> Self {
-        RlScheduler { cfg, kind: PolicyKind::HloLstm, rng: Rng::new(seed), label: "rl" }
+        RlScheduler { cfg, kind: PolicyKind::HloLstm, seed, label: "rl" }
     }
 
     /// The RL-RNN baseline (Elman RNN [54]).
     pub fn rnn(cfg: RlConfig, seed: u64) -> Self {
-        RlScheduler { cfg, kind: PolicyKind::HloRnn, rng: Rng::new(seed), label: "rl-rnn" }
+        RlScheduler { cfg, kind: PolicyKind::HloRnn, seed, label: "rl-rnn" }
     }
 
-    fn make_policy(&mut self) -> Box<dyn Policy> {
-        match self.kind {
-            PolicyKind::Tabular => Box::new(TabularPolicy::new(&mut self.rng)),
-            PolicyKind::HloLstm => match crate::runtime::policy::HloPolicy::load_lstm(&mut self.rng)
-            {
-                Ok(p) => Box::new(p),
-                Err(e) => {
-                    eprintln!(
-                        "[rl] LSTM policy artifacts unavailable ({e}); falling back to tabular"
-                    );
-                    Box::new(TabularPolicy::new(&mut self.rng))
-                }
-            },
-            PolicyKind::HloRnn => match crate::runtime::policy::HloPolicy::load_rnn(&mut self.rng) {
-                Ok(p) => Box::new(p),
-                Err(e) => {
-                    eprintln!(
-                        "[rl] RNN policy artifacts unavailable ({e}); falling back to tabular"
-                    );
-                    Box::new(TabularPolicy::new(&mut self.rng))
-                }
-            },
+    /// Open a concretely-typed session (the trait object path goes through
+    /// [`Scheduler::session`]; this one keeps the policy extractable).
+    pub fn open_session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> RlSession<'a> {
+        let mut rng = Rng::new(self.seed);
+        let pol = make_policy(self.kind, &mut rng);
+        RlSession {
+            core: SessionCore::new(cm, budget),
+            cfg: self.cfg.clone(),
+            label: self.label,
+            feats: featurize(cm),
+            pol,
+            rng,
+            baseline: Ema::new(self.cfg.baseline_gamma),
+            reward_scale: None,
+            round: 0,
+            phase: RlPhase::WarmStart,
         }
     }
 
-    /// Run Algorithm 1 and return the trained policy alongside the search
-    /// outcome (exposed for the pre-train / reuse flow of §6.2, where one
-    /// trained LSTM schedules multiple inputs).
-    pub fn train(&mut self, cm: &CostModel) -> (Box<dyn Policy>, ScheduleOutcome) {
-        let started = Instant::now();
-        let feats = featurize(cm);
-        let mut pol = self.make_policy();
-        let mut bt = BestTracker::new();
-        // Warm-start candidates: the degenerate plans any deployment would
-        // try first (every uniform single-type plan + the data-intensity
-        // split). The policy search must only ever improve on these.
-        let nl = cm.model.num_layers();
-        for t in 0..cm.pool.num_types() {
-            bt.consider(cm, &SchedulingPlan::uniform(nl, t));
-        }
-        let gpu = crate::sched::fixed::anchor_gpu(cm);
-        let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
-        bt.consider(
-            cm,
-            &SchedulingPlan::new(
-                cm.model
-                    .layers
-                    .iter()
-                    .map(|l| if l.kind.data_intensive() { cpu } else { gpu })
-                    .collect(),
-            ),
-        );
-        let mut baseline = Ema::new(self.cfg.baseline_gamma);
-        // Reward scale: normalize by the first round's mean |cost| so the
-        // advantage magnitude is architecture-independent.
-        let mut reward_scale: Option<f64> = None;
-
-        for round in 0..self.cfg.rounds {
-            let probs = pol.probs(&feats);
-            let mut rewards = Vec::with_capacity(self.cfg.samples_per_round);
-            let mut actions_batch = Vec::with_capacity(self.cfg.samples_per_round);
-            for _ in 0..self.cfg.samples_per_round {
-                let actions = sample_actions(&probs, &mut self.rng);
-                let eval = bt.consider(cm, &SchedulingPlan::new(actions.clone()));
-                // Alg 1 line 5: R_n <- Cost(SP); we ascend -cost.
-                rewards.push(-eval.cost_usd);
-                actions_batch.push(actions);
+    /// Run Algorithm 1 to exhaustion and return the trained policy
+    /// alongside the search outcome (exposed for the pre-train / reuse
+    /// flow of §6.2, where one trained LSTM schedules multiple inputs).
+    pub fn train(&mut self, cm: &CostModel) -> (Box<dyn Policy>, super::ScheduleOutcome) {
+        let mut session = self.open_session(cm, Budget::unlimited());
+        loop {
+            if session.step().converged {
+                break;
             }
-            let scale = *reward_scale.get_or_insert_with(|| {
-                rewards.iter().map(|r| r.abs()).sum::<f64>() / rewards.len() as f64 + 1e-9
-            });
-            let mean_r = crate::util::stats::mean(&rewards);
-            // Alg 1 line 8 — note the baseline update uses this round's
-            // mean; the advantage uses the baseline *before* folding it in
-            // (moving average of previous batches, as §5.2 specifies).
-            let b_prev = if round == 0 { mean_r } else { baseline.get() };
-            let samples: Vec<Sample> = actions_batch
-                .into_iter()
-                .zip(&rewards)
-                .map(|(actions, &r)| Sample { actions, advantage: (r - b_prev) / scale })
-                .collect();
-            let frac = round as f64 / self.cfg.rounds.max(1) as f64;
-            let lr = self.cfg.learning_rate
-                * (1.0 - (1.0 - self.cfg.lr_final_frac) * frac);
-            pol.update(&feats, &samples, lr);
-            baseline.update(mean_r);
         }
-
-        // Final greedy decode is also a candidate (the deployed plan).
-        let probs = pol.probs(&feats);
-        let decoded = policy::decode_actions(&probs);
-        bt.consider(cm, &SchedulingPlan::new(decoded));
-        (pol, bt.finish(started))
+        let outcome = session.outcome().expect("unlimited RL session evaluated no plans");
+        (session.into_policy(), outcome)
     }
 }
 
@@ -178,9 +148,137 @@ impl Scheduler for RlScheduler {
         self.label
     }
 
-    fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
-        self.train(cm).1
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        Box::new(self.open_session(cm, budget))
     }
+}
+
+enum RlPhase {
+    WarmStart,
+    Rounds,
+    Decode,
+}
+
+/// One Algorithm 1 search in progress.
+pub struct RlSession<'a> {
+    core: SessionCore<'a>,
+    cfg: RlConfig,
+    label: &'static str,
+    feats: FeatureMatrix,
+    pol: Box<dyn Policy>,
+    rng: Rng,
+    baseline: Ema,
+    reward_scale: Option<f64>,
+    round: usize,
+    phase: RlPhase,
+}
+
+impl RlSession<'_> {
+    /// The (possibly trained) policy, for the pre-train / reuse flow.
+    pub fn into_policy(self) -> Box<dyn Policy> {
+        self.pol
+    }
+
+    /// Warm-start candidates: the degenerate plans any deployment would
+    /// try first (every uniform single-type plan + the data-intensity
+    /// split). The policy search must only ever improve on these.
+    fn consider_warm_starts(&mut self) {
+        let cm = self.core.cm();
+        let nl = cm.model.num_layers();
+        for t in 0..cm.pool.num_types() {
+            if self.core.try_consider(&SchedulingPlan::uniform(nl, t)).is_none() {
+                return;
+            }
+        }
+        let gpu = crate::sched::fixed::anchor_gpu(cm);
+        let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
+        let split = SchedulingPlan::new(
+            cm.model
+                .layers
+                .iter()
+                .map(|l| if l.kind.data_intensive() { cpu } else { gpu })
+                .collect(),
+        );
+        let _ = self.core.try_consider(&split);
+    }
+
+    /// One Algorithm 1 round: sample `N` plans, score, update the policy.
+    /// A budget hit mid-round abandons the partial batch without updating.
+    fn run_round(&mut self) {
+        let probs = self.pol.probs(&self.feats);
+        let mut rewards = Vec::with_capacity(self.cfg.samples_per_round);
+        let mut actions_batch = Vec::with_capacity(self.cfg.samples_per_round);
+        for _ in 0..self.cfg.samples_per_round {
+            let actions = sample_actions(&probs, &mut self.rng);
+            match self.core.try_consider(&SchedulingPlan::new(actions.clone())) {
+                // Alg 1 line 5: R_n <- Cost(SP); we ascend -cost.
+                Some(eval) => {
+                    rewards.push(-eval.cost_usd);
+                    actions_batch.push(actions);
+                }
+                None => return,
+            }
+        }
+        if rewards.is_empty() {
+            return;
+        }
+        // Reward scale: normalize by the first round's mean |cost| so the
+        // advantage magnitude is architecture-independent.
+        let scale = *self.reward_scale.get_or_insert_with(|| {
+            rewards.iter().map(|r| r.abs()).sum::<f64>() / rewards.len() as f64 + 1e-9
+        });
+        let mean_r = crate::util::stats::mean(&rewards);
+        // Alg 1 line 8 — note the baseline update uses this round's mean;
+        // the advantage uses the baseline *before* folding it in (moving
+        // average of previous batches, as §5.2 specifies).
+        let b_prev = if self.round == 0 { mean_r } else { self.baseline.get() };
+        let samples: Vec<Sample> = actions_batch
+            .into_iter()
+            .zip(&rewards)
+            .map(|(actions, &r)| Sample { actions, advantage: (r - b_prev) / scale })
+            .collect();
+        let frac = self.round as f64 / self.cfg.rounds.max(1) as f64;
+        let lr = self.cfg.learning_rate * (1.0 - (1.0 - self.cfg.lr_final_frac) * frac);
+        self.pol.update(&self.feats, &samples, lr);
+        self.baseline.update(mean_r);
+    }
+}
+
+impl SearchSession for RlSession<'_> {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.core.is_done() {
+            return self.core.report();
+        }
+        match self.phase {
+            RlPhase::WarmStart => {
+                self.consider_warm_starts();
+                self.phase =
+                    if self.cfg.rounds == 0 { RlPhase::Decode } else { RlPhase::Rounds };
+            }
+            RlPhase::Rounds => {
+                self.run_round();
+                self.round += 1;
+                if self.round >= self.cfg.rounds {
+                    self.phase = RlPhase::Decode;
+                }
+            }
+            RlPhase::Decode => {
+                // Final greedy decode is also a candidate (the deployed plan).
+                let probs = self.pol.probs(&self.feats);
+                let decoded = policy::decode_actions(&probs);
+                let _ = self.core.try_consider(&SchedulingPlan::new(decoded));
+                self.core.mark_done();
+            }
+        }
+        self.core.report()
+    }
+
+    session_delegate!();
+    session_warm_start!();
 }
 
 #[cfg(test)]
@@ -248,5 +346,32 @@ mod tests {
         let out = RlScheduler::tabular(cfg, 1).schedule(&cm);
         // rounds*samples + warm starts (2 uniform + 1 split) + final decode.
         assert_eq!(out.evaluations, 10 * 4 + 2 + 1 + 1);
+    }
+
+    #[test]
+    fn rl_session_respects_eval_budget() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let sched = RlScheduler::tabular(RlConfig::default(), 5);
+        for cap in [1usize, 7, 23] {
+            let mut session = sched.open_session(&cm, Budget::evals(cap));
+            let out = crate::sched::drive(&mut session, None).unwrap();
+            assert!(out.evaluations <= cap, "cap {cap} exceeded: {}", out.evaluations);
+        }
+    }
+
+    #[test]
+    fn rl_session_warm_start_seeds_incumbent() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = cm(&model, &pool);
+        let sched = RlScheduler::tabular(RlConfig::default(), 5);
+        let mut session = sched.open_session(&cm, Budget::evals(1));
+        let seed_plan = SchedulingPlan::new(vec![0, 0, 1, 1, 1]);
+        session.warm_start(&seed_plan);
+        let out = crate::sched::drive(&mut session, None).unwrap();
+        assert_eq!(out.plan, seed_plan);
+        assert_eq!(out.evaluations, 1);
     }
 }

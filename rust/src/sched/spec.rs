@@ -1,0 +1,574 @@
+//! Typed scheduler specifications and the central method registry.
+//!
+//! Every scheduling method is registered once here, with its canonical
+//! name, aliases and typed option set. A [`SchedulerSpec`] carries the
+//! full configuration of a run and round-trips through three surfaces:
+//!
+//! * CLI strings — `rl:rounds=80,lr=0.6`, `bf:max_evals=5000`, `greedy`;
+//! * `[scheduler]` sections of the TOML-subset config module;
+//! * [`std::fmt::Display`] — the canonical form benches and logs record,
+//!   so every result row names *exactly* the configuration that ran.
+
+use super::bayesian::{BayesianOpt, BoConfig};
+use super::bruteforce::BruteForce;
+use super::fixed::{CpuOnly, GpuOnly, Heuristic};
+use super::genetic::{Genetic, GeneticConfig};
+use super::greedy::Greedy;
+use super::rl::{RlConfig, RlScheduler};
+use super::Scheduler;
+use crate::config::{Config, Value};
+use std::fmt;
+
+/// RL policy variants (§5.2 plus ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RlVariant {
+    /// The paper's method: REINFORCE over an LSTM policy.
+    Lstm,
+    /// The RL-RNN baseline (Elman RNN).
+    Rnn,
+    /// Artifact-free tabular softmax policy (ablation and test target).
+    Tabular,
+}
+
+/// The non-searching §6.2 baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FixedKind {
+    Cpu,
+    Gpu,
+    Heuristic,
+}
+
+/// A fully-typed scheduler configuration — method plus every option that
+/// affects what it does. The stochastic seed is supplied at [`build`] time
+/// so one spec can drive many seeded runs.
+///
+/// [`build`]: SchedulerSpec::build
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedulerSpec {
+    Rl { variant: RlVariant, cfg: RlConfig },
+    BruteForce { max_evaluations: Option<usize> },
+    Bayesian(BoConfig),
+    Genetic(GeneticConfig),
+    Greedy,
+    Fixed(FixedKind),
+}
+
+/// One registry row: everything the CLI, benches and docs need to know
+/// about a method without hard-coding its name anywhere else.
+#[derive(Debug)]
+pub struct MethodInfo {
+    /// Canonical name ([`SchedulerSpec::method`] and `Display` use this).
+    pub canonical: &'static str,
+    pub aliases: &'static [&'static str],
+    pub about: &'static str,
+    /// `key=value` options the spec accepts.
+    pub options: &'static [&'static str],
+    /// Member of the §6.2 comparison suite (rows appear in paper order).
+    pub in_comparison: bool,
+}
+
+const RL_OPTIONS: &[&str] = &["rounds", "samples", "gamma", "lr", "lr_final"];
+
+const REGISTRY: &[MethodInfo] = &[
+    MethodInfo {
+        canonical: "rl",
+        aliases: &["rl-lstm"],
+        about: "REINFORCE over the LSTM policy (the paper's method, §5.2)",
+        options: RL_OPTIONS,
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "rl-rnn",
+        aliases: &[],
+        about: "REINFORCE over an Elman RNN policy (baseline)",
+        options: RL_OPTIONS,
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "rl-tabular",
+        aliases: &[],
+        about: "REINFORCE over a tabular softmax policy (artifact-free ablation)",
+        options: RL_OPTIONS,
+        in_comparison: false,
+    },
+    MethodInfo {
+        canonical: "bf",
+        aliases: &["bruteforce"],
+        about: "exhaustive enumeration of the T^L plan space (Table 2)",
+        options: &["max_evals"],
+        in_comparison: false,
+    },
+    MethodInfo {
+        canonical: "bo",
+        aliases: &["bayesian"],
+        about: "Bayesian optimization with a GP surrogate and EI acquisition",
+        options: &["init", "iters", "candidates", "length_scale", "noise"],
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "genetic",
+        aliases: &[],
+        about: "genetic algorithm: tournament selection, crossover, mutation",
+        options: &["pop", "gens", "tournament", "crossover", "mutation", "elites"],
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "greedy",
+        aliases: &[],
+        about: "myopic per-layer assignment plus one coordinate-descent sweep",
+        options: &[],
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "gpu",
+        aliases: &[],
+        about: "all layers on the anchor accelerator type",
+        options: &[],
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "cpu",
+        aliases: &[],
+        about: "all layers on the CPU type",
+        options: &[],
+        in_comparison: true,
+    },
+    MethodInfo {
+        canonical: "heuristic",
+        aliases: &[],
+        about: "AIBox/BytePS static split: first layer on GPU, rest on CPU",
+        options: &[],
+        in_comparison: true,
+    },
+];
+
+/// The full method registry, in paper order.
+pub fn registry() -> &'static [MethodInfo] {
+    REGISTRY
+}
+
+/// Resolve a canonical name or alias to its registry row.
+pub fn lookup(name: &str) -> Option<&'static MethodInfo> {
+    REGISTRY.iter().find(|m| m.canonical == name || m.aliases.contains(&name))
+}
+
+fn known_names() -> String {
+    let names: Vec<&str> = REGISTRY.iter().map(|m| m.canonical).collect();
+    names.join(", ")
+}
+
+/// A spec failed to parse or validate.
+#[derive(Debug, PartialEq, thiserror::Error)]
+pub enum SpecError {
+    #[error("unknown scheduler `{0}` (known methods: {1})")]
+    UnknownMethod(String, String),
+    #[error("scheduler `{method}` has no option `{key}`{accepted}")]
+    UnknownOption { method: String, key: String, accepted: String },
+    #[error("option `{key}` cannot parse `{value}` as {expected}")]
+    BadValue { key: String, value: String, expected: &'static str },
+    #[error("invalid configuration for `{method}`: {reason}")]
+    Invalid { method: String, reason: String },
+    #[error("`[scheduler]` config section is missing the `method` key")]
+    MissingMethod,
+}
+
+fn unknown_option(method: &'static str, key: &str) -> SpecError {
+    let accepted = match lookup(method) {
+        Some(info) if !info.options.is_empty() => {
+            format!(" (accepted: {})", info.options.join(", "))
+        }
+        _ => " (it takes no options)".to_string(),
+    };
+    SpecError::UnknownOption { method: method.to_string(), key: key.to_string(), accepted }
+}
+
+fn p_usize(key: &str, value: &str) -> Result<usize, SpecError> {
+    value.parse().map_err(|_| SpecError::BadValue {
+        key: key.to_string(),
+        value: value.to_string(),
+        expected: "an unsigned integer",
+    })
+}
+
+fn p_f64(key: &str, value: &str) -> Result<f64, SpecError> {
+    value.parse().map_err(|_| SpecError::BadValue {
+        key: key.to_string(),
+        value: value.to_string(),
+        expected: "a number",
+    })
+}
+
+impl SchedulerSpec {
+    /// The default spec for a registered method name or alias.
+    pub fn by_method(name: &str) -> Result<SchedulerSpec, SpecError> {
+        let info = lookup(name)
+            .ok_or_else(|| SpecError::UnknownMethod(name.to_string(), known_names()))?;
+        Ok(match info.canonical {
+            "rl" => SchedulerSpec::Rl { variant: RlVariant::Lstm, cfg: RlConfig::default() },
+            "rl-rnn" => SchedulerSpec::Rl { variant: RlVariant::Rnn, cfg: RlConfig::default() },
+            "rl-tabular" => {
+                SchedulerSpec::Rl { variant: RlVariant::Tabular, cfg: RlConfig::default() }
+            }
+            "bf" => SchedulerSpec::BruteForce { max_evaluations: None },
+            "bo" => SchedulerSpec::Bayesian(BoConfig::default()),
+            "genetic" => SchedulerSpec::Genetic(GeneticConfig::default()),
+            "greedy" => SchedulerSpec::Greedy,
+            "gpu" => SchedulerSpec::Fixed(FixedKind::Gpu),
+            "cpu" => SchedulerSpec::Fixed(FixedKind::Cpu),
+            "heuristic" => SchedulerSpec::Fixed(FixedKind::Heuristic),
+            other => unreachable!("registry row `{other}` has no constructor"),
+        })
+    }
+
+    /// Parse a CLI spec string: `name` or `name:key=value,key=value,...`.
+    pub fn parse(text: &str) -> Result<SchedulerSpec, SpecError> {
+        let (name, opts) = match text.split_once(':') {
+            Some((n, o)) => (n.trim(), Some(o)),
+            None => (text.trim(), None),
+        };
+        let mut spec = Self::by_method(name)?;
+        if let Some(opts) = opts {
+            for pair in opts.split(',').filter(|p| !p.trim().is_empty()) {
+                let (key, value) = pair.split_once('=').ok_or_else(|| SpecError::BadValue {
+                    key: pair.trim().to_string(),
+                    value: String::new(),
+                    expected: "a `key=value` pair",
+                })?;
+                spec.set(key.trim(), value.trim())?;
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build from the `[scheduler]` section of a parsed config file.
+    /// Returns `Ok(None)` when the config has no such section.
+    pub fn from_config(cfg: &Config) -> Result<Option<SchedulerSpec>, SpecError> {
+        let keys: Vec<String> =
+            cfg.keys_under("scheduler.").into_iter().map(|k| k.to_string()).collect();
+        if keys.is_empty() {
+            return Ok(None);
+        }
+        let method = cfg
+            .get("scheduler.method")
+            .and_then(Value::as_str)
+            .ok_or(SpecError::MissingMethod)?;
+        let mut spec = Self::by_method(method)?;
+        for key in &keys {
+            let short = &key["scheduler.".len()..];
+            if short == "method" {
+                continue;
+            }
+            let value = cfg.get(key).expect("key listed under prefix");
+            spec.set(short, &value_to_string(value))?;
+        }
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+
+    /// Render as a `[scheduler]` config section; round-trips through
+    /// [`Config::parse`] + [`SchedulerSpec::from_config`].
+    pub fn to_toml(&self) -> String {
+        let mut out = format!("[scheduler]\nmethod = \"{}\"\n", self.method());
+        for (key, value) in self.option_pairs() {
+            out.push_str(&format!("{key} = {value}\n"));
+        }
+        out
+    }
+
+    /// Canonical registry name of this spec's method.
+    pub fn method(&self) -> &'static str {
+        match self {
+            SchedulerSpec::Rl { variant: RlVariant::Lstm, .. } => "rl",
+            SchedulerSpec::Rl { variant: RlVariant::Rnn, .. } => "rl-rnn",
+            SchedulerSpec::Rl { variant: RlVariant::Tabular, .. } => "rl-tabular",
+            SchedulerSpec::BruteForce { .. } => "bf",
+            SchedulerSpec::Bayesian(_) => "bo",
+            SchedulerSpec::Genetic(_) => "genetic",
+            SchedulerSpec::Greedy => "greedy",
+            SchedulerSpec::Fixed(FixedKind::Cpu) => "cpu",
+            SchedulerSpec::Fixed(FixedKind::Gpu) => "gpu",
+            SchedulerSpec::Fixed(FixedKind::Heuristic) => "heuristic",
+        }
+    }
+
+    /// Instantiate the scheduler; `seed` drives the stochastic methods.
+    pub fn build(&self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerSpec::Rl { variant, cfg } => match variant {
+                RlVariant::Lstm => Box::new(RlScheduler::lstm(cfg.clone(), seed)),
+                RlVariant::Rnn => Box::new(RlScheduler::rnn(cfg.clone(), seed)),
+                RlVariant::Tabular => Box::new(RlScheduler::tabular(cfg.clone(), seed)),
+            },
+            SchedulerSpec::BruteForce { max_evaluations } => Box::new(match max_evaluations {
+                Some(cap) => BruteForce::with_cap(*cap),
+                None => BruteForce::new(),
+            }),
+            SchedulerSpec::Bayesian(cfg) => Box::new(BayesianOpt::new(cfg.clone(), seed)),
+            SchedulerSpec::Genetic(cfg) => Box::new(Genetic::new(cfg.clone(), seed)),
+            SchedulerSpec::Greedy => Box::new(Greedy::new()),
+            SchedulerSpec::Fixed(FixedKind::Cpu) => Box::new(CpuOnly),
+            SchedulerSpec::Fixed(FixedKind::Gpu) => Box::new(GpuOnly),
+            SchedulerSpec::Fixed(FixedKind::Heuristic) => Box::new(Heuristic),
+        }
+    }
+
+    /// Reject configurations that could never evaluate a single plan (or
+    /// would panic mid-search) — the typed registry's job is to make such
+    /// states unrepresentable from spec strings and config files.
+    fn validate(&self) -> Result<(), SpecError> {
+        let invalid = |reason: &str| SpecError::Invalid {
+            method: self.method().to_string(),
+            reason: reason.to_string(),
+        };
+        match self {
+            SchedulerSpec::Genetic(cfg) if cfg.population == 0 => {
+                Err(invalid("`pop` must be at least 1"))
+            }
+            SchedulerSpec::Bayesian(cfg) if cfg.candidates == 0 => {
+                Err(invalid("`candidates` must be at least 1"))
+            }
+            SchedulerSpec::Bayesian(cfg) if cfg.init_samples == 0 && cfg.iterations == 0 => {
+                Err(invalid("`init` and `iters` cannot both be 0"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Apply one `key=value` option (the shared path for CLI and config).
+    fn set(&mut self, key: &str, value: &str) -> Result<(), SpecError> {
+        let method = self.method();
+        match self {
+            SchedulerSpec::Rl { cfg, .. } => match key {
+                "rounds" => cfg.rounds = p_usize(key, value)?,
+                "samples" => cfg.samples_per_round = p_usize(key, value)?,
+                "gamma" => cfg.baseline_gamma = p_f64(key, value)?,
+                "lr" => cfg.learning_rate = p_f64(key, value)?,
+                "lr_final" => cfg.lr_final_frac = p_f64(key, value)?,
+                _ => return Err(unknown_option(method, key)),
+            },
+            SchedulerSpec::BruteForce { max_evaluations } => match key {
+                "max_evals" => *max_evaluations = Some(p_usize(key, value)?),
+                _ => return Err(unknown_option(method, key)),
+            },
+            SchedulerSpec::Bayesian(cfg) => match key {
+                "init" => cfg.init_samples = p_usize(key, value)?,
+                "iters" => cfg.iterations = p_usize(key, value)?,
+                "candidates" => cfg.candidates = p_usize(key, value)?,
+                "length_scale" => cfg.length_scale = p_f64(key, value)?,
+                "noise" => cfg.noise = p_f64(key, value)?,
+                _ => return Err(unknown_option(method, key)),
+            },
+            SchedulerSpec::Genetic(cfg) => match key {
+                "pop" => cfg.population = p_usize(key, value)?,
+                "gens" => cfg.generations = p_usize(key, value)?,
+                "tournament" => cfg.tournament = p_usize(key, value)?,
+                "crossover" => cfg.crossover_prob = p_f64(key, value)?,
+                "mutation" => cfg.mutation_prob = p_f64(key, value)?,
+                "elites" => cfg.elites = p_usize(key, value)?,
+                _ => return Err(unknown_option(method, key)),
+            },
+            SchedulerSpec::Greedy | SchedulerSpec::Fixed(_) => {
+                return Err(unknown_option(method, key))
+            }
+        }
+        Ok(())
+    }
+
+    /// The full `key -> value` option table of this spec, in canonical
+    /// order. `Display` and [`to_toml`] both render from this, so the two
+    /// surfaces can never drift apart.
+    ///
+    /// [`to_toml`]: SchedulerSpec::to_toml
+    fn option_pairs(&self) -> Vec<(&'static str, String)> {
+        match self {
+            SchedulerSpec::Rl { cfg, .. } => vec![
+                ("rounds", cfg.rounds.to_string()),
+                ("samples", cfg.samples_per_round.to_string()),
+                ("gamma", cfg.baseline_gamma.to_string()),
+                ("lr", cfg.learning_rate.to_string()),
+                ("lr_final", cfg.lr_final_frac.to_string()),
+            ],
+            SchedulerSpec::BruteForce { max_evaluations } => match max_evaluations {
+                Some(cap) => vec![("max_evals", cap.to_string())],
+                None => Vec::new(),
+            },
+            SchedulerSpec::Bayesian(cfg) => vec![
+                ("init", cfg.init_samples.to_string()),
+                ("iters", cfg.iterations.to_string()),
+                ("candidates", cfg.candidates.to_string()),
+                ("length_scale", cfg.length_scale.to_string()),
+                ("noise", cfg.noise.to_string()),
+            ],
+            SchedulerSpec::Genetic(cfg) => vec![
+                ("pop", cfg.population.to_string()),
+                ("gens", cfg.generations.to_string()),
+                ("tournament", cfg.tournament.to_string()),
+                ("crossover", cfg.crossover_prob.to_string()),
+                ("mutation", cfg.mutation_prob.to_string()),
+                ("elites", cfg.elites.to_string()),
+            ],
+            SchedulerSpec::Greedy | SchedulerSpec::Fixed(_) => Vec::new(),
+        }
+    }
+}
+
+impl fmt::Display for SchedulerSpec {
+    /// Canonical spec string: `method` or `method:k=v,k=v,...` with every
+    /// option spelled out, so logs record exactly what ran.
+    /// `SchedulerSpec::parse` accepts the output verbatim.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.method())?;
+        let pairs = self.option_pairs();
+        if !pairs.is_empty() {
+            let rendered: Vec<String> =
+                pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            write!(f, ":{}", rendered.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+fn value_to_string(value: &Value) -> String {
+    match value {
+        Value::Str(s) => s.clone(),
+        Value::Int(i) => i.to_string(),
+        Value::Float(x) => x.to_string(),
+        Value::Bool(b) => b.to_string(),
+        // No option is array-valued; stringify so `set` reports BadValue.
+        Value::Array(_) => "<array>".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_unique_names_and_aliases() {
+        let mut seen = std::collections::BTreeSet::new();
+        for m in registry() {
+            assert!(seen.insert(m.canonical), "duplicate canonical {}", m.canonical);
+            for a in m.aliases {
+                assert!(seen.insert(a), "duplicate alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_same_spec() {
+        assert_eq!(
+            SchedulerSpec::parse("rl-lstm").unwrap(),
+            SchedulerSpec::parse("rl").unwrap()
+        );
+        assert_eq!(
+            SchedulerSpec::parse("bruteforce").unwrap(),
+            SchedulerSpec::parse("bf").unwrap()
+        );
+        assert_eq!(
+            SchedulerSpec::parse("bayesian").unwrap(),
+            SchedulerSpec::parse("bo").unwrap()
+        );
+    }
+
+    #[test]
+    fn parse_applies_typed_overrides() {
+        let spec = SchedulerSpec::parse("rl:rounds=80,lr=0.6").unwrap();
+        match spec {
+            SchedulerSpec::Rl { variant: RlVariant::Lstm, cfg } => {
+                assert_eq!(cfg.rounds, 80);
+                assert!((cfg.learning_rate - 0.6).abs() < 1e-12);
+                // Untouched options keep their defaults.
+                assert_eq!(cfg.samples_per_round, RlConfig::default().samples_per_round);
+            }
+            other => panic!("wrong spec {other:?}"),
+        }
+        let spec = SchedulerSpec::parse("bf:max_evals=5000").unwrap();
+        assert_eq!(spec, SchedulerSpec::BruteForce { max_evaluations: Some(5000) });
+    }
+
+    #[test]
+    fn parse_errors_name_the_problem() {
+        match SchedulerSpec::parse("warp-drive") {
+            Err(SpecError::UnknownMethod(name, known)) => {
+                assert_eq!(name, "warp-drive");
+                assert!(known.contains("rl") && known.contains("greedy"));
+            }
+            other => panic!("expected UnknownMethod, got {other:?}"),
+        }
+        match SchedulerSpec::parse("rl:warp=9") {
+            Err(SpecError::UnknownOption { method, key, accepted }) => {
+                assert_eq!(method, "rl");
+                assert_eq!(key, "warp");
+                assert!(accepted.contains("rounds"));
+            }
+            other => panic!("expected UnknownOption, got {other:?}"),
+        }
+        match SchedulerSpec::parse("rl:rounds=eighty") {
+            Err(SpecError::BadValue { key, value, .. }) => {
+                assert_eq!(key, "rounds");
+                assert_eq!(value, "eighty");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        assert!(SchedulerSpec::parse("greedy:x=1").is_err());
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        assert!(matches!(
+            SchedulerSpec::parse("genetic:pop=0"),
+            Err(SpecError::Invalid { .. })
+        ));
+        assert!(matches!(
+            SchedulerSpec::parse("bo:candidates=0"),
+            Err(SpecError::Invalid { .. })
+        ));
+        assert!(matches!(
+            SchedulerSpec::parse("bo:init=0,iters=0"),
+            Err(SpecError::Invalid { .. })
+        ));
+        // Each alone is meaningful: init-only BO is random search, and a
+        // zero-round RL still evaluates warm starts + the greedy decode.
+        assert!(SchedulerSpec::parse("bo:init=0").is_ok());
+        assert!(SchedulerSpec::parse("bo:iters=0").is_ok());
+        assert!(SchedulerSpec::parse("rl:rounds=0").is_ok());
+        assert!(SchedulerSpec::parse("genetic:gens=0").is_ok());
+    }
+
+    #[test]
+    fn display_round_trips_with_overrides() {
+        let spec = SchedulerSpec::parse("genetic:pop=10,mutation=0.25").unwrap();
+        let shown = spec.to_string();
+        assert_eq!(SchedulerSpec::parse(&shown).unwrap(), spec);
+        assert!(shown.starts_with("genetic:"));
+        assert!(shown.contains("pop=10") && shown.contains("mutation=0.25"));
+    }
+
+    #[test]
+    fn fixed_methods_display_bare() {
+        for name in ["greedy", "cpu", "gpu", "heuristic", "bf"] {
+            assert_eq!(SchedulerSpec::parse(name).unwrap().to_string(), name);
+        }
+    }
+
+    #[test]
+    fn config_section_round_trips() {
+        let spec = SchedulerSpec::parse("bo:init=8,iters=12,noise=0.001").unwrap();
+        let cfg = Config::parse(&spec.to_toml()).unwrap();
+        let back = SchedulerSpec::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn config_without_scheduler_section_is_none() {
+        let cfg = Config::parse("[pool]\ntypes = 4\n").unwrap();
+        assert_eq!(SchedulerSpec::from_config(&cfg).unwrap(), None);
+    }
+
+    #[test]
+    fn config_missing_method_errors() {
+        let cfg = Config::parse("[scheduler]\nrounds = 9\n").unwrap();
+        assert_eq!(SchedulerSpec::from_config(&cfg), Err(SpecError::MissingMethod));
+    }
+}

@@ -12,7 +12,7 @@ use heterps::resources::{paper_testbed, simulated_types};
 use heterps::runtime::artifacts_dir;
 use heterps::sched::bruteforce::BruteForce;
 use heterps::sched::rl::{RlConfig, RlScheduler};
-use heterps::sched::{self, Scheduler};
+use heterps::sched::{self, Scheduler, SchedulerSpec};
 use heterps::simulator::{simulate_plan, SimConfig};
 
 fn artifacts_ready() -> bool {
@@ -70,11 +70,11 @@ fn comparison_suite_invariants_hold() {
     for m in sched::comparison_methods() {
         // Use the artifact-free tabular policy for RL variants here; the
         // HLO policies are covered above.
-        let name = match *m {
+        let name = match m {
             "rl" | "rl-rnn" => "rl-tabular",
             other => other,
         };
-        let mut s = sched::by_name(name, 7).unwrap();
+        let mut s = SchedulerSpec::parse(name).unwrap().build(7);
         let out = s.schedule(&cm);
         out.plan.validate(&model, &pool).unwrap();
         if out.eval.feasible {

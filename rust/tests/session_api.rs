@@ -1,0 +1,280 @@
+//! Integration tests for the budgeted `SearchSession` API and the typed
+//! `SchedulerSpec` registry: spec round-trips on every registered method,
+//! session == `schedule()` determinism, budget/deadline/target
+//! enforcement, zero-budget degradation and warm-start rescheduling.
+
+use heterps::config::Config;
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::resources::{paper_testbed, simulated_types};
+use heterps::sched::{self, registry, Budget, ScheduleError, SchedulerSpec};
+use std::time::Duration;
+
+/// Cap on manual stepping: far above any session's real step count, only
+/// here so a broken session cannot hang the suite.
+const STEP_CAP: usize = 1_000_000;
+
+#[test]
+fn spec_string_round_trips_for_every_registered_method() {
+    for info in registry() {
+        let spec = SchedulerSpec::parse(info.canonical)
+            .unwrap_or_else(|e| panic!("{}: {e}", info.canonical));
+        assert_eq!(spec.method(), info.canonical);
+        let shown = spec.to_string();
+        assert_eq!(
+            SchedulerSpec::parse(&shown).unwrap(),
+            spec,
+            "`{shown}` did not round-trip"
+        );
+        for alias in info.aliases {
+            assert_eq!(SchedulerSpec::parse(alias).unwrap(), spec, "alias {alias}");
+        }
+    }
+}
+
+#[test]
+fn spec_toml_round_trips_for_every_registered_method() {
+    for info in registry() {
+        let spec = SchedulerSpec::parse(info.canonical).unwrap();
+        let toml = spec.to_toml();
+        let cfg = Config::parse(&toml).unwrap_or_else(|e| panic!("{toml}: {e}"));
+        let back = SchedulerSpec::from_config(&cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", info.canonical))
+            .expect("section present");
+        assert_eq!(back, spec, "TOML round-trip for {}", info.canonical);
+    }
+}
+
+#[test]
+fn toml_scheduler_section_applies_typed_options() {
+    let cfg = Config::parse(
+        "[scheduler]\nmethod = \"rl\"\nrounds = 80\nlr = 0.6\n",
+    )
+    .unwrap();
+    let spec = SchedulerSpec::from_config(&cfg).unwrap().unwrap();
+    assert_eq!(spec, SchedulerSpec::parse("rl:rounds=80,lr=0.6").unwrap());
+}
+
+#[test]
+fn comparison_methods_are_registry_backed() {
+    let methods = sched::comparison_methods();
+    assert_eq!(
+        methods,
+        vec!["rl", "rl-rnn", "bo", "genetic", "greedy", "gpu", "cpu", "heuristic"]
+    );
+    for m in methods {
+        assert!(sched::lookup(m).is_some(), "{m} missing from registry");
+    }
+}
+
+/// The acceptance bar of the redesign: for seeds {1, 42} on `ctrdnn` +
+/// `paper_testbed`, manually stepping an unbudgeted session produces the
+/// exact plan and evaluation count of the `schedule()` convenience
+/// wrapper, for every registered method (all six scheduler families).
+#[test]
+fn unbudgeted_session_reproduces_schedule_for_all_methods() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for seed in [1u64, 42] {
+        for info in registry() {
+            let spec = SchedulerSpec::parse(info.canonical).unwrap();
+            let one_shot = spec.build(seed).schedule(&cm);
+
+            let scheduler = spec.build(seed);
+            let mut session = scheduler.session(&cm, Budget::unlimited());
+            let mut steps = 0usize;
+            while !session.step().converged {
+                steps += 1;
+                assert!(steps < STEP_CAP, "{} never converged", info.canonical);
+            }
+            let stepped = session.outcome().unwrap();
+
+            assert_eq!(
+                stepped.plan, one_shot.plan,
+                "{} seed {seed}: session plan != schedule() plan",
+                info.canonical
+            );
+            assert_eq!(
+                stepped.evaluations, one_shot.evaluations,
+                "{} seed {seed}: evaluation counts differ",
+                info.canonical
+            );
+            assert!(
+                (stepped.eval.cost_usd - one_shot.eval.cost_usd).abs() < 1e-12,
+                "{} seed {seed}: costs differ",
+                info.canonical
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_budget_is_never_exceeded_by_any_method() {
+    let model = zoo::ctrdnn();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for info in registry() {
+        let spec = SchedulerSpec::parse(info.canonical).unwrap();
+        let scheduler = spec.build(7);
+        for cap in [1usize, 2, 10, 57] {
+            let mut session = scheduler.session(&cm, Budget::evals(cap));
+            let mut steps = 0usize;
+            loop {
+                let report = session.step();
+                assert!(
+                    report.evaluations <= cap,
+                    "{} exceeded budget {cap}: {}",
+                    info.canonical,
+                    report.evaluations
+                );
+                if report.converged {
+                    break;
+                }
+                steps += 1;
+                assert!(steps < STEP_CAP);
+            }
+            // Every method evaluates at least one plan given any budget.
+            let out = session.outcome().unwrap_or_else(|e| {
+                panic!("{} with budget {cap}: {e}", info.canonical)
+            });
+            assert!(out.evaluations >= 1 && out.evaluations <= cap);
+        }
+    }
+}
+
+#[test]
+fn zero_eval_budget_degrades_gracefully() {
+    let model = zoo::nce();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for info in registry() {
+        let scheduler = SchedulerSpec::parse(info.canonical).unwrap().build(3);
+        let mut session = scheduler.session(&cm, Budget::evals(0));
+        let result = sched::drive(session.as_mut(), None);
+        assert!(
+            matches!(result, Err(ScheduleError::NoPlansEvaluated)),
+            "{} should report NoPlansEvaluated on a zero budget",
+            info.canonical
+        );
+        assert_eq!(session.evaluations(), 0, "{}", info.canonical);
+        assert!(session.report().budget_exhausted, "{}", info.canonical);
+    }
+}
+
+#[test]
+fn expired_deadline_stops_before_any_evaluation() {
+    let model = zoo::nce();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let scheduler = SchedulerSpec::parse("genetic").unwrap().build(3);
+    let mut session =
+        scheduler.session(&cm, Budget::unlimited().with_deadline(Duration::ZERO));
+    assert!(matches!(
+        sched::drive(session.as_mut(), None),
+        Err(ScheduleError::NoPlansEvaluated)
+    ));
+    assert_eq!(session.evaluations(), 0);
+    // A generous deadline changes nothing about a fast search.
+    let mut session = scheduler
+        .session(&cm, Budget::unlimited().with_deadline(Duration::from_secs(3600)));
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    assert!(out.evaluations >= 1);
+}
+
+#[test]
+fn target_cost_stops_the_search_early() {
+    let model = zoo::nce(); // 5 layers, so BF enumerates 2^5 = 32 plans
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    // Replicate BF's odometer order (layer 0 is least significant) to find
+    // where the first feasible plan sits in the enumeration.
+    let nl = model.num_layers();
+    let first_feasible = (0..32u32).find(|code| {
+        let a: Vec<usize> = (0..nl).map(|l| ((code >> l) & 1) as usize).collect();
+        cm.evaluate(&SchedulingPlan::new(a)).feasible
+    });
+    // An infinite target accepts the first feasible incumbent.
+    let scheduler = SchedulerSpec::parse("bf").unwrap().build(1);
+    let mut session =
+        scheduler.session(&cm, Budget::unlimited().with_target_cost(f64::INFINITY));
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    match first_feasible {
+        Some(f) => assert_eq!(out.evaluations, f as usize + 1),
+        None => assert_eq!(out.evaluations, 32),
+    }
+}
+
+#[test]
+fn progress_observer_sees_every_step() {
+    let model = zoo::nce();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let scheduler = SchedulerSpec::parse("greedy").unwrap().build(1);
+    let mut session = scheduler.session(&cm, Budget::unlimited());
+    let mut reports = Vec::new();
+    let mut observer = |r: &sched::StepReport| reports.push(r.evaluations);
+    let out = sched::drive(session.as_mut(), Some(&mut observer)).unwrap();
+    // Greedy on 5 layers: 1 init step + 5 sweep steps.
+    assert_eq!(reports.len(), 6);
+    assert_eq!(*reports.last().unwrap(), out.evaluations);
+    // Evaluation counts are monotone across steps.
+    assert!(reports.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn warm_start_seeds_and_never_worsens_the_incumbent() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let warm_plan = SchedulingPlan::new(
+        model.layers.iter().map(|l| if l.kind.data_intensive() { 0 } else { 1 }).collect(),
+    );
+    let warm_eval = cm.evaluate(&warm_plan);
+
+    // Budget 1: only the warm-start evaluation fits, so it IS the outcome.
+    let scheduler = SchedulerSpec::parse("genetic").unwrap().build(11);
+    let mut session = scheduler.session(&cm, Budget::evals(1));
+    session.warm_start(&warm_plan);
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    assert_eq!(out.plan, warm_plan);
+    assert_eq!(out.evaluations, 1);
+
+    // With room to search, the reschedule can only improve on the warm
+    // plan (feasibility first, then cost — BestTracker's ordering).
+    let mut session = scheduler.session(&cm, Budget::evals(200));
+    session.warm_start(&warm_plan);
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    if warm_eval.feasible {
+        assert!(out.eval.feasible);
+        assert!(out.eval.cost_usd <= warm_eval.cost_usd * (1.0 + 1e-9));
+    }
+}
+
+#[test]
+fn warm_start_carries_plans_across_an_elastic_pool_change() {
+    // The elastic-provisioning story: schedule on a small pool, the pool
+    // grows, reschedule incrementally from the old plan under a budget.
+    let model = zoo::ctrdnn();
+    let small = simulated_types(2, true);
+    let big = simulated_types(4, true);
+    let cm_small = CostModel::new(&model, &small, CostConfig::default());
+    let cm_big = CostModel::new(&model, &big, CostConfig::default());
+
+    let spec = SchedulerSpec::parse("rl-tabular").unwrap();
+    let old = spec.build(42).schedule(&cm_small);
+    // Type ids of the small pool remain valid in the grown pool.
+    old.plan.validate(&model, &big).unwrap();
+
+    let scheduler = spec.build(42);
+    let mut session = scheduler.session(&cm_big, Budget::evals(150));
+    session.warm_start(&old.plan);
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    assert!(out.evaluations <= 150);
+    let old_on_big = cm_big.evaluate(&old.plan);
+    if old_on_big.feasible {
+        assert!(out.eval.feasible);
+        assert!(out.eval.cost_usd <= old_on_big.cost_usd * (1.0 + 1e-9));
+    }
+}

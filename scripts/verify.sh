@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate plus a registry smoke test.
+#
+# 1. `cargo build --release && cargo test -q` (the ROADMAP tier-1 gate);
+# 2. a budgeted `heterps schedule` invocation for every method the
+#    registry exposes (via `heterps methods`), so a scheduler that is
+#    registered but broken — wrong name, panicking session, spec that
+#    does not parse — fails fast here instead of in a bench.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT"
+# The crate manifest may live at the repo root or under rust/.
+if [ ! -f Cargo.toml ]; then
+  if [ -f rust/Cargo.toml ]; then
+    cd rust
+  else
+    echo "error: no Cargo.toml at $ROOT or $ROOT/rust — the tier-1 gate needs the crate manifest." >&2
+    echo "       (Some containers also lack the Rust toolchain entirely; see .claude/skills/verify/SKILL.md.)" >&2
+    exit 1
+  fi
+fi
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "error: cargo not found on PATH — cannot run the tier-1 gate here." >&2
+  exit 1
+fi
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+BIN="target/release/heterps"
+if [ ! -x "$BIN" ]; then
+  echo "error: $BIN not found after build" >&2
+  exit 1
+fi
+
+echo "== registry smoke: schedule every method under a small budget"
+for method in $("$BIN" methods); do
+  echo "   -- $method"
+  "$BIN" schedule "$method" --model nce --types 2 --budget-evals 200 >/dev/null
+done
+
+echo "verify: OK"
