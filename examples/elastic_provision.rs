@@ -1,28 +1,51 @@
-//! Elasticity demo, in two acts.
+//! Elasticity demo, in three acts.
 //!
 //! 1. As the throughput floor tightens, the provisioner (§5.1) scales
 //!    each stage's replica count — and the cost frontier it traces beats
 //!    both static-ratio heuristics (§6.1).
-//! 2. When the elastic pool itself changes (new accelerator types join),
-//!    a warm-started, budgeted `SearchSession` reschedules incrementally:
-//!    the old plan seeds the incumbent, so even a tiny evaluation budget
-//!    can only improve on simply keeping the old placement.
+//! 2. A flash-crowd trace: demand triples mid-episode, then reverts. The
+//!    elastic controller replays it under the three adaptation policies —
+//!    never-adapt (static peak provisioning), re-schedule-from-scratch,
+//!    and warm-started budget-capped rescheduling.
+//! 3. Traces compose sequentially: a flash crowd followed by a launch
+//!    ramp, driven through the same loop.
 //!
 //!     cargo run --release --example elastic_provision
 
 use heterps::metrics::Table;
+use heterps::model::zoo;
 use heterps::prelude::*;
 use heterps::provision::provision_static_ratio;
-use heterps::sched;
+use heterps::elastic::trace;
+
+fn episode_table(
+    name: &str,
+    title: &str,
+    model: &ModelSpec,
+    pool: &heterps::resources::ResourcePool,
+    spec: &SchedulerSpec,
+    tr: &WorkloadTrace,
+    ctl: &ControllerConfig,
+    seed: u64,
+) -> anyhow::Result<Vec<EpisodeReport>> {
+    let mut table = Table::new(title.to_string(), &EpisodeReport::TABLE_COLUMNS);
+    let reports = run_all_policies(model, pool, spec, tr, ctl, seed)?;
+    for r in &reports {
+        table.row(&r.table_row());
+    }
+    table.emit(name);
+    Ok(reports)
+}
 
 fn main() -> anyhow::Result<()> {
-    let model = heterps::model::zoo::ctrdnn();
+    let model = zoo::ctrdnn();
     let pool = paper_testbed();
     // The canonical CTR split: sparse front on CPU, tower on GPU.
     let plan = SchedulingPlan::new(
         model.layers.iter().map(|l| if l.kind.data_intensive() { 0 } else { 1 }).collect(),
     );
 
+    // Act 1: the provisioner's cost frontier across throughput floors.
     let mut table = Table::new(
         "Elastic provisioning vs throughput floor (CTRDNN)",
         &["floor (samples/s)", "replicas per stage", "ps cores", "ours ($)", "StaRatio ($)", "StaPSRatio ($)"],
@@ -44,53 +67,48 @@ fn main() -> anyhow::Result<()> {
     }
     table.emit("elastic_provision");
 
-    // Act 2: the pool grows from 2 to 4 types mid-run. Instead of a full
-    // cold search, open a budgeted session on the new pool and warm-start
-    // it with the plan currently in production. The small pool must be a
-    // prefix of the grown one so the old plan's type ids keep meaning the
-    // same hardware — `simulated_types(2)` ⊂ `simulated_types(4)`.
+    // Act 2: a flash crowd. The floor triples for the middle fifth of the
+    // episode; the controller detects the violation with hysteresis and
+    // reschedules. rl-tabular is artifact-free, so the example runs
+    // without `make artifacts`.
     let spec = SchedulerSpec::parse("rl-tabular:rounds=30")?;
-    let small = simulated_types(2, true);
-    let cm_small = CostModel::new(&model, &small, CostConfig::default());
-    let old = spec.build(42).schedule(&cm_small);
-
-    let grown = simulated_types(4, true);
-    let cm_grown = CostModel::new(&model, &grown, CostConfig::default());
-    let old_on_grown = cm_grown.evaluate(&old.plan);
-
-    let scheduler = spec.build(42);
-    let mut session = scheduler.session(&cm_grown, Budget::evals(200));
-    session.warm_start(&old.plan);
-    let rescheduled = sched::drive(session.as_mut(), None)?;
-
-    let mut table = Table::new(
-        "Warm-started rescheduling after the pool grows 2 -> 4 types",
-        &["placement", "cost ($)", "feasible", "evaluations"],
-    );
-    table.row(&[
-        "old plan, kept as-is".into(),
-        format!("{:.2}", old_on_grown.cost_usd),
-        old_on_grown.feasible.to_string(),
-        "0".into(),
-    ]);
-    table.row(&[
-        format!("warm-started reschedule ({spec})"),
-        format!("{:.2}", rescheduled.eval.cost_usd),
-        rescheduled.eval.feasible.to_string(),
-        rescheduled.evaluations.to_string(),
-    ]);
-    table.emit("elastic_reschedule");
+    let tcfg = TraceConfig { ticks: 24, ..Default::default() };
+    let ctl = ControllerConfig::default();
+    let seed = 42u64;
+    let spike = trace::spike(&tcfg, seed);
+    let reports = episode_table(
+        "elastic_episode_spike",
+        "Flash crowd (3x for a fifth of the episode): adaptation policies",
+        &model,
+        &pool,
+        &spec,
+        &spike,
+        &ctl,
+        seed,
+    )?;
+    let (never, cold, warm) = (&reports[0], &reports[1], &reports[2]);
     println!(
-        "reschedule spent {} evaluations and {}",
-        rescheduled.evaluations,
-        if rescheduled.eval.cost_usd < old_on_grown.cost_usd {
-            format!(
-                "cut cost {:.1}%",
-                (1.0 - rescheduled.eval.cost_usd / old_on_grown.cost_usd) * 100.0
-            )
-        } else {
-            "kept the old plan (already the incumbent)".to_string()
-        }
+        "warm-start adapted {} time(s) for {} evaluations (from-scratch: {}), \
+         and both saved ${:.2}+ against never-adapt's ${:.2}",
+        warm.adaptations,
+        warm.evaluations,
+        cold.evaluations,
+        (never.cumulative_cost_usd - warm.cumulative_cost_usd.max(cold.cumulative_cost_usd)).max(0.0),
+        never.cumulative_cost_usd,
     );
+
+    // Act 3: composed scenario — the flash crowd plays out, then a launch
+    // ramp follows (WorkloadTrace::then concatenates in time).
+    let composed = trace::spike(&tcfg, seed).then(trace::ramp(&tcfg, seed + 1));
+    episode_table(
+        "elastic_episode_composed",
+        "Composed trace (spike, then ramp): adaptation policies",
+        &model,
+        &pool,
+        &spec,
+        &composed,
+        &ctl,
+        seed,
+    )?;
     Ok(())
 }

@@ -1,0 +1,40 @@
+//! Trace-driven elastic autoscaling (§5, Figure 4).
+//!
+//! HeterPS's architecture (Figure 4) places the scheduler and provisioner
+//! inside a loop with the "distributed training" module precisely because
+//! §5 frames both as decisions over an *elastic* resource pool: the
+//! throughput constraint (Eq 13) and the per-type limits (Eq 10) are
+//! inputs that production clusters change under the framework's feet —
+//! diurnal demand, launch ramps, flash crowds, capacity revocations. The
+//! seed repo could only schedule one static snapshot of those inputs; this
+//! module closes the loop over time:
+//!
+//! * [`trace`] — deterministic workload generators emitting, per tick, the
+//!   SLA throughput floor and the fraction of the pool that is actually
+//!   available (`diurnal`, `ramp`, `spike`, `step`; composable via
+//!   [`WorkloadTrace::then`], seeded jitter throughout).
+//! * [`controller`] — replays a trace against the discrete-event
+//!   [`simulator`](crate::simulator), smooths measured throughput with an
+//!   exponentially-decaying moving average, and flags SLA violation or
+//!   overprovisioning only after the signal persists across consecutive
+//!   ticks (hysteresis + cooldown, the throughput-probing idiom of
+//!   production storage engines). Confirmed drift triggers re-provisioning
+//!   and re-scheduling through a warm-started, budget-capped
+//!   [`SearchSession`](crate::sched::SearchSession), so each adaptation
+//!   reuses the incumbent plan instead of searching `T^L` from scratch.
+//! * [`EpisodeReport`] — SLA-violation seconds, adaptation count,
+//!   cost-model evaluations spent, and cumulative monetary cost against
+//!   the static-provision-for-peak baseline (§6.1's static heuristics,
+//!   generalized over time).
+//!
+//! The `elastic` CLI subcommand and the `fig13_elastic` bench compare the
+//! three reactive policies ([`AdaptPolicy`]) across traces and scheduler
+//! methods; `examples/elastic_provision.rs` walks the same loop.
+
+pub mod controller;
+pub mod trace;
+
+pub use controller::{
+    run_all_policies, run_episode, AdaptPolicy, ControllerConfig, EpisodeReport,
+};
+pub use trace::{TraceConfig, TracePoint, WorkloadTrace};

@@ -1,0 +1,249 @@
+//! Deterministic workload trace generators.
+//!
+//! A [`WorkloadTrace`] is the elastic controller's input: a uniform tick
+//! grid where every tick carries the throughput floor the SLA demands at
+//! that moment (`Throughput_limit` of Eq 13, now time-varying) and the
+//! fraction of the elastic pool's `N_{t,limit}` (Eq 10) actually
+//! available — shared production clusters shrink under contention exactly
+//! when demand peaks. Four canonical shapes ship: `diurnal`, `ramp`,
+//! `spike` (flash crowd) and `step`; all are deterministic in
+//! `(TraceConfig, seed)`, with a small seeded multiplicative jitter so no
+//! two ticks are exactly alike. Traces compose with [`WorkloadTrace::then`]
+//! for longer scenarios.
+
+use crate::util::rng::Rng;
+
+/// One tick of workload state.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Time since the episode start, seconds.
+    pub at_secs: f64,
+    /// SLA throughput floor in samples/sec at this tick (Eq 13).
+    pub throughput_floor: f64,
+    /// Fraction of every type's `max_units` available at this tick, in
+    /// (0, 1] (Eq 10's limit, scaled by cluster contention).
+    pub pool_frac: f64,
+}
+
+/// A named time series of workload demand and pool availability.
+#[derive(Clone, Debug)]
+pub struct WorkloadTrace {
+    pub name: String,
+    /// Uniform tick spacing in seconds.
+    pub tick_secs: f64,
+    pub points: Vec<TracePoint>,
+}
+
+impl WorkloadTrace {
+    /// Episode length in seconds.
+    pub fn duration_secs(&self) -> f64 {
+        self.points.len() as f64 * self.tick_secs
+    }
+
+    /// The highest floor anywhere in the trace (what a static provisioner
+    /// must size for).
+    pub fn peak_floor(&self) -> f64 {
+        self.points.iter().map(|p| p.throughput_floor).fold(0.0, f64::max)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.points.is_empty(), "trace `{}` has no points", self.name);
+        anyhow::ensure!(self.tick_secs > 0.0, "trace `{}`: non-positive tick", self.name);
+        for (i, p) in self.points.iter().enumerate() {
+            anyhow::ensure!(
+                p.throughput_floor > 0.0,
+                "trace `{}` tick {i}: non-positive floor",
+                self.name
+            );
+            anyhow::ensure!(
+                p.pool_frac > 0.0 && p.pool_frac <= 1.0,
+                "trace `{}` tick {i}: pool_frac {} outside (0, 1]",
+                self.name,
+                p.pool_frac
+            );
+        }
+        Ok(())
+    }
+
+    /// Sequential composition: play `self`, then `other` (shifted in time).
+    ///
+    /// # Panics
+    /// When the two traces have different tick grids — the controller
+    /// integrates cost and SLA damage per `tick_secs`, so mixing grids
+    /// would silently mis-weight one half. Generate both parts from one
+    /// [`TraceConfig`].
+    pub fn then(mut self, other: WorkloadTrace) -> WorkloadTrace {
+        assert!(
+            (self.tick_secs - other.tick_secs).abs() < 1e-9,
+            "cannot compose traces with different tick grids ({} s vs {} s)",
+            self.tick_secs,
+            other.tick_secs
+        );
+        let offset = self.duration_secs();
+        self.points.extend(
+            other.points.iter().map(|p| TracePoint { at_secs: p.at_secs + offset, ..*p }),
+        );
+        self.name = format!("{}+{}", self.name, other.name);
+        self
+    }
+}
+
+/// Shared knobs for the shipped generators.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Number of ticks in the episode.
+    pub ticks: usize,
+    /// Seconds per tick.
+    pub tick_secs: f64,
+    /// Demand baseline in samples/sec; the shapes scale it.
+    pub base_floor: f64,
+    /// Multiplicative noise amplitude on the floor (`1 ± jitter`).
+    pub jitter: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { ticks: 36, tick_secs: 300.0, base_floor: 20_000.0, jitter: 0.04 }
+    }
+}
+
+/// Build a trace from a shape function mapping the episode phase in
+/// [0, 1) to `(floor multiplier, pool fraction)`.
+fn build(
+    name: &str,
+    cfg: &TraceConfig,
+    seed: u64,
+    shape: impl Fn(f64) -> (f64, f64),
+) -> WorkloadTrace {
+    assert!(cfg.ticks > 0, "trace needs at least one tick");
+    assert!(cfg.jitter >= 0.0 && cfg.jitter < 1.0, "jitter must sit in [0, 1)");
+    let mut rng = Rng::new(seed);
+    let points = (0..cfg.ticks)
+        .map(|tick| {
+            let phase = tick as f64 / cfg.ticks as f64;
+            let (mult, pool_frac) = shape(phase);
+            let noise = 1.0 + cfg.jitter * (2.0 * rng.f64() - 1.0);
+            TracePoint {
+                at_secs: tick as f64 * cfg.tick_secs,
+                throughput_floor: cfg.base_floor * mult * noise,
+                pool_frac,
+            }
+        })
+        .collect();
+    WorkloadTrace { name: name.to_string(), tick_secs: cfg.tick_secs, points }
+}
+
+/// Daily demand cycle: the floor swings ±50% around the baseline while the
+/// shared pool tightens (down to 75%) at peak hours — demand and capacity
+/// move against each other, the §5 elastic setting.
+pub fn diurnal(cfg: &TraceConfig, seed: u64) -> WorkloadTrace {
+    build("diurnal", cfg, seed, |phase| {
+        let s = (std::f64::consts::TAU * phase).sin();
+        (1.0 + 0.5 * s, 1.0 - 0.25 * s.max(0.0))
+    })
+}
+
+/// Linear growth from the baseline to 2.5x over the episode (a product
+/// launch ramp).
+pub fn ramp(cfg: &TraceConfig, seed: u64) -> WorkloadTrace {
+    build("ramp", cfg, seed, |phase| (1.0 + 1.5 * phase, 1.0))
+}
+
+/// Flash crowd: flat baseline with a 3x burst over the middle fifth of the
+/// episode, then straight back down.
+pub fn spike(cfg: &TraceConfig, seed: u64) -> WorkloadTrace {
+    build("spike", cfg, seed, |phase| {
+        let mult = if (0.4..0.6).contains(&phase) { 3.0 } else { 1.0 };
+        (mult, 1.0)
+    })
+}
+
+/// Single permanent step to 1.8x at the episode midpoint (a traffic-tier
+/// migration that does not revert).
+pub fn step(cfg: &TraceConfig, seed: u64) -> WorkloadTrace {
+    build("step", cfg, seed, |phase| (if phase < 0.5 { 1.0 } else { 1.8 }, 1.0))
+}
+
+/// Names of the shipped generators, CLI/bench order.
+pub fn names() -> &'static [&'static str] {
+    &["diurnal", "ramp", "spike", "step"]
+}
+
+/// Construct a shipped trace by name.
+pub fn by_name(name: &str, cfg: &TraceConfig, seed: u64) -> Option<WorkloadTrace> {
+    match name {
+        "diurnal" => Some(diurnal(cfg, seed)),
+        "ramp" => Some(ramp(cfg, seed)),
+        "spike" => Some(spike(cfg, seed)),
+        "step" => Some(step(cfg, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_shipped_trace_is_valid_and_deterministic() {
+        let cfg = TraceConfig::default();
+        for name in names() {
+            let a = by_name(name, &cfg, 7).unwrap();
+            a.validate().unwrap();
+            assert_eq!(a.points.len(), cfg.ticks);
+            assert_eq!(a.name, *name);
+            let b = by_name(name, &cfg, 7).unwrap();
+            for (x, y) in a.points.iter().zip(&b.points) {
+                assert_eq!(x.throughput_floor.to_bits(), y.throughput_floor.to_bits());
+                assert_eq!(x.pool_frac.to_bits(), y.pool_frac.to_bits());
+            }
+        }
+        assert!(by_name("tsunami", &cfg, 7).is_none());
+    }
+
+    #[test]
+    fn distinct_seeds_perturb_the_floor() {
+        let cfg = TraceConfig::default();
+        let a = spike(&cfg, 1);
+        let b = spike(&cfg, 2);
+        assert!(a
+            .points
+            .iter()
+            .zip(&b.points)
+            .any(|(x, y)| x.throughput_floor != y.throughput_floor));
+    }
+
+    #[test]
+    fn spike_peaks_above_base_and_reverts() {
+        let cfg = TraceConfig { jitter: 0.0, ..Default::default() };
+        let t = spike(&cfg, 1);
+        assert!((t.peak_floor() - 3.0 * cfg.base_floor).abs() < 1e-9);
+        assert_eq!(t.points.first().unwrap().throughput_floor, cfg.base_floor);
+        assert_eq!(t.points.last().unwrap().throughput_floor, cfg.base_floor);
+    }
+
+    #[test]
+    fn diurnal_tightens_the_pool_at_peak() {
+        let cfg = TraceConfig { jitter: 0.0, ..Default::default() };
+        let t = diurnal(&cfg, 1);
+        let peak = t
+            .points
+            .iter()
+            .max_by(|a, b| a.throughput_floor.partial_cmp(&b.throughput_floor).unwrap())
+            .unwrap();
+        assert!(peak.pool_frac < 1.0, "pool should shrink at peak demand");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn traces_compose_sequentially() {
+        let cfg = TraceConfig { ticks: 10, ..Default::default() };
+        let t = spike(&cfg, 1).then(ramp(&cfg, 2));
+        assert_eq!(t.name, "spike+ramp");
+        assert_eq!(t.points.len(), 20);
+        t.validate().unwrap();
+        // Time keeps increasing across the seam.
+        assert!(t.points.windows(2).all(|w| w[1].at_secs > w[0].at_secs));
+        assert!((t.duration_secs() - 20.0 * cfg.tick_secs).abs() < 1e-9);
+    }
+}

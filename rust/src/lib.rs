@@ -10,7 +10,8 @@
 //!   §6.2), the pipeline+data-parallel training runtime with parameter
 //!   server and ring-allreduce (§3), the data-management module (prefetch,
 //!   hot/cold tiering, aggregation+compression), a discrete-event cluster
-//!   simulator, and the profiler.
+//!   simulator, the trace-driven elastic autoscaling loop (`elastic`),
+//!   and the profiler.
 //! * **Layer 2 (python/compile)** — JAX definitions of the CTR models and
 //!   the scheduling policy, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
@@ -57,6 +58,7 @@ pub mod cli;
 pub mod config;
 pub mod cost;
 pub mod data;
+pub mod elastic;
 pub mod metrics;
 pub mod model;
 pub mod plan;
@@ -72,6 +74,10 @@ pub mod util;
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
     pub use crate::cost::{CostConfig, CostModel, PlanEval};
+    pub use crate::elastic::{
+        run_all_policies, run_episode, AdaptPolicy, ControllerConfig, EpisodeReport,
+        TraceConfig, WorkloadTrace,
+    };
     pub use crate::model::{LayerKind, LayerSpec, ModelSpec};
     pub use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
     pub use crate::resources::{paper_testbed, simulated_types, ResourceKind, ResourcePool};

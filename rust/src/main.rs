@@ -2,7 +2,8 @@
 //!
 //! Subcommands mirror the framework's lifecycle: `schedule` a model onto a
 //! heterogeneous pool, `compare` the full §6.2 scheduler suite, `simulate`
-//! a plan on a virtual cluster, `info`/`methods` the catalogs.
+//! a plan on a virtual cluster, `elastic` a workload trace through the
+//! autoscaling loop, `info`/`methods` the catalogs.
 //!
 //! Schedulers are named through the typed spec registry: a positional like
 //! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
@@ -11,6 +12,7 @@
 
 use heterps::cli::{Cli, CliError, CmdSpec, OptSpec};
 use heterps::cost::{CostConfig, CostModel};
+use heterps::elastic;
 use heterps::metrics::Table;
 use heterps::model::zoo;
 use heterps::resources::simulated_types;
@@ -68,6 +70,21 @@ fn cli() -> Cli {
                 name: "simulate",
                 about: "schedule with RL, then replay on the discrete-event cluster simulator",
                 opts: common(),
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "elastic",
+                about: "replay a workload trace through the elastic autoscaling loop, comparing adaptation policies",
+                opts: common()
+                    .into_iter()
+                    .chain(vec![
+                        OptSpec { name: "trace", help: "workload trace (diurnal|ramp|spike|step)", takes_value: true, default: Some("spike") },
+                        OptSpec { name: "method", help: "scheduler spec used for (re)scheduling, e.g. rl or genetic:pop=16", takes_value: true, default: Some("rl") },
+                        OptSpec { name: "ticks", help: "trace length in ticks", takes_value: true, default: Some("36") },
+                        OptSpec { name: "tick-secs", help: "seconds per trace tick", takes_value: true, default: Some("300") },
+                        OptSpec { name: "adapt-evals", help: "evaluation budget per warm-started adaptation", takes_value: true, default: Some("64") },
+                    ])
+                    .collect(),
                 positionals: vec![],
             },
             CmdSpec {
@@ -174,7 +191,7 @@ fn main() {
                 run_train(steps, microbatches, vocab)?;
                 Ok(())
             }
-            "schedule" | "compare" | "simulate" => {
+            "schedule" | "compare" | "simulate" | "elastic" => {
                 let file = args.get("config").map(heterps::config::Config::load).transpose()?;
                 let model_name = args.str_or("model", "ctrdnn");
                 let model = zoo::by_name(model_name)
@@ -309,6 +326,85 @@ fn main() {
                             ]);
                         }
                         println!("{}", t.render());
+                    }
+                    "elastic" => {
+                        let trace_name = args.str_or("trace", "spike");
+                        let ticks = args.usize_or("ticks", 36)?;
+                        anyhow::ensure!(ticks >= 1, "option `--ticks` must be at least 1");
+                        let tick_secs = args.f64_or("tick-secs", 300.0)?;
+                        anyhow::ensure!(
+                            tick_secs.is_finite() && tick_secs > 0.0,
+                            "option `--tick-secs` must be a positive number of seconds"
+                        );
+                        let tcfg = elastic::TraceConfig {
+                            ticks,
+                            tick_secs,
+                            base_floor: cm.cfg.throughput_limit,
+                            ..Default::default()
+                        };
+                        let trace = elastic::trace::by_name(trace_name, &tcfg, seed)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "unknown trace `{trace_name}` (known: {})",
+                                    elastic::trace::names().join(", ")
+                                )
+                            })?;
+                        let spec = SchedulerSpec::parse(args.str_or("method", "rl"))?;
+                        let ctl = elastic::ControllerConfig {
+                            adapt_budget_evals: args.usize_or("adapt-evals", 64)?,
+                            // Honor --config/--throughput cost settings
+                            // (floor itself comes from the trace).
+                            cost: cm.cfg.clone(),
+                            ..Default::default()
+                        };
+                        let mut t = Table::new(
+                            format!(
+                                "Elastic episode — trace {trace_name} ({} ticks x {:.0} s), {model_name}, method {spec}",
+                                trace.points.len(),
+                                trace.tick_secs
+                            ),
+                            &elastic::EpisodeReport::TABLE_COLUMNS,
+                        );
+                        let reports =
+                            elastic::run_all_policies(&model, &pool, &spec, &trace, &ctl, seed)?;
+                        for r in &reports {
+                            t.row(&r.table_row());
+                        }
+                        t.emit("elastic_episode");
+                        for r in &reports {
+                            if !r.initial_feasible {
+                                // Adapting policies size their opening plan for the
+                                // first tick's demand; never-adapt sizes for the peak.
+                                let sizing = match r.policy {
+                                    elastic::AdaptPolicy::Never => "the trace's peak floor",
+                                    _ => "the opening floor",
+                                };
+                                eprintln!(
+                                    "warn: {} found no feasible placement for {sizing} on \
+                                     this pool; its numbers use a penalized best-effort \
+                                     provisioning",
+                                    r.policy.name()
+                                );
+                            }
+                        }
+                        let never = &reports[0];
+                        let cold = &reports[1];
+                        let warm = &reports[2];
+                        println!(
+                            "warm-start vs from-scratch: {:.0} s vs {:.0} s SLA violation, \
+                             {} vs {} evaluations",
+                            warm.sla_violation_secs,
+                            cold.sla_violation_secs,
+                            warm.evaluations,
+                            cold.evaluations
+                        );
+                        println!(
+                            "cumulative cost: warm-start ${:.2}, from-scratch ${:.2}, \
+                             never-adapt ${:.2}",
+                            warm.cumulative_cost_usd,
+                            cold.cumulative_cost_usd,
+                            never.cumulative_cost_usd
+                        );
                     }
                     _ => {
                         let mut s = SchedulerSpec::parse("rl")?.build(seed);

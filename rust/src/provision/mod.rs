@@ -497,6 +497,136 @@ mod tests {
     }
 
     #[test]
+    fn prop_min_replicas_monotone_in_target() {
+        // Eq 1–3 inverted: a tighter pipeline target can never need fewer
+        // replicas, and any target reachable under a tight budget stays
+        // reachable when relaxed.
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm_fixture(&model, &pool);
+        propcheck::check_result(
+            0xA11CE,
+            256,
+            |rng| {
+                let prof = StageProfile {
+                    oct: propcheck::gen::f64_in(rng, 1e-4, 5e-2),
+                    odt: propcheck::gen::f64_in(rng, 1e-4, 5e-2),
+                    alpha: propcheck::gen::f64_in(rng, 0.5, 0.99),
+                    beta: propcheck::gen::f64_in(rng, 0.5, 0.99),
+                };
+                let tight = propcheck::gen::f64_in(rng, 0.05, 2.0);
+                let loose = tight * (1.0 + propcheck::gen::f64_in(rng, 0.0, 3.0));
+                (prof, tight, loose)
+            },
+            |(prof, tight, loose)| {
+                match (
+                    min_replicas_for_target(&cm, prof, *tight),
+                    min_replicas_for_target(&cm, prof, *loose),
+                ) {
+                    (Some(k_tight), Some(k_loose)) if k_tight < k_loose => Err(format!(
+                        "tighter target {tight} needs {k_tight} < {k_loose} for looser {loose}"
+                    )),
+                    (Some(k), None) => Err(format!(
+                        "target {tight} reachable with {k} replicas but looser {loose} is not"
+                    )),
+                    _ => Ok(()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_invert_amdahl_round_trips_against_stage_et() {
+        // The closed-form inverse must agree with the forward model: at
+        // the continuous k it returns, `stage_et` sits at (k > 1, where
+        // the equality is solved exactly) or below (k clamped to 1) the
+        // target, for a communication-free profile where ET = CT.
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cm = cm_fixture(&model, &pool);
+        let scale = cm.cfg.batch_size as f64 / cm.cfg.profile_batch as f64;
+        propcheck::check_result(
+            0xD0E5,
+            256,
+            |rng| {
+                (
+                    propcheck::gen::f64_in(rng, 1e-4, 1e-1),
+                    propcheck::gen::f64_in(rng, 0.0, 1.0),
+                    propcheck::gen::f64_in(rng, 1e-3, 10.0),
+                )
+            },
+            |&(oct, alpha, target)| {
+                let base = scale * oct;
+                match invert_amdahl(base, alpha, target) {
+                    None => {
+                        // Only legal when the serial floor alone exceeds
+                        // the target.
+                        if base * (1.0 - alpha) > target {
+                            Ok(())
+                        } else {
+                            Err(format!("None but serial floor below target {target}"))
+                        }
+                    }
+                    Some(k) => {
+                        let prof =
+                            StageProfile { oct, odt: 1e-12, alpha, beta: 0.0 };
+                        let et = cm.stage_et(&prof, k.max(1.0));
+                        if et > target * (1.0 + 1e-6) {
+                            return Err(format!("ET {et} above target {target} at k={k}"));
+                        }
+                        if k.is_finite() && k > 1.0 + 1e-9 && et < target * (1.0 - 1e-6) {
+                            return Err(format!(
+                                "inverse not tight: ET {et} well below target {target} at k={k}"
+                            ));
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_provisioned_plans_respect_pool_limits_and_floor() {
+        // Every plan the §5.1 provisioner accepts must satisfy Eq 10 (the
+        // aggregated per-type limits, PS cores included) and Eq 13 (the
+        // throughput floor).
+        let model = zoo::matchnet();
+        let pool = crate::resources::simulated_types(4, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let nl = model.num_layers();
+        propcheck::check_result(
+            0xF100D,
+            96,
+            |rng| (0..nl).map(|_| rng.below(4)).collect::<Vec<usize>>(),
+            |assign| {
+                let plan = SchedulingPlan::new(assign.clone());
+                let Some((stages, prov)) = provision(&cm, &plan) else {
+                    return Ok(()); // rejected plans carry no promise
+                };
+                let cpu_id = cm.pool.cpu_type().map(|c| c.id);
+                let units = prov.units_per_type(&stages, cm.pool.num_types(), cpu_id);
+                for (t, &k) in units.iter().enumerate() {
+                    if k > cm.pool.get(t).max_units {
+                        return Err(format!(
+                            "type {t} uses {k} units over limit {}",
+                            cm.pool.get(t).max_units
+                        ));
+                    }
+                }
+                let throughput = cm.throughput(&stages, &prov);
+                if throughput < cm.cfg.throughput_limit * 0.999 {
+                    return Err(format!(
+                        "provisioned throughput {throughput} below floor {}",
+                        cm.cfg.throughput_limit
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn provisioning_property_random_plans_meet_floor_or_report_infeasible() {
         let model = zoo::matchnet();
         let pool = crate::resources::simulated_types(4, true);

@@ -14,8 +14,9 @@
 //! * [`Scheduler::session`] — an interruptible [`SearchSession`] bounded by
 //!   a [`Budget`] (evaluation cap, wall-clock deadline, target cost).
 //!   Tables 2–3 compare schedulers *under a scheduling-time budget*, and
-//!   the elastic-provisioning path reschedules incrementally via
-//!   [`SearchSession::warm_start`] when the resource pool changes.
+//!   the elastic autoscaling loop ([`crate::elastic`]) reschedules
+//!   incrementally via [`SearchSession::warm_start`] whenever its
+//!   controller confirms SLA drift on a workload trace.
 //!
 //! Methods are named and configured through the typed [`SchedulerSpec`]
 //! registry (see [`spec`]), parseable from CLI strings

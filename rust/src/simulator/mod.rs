@@ -195,13 +195,33 @@ mod tests {
     }
 
     #[test]
-    fn simulation_is_deterministic_per_seed() {
+    fn simulation_is_bit_identical_per_config_and_seed() {
+        // The elastic controller derives per-tick seeds from the episode
+        // seed and relies on replays being exactly reproducible: every
+        // field of SimResult must match to the bit across fresh runs.
         let (m, p) = fixture();
         let cm = CostModel::new(&m, &p, CostConfig::default());
         let plan = split_plan();
-        let a = simulate_plan(&cm, &plan, &SimConfig::default(), 9).unwrap();
-        let b = simulate_plan(&cm, &plan, &SimConfig::default(), 9).unwrap();
-        assert_eq!(a.throughput, b.throughput);
+        for seed in [0u64, 9, 0xDEADBEEF] {
+            let a = simulate_plan(&cm, &plan, &SimConfig::default(), seed).unwrap();
+            let b = simulate_plan(&cm, &plan, &SimConfig::default(), seed).unwrap();
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "seed {seed}");
+            assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "seed {seed}");
+            assert_eq!(a.iter_latency.to_bits(), b.iter_latency.to_bits(), "seed {seed}");
+            assert_eq!(a.bottleneck_stage, b.bottleneck_stage, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_perturb_throughput() {
+        // The straggler draws must actually depend on the seed, or every
+        // elastic episode would see the same "measurements".
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let a = simulate_plan(&cm, &plan, &SimConfig::default(), 1).unwrap();
+        let b = simulate_plan(&cm, &plan, &SimConfig::default(), 2).unwrap();
+        assert_ne!(a.throughput.to_bits(), b.throughput.to_bits());
     }
 
     #[test]

@@ -134,6 +134,76 @@ mod tests {
     }
 
     #[test]
+    fn prop_pull_push_sequences_are_budget_invariant() {
+        // The spill/promote machinery must be invisible to training: any
+        // pull/push sequence yields bit-identical rows on the in-memory
+        // ParamServer and on TieredParamServer at every hot_rows budget,
+        // from "almost everything spills" (2) to "nothing spills" (1024).
+        use crate::util::propcheck;
+
+        #[derive(Debug, Clone)]
+        enum Op {
+            Pull(Vec<u32>),
+            Push(Vec<u32>),
+        }
+
+        propcheck::check_result(
+            0x7E9A,
+            16,
+            |rng| {
+                propcheck::gen::vec_of(rng, 1, 10, |r| {
+                    let ids: Vec<u32> =
+                        (0..r.range(1, 6)).map(|_| r.below(40) as u32).collect();
+                    if r.chance(0.5) {
+                        Op::Pull(ids)
+                    } else {
+                        Op::Push(ids)
+                    }
+                })
+            },
+            |ops| {
+                for &hot in &[2usize, 8, 1024] {
+                    let tiered = server(hot);
+                    let flat = crate::train::ps::ParamServer::new(4, 8, 0.5, 42);
+                    for (i, op) in ops.iter().enumerate() {
+                        match op {
+                            Op::Pull(ids) => {
+                                let a = tiered.pull(ids).map_err(|e| e.to_string())?;
+                                let b = flat.pull(ids);
+                                if a != b {
+                                    return Err(format!(
+                                        "pull diverged at op {i} with hot={hot}"
+                                    ));
+                                }
+                            }
+                            Op::Push(ids) => {
+                                // Distinctive, id-derived gradients.
+                                let grads: Vec<f32> = ids
+                                    .iter()
+                                    .flat_map(|&id| {
+                                        (0..4).map(move |j| id as f32 * 0.1 + j as f32)
+                                    })
+                                    .collect();
+                                tiered.push(ids, &grads).map_err(|e| e.to_string())?;
+                                flat.push(ids, &grads);
+                            }
+                        }
+                    }
+                    // Full-table sweep: every row ever touched (and the
+                    // lazily-initialized rest) must agree.
+                    let all: Vec<u32> = (0..40).collect();
+                    let a = tiered.pull(&all).map_err(|e| e.to_string())?;
+                    let b = flat.pull(&all);
+                    if a != b {
+                        return Err(format!("final sweep diverged with hot={hot}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn duplicate_ids_accumulate_like_flat_ps() {
         let tiered = server(16);
         let flat = crate::train::ps::ParamServer::new(4, 8, 0.5, 42);

@@ -5,7 +5,10 @@
 # 2. a budgeted `heterps schedule` invocation for every method the
 #    registry exposes (via `heterps methods`), so a scheduler that is
 #    registered but broken — wrong name, panicking session, spec that
-#    does not parse — fails fast here instead of in a bench.
+#    does not parse — fails fast here instead of in a bench;
+# 3. a short `heterps elastic` episode (spike trace, small adaptation
+#    budget, all three policies) for every method, guarding the
+#    trace-driven autoscaling path.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -40,6 +43,16 @@ echo "== registry smoke: schedule every method under a small budget"
 for method in $("$BIN" methods); do
   echo "   -- $method"
   "$BIN" schedule "$method" --model nce --types 2 --budget-evals 200 >/dev/null
+done
+
+echo "== elastic smoke: short trace episode (all policies) per method"
+# A broken adaptation path — trace that fails validation, a session that
+# panics mid-episode, a policy that never converges — fails here instead
+# of in fig13_elastic.
+for method in $("$BIN" methods); do
+  echo "   -- $method"
+  "$BIN" elastic --trace spike --method "$method" --model nce --types 2 \
+    --ticks 10 --adapt-evals 32 >/dev/null
 done
 
 echo "verify: OK"
