@@ -1,0 +1,228 @@
+//! Figure 14 (extension): throughput and bytes-on-wire of the async comm
+//! fabric, swept over workers x gradient codec x staleness bound, against
+//! two synchronous baselines:
+//!
+//! 1. the fabric's own bulk-synchronous single-threaded reference
+//!    (`comm::run_sync_reference`) on the *identical* workload — the
+//!    apples-to-apples comparator for every sweep cell; and
+//! 2. `train::sync_baseline::SyncBaselineRuntime` executing the matching
+//!    embedding-front + dense-tower stage pipeline in-process — the
+//!    monolithic "TF-style" runtime of Figure 12, showing what the fabric
+//!    buys over a runtime with no worker parallelism at all.
+//!
+//! Expected shape: at staleness >= 1 the async engine's throughput is at
+//! least the synchronous baseline's (and grows with workers), SparseF16
+//! moves measurably fewer bytes than F32, and staleness 0 stays
+//! bit-identical to the reference (asserted here, not just reported).
+
+use heterps::comm::{run_async, run_sync_reference, CommConfig};
+use heterps::data::compress::Codec;
+use heterps::metrics::Table;
+use heterps::resources::paper_testbed;
+use heterps::train::stage::{
+    BackwardOut, EmbeddingStage, MicroBatch, StageOp, Tensor, EMB_DIM, SLOTS, X_DIM,
+};
+use heterps::train::sync_baseline::SyncBaselineRuntime;
+use heterps::train::ParamServer;
+use heterps::util::rng::Rng;
+use std::sync::Arc;
+
+fn sweep_config(workers: usize, codec: Codec, staleness: u64) -> CommConfig {
+    CommConfig {
+        workers,
+        steps: 20,
+        rows: 64,
+        slots: 8,
+        dim: 16,
+        vocab: 20_000,
+        staleness,
+        codec,
+        compute_ms: 2.0,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn store_for(cfg: &CommConfig) -> ParamServer {
+    ParamServer::new(cfg.dim, 16, 0.3, cfg.seed)
+}
+
+/// A dense "tower" stand-in for the sync-baseline pipeline: burns the same
+/// per-microbatch device time the engine emulates, originates the loss,
+/// and hands the embedding stage an all-ones gradient.
+struct DelayTowerStage {
+    ms: f64,
+}
+
+impl StageOp for DelayTowerStage {
+    fn name(&self) -> &str {
+        "delay-tower"
+    }
+    fn forward(&mut self, mb: &MicroBatch, input: Option<&Tensor>) -> anyhow::Result<Tensor> {
+        let _ = input;
+        std::thread::sleep(std::time::Duration::from_secs_f64(self.ms / 1e3));
+        Ok(Tensor::zeros(mb.labels.len(), 1))
+    }
+    fn backward(
+        &mut self,
+        mb: &MicroBatch,
+        _input: Option<&Tensor>,
+        _grad: Option<&Tensor>,
+    ) -> anyhow::Result<BackwardOut> {
+        std::thread::sleep(std::time::Duration::from_secs_f64(self.ms / 1e3));
+        let rows = mb.labels.len();
+        Ok(BackwardOut {
+            dinput: Some(Tensor::from_vec(vec![1.0; rows * X_DIM], rows, X_DIM)),
+            loss: Some(0.0),
+        })
+    }
+    fn dense_grads_mut(&mut self) -> Option<&mut Vec<f32>> {
+        None
+    }
+    fn apply_update(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn set_speed_factor(&mut self, _f: f64) {}
+}
+
+/// Synthetic microbatches with the embedding-stage geometry.
+fn microbatches(steps: usize, rows: usize, vocab: usize, seed: u64) -> Vec<MicroBatch> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|j| MicroBatch {
+            index: j,
+            sparse_ids: (0..rows * SLOTS).map(|_| rng.zipf(vocab, 1.05) as u32).collect(),
+            labels: vec![0.0; rows],
+        })
+        .collect()
+}
+
+fn main() {
+    // --- Sweep: workers x codec x staleness vs the sync reference. -----
+    let pool = paper_testbed();
+    let mut table = Table::new(
+        "Figure 14 — async fabric: throughput and wire traffic (vs sync reference)",
+        &[
+            "workers",
+            "codec",
+            "staleness",
+            "samples/s",
+            "vs sync",
+            "wire KB",
+            "push ratio",
+            "stale mean/max",
+        ],
+    );
+    let mut all_at_least_sync = true;
+    for &workers in &[2usize, 4, 8] {
+        for codec in Codec::ALL {
+            // One reference run per (workers, codec) cell group.
+            let ref_cfg = sweep_config(workers, codec, 0);
+            let sync = run_sync_reference(&ref_cfg, &store_for(&ref_cfg)).expect("sync ref");
+            for &staleness in &[0u64, 1, 4] {
+                let cfg = sweep_config(workers, codec, staleness);
+                let store = store_for(&cfg);
+                let report = run_async(&cfg, &pool, &store).expect("async run");
+                if staleness == 0 {
+                    assert_eq!(
+                        report.digest, sync.digest,
+                        "staleness 0 must be bit-identical to the sync reference \
+                         (workers={workers}, codec={codec:?})"
+                    );
+                }
+                let speedup = report.throughput / sync.throughput.max(1e-9);
+                if staleness >= 1 && speedup < 1.0 {
+                    all_at_least_sync = false;
+                }
+                table.row(&[
+                    workers.to_string(),
+                    codec.name().to_string(),
+                    staleness.to_string(),
+                    format!("{:.0}", report.throughput),
+                    format!("{speedup:.2}x"),
+                    format!("{:.1}", report.snapshot.wire_bytes_total() as f64 / 1e3),
+                    format!("{:.2}x", report.snapshot.push_compression_ratio()),
+                    format!(
+                        "{:.2}/{}",
+                        report.snapshot.staleness_mean, report.snapshot.staleness_max
+                    ),
+                ]);
+            }
+        }
+    }
+    table.emit("fig14_comm");
+    println!(
+        "staleness>=1 throughput >= sync reference in every cell: {}",
+        all_at_least_sync
+    );
+
+    // --- Bytes check: SparseF16 vs F32 at fixed workers/staleness. -----
+    let f32_cfg = sweep_config(4, Codec::F32, 1);
+    let sp_cfg = sweep_config(4, Codec::SparseF16, 1);
+    let f32_run = run_async(&f32_cfg, &pool, &store_for(&f32_cfg)).expect("f32 run");
+    let sp_run = run_async(&sp_cfg, &pool, &store_for(&sp_cfg)).expect("sparse run");
+    println!(
+        "bytes-on-wire (4 workers, staleness 1): f32 {:.1} KB vs sparsef16 {:.1} KB ({:.2}x less)",
+        f32_run.snapshot.wire_bytes_total() as f64 / 1e3,
+        sp_run.snapshot.wire_bytes_total() as f64 / 1e3,
+        f32_run.snapshot.wire_bytes_total() as f64
+            / sp_run.snapshot.wire_bytes_total().max(1) as f64
+    );
+    assert!(
+        sp_run.snapshot.push_wire_bytes < f32_run.snapshot.push_wire_bytes,
+        "SparseF16 must reduce push bytes vs F32"
+    );
+
+    // --- The fabric vs the monolithic synchronous runtime (Fig 12's
+    //     baseline) on matched geometry: EMB_DIM/SLOTS embedding front,
+    //     the same emulated tower time, the same sample count per step. --
+    let steps = 6usize;
+    let rows = 256usize;
+    let vocab = 50_000usize;
+    let tower_ms = 4.0; // fwd + bwd = 8 ms, matching compute_ms below
+    let mut t2 = Table::new(
+        "Figure 14b — fabric vs train::sync_baseline (matched embedding geometry)",
+        &["system", "workers", "staleness", "samples/s", "vs sync baseline"],
+    );
+    let ps = Arc::new(ParamServer::new(EMB_DIM, 16, 0.3, 42));
+    let mut baseline = SyncBaselineRuntime::new(vec![
+        Box::new(EmbeddingStage::new(ps)),
+        Box::new(DelayTowerStage { ms: tower_ms }),
+    ]);
+    for mb in microbatches(steps, rows, vocab, 7) {
+        baseline.train_step(std::slice::from_ref(&mb)).expect("baseline step");
+    }
+    let base_thr = baseline.stats.throughput();
+    t2.row(&[
+        "sync baseline (in-process)".into(),
+        "1".into(),
+        "-".into(),
+        format!("{base_thr:.0}"),
+        "1.00x".into(),
+    ]);
+    for &staleness in &[0u64, 1] {
+        let cfg = CommConfig {
+            workers: 4,
+            steps,
+            rows,
+            slots: SLOTS,
+            dim: EMB_DIM,
+            vocab,
+            staleness,
+            codec: Codec::F32,
+            compute_ms: 2.0 * tower_ms,
+            seed: 42,
+            ..Default::default()
+        };
+        let store = ParamServer::new(cfg.dim, 16, 0.3, cfg.seed);
+        let report = run_async(&cfg, &pool, &store).expect("matched async run");
+        t2.row(&[
+            "async fabric".into(),
+            "4".into(),
+            staleness.to_string(),
+            format!("{:.0}", report.throughput),
+            format!("{:.2}x", report.throughput / base_thr.max(1e-9)),
+        ]);
+    }
+    t2.emit("fig14_comm_vs_sync_baseline");
+}

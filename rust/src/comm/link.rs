@@ -1,0 +1,123 @@
+//! The wire model: what a worker↔PS frame costs on each link.
+//!
+//! The paper's testbed is two clusters — CPU servers (which also host the
+//! parameter server) and GPU servers — joined by a backbone. A link's
+//! latency/bandwidth is derived from the [`crate::resources`] pool specs of
+//! its two endpoints, so the same catalog that drives scheduling drives
+//! communication accounting: bytes-on-wire translate into modeled transfer
+//! seconds without any new per-deployment configuration.
+
+use crate::resources::ResourceType;
+
+/// Where a worker↔server link sits in the cluster topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Both endpoints inside one cluster (e.g. CPU workers next to the
+    /// CPU-hosted PS): one switch hop, full NIC bandwidth.
+    IntraCluster,
+    /// Endpoints in different clusters (GPU/XPU workers reaching the
+    /// CPU-hosted PS): an extra backbone hop and a bandwidth derate.
+    InterCluster,
+}
+
+impl LinkClass {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            LinkClass::IntraCluster => 0,
+            LinkClass::InterCluster => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkClass::IntraCluster => "intra-cluster",
+            LinkClass::InterCluster => "inter-cluster",
+        }
+    }
+}
+
+/// Extra one-way latency of crossing the inter-cluster backbone (seconds).
+const BACKBONE_HOP_SECS: f64 = 200e-6;
+/// Effective-bandwidth derate for inter-cluster traffic (congested spine).
+const BACKBONE_DERATE: f64 = 0.6;
+
+/// One worker↔server link with its cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    pub class: LinkClass,
+    /// One-way latency per frame, seconds.
+    pub latency_secs: f64,
+    /// Sustained bandwidth, bytes/sec.
+    pub bytes_per_sec: f64,
+}
+
+impl LinkSpec {
+    /// Derive the link between a worker placed on `worker` and the PS
+    /// placed on `server`. Same resource *kind* means the worker lives in
+    /// the PS's cluster; a different kind crosses the backbone.
+    pub fn between(worker: &ResourceType, server: &ResourceType) -> LinkSpec {
+        let same_cluster = worker.kind == server.kind;
+        let nic = worker.net_bytes_per_sec.min(server.net_bytes_per_sec);
+        if same_cluster {
+            LinkSpec {
+                class: LinkClass::IntraCluster,
+                latency_secs: worker.net_latency_secs + server.net_latency_secs,
+                bytes_per_sec: nic,
+            }
+        } else {
+            LinkSpec {
+                class: LinkClass::InterCluster,
+                latency_secs: worker.net_latency_secs
+                    + server.net_latency_secs
+                    + BACKBONE_HOP_SECS,
+                bytes_per_sec: nic * BACKBONE_DERATE,
+            }
+        }
+    }
+
+    /// Modeled one-way transfer time of a frame of `bytes`.
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        self.latency_secs + bytes as f64 / self.bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::paper_testbed;
+
+    #[test]
+    fn cpu_worker_is_intra_gpu_worker_is_inter() {
+        let pool = paper_testbed();
+        let cpu = pool.get(0);
+        let gpu = pool.get(1);
+        let intra = LinkSpec::between(cpu, cpu);
+        let inter = LinkSpec::between(gpu, cpu);
+        assert_eq!(intra.class, LinkClass::IntraCluster);
+        assert_eq!(inter.class, LinkClass::InterCluster);
+        assert!(inter.latency_secs > intra.latency_secs);
+        assert!(inter.bytes_per_sec < gpu.net_bytes_per_sec.min(cpu.net_bytes_per_sec) + 1.0);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_floors_at_latency() {
+        let pool = paper_testbed();
+        let link = LinkSpec::between(pool.get(0), pool.get(0));
+        let small = link.transfer_secs(64);
+        let big = link.transfer_secs(1 << 20);
+        assert!(small >= link.latency_secs);
+        assert!(big > small);
+        // The per-byte share matches the bandwidth model exactly.
+        let expect = link.latency_secs + (1 << 20) as f64 / link.bytes_per_sec;
+        assert!((big - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_indices_cover_count() {
+        assert_eq!(LinkClass::IntraCluster.index(), 0);
+        assert_eq!(LinkClass::InterCluster.index(), 1);
+        assert_eq!(LinkClass::COUNT, 2);
+    }
+}

@@ -1,0 +1,289 @@
+//! Fabric telemetry: bytes on wire, compression ratios, coalescing and
+//! staleness distributions, and per-link-class modeled transfer time —
+//! everything the §4.1 communication terms can be validated against.
+//!
+//! All recording is lock-free (atomics + [`crate::metrics::Histogram`]),
+//! so workers and the server never serialize on telemetry; readers take a
+//! [`CommSnapshot`] to get one consistent-enough view for reporting.
+
+use super::link::LinkClass;
+use crate::metrics::{Counter, Histogram, Table};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Staleness histogram buckets (observed staleness clamps into the last).
+const STALENESS_BUCKETS: usize = 17;
+/// Coalesced-request-size histogram buckets, in units of 64 unique ids.
+const COALESCE_BUCKETS: usize = 33;
+const COALESCE_BUCKET_WIDTH: u64 = 64;
+
+/// Live counters for one fabric instance.
+#[derive(Debug)]
+pub struct CommMetrics {
+    pub pull_requests: Counter,
+    pub pull_replies: Counter,
+    pub pushes: Counter,
+    /// Occurrence-level ids workers wanted vs unique ids actually requested.
+    pub raw_ids: Counter,
+    pub unique_ids: Counter,
+    /// f32 payload bytes before/after the codec, per direction.
+    pub pull_raw_bytes: Counter,
+    pub pull_wire_bytes: Counter,
+    pub push_raw_bytes: Counter,
+    pub push_wire_bytes: Counter,
+    /// Whole frames (headers included) as the transport moved them.
+    frames: [Counter; LinkClass::COUNT],
+    frame_bytes: [Counter; LinkClass::COUNT],
+    /// Modeled transfer time per link class, accumulated in nanoseconds.
+    modeled_nanos: [AtomicU64; LinkClass::COUNT],
+    /// Observed staleness (requesting step minus slowest worker's clock).
+    pub staleness: Histogram,
+    /// True (unclamped) max observed staleness — the histogram buckets
+    /// clamp, and a bound check must not be fooled by the clamp.
+    staleness_true_max: AtomicU64,
+    /// Unique ids per coalesced pull, bucketed by `COALESCE_BUCKET_WIDTH`.
+    pub coalesce_sizes: Histogram,
+}
+
+impl Default for CommMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CommMetrics {
+    pub fn new() -> Self {
+        CommMetrics {
+            pull_requests: Counter::new(),
+            pull_replies: Counter::new(),
+            pushes: Counter::new(),
+            raw_ids: Counter::new(),
+            unique_ids: Counter::new(),
+            pull_raw_bytes: Counter::new(),
+            pull_wire_bytes: Counter::new(),
+            push_raw_bytes: Counter::new(),
+            push_wire_bytes: Counter::new(),
+            frames: [Counter::new(), Counter::new()],
+            frame_bytes: [Counter::new(), Counter::new()],
+            modeled_nanos: [AtomicU64::new(0), AtomicU64::new(0)],
+            staleness: Histogram::new(STALENESS_BUCKETS),
+            staleness_true_max: AtomicU64::new(0),
+            coalesce_sizes: Histogram::new(COALESCE_BUCKETS),
+        }
+    }
+
+    /// A coalesced pull went out: `raw` occurrence ids became `unique`.
+    pub fn record_coalesce(&self, raw: usize, unique: usize) {
+        self.pull_requests.add(1);
+        self.raw_ids.add(raw as u64);
+        self.unique_ids.add(unique as u64);
+        self.coalesce_sizes.record(unique as u64 / COALESCE_BUCKET_WIDTH);
+    }
+
+    /// A pull reply's payload: `raw` f32 bytes encoded to `wire` bytes.
+    pub fn record_pull_payload(&self, raw: usize, wire: usize) {
+        self.pull_replies.add(1);
+        self.pull_raw_bytes.add(raw as u64);
+        self.pull_wire_bytes.add(wire as u64);
+    }
+
+    /// A gradient push's payload: `raw` f32 bytes encoded to `wire` bytes.
+    pub fn record_push_payload(&self, raw: usize, wire: usize) {
+        self.pushes.add(1);
+        self.push_raw_bytes.add(raw as u64);
+        self.push_wire_bytes.add(wire as u64);
+    }
+
+    /// The transport moved one frame of `bytes` over a `class` link taking
+    /// `secs` of modeled transfer time.
+    pub fn record_frame(&self, class: LinkClass, bytes: usize, secs: f64) {
+        let i = class.index();
+        self.frames[i].add(1);
+        self.frame_bytes[i].add(bytes as u64);
+        self.modeled_nanos[i].fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_staleness(&self, staleness: u64) {
+        self.staleness.record(staleness);
+        self.staleness_true_max.fetch_max(staleness, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CommSnapshot {
+        let usage = |class: LinkClass| {
+            let i = class.index();
+            LinkUsage {
+                class,
+                frames: self.frames[i].get(),
+                bytes: self.frame_bytes[i].get(),
+                modeled_secs: self.modeled_nanos[i].load(Ordering::Relaxed) as f64 / 1e9,
+            }
+        };
+        CommSnapshot {
+            pull_requests: self.pull_requests.get(),
+            pull_replies: self.pull_replies.get(),
+            pushes: self.pushes.get(),
+            raw_ids: self.raw_ids.get(),
+            unique_ids: self.unique_ids.get(),
+            pull_raw_bytes: self.pull_raw_bytes.get(),
+            pull_wire_bytes: self.pull_wire_bytes.get(),
+            push_raw_bytes: self.push_raw_bytes.get(),
+            push_wire_bytes: self.push_wire_bytes.get(),
+            links: vec![usage(LinkClass::IntraCluster), usage(LinkClass::InterCluster)],
+            staleness: self.staleness.snapshot(),
+            staleness_mean: self.staleness.mean(),
+            staleness_max: self.staleness_true_max.load(Ordering::Relaxed),
+            staleness_render: self.staleness.render(),
+            coalesce_render: self.coalesce_sizes.render(),
+        }
+    }
+}
+
+/// What one link class carried.
+#[derive(Clone, Debug)]
+pub struct LinkUsage {
+    pub class: LinkClass,
+    pub frames: u64,
+    pub bytes: u64,
+    pub modeled_secs: f64,
+}
+
+/// Point-in-time view of [`CommMetrics`], with derived ratios.
+#[derive(Clone, Debug)]
+pub struct CommSnapshot {
+    pub pull_requests: u64,
+    pub pull_replies: u64,
+    pub pushes: u64,
+    pub raw_ids: u64,
+    pub unique_ids: u64,
+    pub pull_raw_bytes: u64,
+    pub pull_wire_bytes: u64,
+    pub push_raw_bytes: u64,
+    pub push_wire_bytes: u64,
+    pub links: Vec<LinkUsage>,
+    pub staleness: Vec<u64>,
+    pub staleness_mean: f64,
+    /// Largest observed staleness (true value, not histogram-clamped).
+    pub staleness_max: u64,
+    pub staleness_render: String,
+    pub coalesce_render: String,
+}
+
+impl CommSnapshot {
+    /// Total frame bytes the transport moved (headers included).
+    pub fn wire_bytes_total(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes).sum()
+    }
+
+    /// f32 payload bytes before any codec, both directions.
+    pub fn raw_payload_bytes(&self) -> u64 {
+        self.pull_raw_bytes + self.push_raw_bytes
+    }
+
+    /// Gradient-codec compression ratio (raw / wire; > 1 is a win).
+    pub fn push_compression_ratio(&self) -> f64 {
+        if self.push_wire_bytes == 0 {
+            1.0
+        } else {
+            self.push_raw_bytes as f64 / self.push_wire_bytes as f64
+        }
+    }
+
+    /// Pull-coalescing dedup ratio (raw occurrence ids / unique ids).
+    pub fn coalesce_ratio(&self) -> f64 {
+        if self.unique_ids == 0 {
+            1.0
+        } else {
+            self.raw_ids as f64 / self.unique_ids as f64
+        }
+    }
+
+    /// Render as a two-column metrics table for CLI/bench emission.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        let mut kv = |k: &str, v: String| t.row(&[k.to_string(), v]);
+        kv("pull requests", self.pull_requests.to_string());
+        kv("pull replies", self.pull_replies.to_string());
+        kv("grad pushes", self.pushes.to_string());
+        kv(
+            "coalescing (raw -> unique ids)",
+            format!("{} -> {} ({:.2}x)", self.raw_ids, self.unique_ids, self.coalesce_ratio()),
+        );
+        kv("coalesced pull sizes (x64 ids)", self.coalesce_render.clone());
+        kv(
+            "pull payload (raw -> wire KB)",
+            format!("{:.1} -> {:.1}", self.pull_raw_bytes as f64 / 1e3, self.pull_wire_bytes as f64 / 1e3),
+        );
+        kv(
+            "push payload (raw -> wire KB)",
+            format!(
+                "{:.1} -> {:.1} ({:.2}x)",
+                self.push_raw_bytes as f64 / 1e3,
+                self.push_wire_bytes as f64 / 1e3,
+                self.push_compression_ratio()
+            ),
+        );
+        for l in &self.links {
+            kv(
+                &format!("{} link", l.class.name()),
+                format!(
+                    "{} frames, {:.1} KB, {:.3} s modeled",
+                    l.frames,
+                    l.bytes as f64 / 1e3,
+                    l.modeled_secs
+                ),
+            );
+        }
+        kv(
+            "staleness (steps, mean/max)",
+            format!("{:.2} / {}", self.staleness_mean, self.staleness_max),
+        );
+        kv("staleness histogram", self.staleness_render.clone());
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_derive_from_counters() {
+        let m = CommMetrics::new();
+        m.record_coalesce(100, 40);
+        m.record_pull_payload(1600, 1609);
+        m.record_push_payload(4000, 1000);
+        m.record_frame(LinkClass::IntraCluster, 2000, 0.5e-3);
+        m.record_frame(LinkClass::InterCluster, 1000, 1.5e-3);
+        m.record_staleness(0);
+        m.record_staleness(3);
+        let s = m.snapshot();
+        assert_eq!(s.raw_ids, 100);
+        assert!((s.coalesce_ratio() - 2.5).abs() < 1e-12);
+        assert!((s.push_compression_ratio() - 4.0).abs() < 1e-12);
+        assert_eq!(s.wire_bytes_total(), 3000);
+        assert_eq!(s.raw_payload_bytes(), 5600);
+        assert!((s.staleness_mean - 1.5).abs() < 1e-12);
+        assert_eq!(s.staleness_max, 3);
+        assert!((s.links[1].modeled_secs - 1.5e-3).abs() < 1e-9);
+        let rendered = s.table("t").render();
+        assert!(rendered.contains("staleness"));
+    }
+
+    #[test]
+    fn staleness_max_is_not_clamped_by_the_histogram() {
+        let m = CommMetrics::new();
+        m.record_staleness(2);
+        m.record_staleness(40); // beyond the 17-bucket histogram range
+        let s = m.snapshot();
+        assert_eq!(s.staleness_max, 40);
+        assert!((s.staleness_mean - 21.0).abs() < 1e-12);
+        assert!(s.staleness_render.contains("16+:1"), "{}", s.staleness_render);
+    }
+
+    #[test]
+    fn empty_snapshot_has_neutral_ratios() {
+        let s = CommMetrics::new().snapshot();
+        assert_eq!(s.push_compression_ratio(), 1.0);
+        assert_eq!(s.coalesce_ratio(), 1.0);
+        assert_eq!(s.wire_bytes_total(), 0);
+    }
+}

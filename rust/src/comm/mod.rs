@@ -1,0 +1,40 @@
+//! The asynchronous communication fabric (§3's third contribution made
+//! real): typed PS messages over the `data::compress` codecs, a pluggable
+//! link-modeled transport, a bounded-staleness (SSP) server, and a
+//! multi-worker async training engine.
+//!
+//! Layering, bottom-up:
+//!
+//! * [`msg`] — `PullRequest` / `PullReply` / `PushGrad` wire frames;
+//!   coalesced row addressing, codec-framed values.
+//! * [`link`] — the per-link latency/bandwidth model derived from the
+//!   [`crate::resources`] pool (CPU↔GPU, intra-/inter-cluster).
+//! * [`transport`] — the [`Transport`] trait and the in-process
+//!   [`ChannelTransport`] whose frames are charged to their links.
+//! * [`metrics`] — bytes, compression ratios, coalescing and staleness
+//!   distributions, modeled transfer time per link class.
+//! * [`server`] — the SSP service loop over any [`crate::train::SparseStore`].
+//! * [`engine`] — worker threads, the synchronous reference, the state
+//!   digest, and the analytic-vs-measured cost-model cross-check.
+//!
+//! Semantics contract (asserted in tests and `scripts/verify.sh`):
+//! `staleness = 0` reproduces bulk-synchronous training bit-for-bit per
+//! (config, seed); `staleness >= 1` trades that determinism for async
+//! throughput under the SSP bound. See DESIGN.md §Comm-Fabric.
+
+pub mod engine;
+pub mod link;
+pub mod metrics;
+pub mod msg;
+pub mod server;
+pub mod transport;
+
+pub use engine::{
+    analytic_comm_check, run_async, run_sync_reference, state_digest, CommCheck, CommConfig,
+    CommReport,
+};
+pub use link::{LinkClass, LinkSpec};
+pub use metrics::{CommMetrics, CommSnapshot, LinkUsage};
+pub use msg::{coalesce, Message, PullReply, PullRequest, PushGrad};
+pub use server::{serve, ServerStats};
+pub use transport::{ChannelTransport, Transport};

@@ -1,0 +1,282 @@
+//! Typed PS messages and their wire format.
+//!
+//! Three message kinds cross the fabric — [`PullRequest`] (worker asks for
+//! rows), [`PullReply`] (server answers with parameter values), and
+//! [`PushGrad`] (worker sends gradients) — plus a `Bye` that lets workers
+//! hang up cleanly. Row values travel inside the self-describing
+//! [`crate::data::compress`] frames, so the fabric reuses the §3 codecs:
+//! replies are always exact `F32` (parameters do not tolerate lossy
+//! transport), pushes use the configured gradient codec.
+//!
+//! Pull requests are *coalesced*: the ids of every microbatch slot a worker
+//! touches are deduplicated and sorted before hitting the wire, then
+//! delta-varint encoded — the §3 "dynamically aggregates the data to send"
+//! path applied to row addressing.
+
+use crate::data::compress::{put_varint, read_varint};
+use anyhow::Result;
+
+const TAG_PULL_REQ: u8 = 0x01;
+const TAG_PULL_REP: u8 = 0x02;
+const TAG_PUSH: u8 = 0x03;
+const TAG_BYE: u8 = 0x04;
+
+/// Worker→server: send the rows for `ids` (sorted, unique) at clock `step`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PullRequest {
+    pub worker: u32,
+    pub step: u64,
+    pub ids: Vec<u32>,
+}
+
+/// Server→worker: the rows for the step-`step` request, as a `compress_f32`
+/// frame of `ids.len() * dim` values in request order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PullReply {
+    pub worker: u32,
+    pub step: u64,
+    pub frame: Vec<u8>,
+}
+
+/// Worker→server: occurrence-aligned gradients (`ids` may repeat — the
+/// server accumulates duplicates, matching the embedding backward path).
+/// `frame` is a `compress_f32` frame of `ids.len() * dim` values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PushGrad {
+    pub worker: u32,
+    pub step: u64,
+    pub ids: Vec<u32>,
+    pub frame: Vec<u8>,
+}
+
+/// Everything that can cross the fabric.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Message {
+    PullReq(PullRequest),
+    PullRep(PullReply),
+    Push(PushGrad),
+    Bye { worker: u32 },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a frame body with bounds-checked readers.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.buf.len() - self.pos >= n, "truncated message");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        read_varint(self.buf, &mut self.pos)
+    }
+
+    fn rest(&mut self) -> Vec<u8> {
+        let s = self.buf[self.pos..].to_vec();
+        self.pos = self.buf.len();
+        s
+    }
+}
+
+impl Message {
+    /// Serialize to one wire frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            Message::PullReq(r) => {
+                out.push(TAG_PULL_REQ);
+                put_u32(&mut out, r.worker);
+                put_u64(&mut out, r.step);
+                put_u32(&mut out, r.ids.len() as u32);
+                // Sorted unique ids -> ascending deltas -> varints.
+                let mut prev = 0u64;
+                for (i, &id) in r.ids.iter().enumerate() {
+                    let v = id as u64;
+                    debug_assert!(i == 0 || v > prev, "pull ids must be sorted unique");
+                    put_varint(&mut out, v - if i == 0 { 0 } else { prev });
+                    prev = v;
+                }
+            }
+            Message::PullRep(r) => {
+                out.push(TAG_PULL_REP);
+                put_u32(&mut out, r.worker);
+                put_u64(&mut out, r.step);
+                out.extend_from_slice(&r.frame);
+            }
+            Message::Push(p) => {
+                out.push(TAG_PUSH);
+                put_u32(&mut out, p.worker);
+                put_u64(&mut out, p.step);
+                put_u32(&mut out, p.ids.len() as u32);
+                for &id in &p.ids {
+                    put_u32(&mut out, id);
+                }
+                out.extend_from_slice(&p.frame);
+            }
+            Message::Bye { worker } => {
+                out.push(TAG_BYE);
+                put_u32(&mut out, *worker);
+            }
+        }
+        out
+    }
+
+    /// Parse one wire frame.
+    pub fn decode(frame: &[u8]) -> Result<Message> {
+        anyhow::ensure!(!frame.is_empty(), "empty message");
+        let mut r = Reader::new(&frame[1..]);
+        match frame[0] {
+            TAG_PULL_REQ => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                let n = r.u32()? as usize;
+                // Cap the pre-allocation: a corrupt count must not ask for
+                // gigabytes before the (bounds-checked) reads fail.
+                let mut ids = Vec::with_capacity(n.min(1 << 16));
+                let mut acc = 0u64;
+                for i in 0..n {
+                    let delta = r.varint()?;
+                    anyhow::ensure!(i == 0 || delta > 0, "pull ids not strictly ascending");
+                    acc = acc
+                        .checked_add(delta)
+                        .ok_or_else(|| anyhow::anyhow!("pull id overflow"))?;
+                    anyhow::ensure!(acc <= u32::MAX as u64, "pull id beyond u32");
+                    ids.push(acc as u32);
+                }
+                anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after pull request");
+                Ok(Message::PullReq(PullRequest { worker, step, ids }))
+            }
+            TAG_PULL_REP => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                Ok(Message::PullRep(PullReply { worker, step, frame: r.rest() }))
+            }
+            TAG_PUSH => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut ids = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    ids.push(r.u32()?);
+                }
+                Ok(Message::Push(PushGrad { worker, step, ids, frame: r.rest() }))
+            }
+            TAG_BYE => {
+                let worker = r.u32()?;
+                anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after bye");
+                Ok(Message::Bye { worker })
+            }
+            other => anyhow::bail!("unknown message tag {other:#x}"),
+        }
+    }
+}
+
+/// Coalesce the occurrence-level ids of a batch into one pull: returns the
+/// sorted unique ids plus, per occurrence, the index of its row in the
+/// (request-ordered) reply — so callers scatter pulled rows back without a
+/// second lookup structure.
+pub fn coalesce(ids: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut unique: Vec<u32> = ids.to_vec();
+    unique.sort_unstable();
+    unique.dedup();
+    let index = ids
+        .iter()
+        .map(|id| unique.binary_search(id).expect("id present after dedup") as u32)
+        .collect();
+    (unique, index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::compress::{compress_f32, Codec};
+
+    #[test]
+    fn pull_request_roundtrips_with_delta_varints() {
+        let req = PullRequest { worker: 3, step: 17, ids: vec![0, 1, 5, 1000, 4_000_000_000] };
+        let frame = Message::PullReq(req.clone()).encode();
+        assert_eq!(Message::decode(&frame).unwrap(), Message::PullReq(req));
+    }
+
+    #[test]
+    fn pull_reply_and_push_roundtrip_with_codec_frames() {
+        let values = vec![1.0f32, -2.5, 0.0, 3.25];
+        let rep = PullReply { worker: 0, step: 2, frame: compress_f32(&values, Codec::F32) };
+        let frame = Message::PullRep(rep.clone()).encode();
+        assert_eq!(Message::decode(&frame).unwrap(), Message::PullRep(rep));
+
+        let push = PushGrad {
+            worker: 1,
+            step: 9,
+            ids: vec![7, 7, 3], // pushes may repeat ids (duplicates accumulate)
+            frame: compress_f32(&values, Codec::SparseF16),
+        };
+        let frame = Message::Push(push.clone()).encode();
+        assert_eq!(Message::decode(&frame).unwrap(), Message::Push(push));
+    }
+
+    #[test]
+    fn bye_roundtrips() {
+        let frame = Message::Bye { worker: 12 }.encode();
+        assert_eq!(Message::decode(&frame).unwrap(), Message::Bye { worker: 12 });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[0xff, 0, 0]).is_err());
+        // Truncated pull request header.
+        assert!(Message::decode(&[TAG_PULL_REQ, 1, 2]).is_err());
+        // Non-ascending ids: two zero deltas after the first.
+        let mut frame = Vec::new();
+        frame.push(TAG_PULL_REQ);
+        frame.extend_from_slice(&5u32.to_le_bytes());
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.extend_from_slice(&2u32.to_le_bytes());
+        frame.push(3); // id 3
+        frame.push(0); // delta 0 -> duplicate
+        assert!(Message::decode(&frame).is_err());
+    }
+
+    #[test]
+    fn coalesce_dedups_and_maps_every_occurrence() {
+        let occ = vec![9u32, 3, 9, 3, 7, 9];
+        let (unique, index) = coalesce(&occ);
+        assert_eq!(unique, vec![3, 7, 9]);
+        assert_eq!(index.len(), occ.len());
+        for (i, &u) in index.iter().enumerate() {
+            assert_eq!(unique[u as usize], occ[i]);
+        }
+    }
+
+    #[test]
+    fn coalesce_of_empty_is_empty() {
+        let (unique, index) = coalesce(&[]);
+        assert!(unique.is_empty() && index.is_empty());
+    }
+}

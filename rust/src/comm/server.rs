@@ -1,0 +1,244 @@
+//! The parameter-server side of the fabric: a single service loop that
+//! decodes wire messages, enforces the bounded-staleness (SSP) clock, and
+//! applies gradients to a [`SparseStore`] backend.
+//!
+//! SSP semantics: a worker about to run step `t` (i.e. it has pushed steps
+//! `0..t`) may have its step-`t` pull served only when
+//! `t <= min_w(completed_w) + staleness`. `staleness = 0` degenerates to
+//! bulk-synchronous execution — every step-`t` pull waits for every
+//! worker's step-`t-1` push — and the server then applies each step's
+//! pushes *in worker order*, so the final table state is bit-identical to
+//! the single-threaded synchronous reference regardless of thread
+//! interleaving. With `staleness >= 1`, pushes apply on arrival and fast
+//! workers run ahead, trading reproducibility for throughput.
+
+use super::metrics::CommMetrics;
+use super::msg::{Message, PullReply, PullRequest, PushGrad};
+use super::transport::Transport;
+use crate::data::compress::{compress_f32, decompress_f32, Codec};
+use crate::train::SparseStore;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Tallies from one service run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub served_pulls: u64,
+    pub applied_pushes: u64,
+}
+
+struct ServerState<'a, S: SparseStore> {
+    store: &'a S,
+    transport: &'a dyn Transport,
+    metrics: &'a CommMetrics,
+    staleness: u64,
+    /// Pushes received per worker (each worker pushes steps 0,1,2,... in
+    /// order, so this is also the step its next push must carry).
+    received: Vec<u64>,
+    /// Pushes *applied* per worker — the SSP clock. Equal to `received`
+    /// in async mode; lags until the step barrier in synchronous mode.
+    completed: Vec<u64>,
+    /// Workers that have not said bye. A departed worker leaves the SSP
+    /// clock and barrier membership, so one early-exiting worker (error
+    /// path, ragged workload) cannot wedge the survivors.
+    live: Vec<bool>,
+    /// At most one outstanding pull per worker, parked until admissible.
+    deferred: Vec<Option<PullRequest>>,
+    /// Synchronous mode only: step -> pushes waiting for the barrier.
+    barrier: BTreeMap<u64, Vec<PushGrad>>,
+    stats: ServerStats,
+}
+
+impl<'a, S: SparseStore> ServerState<'a, S> {
+    fn min_completed(&self) -> u64 {
+        // Min over live workers; departed workers no longer gate anyone.
+        // (With nobody left the service loop is about to exit anyway.)
+        self.completed
+            .iter()
+            .zip(&self.live)
+            .filter(|(_, &l)| l)
+            .map(|(&c, _)| c)
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    fn admissible(&self, step: u64) -> bool {
+        step <= self.min_completed().saturating_add(self.staleness)
+    }
+
+    fn serve_pull(&mut self, req: PullRequest) -> Result<()> {
+        let w = req.worker as usize;
+        self.metrics.record_staleness(req.step.saturating_sub(self.min_completed()));
+        let rows = self.store.pull(&req.ids)?;
+        let frame = compress_f32(&rows, Codec::F32); // parameters travel exact
+        self.metrics.record_pull_payload(rows.len() * 4, frame.len());
+        let reply = Message::PullRep(PullReply { worker: req.worker, step: req.step, frame });
+        self.transport.send_to_worker(w, reply.encode())?;
+        self.stats.served_pulls += 1;
+        Ok(())
+    }
+
+    fn apply_push(&mut self, p: &PushGrad) -> Result<()> {
+        let grads = decompress_f32(&p.frame)?;
+        anyhow::ensure!(
+            grads.len() == p.ids.len() * self.store.dim(),
+            "push payload arity: {} values for {} ids x dim {}",
+            grads.len(),
+            p.ids.len(),
+            self.store.dim()
+        );
+        self.store.push(&p.ids, &grads)?;
+        self.completed[p.worker as usize] += 1;
+        self.stats.applied_pushes += 1;
+        Ok(())
+    }
+
+    /// Serve every parked pull the (possibly advanced) clock now admits.
+    /// Serving a pull never moves the clock, so one pass reaches fixpoint.
+    fn drain_deferred(&mut self) -> Result<()> {
+        let bound = self.min_completed().saturating_add(self.staleness);
+        let ready: Vec<usize> = self
+            .deferred
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Some(r) if r.step <= bound))
+            .map(|(w, _)| w)
+            .collect();
+        for w in ready {
+            let req = self.deferred[w].take().expect("selected above");
+            self.serve_pull(req)?;
+        }
+        Ok(())
+    }
+
+    fn on_push(&mut self, p: PushGrad) -> Result<()> {
+        let w = p.worker as usize;
+        anyhow::ensure!(w < self.received.len(), "push from unknown worker {w}");
+        anyhow::ensure!(
+            p.step == self.received[w],
+            "worker {w} pushed step {} but {} was expected (in-order protocol)",
+            p.step,
+            self.received[w]
+        );
+        self.received[w] += 1;
+        if self.staleness == 0 {
+            // Park until every live worker's step-`t` push is in, then
+            // apply in worker order: the state transition is a
+            // deterministic function of the pushes, not of thread
+            // arrival order.
+            self.barrier.entry(p.step).or_default().push(p);
+            self.fire_ready_barriers()?;
+        } else {
+            self.apply_push(&p)?;
+        }
+        self.drain_deferred()
+    }
+
+    /// A parked step is ready once every live worker's push is in (a
+    /// departed worker's buffered pushes still participate). Fire ready
+    /// steps in ascending order; stop at the first incomplete one so
+    /// worker-order application within a step stays deterministic.
+    fn fire_ready_barriers(&mut self) -> Result<()> {
+        while let Some((&step, slot)) = self.barrier.iter().next() {
+            let ready = self
+                .live
+                .iter()
+                .enumerate()
+                .filter(|(_, &l)| l)
+                .all(|(w, _)| slot.iter().any(|p| p.worker as usize == w));
+            if !ready {
+                break;
+            }
+            let mut batch = self.barrier.remove(&step).expect("present");
+            batch.sort_by_key(|q| q.worker);
+            for q in &batch {
+                self.apply_push(q)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run the service loop until every worker has said bye. Returns the tally;
+/// errors (malformed frames, backend failures, transport hangups) abort the
+/// loop — callers should then shut the transport down so blocked workers
+/// unblock.
+pub fn serve<S: SparseStore>(
+    store: &S,
+    transport: &dyn Transport,
+    staleness: u64,
+    metrics: &CommMetrics,
+) -> Result<ServerStats> {
+    let n = transport.n_workers();
+    let mut st = ServerState {
+        store,
+        transport,
+        metrics,
+        staleness,
+        received: vec![0; n],
+        completed: vec![0; n],
+        live: vec![true; n],
+        deferred: vec![None; n],
+        barrier: BTreeMap::new(),
+        stats: ServerStats::default(),
+    };
+    let mut byes = 0usize;
+    while byes < n {
+        let (lane, frame) = transport.recv_at_server()?;
+        match Message::decode(&frame)? {
+            Message::PullReq(req) => {
+                anyhow::ensure!(req.worker as usize == lane, "pull lane/worker mismatch");
+                anyhow::ensure!(
+                    st.deferred[lane].is_none(),
+                    "worker {lane} has two pulls in flight"
+                );
+                if st.admissible(req.step) {
+                    st.serve_pull(req)?;
+                } else {
+                    st.deferred[lane] = Some(req);
+                }
+            }
+            Message::Push(p) => {
+                anyhow::ensure!(p.worker as usize == lane, "push lane/worker mismatch");
+                st.on_push(p)?;
+            }
+            Message::Bye { worker } => {
+                anyhow::ensure!(worker as usize == lane, "bye lane/worker mismatch");
+                anyhow::ensure!(st.live[lane], "worker {lane} said bye twice");
+                st.live[lane] = false;
+                // A worker that dies with a pull in flight abandons it.
+                st.deferred[lane] = None;
+                byes += 1;
+                // The departing worker leaves the clock/barrier membership:
+                // parked steps may now be complete and parked pulls
+                // admissible for the survivors.
+                if st.staleness == 0 {
+                    st.fire_ready_barriers()?;
+                }
+                st.drain_deferred()?;
+            }
+            Message::PullRep(_) => anyhow::bail!("pull reply arrived at the server"),
+        }
+    }
+    // Uniform-step workloads leave nothing parked: the last barrier fires
+    // before the last bye. Flush defensively (deterministic order) so a
+    // ragged workload still lands every gradient.
+    let mut leftovers: Vec<PushGrad> =
+        std::mem::take(&mut st.barrier).into_values().flatten().collect();
+    leftovers.sort_by_key(|p| (p.step, p.worker));
+    for p in &leftovers {
+        st.apply_push(p)?;
+    }
+    anyhow::ensure!(
+        st.deferred.iter().all(Option::is_none),
+        "a worker left with a pull still parked"
+    );
+    Ok(st.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    // The service loop is exercised end-to-end (threads, transport,
+    // barriers, deferral) by the engine tests in `super::engine` and the
+    // cross-backend integration tests in `rust/tests/comm_fabric.rs`.
+}

@@ -1,0 +1,208 @@
+//! Pluggable wire transport.
+//!
+//! [`Transport`] is the fabric's only I/O surface: workers send frames up,
+//! the server fans replies back down. The shipped implementation,
+//! [`ChannelTransport`], is in-process (std `mpsc` channels — the same
+//! single-host substitution DESIGN.md §Hardware-Adaptation makes for the
+//! training runtime) but *accounted* as if it were a network: every frame
+//! is charged to its worker's [`LinkSpec`], so bytes-on-wire translate
+//! into modeled transfer seconds, optionally emulated with real sleeps.
+
+use super::link::LinkSpec;
+use super::metrics::CommMetrics;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A worker↔server message fabric. Implementations must be safe to share
+/// across the server thread and every worker thread.
+pub trait Transport: Send + Sync {
+    fn n_workers(&self) -> usize;
+    /// Worker side: ship a frame to the server over worker `w`'s link.
+    fn send_to_server(&self, w: usize, frame: Vec<u8>) -> Result<()>;
+    /// Server side: blocking receive of the next `(worker, frame)`.
+    fn recv_at_server(&self) -> Result<(usize, Vec<u8>)>;
+    /// Server side: ship a frame to worker `w`.
+    fn send_to_worker(&self, w: usize, frame: Vec<u8>) -> Result<()>;
+    /// Worker side: blocking receive of the next frame for worker `w`.
+    fn recv_at_worker(&self, w: usize) -> Result<Vec<u8>>;
+    /// The link model applied to worker `w`'s traffic.
+    fn link(&self, w: usize) -> &LinkSpec;
+}
+
+/// A frame headed to the server, tagged with the sending worker's lane.
+type UpFrame = (usize, Vec<u8>);
+/// Closable sender lane (taken on shutdown so receivers observe hangup).
+type Lane<T> = Mutex<Option<mpsc::Sender<T>>>;
+
+/// In-process channel transport with link-modeled accounting.
+pub struct ChannelTransport {
+    links: Vec<LinkSpec>,
+    metrics: Arc<CommMetrics>,
+    /// When set, the modeled transfer time is actually slept — on the
+    /// sending worker for uplink frames and the receiving worker for
+    /// downlink frames, never on the server thread — so measured
+    /// wall-clock includes the wire (off by default: accounting only).
+    emulate_wire: bool,
+    up_tx: Vec<Lane<UpFrame>>,
+    up_rx: Mutex<mpsc::Receiver<UpFrame>>,
+    down_tx: Vec<Lane<Vec<u8>>>,
+    down_rx: Vec<Mutex<mpsc::Receiver<Vec<u8>>>>,
+}
+
+impl ChannelTransport {
+    /// One duplex lane per worker; `links[w]` prices worker `w`'s frames.
+    pub fn new(links: Vec<LinkSpec>, metrics: Arc<CommMetrics>, emulate_wire: bool) -> Self {
+        let n = links.len();
+        assert!(n > 0, "transport needs at least one worker");
+        let (up_send, up_recv) = mpsc::channel();
+        let up_tx = (0..n).map(|_| Mutex::new(Some(up_send.clone()))).collect();
+        drop(up_send);
+        let mut down_tx = Vec::with_capacity(n);
+        let mut down_rx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            down_tx.push(Mutex::new(Some(tx)));
+            down_rx.push(Mutex::new(rx));
+        }
+        ChannelTransport {
+            links,
+            metrics,
+            emulate_wire,
+            up_tx,
+            up_rx: Mutex::new(up_recv),
+            down_tx,
+            down_rx,
+        }
+    }
+
+    /// Charge one frame to worker `w`'s link; returns the modeled time.
+    fn account(&self, w: usize, bytes: usize) -> f64 {
+        let link = &self.links[w];
+        let secs = link.transfer_secs(bytes);
+        self.metrics.record_frame(link.class, bytes, secs);
+        secs
+    }
+
+    fn emulate(&self, secs: f64) {
+        if self.emulate_wire {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+    }
+
+    /// Drop the server→worker senders so blocked workers observe a hangup
+    /// instead of waiting forever. Call after the server loop exits on an
+    /// error path; a no-op on the clean path (workers already said bye).
+    pub fn shutdown_workers(&self) {
+        for tx in &self.down_tx {
+            tx.lock().unwrap().take();
+        }
+    }
+
+    /// Drop worker `w`'s up-sender so the server's receive loop can observe
+    /// all-workers-gone as a channel hangup.
+    pub fn close_worker(&self, w: usize) {
+        self.up_tx[w].lock().unwrap().take();
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    fn send_to_server(&self, w: usize, frame: Vec<u8>) -> Result<()> {
+        // Uplink time is slept by the sending worker thread: links are
+        // independent, so each worker pays its own wire without
+        // serializing anyone else.
+        let secs = self.account(w, frame.len());
+        self.emulate(secs);
+        let guard = self.up_tx[w].lock().unwrap();
+        let tx = guard.as_ref().ok_or_else(|| anyhow::anyhow!("worker {w} lane closed"))?;
+        tx.send((w, frame)).map_err(|_| anyhow::anyhow!("server hung up"))
+    }
+
+    fn recv_at_server(&self) -> Result<(usize, Vec<u8>)> {
+        self.up_rx
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all workers hung up"))
+    }
+
+    fn send_to_worker(&self, w: usize, frame: Vec<u8>) -> Result<()> {
+        // Downlink time is slept by the *receiving* worker (see
+        // `recv_at_worker`), never on the single server thread — sleeping
+        // here would serialize every link's modeled time through the
+        // service loop and understate async throughput.
+        self.account(w, frame.len());
+        let guard = self.down_tx[w].lock().unwrap();
+        let tx = guard.as_ref().ok_or_else(|| anyhow::anyhow!("worker {w} lane closed"))?;
+        tx.send(frame).map_err(|_| anyhow::anyhow!("worker {w} hung up"))
+    }
+
+    fn recv_at_worker(&self, w: usize) -> Result<Vec<u8>> {
+        let frame = self.down_rx[w]
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server hung up"))?;
+        // Delivery delay of the downlink frame, paid on the worker's own
+        // clock (already recorded by the sender; do not account twice).
+        self.emulate(self.links[w].transfer_secs(frame.len()));
+        Ok(frame)
+    }
+
+    fn link(&self, w: usize) -> &LinkSpec {
+        &self.links[w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::link::LinkClass;
+    use crate::resources::paper_testbed;
+
+    fn transport(n: usize) -> (ChannelTransport, Arc<CommMetrics>) {
+        let pool = paper_testbed();
+        let links = (0..n)
+            .map(|w| LinkSpec::between(pool.get(w % pool.num_types()), pool.get(0)))
+            .collect();
+        let metrics = Arc::new(CommMetrics::new());
+        (ChannelTransport::new(links, metrics.clone(), false), metrics)
+    }
+
+    #[test]
+    fn frames_flow_both_ways_and_are_accounted() {
+        let (t, m) = transport(2);
+        t.send_to_server(1, vec![1, 2, 3]).unwrap();
+        let (w, frame) = t.recv_at_server().unwrap();
+        assert_eq!((w, frame), (1, vec![1, 2, 3]));
+        t.send_to_worker(0, vec![9]).unwrap();
+        assert_eq!(t.recv_at_worker(0).unwrap(), vec![9]);
+        let s = m.snapshot();
+        assert_eq!(s.wire_bytes_total(), 4);
+        // Worker 1 sits on the GPU type -> inter-cluster; worker 0 intra.
+        assert_eq!(s.links[LinkClass::InterCluster.index()].bytes, 3);
+        assert_eq!(s.links[LinkClass::IntraCluster.index()].bytes, 1);
+        assert!(s.links[0].modeled_secs > 0.0 && s.links[1].modeled_secs > 0.0);
+    }
+
+    #[test]
+    fn shutdown_unblocks_workers_with_an_error() {
+        let (t, _) = transport(1);
+        t.shutdown_workers();
+        assert!(t.recv_at_worker(0).is_err());
+        assert!(t.send_to_worker(0, vec![0]).is_err());
+    }
+
+    #[test]
+    fn closing_all_workers_hangs_up_the_server() {
+        let (t, _) = transport(2);
+        t.close_worker(0);
+        t.close_worker(1);
+        assert!(t.recv_at_server().is_err());
+        assert!(t.send_to_server(0, vec![1]).is_err());
+    }
+}

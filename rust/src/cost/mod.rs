@@ -212,6 +212,21 @@ fn layer_compute_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch:
     }
 }
 
+/// Weight-synchronization bytes one `batch`-sample iteration generates for
+/// `layer` — the numerator of the Eq 2 sync term, exposed on its own so
+/// the comm fabric can cross-check the analytic model against the bytes it
+/// actually moved (`comm::analytic_comm_check`).
+pub fn layer_sync_bytes(layer: &crate::model::LayerSpec, batch: u64) -> f64 {
+    match layer.kind {
+        // Sparse tables sync only touched rows: PS pull + push of the
+        // batch's input volume, proportional to batch.
+        LayerKind::Embedding => 2.0 * layer.input_bytes as f64 * batch as f64,
+        // Dense weights allreduce once per iteration (2x volume for
+        // reduce-scatter + all-gather), independent of batch.
+        _ => 2.0 * layer.weight_bytes as f64,
+    }
+}
+
 /// Communication seconds for one layer, split into (boundary, sync):
 /// boundary = activation + gradient transfer to the next stage (paid only
 /// when this layer ends a stage); sync = weight-synchronization traffic
@@ -219,13 +234,7 @@ fn layer_compute_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch:
 fn layer_comm_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch: u64) -> (f64, f64) {
     let b = batch as f64;
     let boundary = 2.0 * layer.output_bytes as f64 * b; // activation fwd + grad bwd
-    let weight_sync = match layer.kind {
-        // Sparse tables sync only touched rows: proportional to batch.
-        LayerKind::Embedding => 2.0 * layer.input_bytes as f64 * b,
-        // Dense weights allreduce once per iteration (2x volume for
-        // reduce-scatter + all-gather), independent of batch.
-        _ => 2.0 * layer.weight_bytes as f64,
-    };
+    let weight_sync = layer_sync_bytes(layer, batch);
     (boundary / rt.net_bytes_per_sec, weight_sync / rt.net_bytes_per_sec)
 }
 
@@ -319,6 +328,18 @@ mod tests {
         // 2 CPU units + 3 GPU units for 7200s: (2*0.04 + 3*2.42) * 2h.
         let cost = cm.monetary_cost(7200.0, &[2, 3]);
         assert!((cost - (2.0 * 0.04 + 3.0 * 2.42) * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_sync_bytes_splits_sparse_and_dense() {
+        use crate::model::LayerSpec;
+        let emb = LayerSpec::new(0, LayerKind::Embedding, 100, 1_000_000, 0, 0);
+        // Sparse: 2 x input x batch, independent of table size.
+        assert!((layer_sync_bytes(&emb, 50) - 2.0 * 100.0 * 50.0).abs() < 1e-9);
+        let fc = LayerSpec::new(1, LayerKind::FullyConnected, 100, 4096, 10, 10);
+        // Dense: 2 x weights, independent of batch.
+        assert!((layer_sync_bytes(&fc, 50) - 2.0 * 4096.0).abs() < 1e-9);
+        assert!((layer_sync_bytes(&fc, 5000) - 2.0 * 4096.0).abs() < 1e-9);
     }
 
     #[test]

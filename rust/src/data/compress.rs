@@ -19,9 +19,67 @@ pub enum Codec {
     SparseF16,
 }
 
+impl Codec {
+    pub const ALL: [Codec; 3] = [Codec::F32, Codec::F16, Codec::SparseF16];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::SparseF16 => "sparsef16",
+        }
+    }
+
+    /// Parse a CLI/config codec name (`f32`, `f16`, `sparsef16`/`sparse`).
+    pub fn parse(name: &str) -> anyhow::Result<Codec> {
+        match name.to_ascii_lowercase().as_str() {
+            "f32" => Ok(Codec::F32),
+            "f16" => Ok(Codec::F16),
+            "sparsef16" | "sparse" => Ok(Codec::SparseF16),
+            other => anyhow::bail!("unknown codec `{other}` (known: f32, f16, sparsef16)"),
+        }
+    }
+}
+
 const MAGIC_F32: u8 = 0;
 const MAGIC_F16: u8 = 1;
 const MAGIC_SPARSE: u8 = 2;
+
+/// Decoder sanity cap on claimed element counts (2^28 f32s = 1 GiB): a
+/// corrupt length field must fail with an error, not abort on allocation.
+const MAX_DECODE_ELEMS: usize = 1 << 28;
+
+/// LEB128-style varint append — the shared wire primitive for sparse
+/// codec indices and `comm::msg` id deltas.
+pub(crate) fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            break;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Bounds- and overflow-checked varint read from `buf` at `*pos`
+/// (advanced past the varint on success).
+pub(crate) fn read_varint(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        anyhow::ensure!(*pos < buf.len(), "truncated varint");
+        anyhow::ensure!(shift < 64, "varint overflow");
+        let byte = buf[*pos];
+        *pos += 1;
+        v |= ((byte & 0x7f) as u64) << shift;
+        shift += 7;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+    }
+}
 
 /// f32 -> IEEE 754 half bits (round-to-nearest-even via the bit trick).
 pub fn f32_to_f16_bits(x: f32) -> u16 {
@@ -118,27 +176,20 @@ pub fn compress_f32(data: &[f32], codec: Codec) -> Vec<u8> {
         Codec::SparseF16 => {
             out.push(MAGIC_SPARSE);
             push_len(&mut out, data.len());
-            // Indices as delta-varint, values as f16.
+            // Indices as delta-varint, values as f16. NaN is kept despite
+            // failing the magnitude test — silently zeroing a NaN gradient
+            // would mask divergence instead of propagating it.
             let nz: Vec<(usize, f32)> = data
                 .iter()
                 .copied()
                 .enumerate()
-                .filter(|(_, v)| v.abs() > 1e-8)
+                .filter(|(_, v)| v.abs() > 1e-8 || v.is_nan())
                 .collect();
             push_len(&mut out, nz.len());
             let mut prev = 0usize;
             for (i, _) in &nz {
-                let mut delta = (i - prev) as u64;
+                put_varint(&mut out, (i - prev) as u64);
                 prev = *i;
-                loop {
-                    let byte = (delta & 0x7f) as u8;
-                    delta >>= 7;
-                    if delta == 0 {
-                        out.push(byte);
-                        break;
-                    }
-                    out.push(byte | 0x80);
-                }
             }
             for (_, v) in &nz {
                 out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
@@ -154,6 +205,10 @@ pub fn decompress_f32(frame: &[u8]) -> anyhow::Result<Vec<f32>> {
     let magic = frame[0];
     let read_u64 = |b: &[u8]| u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
     let len = read_u64(&frame[1..9]);
+    // Sanity-cap the claimed element count before any size arithmetic or
+    // allocation: corrupt headers must error, not overflow `len * 4` or
+    // abort allocating terabytes.
+    anyhow::ensure!(len <= MAX_DECODE_ELEMS, "frame length {len} over decoder cap");
     let body = &frame[9..];
     match magic {
         MAGIC_F32 => {
@@ -171,22 +226,16 @@ pub fn decompress_f32(frame: &[u8]) -> anyhow::Result<Vec<f32>> {
             anyhow::ensure!(body.len() >= 8, "sparse header");
             let nz = read_u64(&body[..8]);
             let mut pos = 8usize;
+            // Every index costs at least one varint byte, so a sane `nz`
+            // never exceeds the remaining body.
+            anyhow::ensure!(nz <= body.len() - 8, "sparse nz count over body size");
             let mut indices = Vec::with_capacity(nz);
             let mut acc = 0usize;
             for _ in 0..nz {
-                let mut shift = 0u32;
-                let mut delta = 0u64;
-                loop {
-                    anyhow::ensure!(pos < body.len(), "truncated varint");
-                    let byte = body[pos];
-                    pos += 1;
-                    delta |= ((byte & 0x7f) as u64) << shift;
-                    shift += 7;
-                    if byte & 0x80 == 0 {
-                        break;
-                    }
-                }
-                acc += delta as usize;
+                let delta = read_varint(body, &mut pos)?;
+                acc = acc
+                    .checked_add(delta as usize)
+                    .ok_or_else(|| anyhow::anyhow!("sparse index overflow"))?;
                 indices.push(acc);
             }
             anyhow::ensure!(body.len() - pos == nz * 2, "sparse values size");
@@ -320,6 +369,137 @@ mod tests {
     }
 
     #[test]
+    fn codec_names_roundtrip_through_parse() {
+        for codec in Codec::ALL {
+            assert_eq!(Codec::parse(codec.name()).unwrap(), codec);
+        }
+        assert_eq!(Codec::parse("SPARSE").unwrap(), Codec::SparseF16);
+        assert!(Codec::parse("f64").is_err());
+    }
+
+    #[test]
+    fn edge_values_respect_each_codec_contract() {
+        let data = vec![
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            65504.0,   // f16 max normal
+            -65504.0,
+            70000.0,   // overflows f16 -> +inf
+            -70000.0,  // -> -inf
+            1e-40,     // f32 subnormal, underflows f16 -> 0
+            -1e-40,
+            3.0e-5,    // lands in f16's subnormal range
+        ];
+        // F32 is bit-exact, NaN payload and zero signs included.
+        let back = decompress_f32(&compress_f32(&data, Codec::F32)).unwrap();
+        assert_eq!(back.len(), data.len());
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // F16 keeps signs of zeros, maps overflow to signed inf, keeps NaN.
+        let back = decompress_f32(&compress_f32(&data, Codec::F16)).unwrap();
+        assert_eq!(back[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(back[1].to_bits(), (-0.0f32).to_bits());
+        assert!(back[2].is_nan());
+        assert_eq!(back[3], f32::INFINITY);
+        assert_eq!(back[4], f32::NEG_INFINITY);
+        assert_eq!(back[5], 65504.0);
+        assert_eq!(back[7], f32::INFINITY);
+        assert_eq!(back[8], f32::NEG_INFINITY);
+        assert_eq!(back[9], 0.0);
+        assert!((back[11] - 3.0e-5).abs() < 6e-8, "f16 subnormal: {}", back[11]);
+        // SparseF16 drops near-zeros (including -0.0, by design) but must
+        // never drop NaN or infinities.
+        let back = decompress_f32(&compress_f32(&data, Codec::SparseF16)).unwrap();
+        assert_eq!(back.len(), data.len());
+        assert_eq!(back[1], 0.0);
+        assert!(back[2].is_nan(), "SparseF16 must propagate NaN");
+        assert_eq!(back[3], f32::INFINITY);
+        assert_eq!(back[4], f32::NEG_INFINITY);
+        assert_eq!(back[9], 0.0); // below threshold -> dropped
+    }
+
+    #[test]
+    fn empty_input_roundtrips_through_every_codec() {
+        for codec in Codec::ALL {
+            let back = decompress_f32(&compress_f32(&[], codec)).unwrap();
+            assert!(back.is_empty(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn property_length_is_invariant_and_specials_survive() {
+        // decompress(compress(x)).len() == x.len() for ALL codecs on ALL
+        // inputs — including NaN payloads, infinities, signed zeros,
+        // subnormals and f16-overflowing magnitudes.
+        propcheck::check_result(
+            0xED6E,
+            192,
+            |rng: &mut Rng| {
+                let n = rng.below(200); // 0 included: empty frames
+                (0..n)
+                    .map(|_| match rng.below(8) {
+                        0 => 0.0f32,
+                        1 => -0.0,
+                        2 => f32::NAN,
+                        3 => {
+                            if rng.chance(0.5) {
+                                f32::INFINITY
+                            } else {
+                                f32::NEG_INFINITY
+                            }
+                        }
+                        4 => (rng.f32() - 0.5) * 1e6,  // mostly f16 overflow
+                        5 => (rng.f32() - 0.5) * 1e-38, // f32 subnormal-ish
+                        6 => (rng.f32() - 0.5) * 2e-4,  // f16 subnormal range
+                        _ => (rng.f32() - 0.5) * 20.0,  // ordinary values
+                    })
+                    .collect::<Vec<f32>>()
+            },
+            |data| {
+                for codec in Codec::ALL {
+                    let back = decompress_f32(&compress_f32(data, codec))
+                        .map_err(|e| format!("{codec:?}: {e}"))?;
+                    if back.len() != data.len() {
+                        return Err(format!(
+                            "{codec:?}: length {} -> {}",
+                            data.len(),
+                            back.len()
+                        ));
+                    }
+                    for (i, (&a, &b)) in data.iter().zip(&back).enumerate() {
+                        let ok = if a.is_nan() {
+                            b.is_nan()
+                        } else if a.is_infinite() {
+                            a == b
+                        } else if codec == Codec::F32 {
+                            a.to_bits() == b.to_bits()
+                        } else if a.abs() >= 65520.0 {
+                            // Beyond the f16 rounding boundary: signed inf.
+                            b.is_infinite() && b.is_sign_positive() == a.is_sign_positive()
+                        } else if a.abs() > 65504.0 {
+                            // The max-normal..boundary gray zone may round
+                            // either to 65504 or to inf.
+                            b.is_infinite() || b.abs() == 65504.0
+                        } else {
+                            // Lossy codecs: half-precision relative error
+                            // plus the sparse/underflow absolute floor.
+                            (a - b).abs() <= a.abs() * 1.5e-3 + 6.2e-5
+                        };
+                        if !ok {
+                            return Err(format!("{codec:?}[{i}]: {a} -> {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn aggregate_roundtrips() {
         let msgs = vec![vec![1u8, 2, 3], vec![], vec![9u8; 100]];
         let frame = aggregate(&msgs);
@@ -333,5 +513,39 @@ mod tests {
         let mut frame = compress_f32(&[1.0, 2.0], Codec::F16);
         frame.truncate(frame.len() - 1);
         assert!(decompress_f32(&frame).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_fields_error_instead_of_allocating() {
+        // A claimed element count of u64::MAX must fail the decoder cap,
+        // not abort trying to allocate terabytes.
+        let mut frame = vec![MAGIC_SPARSE];
+        frame.extend_from_slice(&u64::MAX.to_le_bytes());
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        assert!(decompress_f32(&frame).is_err());
+        // An nz count larger than the remaining body errors up front.
+        let mut frame = vec![MAGIC_SPARSE];
+        frame.extend_from_slice(&10u64.to_le_bytes());
+        frame.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decompress_f32(&frame).is_err());
+        // A varint with endless continuation bits errors (no shift
+        // overflow panic): nz = 1, then 11 continuation bytes.
+        let mut frame = vec![MAGIC_SPARSE];
+        frame.extend_from_slice(&10u64.to_le_bytes());
+        frame.extend_from_slice(&1u64.to_le_bytes());
+        frame.extend_from_slice(&[0x80; 10]);
+        frame.push(0x01);
+        assert!(decompress_f32(&frame).is_err());
+    }
+
+    #[test]
+    fn varint_helpers_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
     }
 }

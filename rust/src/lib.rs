@@ -9,9 +9,10 @@
 //!   REINFORCE scheduler with an LSTM policy plus seven baselines (§5.2,
 //!   §6.2), the pipeline+data-parallel training runtime with parameter
 //!   server and ring-allreduce (§3), the data-management module (prefetch,
-//!   hot/cold tiering, aggregation+compression), a discrete-event cluster
-//!   simulator, the trace-driven elastic autoscaling loop (`elastic`),
-//!   and the profiler.
+//!   hot/cold tiering, aggregation+compression), the async communication
+//!   fabric with bounded-staleness workers over a link-modeled transport
+//!   (`comm`), a discrete-event cluster simulator, the trace-driven
+//!   elastic autoscaling loop (`elastic`), and the profiler.
 //! * **Layer 2 (python/compile)** — JAX definitions of the CTR models and
 //!   the scheduling policy, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
@@ -55,6 +56,7 @@
 //! ```
 
 pub mod cli;
+pub mod comm;
 pub mod config;
 pub mod cost;
 pub mod data;
@@ -73,7 +75,9 @@ pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::comm::{CommConfig, CommReport};
     pub use crate::cost::{CostConfig, CostModel, PlanEval};
+    pub use crate::data::compress::Codec;
     pub use crate::elastic::{
         run_all_policies, run_episode, AdaptPolicy, ControllerConfig, EpisodeReport,
         TraceConfig, WorkloadTrace,
@@ -85,5 +89,6 @@ pub mod prelude {
         Budget, ScheduleError, ScheduleOutcome, Scheduler, SchedulerSpec, SearchSession,
         StepReport,
     };
+    pub use crate::train::SparseStore;
     pub use crate::util::rng::Rng;
 }

@@ -3,7 +3,8 @@
 //! Subcommands mirror the framework's lifecycle: `schedule` a model onto a
 //! heterogeneous pool, `compare` the full §6.2 scheduler suite, `simulate`
 //! a plan on a virtual cluster, `elastic` a workload trace through the
-//! autoscaling loop, `info`/`methods` the catalogs.
+//! autoscaling loop, `comm` the bounded-staleness communication fabric
+//! against its synchronous reference, `info`/`methods` the catalogs.
 //!
 //! Schedulers are named through the typed spec registry: a positional like
 //! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
@@ -85,6 +86,29 @@ fn cli() -> Cli {
                         OptSpec { name: "adapt-evals", help: "evaluation budget per warm-started adaptation", takes_value: true, default: Some("64") },
                     ])
                     .collect(),
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "comm",
+                about: "run the async comm fabric: SSP workers against the sharded PS over a link-modeled transport",
+                opts: vec![
+                    OptSpec { name: "workers", help: "async worker threads", takes_value: true, default: Some("4") },
+                    OptSpec { name: "steps", help: "pull->compute->push iterations per worker", takes_value: true, default: Some("40") },
+                    OptSpec { name: "staleness", help: "SSP bound (0 = bulk-synchronous, bit-identical to the sync reference)", takes_value: true, default: Some("1") },
+                    OptSpec { name: "codec", help: "gradient codec (f32|f16|sparsef16)", takes_value: true, default: Some("sparsef16") },
+                    OptSpec { name: "shards", help: "ParamServer lock shards (flat backend; ignored with --tiered)", takes_value: true, default: Some("16") },
+                    OptSpec { name: "rows", help: "samples per worker-step", takes_value: true, default: Some("64") },
+                    OptSpec { name: "slots", help: "sparse slots per sample", takes_value: true, default: Some("8") },
+                    OptSpec { name: "dim", help: "embedding dimension", takes_value: true, default: Some("16") },
+                    OptSpec { name: "vocab", help: "sparse id space", takes_value: true, default: Some("20000") },
+                    OptSpec { name: "compute-ms", help: "emulated dense compute per worker-step, ms", takes_value: true, default: Some("2") },
+                    OptSpec { name: "lr", help: "PS learning rate", takes_value: true, default: Some("0.3") },
+                    OptSpec { name: "tiered", help: "back the PS with the disk-tiered store", takes_value: false, default: None },
+                    OptSpec { name: "emulate-wire", help: "sleep the modeled per-frame transfer time", takes_value: false, default: None },
+                    OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
+                    OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
+                    OptSpec { name: "seed", help: "workload + init seed", takes_value: true, default: Some("42") },
+                ],
                 positionals: vec![],
             },
             CmdSpec {
@@ -177,6 +201,30 @@ fn main() {
                     ]);
                 }
                 println!("{}", t.render());
+                Ok(())
+            }
+            "comm" => {
+                let cfg = heterps::comm::CommConfig {
+                    workers: args.usize_or("workers", 4)?,
+                    steps: args.usize_or("steps", 40)?,
+                    rows: args.usize_or("rows", 64)?,
+                    slots: args.usize_or("slots", 8)?,
+                    dim: args.usize_or("dim", 16)?,
+                    vocab: args.usize_or("vocab", 20_000)?,
+                    staleness: args.u64_or("staleness", 1)?,
+                    codec: heterps::data::compress::Codec::parse(
+                        args.str_or("codec", "sparsef16"),
+                    )?,
+                    compute_ms: args.f64_or("compute-ms", 2.0)?,
+                    emulate_wire: args.flag("emulate-wire"),
+                    seed: args.u64_or("seed", 42)?,
+                    ..Default::default()
+                };
+                let n_types = args.usize_or("types", 2)?.max(1);
+                let pool = simulated_types(n_types, !args.flag("no-cpu"));
+                let shards = args.usize_or("shards", 16)?;
+                let lr = args.f64_or("lr", 0.3)? as f32;
+                run_comm(&cfg, &pool, shards, lr, args.flag("tiered"))?;
                 Ok(())
             }
             "train" => {
@@ -434,6 +482,86 @@ fn main() {
     }
 }
 
+
+/// `heterps comm`: drive the async comm fabric and its synchronous
+/// reference over the same deterministic workload, report throughput,
+/// wire metrics and the analytic-vs-measured cross-check, and — at
+/// `--staleness 0` — enforce bit-identical results.
+fn run_comm(
+    cfg: &heterps::comm::CommConfig,
+    pool: &heterps::resources::ResourcePool,
+    shards: usize,
+    lr: f32,
+    tiered: bool,
+) -> anyhow::Result<()> {
+    use heterps::train::{ParamServer, TieredParamServer};
+
+    if tiered {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let base = std::env::temp_dir().join(format!("heterps-comm-{}", std::process::id()));
+        let result = drive_comm(cfg, pool, || {
+            let dir = base.join(SEQ.fetch_add(1, Ordering::Relaxed).to_string());
+            TieredParamServer::new(dir, cfg.dim, 4096, lr, cfg.seed)
+        });
+        // Both stores are dropped by now; reap their spill directories so
+        // repeated smoke runs don't grow the temp dir without bound.
+        let _ = std::fs::remove_dir_all(&base);
+        result
+    } else {
+        drive_comm(cfg, pool, || Ok(ParamServer::new(cfg.dim, shards, lr, cfg.seed)))
+    }
+}
+
+/// Run the async engine and the synchronous reference on fresh same-seed
+/// stores, report both, and enforce the staleness-0 bit-equality contract.
+fn drive_comm<S: heterps::train::SparseStore>(
+    cfg: &heterps::comm::CommConfig,
+    pool: &heterps::resources::ResourcePool,
+    mk_store: impl Fn() -> anyhow::Result<S>,
+) -> anyhow::Result<()> {
+    use heterps::comm::{analytic_comm_check, run_async, run_sync_reference};
+
+    let store = mk_store()?;
+    let report = run_async(cfg, pool, &store)?;
+    let sync_store = mk_store()?;
+    let sync = run_sync_reference(cfg, &sync_store)?;
+    println!(
+        "async engine  : {:>9.0} samples/s  ({} workers, staleness {}, codec {})",
+        report.throughput,
+        cfg.workers,
+        cfg.staleness,
+        cfg.codec.name()
+    );
+    println!(
+        "sync reference: {:>9.0} samples/s  ({:.2}x async speedup)",
+        sync.throughput,
+        report.throughput / sync.throughput.max(1e-9)
+    );
+    println!(
+        "digests       : async {:016x} vs sync {:016x} -> bit-identical: {}",
+        report.digest,
+        sync.digest,
+        report.digest == sync.digest
+    );
+    println!();
+    println!("{}", report.snapshot.table("Comm fabric metrics (async run)").render());
+    let check = analytic_comm_check(cfg, &report.snapshot);
+    println!("analytic sync bytes (Eq 2) : {:.1} KB", check.analytic_bytes / 1e3);
+    println!(
+        "measured raw payload bytes : {:.1} KB (ratio {:.3}; <1 = coalescing savings)",
+        check.measured_bytes / 1e3,
+        check.ratio
+    );
+    if cfg.staleness == 0 {
+        anyhow::ensure!(
+            report.digest == sync.digest,
+            "staleness 0 must reproduce the synchronous reference bit-for-bit"
+        );
+        println!("[comm] staleness 0 verified bit-identical to the synchronous reference");
+    }
+    Ok(())
+}
 
 /// `heterps train`: a short pipeline-training run (PS embedding + HLO
 /// dense stages) on synthetic CTR data — the CLI face of the

@@ -60,6 +60,83 @@ impl Throughput {
     }
 }
 
+/// Thread-safe fixed-bucket histogram of small non-negative integers
+/// (staleness steps, coalesced batch sizes, ...). Values at or beyond the
+/// last bucket clamp into it, so the tail is never silently dropped.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// `buckets` counts values `0..buckets-1`; the last bucket is `>=`.
+    pub fn new(buckets: usize) -> Self {
+        Histogram {
+            buckets: (0..buckets.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, value: u64) {
+        let idx = (value as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Largest bucket index with a non-zero count (the observed max,
+    /// clamped to the bucket range).
+    pub fn max_bucket(&self) -> Option<usize> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, b)| b.load(Ordering::Relaxed) > 0)
+            .map(|(i, _)| i)
+    }
+
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Compact `value:count` rendering of the non-empty buckets; the last
+    /// bucket renders as `N+` because it holds the clamped tail.
+    pub fn render(&self) -> String {
+        let counts = self.snapshot();
+        let last = counts.len() - 1;
+        let parts: Vec<String> = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                if i == last && counts.len() > 1 {
+                    format!("{i}+:{c}")
+                } else {
+                    format!("{i}:{c}")
+                }
+            })
+            .collect();
+        if parts.is_empty() {
+            "(empty)".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
 /// A rectangular results table with a title; renders aligned text and CSV.
 #[derive(Clone, Debug)]
 pub struct Table {
@@ -176,6 +253,22 @@ mod tests {
         c.add(3);
         c.add(4);
         assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn histogram_records_means_and_clamps_tail() {
+        let h = Histogram::new(4);
+        for v in [0, 1, 1, 2, 9] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.snapshot(), vec![1, 2, 1, 1]); // 9 clamps into bucket 3
+        assert!((h.mean() - 13.0 / 5.0).abs() < 1e-12); // mean uses true values
+        assert_eq!(h.max_bucket(), Some(3));
+        let r = h.render();
+        assert!(r.contains("1:2") && r.contains("3+:1"), "{r}");
+        assert_eq!(Histogram::new(2).render(), "(empty)");
+        assert_eq!(Histogram::new(2).max_bucket(), None);
     }
 
     #[test]

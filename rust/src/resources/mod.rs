@@ -33,6 +33,9 @@ pub struct ResourceType {
     pub io_bytes_per_sec: f64,
     /// Network bandwidth in bytes/s per unit for inter-stage transfer.
     pub net_bytes_per_sec: f64,
+    /// One-way NIC/switch latency in seconds contributed by this endpoint
+    /// (the comm fabric's per-link latency is the sum over both ends).
+    pub net_latency_secs: f64,
     /// Amdahl parallelizable fraction for computation on this type
     /// (`alpha` in Eq 1).
     pub alpha: f64,
@@ -93,6 +96,11 @@ impl ResourcePool {
             anyhow::ensure!(t.id == i, "resource id {} at position {i}", t.id);
             anyhow::ensure!(t.price_per_hour > 0.0, "{}: non-positive price", t.name);
             anyhow::ensure!(t.flops_per_sec > 0.0, "{}: non-positive flops", t.name);
+            anyhow::ensure!(
+                t.net_latency_secs > 0.0 && t.net_latency_secs.is_finite(),
+                "{}: non-positive net latency",
+                t.name
+            );
             anyhow::ensure!((0.0..=1.0).contains(&t.alpha), "{}: alpha out of range", t.name);
             anyhow::ensure!((0.0..=1.0).contains(&t.beta), "{}: beta out of range", t.name);
             anyhow::ensure!(t.max_units > 0, "{}: zero max_units", t.name);
@@ -114,6 +122,7 @@ pub fn paper_testbed() -> ResourcePool {
                 flops_per_sec: 4.0e9,     // one core's dense GEMM rate
                 io_bytes_per_sec: 8.0e9,  // host memory + NVMe lookup path
                 net_bytes_per_sec: 1.25e9, // share of the 100 Gbps NIC
+                net_latency_secs: 30e-6,   // kernel TCP stack
                 alpha: 0.95,
                 beta: 0.95,
                 max_units: 10 * 48,
@@ -126,6 +135,7 @@ pub fn paper_testbed() -> ResourcePool {
                 flops_per_sec: 1.2e13,    // achievable V100 training rate
                 io_bytes_per_sec: 2.0e9,  // sparse lookup over PCIe is poor
                 net_bytes_per_sec: 6.0e9,
+                net_latency_secs: 10e-6,   // RDMA-class fabric
                 alpha: 0.92,
                 beta: 0.92,
                 max_units: 4 * 8,

@@ -382,13 +382,6 @@ macro_rules! session_warm_start {
 }
 pub(crate) use {session_delegate, session_warm_start};
 
-/// Construct every scheduler of the paper's §6.2 comparison by name.
-/// `seed` controls the stochastic methods.
-#[deprecated(note = "use `sched::SchedulerSpec::parse(name)?.build(seed)` via the registry")]
-pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
-    SchedulerSpec::parse(name).ok().map(|s| s.build(seed))
-}
-
 /// The method names of the Figure 5–11 comparison, in paper order,
 /// derived from the registry.
 pub fn comparison_methods() -> Vec<&'static str> {
@@ -433,12 +426,14 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn by_name_shim_covers_comparison_set() {
+    fn registry_covers_comparison_set() {
+        // The registry (not the retired `by_name` shim) is the only
+        // construction path: every comparison method must parse and build.
         for m in comparison_methods() {
-            assert!(by_name(m, 1).is_some(), "missing scheduler {m}");
+            let spec = SchedulerSpec::parse(m).unwrap_or_else(|e| panic!("{m}: {e}"));
+            let _ = spec.build(1);
         }
-        assert!(by_name("nope", 1).is_none());
+        assert!(SchedulerSpec::parse("nope").is_err());
     }
 
     #[test]

@@ -21,7 +21,60 @@ pub use ps::ParamServer;
 pub use tiered_ps::TieredParamServer;
 pub use stage::{EmbeddingStage, HloStage, StageOp, Tensor};
 
+/// Uniform pull/push surface over the sparse-state backends, so the comm
+/// fabric (and tests) can swap the in-memory [`ParamServer`] and the
+/// disk-tiered [`TieredParamServer`] freely. Implementations must be
+/// thread-safe: the fabric drives them from a dedicated server thread, and
+/// the stress tests hammer them from many.
+pub trait SparseStore: Send + Sync {
+    /// Embedding dimension of every row.
+    fn dim(&self) -> usize;
+    /// Pull rows for `ids` (order-aligned, `ids.len() * dim` values).
+    fn pull(&self, ids: &[u32]) -> anyhow::Result<Vec<f32>>;
+    /// Push occurrence-aligned gradients (duplicates accumulate).
+    fn push(&self, ids: &[u32], grads: &[f32]) -> anyhow::Result<()>;
+}
+
+impl SparseStore for ParamServer {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn pull(&self, ids: &[u32]) -> anyhow::Result<Vec<f32>> {
+        Ok(ParamServer::pull(self, ids))
+    }
+    fn push(&self, ids: &[u32], grads: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(grads.len() == ids.len() * self.dim, "push arity");
+        ParamServer::push(self, ids, grads);
+        Ok(())
+    }
+}
+
+impl SparseStore for TieredParamServer {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn pull(&self, ids: &[u32]) -> anyhow::Result<Vec<f32>> {
+        TieredParamServer::pull(self, ids)
+    }
+    fn push(&self, ids: &[u32], grads: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(grads.len() == ids.len() * self.dim, "push arity");
+        TieredParamServer::push(self, ids, grads)
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    // Cross-module integration tests live in rust/tests/.
+    use super::*;
+
+    #[test]
+    fn sparse_store_is_object_safe_over_both_backends() {
+        let ps = ParamServer::new(4, 2, 0.5, 42);
+        let store: &dyn SparseStore = &ps;
+        assert_eq!(store.dim(), 4);
+        let rows = store.pull(&[1, 2]).unwrap();
+        assert_eq!(rows.len(), 8);
+        store.push(&[1], &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        // Arity violations surface as errors through the trait, not panics.
+        assert!(store.push(&[1], &[1.0]).is_err());
+    }
 }

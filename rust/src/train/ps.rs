@@ -167,6 +167,52 @@ mod tests {
     }
 
     #[test]
+    fn stress_concurrent_pull_push_is_interleaving_independent() {
+        // 8 threads hammer overlapping rows with pulls and pushes. Every
+        // push to a given row carries the SAME gradient value, so the SGD
+        // update sequence is order-independent even in floating point: the
+        // final table state must equal a single-threaded replay of the
+        // same per-row push counts, regardless of interleaving.
+        use std::sync::Arc;
+        const THREADS: usize = 8;
+        const REPS: usize = 200;
+        const ROWS: u32 = 32;
+        let ps = Arc::new(ParamServer::new(4, 16, 1.0, 77));
+        let threads: Vec<_> = (0..THREADS)
+            .map(|k| {
+                let ps = ps.clone();
+                std::thread::spawn(move || {
+                    // Thread k touches rows k, k+1, ..., k+7 (mod ROWS):
+                    // heavy overlap, distinct per-thread mixes.
+                    let ids: Vec<u32> = (0..8).map(|j| ((k + j) as u32) % ROWS).collect();
+                    let grad = vec![0.25f32; ids.len() * 4];
+                    for r in 0..REPS {
+                        if r % 5 == 0 {
+                            let pulled = ps.pull(&ids);
+                            assert_eq!(pulled.len(), ids.len() * 4);
+                        }
+                        ps.push(&ids, &grad);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Single-threaded replay with identical per-row totals.
+        let reference = ParamServer::new(4, 16, 1.0, 77);
+        for k in 0..THREADS {
+            let ids: Vec<u32> = (0..8).map(|j| ((k + j) as u32) % ROWS).collect();
+            let grad = vec![0.25f32; ids.len() * 4];
+            for _ in 0..REPS {
+                reference.push(&ids, &grad);
+            }
+        }
+        let all: Vec<u32> = (0..ROWS).collect();
+        assert_eq!(ps.pull(&all), reference.pull(&all), "state depends on interleaving");
+    }
+
+    #[test]
     fn counters_track_traffic() {
         let ps = ParamServer::new(2, 2, 0.1, 4);
         ps.pull(&[1]);

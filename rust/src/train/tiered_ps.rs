@@ -204,6 +204,58 @@ mod tests {
     }
 
     #[test]
+    fn stress_concurrent_pull_push_under_spill_is_interleaving_independent() {
+        // Same commutativity harness as the flat PS stress test, but with a
+        // hot budget small enough that the 8 threads force constant
+        // spill/promote traffic under contention. Every push to a row
+        // carries the same gradient value, so the final state must be
+        // independent of interleaving AND match the flat ParamServer.
+        use std::sync::Arc;
+        const THREADS: usize = 8;
+        const REPS: usize = 60;
+        const ROWS: u32 = 48;
+        let tiered = Arc::new(server(6)); // 6 hot rows << 48 touched
+        let threads: Vec<_> = (0..THREADS)
+            .map(|k| {
+                let tiered = tiered.clone();
+                std::thread::spawn(move || {
+                    let ids: Vec<u32> =
+                        (0..6).map(|j| ((k * 5 + j) as u32) % ROWS).collect();
+                    let grad = vec![0.5f32; ids.len() * 4];
+                    for r in 0..REPS {
+                        if r % 4 == 0 {
+                            tiered.pull(&ids).unwrap();
+                        }
+                        tiered.push(&ids, &grad).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let (hot, cold, _, demos) = tiered.tier_stats();
+        assert!(hot <= 6, "hot budget exceeded: {hot}");
+        assert!(cold > 0 && demos > 0, "stress never spilled (cold={cold}, demos={demos})");
+        // Replay the same per-row push counts on the flat PS (lr/seed match
+        // `server()`: 0.5 / 42).
+        let flat = crate::train::ps::ParamServer::new(4, 8, 0.5, 42);
+        for k in 0..THREADS {
+            let ids: Vec<u32> = (0..6).map(|j| ((k * 5 + j) as u32) % ROWS).collect();
+            let grad = vec![0.5f32; ids.len() * 4];
+            for _ in 0..REPS {
+                flat.push(&ids, &grad);
+            }
+        }
+        let all: Vec<u32> = (0..ROWS).collect();
+        assert_eq!(
+            tiered.pull(&all).unwrap(),
+            flat.pull(&all),
+            "tiered state depends on interleaving or diverged from flat PS"
+        );
+    }
+
+    #[test]
     fn duplicate_ids_accumulate_like_flat_ps() {
         let tiered = server(16);
         let flat = crate::train::ps::ParamServer::new(4, 8, 0.5, 42);

@@ -8,7 +8,13 @@
 #    does not parse — fails fast here instead of in a bench;
 # 3. a short `heterps elastic` episode (spike trace, small adaptation
 #    budget, all three policies) for every method, guarding the
-#    trace-driven autoscaling path.
+#    trace-driven autoscaling path;
+# 4. a `heterps comm` smoke: the async fabric at every gradient codec and
+#    staleness {0,2} (staleness 0 self-verifies bit-equality with the
+#    synchronous reference and exits non-zero on divergence), plus one
+#    disk-tiered-backend run;
+# 5. `cargo clippy --all-targets -- -D warnings` when the clippy
+#    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -54,5 +60,26 @@ for method in $("$BIN" methods); do
   "$BIN" elastic --trace spike --method "$method" --model nce --types 2 \
     --ticks 10 --adapt-evals 32 >/dev/null
 done
+
+echo "== comm smoke: every codec at staleness {0,2}"
+# Staleness 0 is self-checking: the binary compares digests against the
+# synchronous reference and fails on any bit divergence.
+for codec in f32 f16 sparsef16; do
+  for staleness in 0 2; do
+    echo "   -- codec $codec, staleness $staleness"
+    "$BIN" comm --workers 3 --steps 8 --rows 16 --slots 4 --dim 8 \
+      --vocab 2000 --compute-ms 0 --codec "$codec" --staleness "$staleness" >/dev/null
+  done
+done
+echo "   -- tiered backend, staleness 0"
+"$BIN" comm --workers 3 --steps 6 --rows 16 --slots 4 --dim 8 \
+  --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 0 --tiered >/dev/null
+
+echo "== clippy gate: cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "warn: clippy component not installed — lint gate SKIPPED" >&2
+fi
 
 echo "verify: OK"
