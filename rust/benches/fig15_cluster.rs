@@ -1,0 +1,79 @@
+//! Figure 15 (ours, beyond the paper): multi-tenant cluster scheduling.
+//! For every bundled job mix and a spread of per-job scheduler methods,
+//! replay the mix under the three allocation policies (fifo, srtf,
+//! drf-cost) and compare mean JCT, queueing delay, SLA damage, makespan
+//! and cumulative dollars. Expected shape: on the contention-shaped
+//! `tight` mix, FIFO's head-of-line blocking starves the short jobs
+//! behind the blocked big one, so both `srtf` (which also preempts the
+//! long incumbent) and `drf-cost` (which admits small-share tenants
+//! around the blockage) strictly beat it on mean JCT — asserted below.
+
+use heterps::cluster::{self, ClusterConfig, ClusterReport};
+use heterps::metrics::Table;
+use heterps::resources::simulated_types;
+use heterps::sched::SchedulerSpec;
+
+fn main() {
+    let seed = 42u64;
+    let base_floor = 20_000.0;
+    let jobs = 6;
+
+    let mut columns = vec!["mix", "method"];
+    columns.extend_from_slice(&ClusterReport::SUMMARY_COLUMNS);
+    let mut table = Table::new(
+        "Figure 15 — multi-tenant cluster: policy comparison per job mix and method",
+        &columns,
+    );
+
+    let mut tight_greedy: Option<Vec<ClusterReport>> = None;
+    for mix_name in cluster::mix_names() {
+        let pool = match *mix_name {
+            "tight" => cluster::tight_pool(),
+            _ => simulated_types(2, true),
+        };
+        let queue = cluster::mix_by_name(mix_name, jobs, seed, base_floor).unwrap();
+        // Artifact-free methods only, so the bench runs without
+        // `make artifacts` (like the elastic example).
+        for spec_str in ["greedy", "genetic", "rl-tabular:rounds=20"] {
+            let cfg = ClusterConfig {
+                spec: SchedulerSpec::parse(spec_str).unwrap(),
+                ..Default::default()
+            };
+            let reports = cluster::run_all_policies(&pool, &queue, &cfg, seed)
+                .unwrap_or_else(|e| panic!("{mix_name}/{spec_str}: {e}"));
+            for r in &reports {
+                let mut row = vec![mix_name.to_string(), spec_str.to_string()];
+                row.extend(r.summary_row());
+                table.row(&row);
+            }
+            if *mix_name == "tight" && spec_str == "greedy" {
+                tight_greedy = Some(reports);
+            }
+        }
+    }
+    table.emit("fig15_cluster");
+
+    // The acceptance shape: on the tight mix, srtf and drf-cost must each
+    // strictly beat fifo on mean JCT or cumulative dollars.
+    let reports = tight_greedy.expect("tight/greedy ran");
+    let by_name = |n: &str| reports.iter().find(|r| r.policy == n).unwrap();
+    let (fifo, srtf, drf) = (by_name("fifo"), by_name("srtf"), by_name("drf-cost"));
+    for challenger in [srtf, drf] {
+        assert!(
+            challenger.mean_jct_secs() < fifo.mean_jct_secs()
+                || challenger.cumulative_cost_usd < fifo.cumulative_cost_usd,
+            "{} (JCT {:.0} s, ${:.2}) does not beat fifo (JCT {:.0} s, ${:.2})",
+            challenger.policy,
+            challenger.mean_jct_secs(),
+            challenger.cumulative_cost_usd,
+            fifo.mean_jct_secs(),
+            fifo.cumulative_cost_usd
+        );
+    }
+    println!(
+        "[fig15] tight/greedy mean JCT: fifo {:.0} s, srtf {:.0} s, drf-cost {:.0} s",
+        fifo.mean_jct_secs(),
+        srtf.mean_jct_secs(),
+        drf.mean_jct_secs()
+    );
+}

@@ -78,6 +78,29 @@ impl Args {
     }
 }
 
+/// Build the resource pool a subcommand schedules against: `--types` /
+/// `--no-cpu` from the command line, overridden by `pool.types` /
+/// `pool.include_cpu` when a config file supplies them. Shared by every
+/// pool-consuming subcommand (`schedule`, `compare`, `simulate`,
+/// `elastic`, `comm`, `cluster`) so the fallback rules cannot drift
+/// apart between them.
+pub fn pool_from_args(
+    args: &Args,
+    file: Option<&crate::config::Config>,
+) -> Result<crate::resources::ResourcePool, CliError> {
+    let cli_types = args.usize_or("types", 2)?;
+    let n_types = match file {
+        Some(c) => c.usize_or("pool.types", cli_types),
+        None => cli_types,
+    }
+    .max(1);
+    let include_cpu = match file {
+        Some(c) => c.bool_or("pool.include_cpu", !args.flag("no-cpu")),
+        None => !args.flag("no-cpu"),
+    };
+    Ok(crate::resources::simulated_types(n_types, include_cpu))
+}
+
 /// Error from parsing.
 #[derive(Debug, thiserror::Error)]
 pub enum CliError {
@@ -259,6 +282,23 @@ mod tests {
             cli().parse(&sv(&["schedule", "--model"])),
             Err(CliError::MissingValue(_))
         ));
+    }
+
+    #[test]
+    fn pool_from_args_merges_cli_and_config() {
+        let args = cli().parse(&sv(&["schedule", "--types", "3"])).unwrap();
+        let pool = pool_from_args(&args, None).unwrap();
+        assert_eq!(pool.num_types(), 3);
+        assert!(pool.cpu_type().is_some());
+        // A config file's [pool] section wins over the CLI value.
+        let cfg =
+            crate::config::Config::parse("[pool]\ntypes = 5\ninclude_cpu = false\n").unwrap();
+        let pool = pool_from_args(&args, Some(&cfg)).unwrap();
+        assert_eq!(pool.num_types(), 5);
+        assert!(pool.cpu_type().is_none());
+        // Unparseable --types errors instead of silently defaulting.
+        let bad = cli().parse(&sv(&["schedule", "--types", "zzz"])).unwrap();
+        assert!(pool_from_args(&bad, None).is_err());
     }
 
     #[test]

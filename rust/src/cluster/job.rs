@@ -1,0 +1,281 @@
+//! Multi-tenant jobs and the bundled job mixes.
+//!
+//! A [`Job`] is one tenant's training run: a model, the throughput floor
+//! its SLA demands while it runs, an arrival time on the cluster's
+//! virtual clock, and the total number of samples it must process to
+//! complete. A [`JobQueue`] is an arrival-ordered mix of jobs — the
+//! cluster simulator's input. Two deterministic generators ship:
+//!
+//! * [`uniform_mix`] — a seeded spread of zoo models, floors and
+//!   arrivals on the normal heterogeneous pools; the generic workload
+//!   for smoke tests and sweeps;
+//! * [`tight_mix`] — a crafted contention shape for the [`tight_pool`]
+//!   (one CPU type, 48 cores): a long medium-sized job arrives first, a
+//!   high-floor job that needs nearly the whole pool queues behind it,
+//!   then a train of short small-footprint jobs arrives. FIFO's
+//!   head-of-line blocking starves the small jobs behind the blocked
+//!   big one; DRF admits them around it and SRTF additionally preempts —
+//!   the separation `fig15_cluster` asserts.
+
+use crate::model::{zoo, ModelSpec};
+use crate::resources::{paper_testbed, ResourcePool};
+use crate::util::rng::Rng;
+
+/// One tenant's training job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Dense id (position in the [`JobQueue`]).
+    pub id: usize,
+    pub name: String,
+    pub model: ModelSpec,
+    /// Throughput floor (samples/sec) the job's pipeline must sustain
+    /// while admitted — `Throughput_limit` of Eq 13, per tenant.
+    pub sla_floor: f64,
+    /// Arrival time on the virtual clock, seconds.
+    pub arrival_secs: f64,
+    /// Total samples to process before the job completes.
+    pub total_samples: f64,
+}
+
+impl Job {
+    /// Seconds of service the job needs when running exactly at its
+    /// floor — the lower bound on its runtime.
+    pub fn ideal_service_secs(&self) -> f64 {
+        self.total_samples / self.sla_floor
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.model.validate()?;
+        anyhow::ensure!(
+            self.sla_floor > 0.0 && self.sla_floor.is_finite(),
+            "job {}: sla_floor must be positive and finite",
+            self.name
+        );
+        anyhow::ensure!(
+            self.arrival_secs >= 0.0 && self.arrival_secs.is_finite(),
+            "job {}: arrival_secs must be non-negative and finite",
+            self.name
+        );
+        anyhow::ensure!(
+            self.total_samples > 0.0 && self.total_samples.is_finite(),
+            "job {}: total_samples must be positive and finite",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+/// An arrival-ordered job mix.
+#[derive(Clone, Debug)]
+pub struct JobQueue {
+    pub jobs: Vec<Job>,
+}
+
+impl JobQueue {
+    /// Sort by arrival (ties by construction order) and re-id densely.
+    pub fn from_jobs(mut jobs: Vec<Job>) -> Self {
+        jobs.sort_by(|a, b| a.arrival_secs.total_cmp(&b.arrival_secs));
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = i;
+        }
+        JobQueue { jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.jobs.is_empty(), "empty job queue");
+        for (i, j) in self.jobs.iter().enumerate() {
+            anyhow::ensure!(j.id == i, "job id {} at position {i}", j.id);
+            j.validate()?;
+            if i > 0 {
+                anyhow::ensure!(
+                    self.jobs[i - 1].arrival_secs <= j.arrival_secs,
+                    "job queue not arrival-ordered at position {i}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The small pool the contention scenarios run on: the paper testbed's
+/// CPU type alone, capped at 48 cores. A single resource type makes
+/// every plan collapse to one stage, so each job's footprint is fully
+/// determined by the provisioner's replica arithmetic — which is what
+/// lets the `tight` mix guarantee that its big job genuinely cannot
+/// share the pool with the medium one, independent of search luck.
+pub fn tight_pool() -> ResourcePool {
+    let mut cpu = paper_testbed().types[0].clone();
+    cpu.id = 0;
+    cpu.max_units = 48;
+    ResourcePool { types: vec![cpu] }
+}
+
+/// A seeded spread of zoo models, floors, arrivals and sizes — the
+/// generic mix. Deterministic in `(n, seed, base_floor)`.
+pub fn uniform_mix(n: usize, seed: u64, base_floor: f64) -> JobQueue {
+    assert!(n >= 1, "a job mix needs at least one job");
+    let models: [fn() -> ModelSpec; 4] = [zoo::ctrdnn, zoo::nce, zoo::two_emb, zoo::matchnet];
+    let mut rng = Rng::new(seed ^ 0xC1A5_7E12_9B3D_0077);
+    let mut at = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for i in 0..n {
+        let model = models[i % models.len()]();
+        // Floors spread around the base; sizes are 10–40 min of work at
+        // the floor, so mixes overlap without any job dominating.
+        let floor = base_floor * (0.5 + rng.f64());
+        let samples = floor * (600.0 + 1800.0 * rng.f64());
+        jobs.push(Job {
+            id: i,
+            name: format!("{}-{i}", model.name),
+            model,
+            sla_floor: floor,
+            arrival_secs: at,
+            total_samples: samples,
+        });
+        at += rng.f64() * 600.0;
+    }
+    JobQueue::from_jobs(jobs)
+}
+
+/// The contention mix for [`tight_pool`], scaled to `n >= 1` NCE jobs.
+/// With the default 20k samples/s base floor on the 48-core pool, the
+/// Eq 1–3 replica arithmetic pins the footprints: `medium` (floor
+/// `base`) needs ~11 cores, `heavy` (floor `2*base`) ~42, `small-*`
+/// (floor `base/2`) ~5 each. Hence:
+///
+/// * job 0 `medium` — arrives at t=0 with ~2 hours of service and holds
+///   its ~11 cores throughout;
+/// * job 1 `heavy` — arrives at t=600 with ~1 hour of service; its ~42
+///   cores cannot coexist with `medium` (11 + 42 > 48), so it must wait
+///   (or, under `srtf`, preempt);
+/// * jobs 2.. `small-*` — ~15 minutes each, arriving from t=900 on;
+///   their ~5 cores fit the residual pool at any point.
+///
+/// Under `fifo` the blocked `heavy` starves every `small` behind it for
+/// `medium`'s whole remaining runtime; `drf-cost` admits the smalls
+/// around it (their dominant share is ~8x smaller than `heavy`'s), and
+/// `srtf` additionally preempts `medium` to run `heavy` first.
+///
+/// The shape is tuned for the default base floor: `2*base` must stay
+/// below the single-stage Amdahl cap of the NCE model on this pool
+/// (~58k samples/s), or `heavy` is rejected outright.
+pub fn tight_mix(n: usize, seed: u64, base_floor: f64) -> JobQueue {
+    assert!(n >= 1, "a job mix needs at least one job");
+    let mut rng = Rng::new(seed ^ 0x71_6877_4D1C);
+    let mut jobs = Vec::with_capacity(n);
+    jobs.push(Job {
+        id: 0,
+        name: "medium".into(),
+        model: zoo::nce(),
+        sla_floor: base_floor,
+        arrival_secs: 0.0,
+        total_samples: base_floor * 7200.0,
+    });
+    if n >= 2 {
+        jobs.push(Job {
+            id: 1,
+            name: "heavy".into(),
+            model: zoo::nce(),
+            sla_floor: base_floor * 2.0,
+            arrival_secs: 600.0,
+            total_samples: base_floor * 2.0 * 1800.0,
+        });
+    }
+    for i in 2..n {
+        let floor = base_floor * 0.5;
+        jobs.push(Job {
+            id: i,
+            name: format!("small-{}", i - 2),
+            model: zoo::nce(),
+            sla_floor: floor,
+            arrival_secs: 900.0 + (i - 2) as f64 * 180.0 + rng.f64() * 60.0,
+            total_samples: floor * (900.0 + rng.f64() * 120.0),
+        });
+    }
+    JobQueue::from_jobs(jobs)
+}
+
+/// Names of the bundled mixes, CLI order.
+pub fn mix_names() -> &'static [&'static str] {
+    &["uniform", "tight"]
+}
+
+/// Construct a bundled mix by name.
+pub fn mix_by_name(name: &str, n: usize, seed: u64, base_floor: f64) -> Option<JobQueue> {
+    match name {
+        "uniform" => Some(uniform_mix(n, seed, base_floor)),
+        "tight" => Some(tight_mix(n, seed, base_floor)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundled_mixes_validate_and_are_deterministic() {
+        for name in mix_names() {
+            let a = mix_by_name(name, 6, 7, 20_000.0).unwrap();
+            a.validate().unwrap();
+            assert_eq!(a.len(), 6);
+            let b = mix_by_name(name, 6, 7, 20_000.0).unwrap();
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+                assert_eq!(x.sla_floor.to_bits(), y.sla_floor.to_bits());
+                assert_eq!(x.total_samples.to_bits(), y.total_samples.to_bits());
+            }
+        }
+        assert!(mix_by_name("tsunami", 4, 7, 20_000.0).is_none());
+    }
+
+    #[test]
+    fn tight_mix_has_the_contention_shape() {
+        let q = tight_mix(6, 42, 20_000.0);
+        q.validate().unwrap();
+        assert_eq!(q.jobs[0].name, "medium");
+        assert_eq!(q.jobs[1].name, "heavy");
+        assert!(q.jobs[0].ideal_service_secs() > q.jobs[1].ideal_service_secs());
+        assert!(q.jobs[1].sla_floor > q.jobs[0].sla_floor);
+        for small in &q.jobs[2..] {
+            assert!(small.ideal_service_secs() < q.jobs[1].ideal_service_secs());
+            assert!(small.arrival_secs > q.jobs[1].arrival_secs);
+            assert!(small.sla_floor < q.jobs[0].sla_floor);
+        }
+    }
+
+    #[test]
+    fn tight_pool_validates_and_is_tight() {
+        let p = tight_pool();
+        p.validate().unwrap();
+        assert_eq!(p.num_types(), 1);
+        assert_eq!(p.get(0).max_units, 48);
+        assert!(p.cpu_type().is_some());
+    }
+
+    #[test]
+    fn from_jobs_sorts_and_reids() {
+        let mut jobs = uniform_mix(4, 3, 20_000.0).jobs;
+        jobs.reverse();
+        let q = JobQueue::from_jobs(jobs);
+        q.validate().unwrap();
+    }
+
+    #[test]
+    fn job_validate_rejects_bad_fields() {
+        let mut j = uniform_mix(1, 1, 20_000.0).jobs.pop().unwrap();
+        j.sla_floor = 0.0;
+        assert!(j.validate().is_err());
+        j.sla_floor = 1000.0;
+        j.total_samples = -1.0;
+        assert!(j.validate().is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Multi-tenant cluster scheduling: gang-admitted jobs, fairness policies
+//! and an event-driven cluster simulator.
+//!
+//! HeterPS schedules the layers of *one* DNN job onto a heterogeneous
+//! pool, but the paper's setting — shared CPU/GPU clusters training many
+//! CTR models concurrently (§1's "heavy traffic from millions of users")
+//! — is inherently multi-tenant: cluster-level allocation across jobs
+//! dominates end-to-end cost (DL2, Peng et al.), and the per-job/cluster
+//! resource split decomposes exactly like the knapsack framing of Yu et
+//! al. This module arbitrates the shared [`ResourcePool`] *between* jobs,
+//! layered on the existing per-job machinery:
+//!
+//! * [`job`] — a [`Job`] wraps a [`ModelSpec`](crate::model::ModelSpec)
+//!   with a throughput SLA, an arrival time and a total sample count; a
+//!   [`JobQueue`] is the arrival-ordered mix fed to the simulator.
+//!   Bundled deterministic mixes (`uniform`, `tight`) and the small
+//!   single-type [`tight_pool`] ship the contention scenarios the bench
+//!   compares.
+//! * [`policy`] — the [`ClusterPolicy`] trait plus three implementations:
+//!   `fifo` (admit strictly in arrival order, head-of-line blocking),
+//!   `srtf` (shortest-remaining-service-first, preempting the
+//!   cheapest-to-pause longer-running job) and `drf-cost`
+//!   (dominant-resource-fair shares, ties priced through
+//!   [`CostModel::monetary_cost`](crate::cost::CostModel::monetary_cost)).
+//! * [`sim`] — the event-driven [`run_cluster`] loop: discrete
+//!   arrival/admission/completion/preemption events on a virtual clock,
+//!   deterministic per `(pool, queue, config, seed)`. A job is
+//!   *gang-admitted* only when a budgeted, warm-started
+//!   [`SearchSession`](crate::sched::SearchSession) (through the
+//!   `sched::spec` registry, the way [`crate::elastic`] re-schedules on
+//!   trace drift) finds a feasible provisioned plan on the *residual*
+//!   pool — the parent pool minus every running job's held units — so
+//!   per-job sub-pools can never oversubscribe the cluster. Admitted
+//!   jobs run at the throughput the discrete-event
+//!   [`simulator`](crate::simulator) measures for their plan; per-job
+//!   JCT/queueing/SLA-violation and per-cluster makespan/$ /utilization
+//!   metrics come back in a [`ClusterReport`].
+//!
+//! The `cluster` CLI subcommand, `benches/fig15_cluster.rs` and
+//! `examples/cluster_tenancy.rs` drive the same loop; semantics and the
+//! determinism contract are documented in DESIGN.md §Cluster-Tenancy.
+//!
+//! [`ResourcePool`]: crate::resources::ResourcePool
+
+pub mod job;
+pub mod policy;
+pub mod sim;
+
+pub use job::{mix_by_name, mix_names, tight_mix, tight_pool, uniform_mix, Job, JobQueue};
+pub use policy::{policy_by_name, policy_names, ClusterPolicy};
+pub use sim::{
+    emit_reports, run_all_policies, run_cluster, ClusterConfig, ClusterReport, EventKind,
+    EventRecord, JobRecord,
+};

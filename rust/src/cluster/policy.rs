@@ -1,0 +1,346 @@
+//! Cluster allocation policies: who gets admitted next, and who gets
+//! paused to make room.
+//!
+//! A [`ClusterPolicy`] sees the waiting queue and the running set through
+//! the simulator's bookkeeping types ([`Waiting`], [`Running`]) and makes
+//! two calls: a total *admission priority* over waiting jobs, and (for
+//! preemptive policies) an ordered list of running jobs worth pausing for
+//! a candidate that failed admission. The simulator owns the mechanics —
+//! gang admission via budgeted search sessions, atomic release of a
+//! preempted job's units, re-queueing — so policies stay pure ranking
+//! logic and every policy is deterministic by construction.
+
+use super::job::Job;
+use crate::plan::{ProvisioningPlan, SchedulingPlan};
+use crate::resources::ResourcePool;
+
+/// What a job asks of the cluster: the feasible plan found for it on the
+/// *empty* pool at arrival, its per-type unit footprint, the throughput
+/// that plan achieves, and its hourly price (Eq 7 for one hour).
+#[derive(Clone, Debug)]
+pub struct RequestProfile {
+    pub plan: SchedulingPlan,
+    /// Units per resource type, PS cores included (`units_per_type`).
+    pub units: Vec<usize>,
+    /// Analytic throughput of the profile plan (samples/sec).
+    pub est_throughput: f64,
+    /// Dollars per hour of holding the profile units
+    /// ([`CostModel::monetary_cost`](crate::cost::CostModel::monetary_cost)
+    /// over 3600 s).
+    pub hourly_usd: f64,
+}
+
+/// A job waiting for admission (never started, or preempted).
+#[derive(Clone, Debug)]
+pub struct Waiting {
+    pub job: Job,
+    /// Samples still to process (decreases across preemptions).
+    pub remaining_samples: f64,
+    /// Empty-pool request profile, fixed at arrival.
+    pub profile: RequestProfile,
+    /// The plan the job ran under before its last preemption — the
+    /// warmest of the warm-start candidates on re-admission.
+    pub last_plan: Option<SchedulingPlan>,
+    /// When the job (re-)entered the queue; waiting time counts as SLA
+    /// violation (the tenant's delivered throughput is zero).
+    pub waiting_since: f64,
+    /// The job has run at least once (queueing delay only counts the
+    /// stretch before the first start).
+    pub started_before: bool,
+    /// Admission sessions spent on this job so far (seed derivation —
+    /// retries must not replay the same stochastic search).
+    pub attempts: u64,
+    /// Admission failures against the current residual:
+    /// `(residual-unit vector, consecutive failures on it)`. The
+    /// simulator allows one fresh-seeded retry per bit-identical
+    /// residual (a stochastic method may find a placement the previous
+    /// attempt missed) and then stops re-searching it — the
+    /// deterministic warm starts that usually decide feasibility cannot
+    /// change, so further sessions just burn evaluations. Any release of
+    /// units changes the vector and re-arms the attempt.
+    pub failed_attempts: Option<(Vec<usize>, u32)>,
+}
+
+impl Waiting {
+    /// Estimated remaining service time under the request profile.
+    pub fn est_remaining_secs(&self) -> f64 {
+        self.remaining_samples / self.profile.est_throughput.max(1e-9)
+    }
+}
+
+/// A job currently holding a sub-pool.
+#[derive(Clone, Debug)]
+pub struct Running {
+    pub job: Job,
+    pub plan: SchedulingPlan,
+    pub prov: ProvisioningPlan,
+    /// Units per type this job holds (its sub-pool; PS cores included).
+    pub units: Vec<usize>,
+    /// Dollars per hour of holding `units`.
+    pub hourly_usd: f64,
+    /// Throughput measured by the discrete-event simulator for this
+    /// admission (stragglers and dispatch overheads included).
+    pub measured_throughput: f64,
+    /// The measured throughput sits below the job's floor — the whole
+    /// running stretch counts as SLA violation.
+    pub below_floor: bool,
+    pub started_secs: f64,
+    pub remaining_at_start: f64,
+    /// Admission epoch: completion events carry the epoch they were
+    /// scheduled under, so a preempted job's stale completion is ignored.
+    pub epoch: u64,
+    /// Carried so a preemption can rebuild the [`Waiting`] entry.
+    pub profile: RequestProfile,
+    pub started_before: bool,
+    pub attempts: u64,
+}
+
+impl Running {
+    pub fn remaining_samples(&self, now: f64) -> f64 {
+        (self.remaining_at_start - (now - self.started_secs) * self.measured_throughput).max(0.0)
+    }
+
+    pub fn remaining_secs(&self, now: f64) -> f64 {
+        self.remaining_samples(now) / self.measured_throughput.max(1e-9)
+    }
+}
+
+/// An admission-order + preemption policy. Priorities are lexicographic
+/// `(primary, secondary)` pairs — smaller admits first; the simulator
+/// completes the total order with `(arrival, id)` so every policy is
+/// deterministic.
+pub trait ClusterPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Admission priority of a waiting job (smaller = sooner).
+    fn priority(&self, w: &Waiting, now: f64) -> (f64, f64);
+
+    /// When the top-priority candidate cannot be admitted, does it block
+    /// everyone behind it (FIFO) or may later jobs be tried (backfill)?
+    fn head_of_line_blocking(&self) -> bool {
+        false
+    }
+
+    /// Ordered indices into `running` worth pausing to admit `cand`
+    /// (best victim first); empty = the policy never preempts. The
+    /// simulator preempts victims one at a time — gang-releasing each
+    /// victim's whole sub-pool — until the candidate's request fits, and
+    /// preempts nothing when even the full victim list would not free
+    /// enough.
+    fn preempt_victims(&self, cand: &Waiting, running: &[Running], now: f64) -> Vec<usize> {
+        let _ = (cand, running, now);
+        Vec::new()
+    }
+}
+
+/// Admit strictly in arrival order; a job that cannot be admitted blocks
+/// everything behind it. The baseline every cluster starts with — and the
+/// one head-of-line blocking hurts.
+pub struct Fifo;
+
+impl ClusterPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn priority(&self, w: &Waiting, _now: f64) -> (f64, f64) {
+        (w.job.arrival_secs, w.job.id as f64)
+    }
+
+    fn head_of_line_blocking(&self) -> bool {
+        true
+    }
+}
+
+/// Shortest-remaining-service-first: the waiting job with the least
+/// estimated remaining service admits first, and may preempt running
+/// jobs whose remaining service is longer by at least
+/// [`SRTF_PREEMPT_MARGIN`] — cheapest-to-pause (lowest hourly holding
+/// cost) first, so the cluster loses as little paid-for momentum as
+/// possible. The margin is what makes preemption acyclic: a candidate's
+/// remaining service is the *analytic* profile estimate while a
+/// victim's is the straggler-derated simulator *measurement* (up to
+/// ~1.15x slower under the default [`SimConfig`]), and without the
+/// margin two similar-sized jobs could preempt each other back and
+/// forth across that instrument gap. With the margin above the
+/// worst-case derate, a fresh preemptor can never in turn be displaced
+/// by its victim, and a preempted job's remaining service only shrinks.
+///
+/// [`SimConfig`]: crate::simulator::SimConfig
+pub struct Srtf;
+
+/// A victim's measured remaining service must exceed the candidate's
+/// analytic estimate by this factor before SRTF will pause it.
+pub const SRTF_PREEMPT_MARGIN: f64 = 1.25;
+
+impl ClusterPolicy for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn priority(&self, w: &Waiting, _now: f64) -> (f64, f64) {
+        (w.est_remaining_secs(), w.profile.hourly_usd)
+    }
+
+    fn preempt_victims(&self, cand: &Waiting, running: &[Running], now: f64) -> Vec<usize> {
+        let threshold = cand.est_remaining_secs() * SRTF_PREEMPT_MARGIN;
+        let mut victims: Vec<usize> = (0..running.len())
+            .filter(|&i| running[i].remaining_secs(now) > threshold)
+            .collect();
+        victims.sort_by(|&a, &b| {
+            running[a]
+                .hourly_usd
+                .total_cmp(&running[b].hourly_usd)
+                .then(running[a].job.id.cmp(&running[b].job.id))
+        });
+        victims
+    }
+}
+
+/// Dominant-resource fairness, cost-priced: a waiting job's priority is
+/// the dominant share of the cluster its request profile would occupy —
+/// the max over resource types of `requested units / pool capacity`
+/// (Ghodsi et al.'s DRF, applied to admission order) — with ties broken
+/// toward the cheaper hourly bill (the request priced through Eq 7).
+/// Small-footprint tenants flow around a blocked large one, which is
+/// exactly what FIFO cannot do.
+pub struct DrfCost {
+    capacity: Vec<usize>,
+}
+
+impl DrfCost {
+    pub fn new(pool: &ResourcePool) -> Self {
+        DrfCost { capacity: pool.types.iter().map(|t| t.max_units).collect() }
+    }
+
+    fn dominant_share(&self, units: &[usize]) -> f64 {
+        units
+            .iter()
+            .zip(&self.capacity)
+            .filter(|(_, &cap)| cap > 0)
+            .map(|(&u, &cap)| u as f64 / cap as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+impl ClusterPolicy for DrfCost {
+    fn name(&self) -> &'static str {
+        "drf-cost"
+    }
+
+    fn priority(&self, w: &Waiting, _now: f64) -> (f64, f64) {
+        (self.dominant_share(&w.profile.units), w.profile.hourly_usd)
+    }
+}
+
+/// Policy names, CLI/bench/table order.
+pub fn policy_names() -> &'static [&'static str] {
+    &["fifo", "srtf", "drf-cost"]
+}
+
+/// Construct a policy by name. `pool` parameterizes share-based policies
+/// (DRF needs the per-type capacities).
+pub fn policy_by_name(name: &str, pool: &ResourcePool) -> Option<Box<dyn ClusterPolicy>> {
+    match name {
+        "fifo" => Some(Box::new(Fifo)),
+        "srtf" => Some(Box::new(Srtf)),
+        "drf-cost" => Some(Box::new(DrfCost::new(pool))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::uniform_mix;
+    use crate::resources::paper_testbed;
+
+    fn waiting(job: Job, units: Vec<usize>, est_throughput: f64, hourly: f64) -> Waiting {
+        let nl = job.model.num_layers();
+        Waiting {
+            remaining_samples: job.total_samples,
+            profile: RequestProfile {
+                plan: SchedulingPlan::uniform(nl, 0),
+                units,
+                est_throughput,
+                hourly_usd: hourly,
+            },
+            job,
+            last_plan: None,
+            waiting_since: 0.0,
+            started_before: false,
+            attempts: 0,
+            failed_attempts: None,
+        }
+    }
+
+    #[test]
+    fn registry_round_trips() {
+        let pool = paper_testbed();
+        for name in policy_names() {
+            let p = policy_by_name(name, &pool).unwrap();
+            assert_eq!(p.name(), *name);
+        }
+        assert!(policy_by_name("lottery", &pool).is_none());
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival_and_blocks() {
+        let pool = paper_testbed();
+        let fifo = policy_by_name("fifo", &pool).unwrap();
+        let jobs = uniform_mix(2, 1, 20_000.0).jobs;
+        let early = waiting(jobs[0].clone(), vec![1, 0], 20_000.0, 1.0);
+        let late = waiting(jobs[1].clone(), vec![1, 0], 20_000.0, 1.0);
+        assert!(fifo.priority(&early, 0.0) <= fifo.priority(&late, 0.0));
+        assert!(fifo.head_of_line_blocking());
+        assert!(fifo.preempt_victims(&early, &[], 0.0).is_empty());
+    }
+
+    #[test]
+    fn srtf_prefers_short_and_picks_cheapest_longer_victim() {
+        let pool = paper_testbed();
+        let srtf = policy_by_name("srtf", &pool).unwrap();
+        let jobs = uniform_mix(3, 2, 20_000.0).jobs;
+        let mut short = waiting(jobs[0].clone(), vec![1, 0], 20_000.0, 1.0);
+        short.remaining_samples = 1e6;
+        let mut long = waiting(jobs[1].clone(), vec![1, 0], 20_000.0, 1.0);
+        long.remaining_samples = 1e9;
+        assert!(srtf.priority(&short, 0.0) < srtf.priority(&long, 0.0));
+        // Two running jobs with longer remaining service than `short`:
+        // the cheaper one is the first victim.
+        let mk_running = |w: &Waiting, hourly: f64, remaining: f64| Running {
+            job: w.job.clone(),
+            plan: w.profile.plan.clone(),
+            prov: ProvisioningPlan { replicas: vec![1], ps_cpu_cores: 0 },
+            units: w.profile.units.clone(),
+            hourly_usd: hourly,
+            measured_throughput: 20_000.0,
+            below_floor: false,
+            started_secs: 0.0,
+            remaining_at_start: remaining,
+            epoch: 0,
+            profile: w.profile.clone(),
+            started_before: true,
+            attempts: 1,
+        };
+        let expensive = mk_running(&long, 5.0, 1e9);
+        let cheap = mk_running(&waiting(jobs[2].clone(), vec![1, 0], 20_000.0, 1.0), 0.5, 1e9);
+        let victims = srtf.preempt_victims(&short, &[expensive, cheap], 0.0);
+        assert_eq!(victims, vec![1, 0], "cheapest-to-pause first");
+    }
+
+    #[test]
+    fn drf_ranks_by_dominant_share_then_price() {
+        let pool = paper_testbed(); // capacities [480, 32]
+        let drf = policy_by_name("drf-cost", &pool).unwrap();
+        let jobs = uniform_mix(3, 3, 20_000.0).jobs;
+        // 32/32 GPUs dominates 48/480 CPUs.
+        let big = waiting(jobs[0].clone(), vec![0, 32], 20_000.0, 77.0);
+        let small = waiting(jobs[1].clone(), vec![48, 0], 20_000.0, 1.9);
+        assert!(drf.priority(&small, 0.0) < drf.priority(&big, 0.0));
+        // Equal shares: cheaper hourly bill first.
+        let same_cheap = waiting(jobs[2].clone(), vec![48, 0], 20_000.0, 1.0);
+        assert!(drf.priority(&same_cheap, 0.0) < drf.priority(&small, 0.0));
+        assert!(!drf.head_of_line_blocking());
+    }
+}

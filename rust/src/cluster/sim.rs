@@ -1,0 +1,1053 @@
+//! The event-driven cluster simulator: arrivals, gang admission,
+//! completions and preemptions on a virtual clock.
+//!
+//! Mechanics (DESIGN.md §Cluster-Tenancy):
+//!
+//! * **Events.** A deterministic min-heap of arrival/completion events
+//!   (ties broken by insertion order). Between events the clock only
+//!   advances to accrue holding cost and the utilization histogram.
+//! * **Gang admission.** A job enters only when a budgeted
+//!   [`SearchSession`](crate::sched::SearchSession) — warm-started with
+//!   the job's pre-preemption plan, its arrival-time request profile, the
+//!   canonical data-intensive→CPU split and the CPU-only plan of last
+//!   resort — finds a *feasible* provisioned plan on the **residual
+//!   pool** (the parent pool minus every running job's held units). Its
+//!   whole sub-pool is then acquired atomically, and released the same
+//!   way on completion or preemption, so sub-pools can never exceed the
+//!   parent and preemption can never strand replicas.
+//! * **Service.** The admitted plan's throughput is *measured* by the
+//!   discrete-event [`simulator`](crate::simulator) (stragglers, dispatch
+//!   overheads) under a seed derived from `(cluster seed, job, epoch)`;
+//!   the job completes after `remaining_samples / measured` seconds
+//!   unless preempted first (stale completions are fenced by an
+//!   admission epoch).
+//! * **SLA accounting.** As in the elastic controller, seconds below the
+//!   floor are the violation metric: every second a job spends arrived
+//!   but not running delivers zero throughput and counts, as does a
+//!   running stretch whose measured throughput sits below the floor.
+//! * **Determinism.** All randomness (admission search, straggler draws)
+//!   derives from the cluster seed; two runs of the same
+//!   `(pool, queue, config, seed)` produce bit-identical reports.
+
+use std::collections::BinaryHeap;
+
+use super::job::JobQueue;
+use super::policy::{ClusterPolicy, RequestProfile, Running, Waiting};
+use crate::cost::{CostConfig, CostModel};
+use crate::metrics::Histogram;
+use crate::plan::{canonical_split_plan, SchedulingPlan};
+use crate::resources::ResourcePool;
+use crate::sched::{self, Budget, ScheduleOutcome, SchedulerSpec};
+use crate::simulator::{simulate, SimConfig};
+
+/// Cluster-level knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Per-job scheduling method (through the `sched::spec` registry).
+    pub spec: SchedulerSpec,
+    /// Evaluation cap per admission session (gang admission must stay
+    /// cheap: the queue is re-examined on every arrival/completion).
+    pub admit_budget_evals: usize,
+    /// Base cost-model parameters; `throughput_limit` is overridden per
+    /// job from its SLA floor.
+    pub cost: CostConfig,
+    /// Discrete-event measurement knobs for admitted plans.
+    pub sim: SimConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            spec: SchedulerSpec::parse("greedy").expect("greedy is registered"),
+            admit_budget_evals: 96,
+            cost: CostConfig::default(),
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.admit_budget_evals >= 1,
+            "admit_budget_evals must be at least 1 — a zero budget could never admit a job"
+        );
+        Ok(())
+    }
+}
+
+/// What happened at one point of the virtual timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Arrive,
+    /// The job is infeasible even on the empty pool; it never enters the
+    /// queue (FIFO would otherwise deadlock behind it).
+    Reject,
+    Admit,
+    Preempt,
+    Complete,
+}
+
+/// One timeline entry. `units` carries the per-type units acquired
+/// (`Admit`) or released (`Preempt`/`Complete`) so tests can replay the
+/// ledger and check conservation and the no-stranded-replica invariant.
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    pub at_secs: f64,
+    pub job_id: usize,
+    pub kind: EventKind,
+    pub units: Vec<usize>,
+}
+
+/// Per-job outcome.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: usize,
+    pub name: String,
+    pub model: String,
+    pub sla_floor: f64,
+    pub arrival_secs: f64,
+    /// `None` while incomplete (in particular for rejected jobs).
+    pub completion_secs: Option<f64>,
+    /// Infeasible even on the empty pool at arrival.
+    pub rejected: bool,
+    pub first_start_secs: Option<f64>,
+    /// Arrival → first admission.
+    pub queueing_delay_secs: f64,
+    /// Seconds delivered below the SLA floor: all queued/preempted time
+    /// plus running stretches whose measured throughput missed the floor.
+    pub sla_violation_secs: f64,
+    pub preemptions: usize,
+    pub admissions: usize,
+    /// Cost-model evaluations spent scheduling this job (profile plus
+    /// every admission attempt).
+    pub evaluations: usize,
+    /// Dollars for the units this job actually held, integrated over its
+    /// running time (Eq 7).
+    pub cost_usd: f64,
+}
+
+impl JobRecord {
+    /// Job completion time: completion minus arrival.
+    pub fn jct_secs(&self) -> Option<f64> {
+        self.completion_secs.map(|c| c - self.arrival_secs)
+    }
+
+    /// Column headers matching [`JobRecord::table_row`].
+    pub const TABLE_COLUMNS: [&'static str; 10] = [
+        "job",
+        "model",
+        "floor",
+        "arrival (s)",
+        "start (s)",
+        "JCT (s)",
+        "queue (s)",
+        "SLA viol (s)",
+        "preempts",
+        "cost ($)",
+    ];
+
+    pub fn table_row(&self) -> Vec<String> {
+        let start = match (self.rejected, self.first_start_secs) {
+            (true, _) => "rejected".to_string(),
+            (false, Some(s)) => format!("{s:.0}"),
+            (false, None) => "-".to_string(),
+        };
+        vec![
+            self.name.clone(),
+            self.model.clone(),
+            format!("{:.0}", self.sla_floor),
+            format!("{:.0}", self.arrival_secs),
+            start,
+            self.jct_secs().map_or_else(|| "-".to_string(), |j| format!("{j:.0}")),
+            format!("{:.0}", self.queueing_delay_secs),
+            format!("{:.0}", self.sla_violation_secs),
+            self.preemptions.to_string(),
+            format!("{:.2}", self.cost_usd),
+        ]
+    }
+}
+
+/// What one policy's run over a job mix produced.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub policy: String,
+    /// Canonical spec string of the per-job scheduling method.
+    pub method: String,
+    pub jobs: Vec<JobRecord>,
+    pub timeline: Vec<EventRecord>,
+    /// Virtual time of the last completion.
+    pub makespan_secs: f64,
+    /// Dollars for all held sub-pools, integrated over the run (Eq 7).
+    pub cumulative_cost_usd: f64,
+    pub total_evaluations: usize,
+    /// Max units of each type simultaneously held (conservation: never
+    /// above the parent pool's limits).
+    pub peak_units: Vec<usize>,
+    /// $-weighted pool-utilization histogram: one decile sample (0..=10)
+    /// per inter-event interval over the whole event span — idle gaps
+    /// between tenancies included ([`crate::metrics::Histogram`]
+    /// snapshot).
+    pub util_deciles: Vec<u64>,
+    /// Compact rendering of the decile histogram.
+    pub util_render: String,
+    /// Time-weighted mean $-utilization in [0, 1] over the event span.
+    pub mean_util: f64,
+    pub rejected: usize,
+}
+
+impl ClusterReport {
+    pub fn completed(&self) -> usize {
+        self.jobs.iter().filter(|j| j.completion_secs.is_some()).count()
+    }
+
+    /// Mean JCT over completed jobs (0 when none completed).
+    pub fn mean_jct_secs(&self) -> f64 {
+        let jcts: Vec<f64> = self.jobs.iter().filter_map(|j| j.jct_secs()).collect();
+        if jcts.is_empty() {
+            0.0
+        } else {
+            jcts.iter().sum::<f64>() / jcts.len() as f64
+        }
+    }
+
+    pub fn mean_queueing_delay_secs(&self) -> f64 {
+        let started: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.first_start_secs.is_some())
+            .map(|j| j.queueing_delay_secs)
+            .collect();
+        if started.is_empty() {
+            0.0
+        } else {
+            started.iter().sum::<f64>() / started.len() as f64
+        }
+    }
+
+    pub fn total_sla_violation_secs(&self) -> f64 {
+        self.jobs.iter().map(|j| j.sla_violation_secs).sum()
+    }
+
+    /// Column headers matching [`ClusterReport::summary_row`].
+    pub const SUMMARY_COLUMNS: [&'static str; 9] = [
+        "policy",
+        "mean JCT (s)",
+        "mean queue (s)",
+        "SLA viol (s)",
+        "makespan (s)",
+        "cluster $",
+        "evals",
+        "rejected",
+        "util deciles",
+    ];
+
+    pub fn summary_row(&self) -> Vec<String> {
+        vec![
+            self.policy.clone(),
+            format!("{:.0}", self.mean_jct_secs()),
+            format!("{:.0}", self.mean_queueing_delay_secs()),
+            format!("{:.0}", self.total_sla_violation_secs()),
+            format!("{:.0}", self.makespan_secs),
+            format!("{:.2}", self.cumulative_cost_usd),
+            self.total_evaluations.to_string(),
+            self.rejected.to_string(),
+            self.util_render.clone(),
+        ]
+    }
+}
+
+/// A pending event on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Pending {
+    Arrival { queue_idx: usize },
+    Completion { job_id: usize, epoch: u64 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Event {
+    at: f64,
+    /// Insertion order: the deterministic tie-break for equal times.
+    seq: u64,
+    kind: Pending,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest (then
+        // first-inserted) event surfaces first.
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Derive a stream-local seed (the elastic controller's mixing idiom).
+fn mix_seed(seed: u64, a: u64, b: u64) -> u64 {
+    seed ^ a.wrapping_mul(0x9E3779B97F4A7C15) ^ b.wrapping_mul(0xD1B54A32D192ED03)
+}
+
+/// The cost-model configuration for one job: its SLA floor over the
+/// cluster's base [`CostConfig`].
+fn job_cost_cfg(base: &CostConfig, floor: f64) -> CostConfig {
+    CostConfig { throughput_limit: floor, ..base.clone() }
+}
+
+fn fits(need: &[usize], avail: &[usize]) -> bool {
+    need.iter().zip(avail).all(|(&n, &a)| n <= a)
+}
+
+/// Per-type unit footprint (PS cores included) and hourly price (Eq 7
+/// over one hour) of a schedule outcome — the single derivation both the
+/// arrival-time request profile and the admission-time acquisition use,
+/// so the conservation ledger cannot desynchronize from the profile.
+/// `parent` supplies the type count and CPU id (identical across parent
+/// and residual pools); `cm` prices with its own pool's rates.
+fn footprint(
+    parent: &ResourcePool,
+    cm: &CostModel,
+    out: &ScheduleOutcome,
+) -> (Vec<usize>, f64) {
+    let stages = out.plan.stages();
+    let cpu_id = parent.cpu_type().map(|c| c.id);
+    let units = out.eval.provisioning.units_per_type(&stages, parent.num_types(), cpu_id);
+    let hourly = cm.monetary_cost(3600.0, &units);
+    (units, hourly)
+}
+
+struct Sim<'a> {
+    pool: &'a ResourcePool,
+    queue: &'a JobQueue,
+    policy: &'a dyn ClusterPolicy,
+    cfg: &'a ClusterConfig,
+    seed: u64,
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    clock: f64,
+    waiting: Vec<Waiting>,
+    running: Vec<Running>,
+    records: Vec<JobRecord>,
+    /// Admission epoch per job (fences stale completion events).
+    epochs: Vec<u64>,
+    timeline: Vec<EventRecord>,
+    /// Virtual time of the last non-stale completion (`makespan_secs`).
+    last_completion: f64,
+    cumulative_cost_usd: f64,
+    capacity_hourly: f64,
+    util_hist: Histogram,
+    util_time: f64,
+    total_time: f64,
+    peak_units: Vec<usize>,
+    rejected: usize,
+}
+
+impl<'a> Sim<'a> {
+    fn new(
+        pool: &'a ResourcePool,
+        queue: &'a JobQueue,
+        policy: &'a dyn ClusterPolicy,
+        cfg: &'a ClusterConfig,
+        seed: u64,
+    ) -> Self {
+        let records = queue
+            .jobs
+            .iter()
+            .map(|j| JobRecord {
+                id: j.id,
+                name: j.name.clone(),
+                model: j.model.name.clone(),
+                sla_floor: j.sla_floor,
+                arrival_secs: j.arrival_secs,
+                completion_secs: None,
+                rejected: false,
+                first_start_secs: None,
+                queueing_delay_secs: 0.0,
+                sla_violation_secs: 0.0,
+                preemptions: 0,
+                admissions: 0,
+                evaluations: 0,
+                cost_usd: 0.0,
+            })
+            .collect();
+        let capacity_hourly = pool
+            .types
+            .iter()
+            .map(|t| t.price_per_hour * t.max_units as f64)
+            .sum();
+        Sim {
+            pool,
+            queue,
+            policy,
+            cfg,
+            seed,
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            clock: 0.0,
+            waiting: Vec::new(),
+            running: Vec::new(),
+            records,
+            epochs: vec![0; queue.jobs.len()],
+            timeline: Vec::new(),
+            last_completion: 0.0,
+            cumulative_cost_usd: 0.0,
+            capacity_hourly,
+            util_hist: Histogram::new(11),
+            util_time: 0.0,
+            total_time: 0.0,
+            peak_units: vec![0; pool.num_types()],
+            rejected: 0,
+        }
+    }
+
+    fn push_event(&mut self, at: f64, kind: Pending) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { at, seq, kind });
+    }
+
+    /// Units of each type still free: parent limits minus held sub-pools.
+    fn residual_units(&self) -> Vec<usize> {
+        let mut avail: Vec<usize> = self.pool.types.iter().map(|t| t.max_units).collect();
+        for r in &self.running {
+            for (t, &u) in r.units.iter().enumerate() {
+                avail[t] = avail[t].saturating_sub(u);
+            }
+        }
+        avail
+    }
+
+    /// The residual pool the next admission searches over: the parent
+    /// with its limits replaced by the given free-unit vector.
+    fn residual_pool(&self, avail: &[usize]) -> ResourcePool {
+        let mut pool = self.pool.clone();
+        for (t, &u) in avail.iter().enumerate() {
+            pool.types[t].max_units = u;
+        }
+        pool
+    }
+
+    fn update_peaks(&mut self) {
+        let mut held = vec![0usize; self.pool.num_types()];
+        for r in &self.running {
+            for (t, &u) in r.units.iter().enumerate() {
+                held[t] += u;
+            }
+        }
+        for (t, &u) in held.iter().enumerate() {
+            self.peak_units[t] = self.peak_units[t].max(u);
+        }
+    }
+
+    /// Accrue holding cost and utilization from the clock to `to`.
+    fn advance(&mut self, to: f64) {
+        let dt = to - self.clock;
+        if dt > 0.0 {
+            let mut held_hourly = 0.0;
+            for r in &self.running {
+                let cost = r.hourly_usd * dt / 3600.0;
+                self.records[r.job.id].cost_usd += cost;
+                self.cumulative_cost_usd += cost;
+                held_hourly += r.hourly_usd;
+            }
+            let util = if self.capacity_hourly > 0.0 {
+                (held_hourly / self.capacity_hourly).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            self.util_hist.record((util * 10.0).round() as u64);
+            self.util_time += util * dt;
+            self.total_time += dt;
+            self.clock = to;
+        }
+    }
+
+    /// Run one budgeted, warm-started session for `job` on `search_pool`
+    /// and return the outcome plus the evaluations it consumed.
+    fn admit_session(
+        &self,
+        job_idx_in_waiting: Option<usize>,
+        job: &crate::cluster::job::Job,
+        search_pool: &ResourcePool,
+        attempt: u64,
+    ) -> (Option<ScheduleOutcome>, usize) {
+        let cm =
+            CostModel::new(&job.model, search_pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+        let scheduler = self.cfg.spec.build(mix_seed(self.seed, job.id as u64, attempt));
+        let mut session = scheduler.session(&cm, Budget::evals(self.cfg.admit_budget_evals));
+        if let Some(widx) = job_idx_in_waiting {
+            let w = &self.waiting[widx];
+            if let Some(last) = &w.last_plan {
+                session.warm_start(last);
+            }
+            session.warm_start(&w.profile.plan);
+        }
+        if let Some(split) = canonical_split_plan(&job.model, search_pool) {
+            session.warm_start(&split);
+        }
+        // The plan of last resort (the §6.2 CPU-only baseline): stays
+        // provisionable when every accelerator is held by other tenants.
+        if let Some(cpu) = search_pool.cpu_type() {
+            session.warm_start(&SchedulingPlan::uniform(job.model.num_layers(), cpu.id));
+        }
+        match sched::drive(session.as_mut(), None) {
+            Ok(out) => {
+                let evals = out.evaluations;
+                (Some(out), evals)
+            }
+            Err(_) => (None, 0),
+        }
+    }
+
+    /// A new job arrives: compute its empty-pool request profile, reject
+    /// it outright when even the whole pool cannot serve it, else queue
+    /// it and re-run admission.
+    fn on_arrival(&mut self, queue_idx: usize, now: f64) -> anyhow::Result<()> {
+        let job = self.queue.jobs[queue_idx].clone();
+        let jid = job.id;
+        self.timeline.push(EventRecord {
+            at_secs: now,
+            job_id: jid,
+            kind: EventKind::Arrive,
+            units: Vec::new(),
+        });
+        let (outcome, spent) = self.admit_session(None, &job, self.pool, 0);
+        self.records[jid].evaluations += spent;
+        let feasible = outcome.as_ref().map(|o| o.eval.feasible).unwrap_or(false);
+        let Some(out) = outcome.filter(|_| feasible) else {
+            self.records[jid].rejected = true;
+            self.rejected += 1;
+            self.timeline.push(EventRecord {
+                at_secs: now,
+                job_id: jid,
+                kind: EventKind::Reject,
+                units: Vec::new(),
+            });
+            return Ok(());
+        };
+        let (units, hourly) = {
+            let cm =
+                CostModel::new(&job.model, self.pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+            footprint(self.pool, &cm, &out)
+        };
+        let profile = RequestProfile {
+            plan: out.plan,
+            units,
+            est_throughput: out.eval.throughput,
+            hourly_usd: hourly,
+        };
+        self.waiting.push(Waiting {
+            remaining_samples: job.total_samples,
+            job,
+            profile,
+            last_plan: None,
+            waiting_since: now,
+            started_before: false,
+            attempts: 1,
+            failed_attempts: None,
+        });
+        self.admission_pass(now)
+    }
+
+    /// The completion event matches a job still running under the epoch
+    /// it was scheduled for (preemption bumps the epoch, staling it).
+    fn completion_is_live(&self, job_id: usize, epoch: u64) -> bool {
+        self.running.iter().any(|r| r.job.id == job_id && r.epoch == epoch)
+    }
+
+    fn on_completion(&mut self, job_id: usize, epoch: u64, now: f64) -> anyhow::Result<()> {
+        let Some(ridx) =
+            self.running.iter().position(|r| r.job.id == job_id && r.epoch == epoch)
+        else {
+            return Ok(()); // stale (also fenced by the caller)
+        };
+        let r = self.running.remove(ridx);
+        let rec = &mut self.records[job_id];
+        if r.below_floor {
+            rec.sla_violation_secs += now - r.started_secs;
+        }
+        rec.completion_secs = Some(now);
+        self.last_completion = self.last_completion.max(now);
+        self.timeline.push(EventRecord {
+            at_secs: now,
+            job_id,
+            kind: EventKind::Complete,
+            units: r.units.clone(),
+        });
+        self.admission_pass(now)
+    }
+
+    /// Try to admit `waiting[widx]` on the residual pool. Consumes one
+    /// admission session either way; on success the job moves to the
+    /// running set with its whole sub-pool acquired atomically.
+    fn try_admit(&mut self, widx: usize, now: f64) -> anyhow::Result<bool> {
+        let avail = self.residual_units();
+        // Futility damper: after two failures against a bit-identical
+        // residual (the second with a fresh search seed, for stochastic
+        // methods), re-running the session would burn the same
+        // evaluations on the same failure. A release re-arms.
+        if matches!(
+            &self.waiting[widx].failed_attempts,
+            Some((r, n)) if *n >= 2 && r.as_slice() == avail.as_slice()
+        ) {
+            return Ok(false);
+        }
+        let residual = self.residual_pool(&avail);
+        let jid = self.waiting[widx].job.id;
+        let attempt = self.waiting[widx].attempts;
+        self.waiting[widx].attempts += 1;
+        let job = self.waiting[widx].job.clone();
+        let (outcome, spent) = self.admit_session(Some(widx), &job, &residual, attempt);
+        self.records[jid].evaluations += spent;
+        let Some(out) = outcome.filter(|o| o.eval.feasible) else {
+            let w = &mut self.waiting[widx];
+            w.failed_attempts = match w.failed_attempts.take() {
+                Some((r, n)) if r == avail => Some((r, n + 1)),
+                _ => Some((avail, 1)),
+            };
+            return Ok(false);
+        };
+        self.epochs[jid] += 1;
+        let epoch = self.epochs[jid];
+        let (units, hourly, measured) = {
+            let cm =
+                CostModel::new(&job.model, &residual, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+            let (units, hourly) = footprint(self.pool, &cm, &out);
+            let sim = simulate(
+                &cm,
+                &out.plan,
+                &out.eval.provisioning,
+                &self.cfg.sim,
+                mix_seed(self.seed, jid as u64, 0x10_0000 + epoch),
+            );
+            (units, hourly, sim.throughput)
+        };
+        let w = self.waiting.remove(widx);
+        let rec = &mut self.records[jid];
+        rec.sla_violation_secs += now - w.waiting_since;
+        if !w.started_before {
+            rec.first_start_secs = Some(now);
+            rec.queueing_delay_secs = now - w.job.arrival_secs;
+        }
+        rec.admissions += 1;
+        let service = w.remaining_samples / measured.max(1e-9);
+        self.push_event(now + service, Pending::Completion { job_id: jid, epoch });
+        self.timeline.push(EventRecord {
+            at_secs: now,
+            job_id: jid,
+            kind: EventKind::Admit,
+            units: units.clone(),
+        });
+        self.running.push(Running {
+            below_floor: measured < w.job.sla_floor,
+            job: w.job,
+            plan: out.plan,
+            prov: out.eval.provisioning,
+            units,
+            hourly_usd: hourly,
+            measured_throughput: measured,
+            started_secs: now,
+            remaining_at_start: w.remaining_samples,
+            epoch,
+            profile: w.profile,
+            started_before: true,
+            attempts: w.attempts,
+        });
+        self.update_peaks();
+        Ok(true)
+    }
+
+    /// Gang-release `running[ridx]` and put it back in the queue with its
+    /// progress preserved.
+    fn preempt(&mut self, ridx: usize, now: f64) {
+        let r = self.running.remove(ridx);
+        let jid = r.job.id;
+        let remaining = r.remaining_samples(now);
+        let rec = &mut self.records[jid];
+        rec.preemptions += 1;
+        if r.below_floor {
+            rec.sla_violation_secs += now - r.started_secs;
+        }
+        self.timeline.push(EventRecord {
+            at_secs: now,
+            job_id: jid,
+            kind: EventKind::Preempt,
+            units: r.units.clone(),
+        });
+        self.waiting.push(Waiting {
+            job: r.job,
+            remaining_samples: remaining,
+            profile: r.profile,
+            last_plan: Some(r.plan),
+            waiting_since: now,
+            started_before: true,
+            attempts: r.attempts,
+            failed_attempts: None,
+        });
+    }
+
+    /// Policy order over the waiting queue, made total with
+    /// `(arrival, id)` tie-breaks.
+    fn admission_order(&self, now: f64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.waiting.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (pa, sa) = self.policy.priority(&self.waiting[a], now);
+            let (pb, sb) = self.policy.priority(&self.waiting[b], now);
+            pa.total_cmp(&pb)
+                .then_with(|| sa.total_cmp(&sb))
+                .then_with(|| {
+                    self.waiting[a]
+                        .job
+                        .arrival_secs
+                        .total_cmp(&self.waiting[b].job.arrival_secs)
+                })
+                .then_with(|| self.waiting[a].job.id.cmp(&self.waiting[b].job.id))
+        });
+        order
+    }
+
+    /// Preemption campaign for the top-priority candidate that failed
+    /// admission: pause the policy's victims one sub-pool at a time —
+    /// only if the freed units would actually cover the candidate's
+    /// request — then re-run its admission. Returns whether anything
+    /// changed (preempted and/or admitted).
+    fn try_preempt_for(&mut self, widx: usize, now: f64) -> anyhow::Result<bool> {
+        let victims = self.policy.preempt_victims(&self.waiting[widx], &self.running, now);
+        if victims.is_empty() {
+            return Ok(false);
+        }
+        let need = self.waiting[widx].profile.units.clone();
+        let mut avail = self.residual_units();
+        if fits(&need, &avail) {
+            // Units are not the problem (the search itself came up
+            // short); pausing tenants would not help.
+            return Ok(false);
+        }
+        let mut take: Vec<usize> = Vec::new(); // victim job ids
+        for &v in &victims {
+            if fits(&need, &avail) {
+                break;
+            }
+            for (t, &u) in self.running[v].units.iter().enumerate() {
+                avail[t] += u;
+            }
+            take.push(self.running[v].job.id);
+        }
+        if !fits(&need, &avail) {
+            return Ok(false); // even pausing every victim would not fit
+        }
+        let cand_id = self.waiting[widx].job.id;
+        for vid in take {
+            let ridx = self
+                .running
+                .iter()
+                .position(|r| r.job.id == vid)
+                .expect("victim still running");
+            self.preempt(ridx, now);
+        }
+        let widx = self
+            .waiting
+            .iter()
+            .position(|w| w.job.id == cand_id)
+            .expect("candidate still waiting");
+        self.try_admit(widx, now)?;
+        Ok(true)
+    }
+
+    /// Re-examine the queue until no admission (or preemption) makes
+    /// progress. Restarted from scratch after every change because the
+    /// residual pool — and with it every candidate's feasibility — moved.
+    fn admission_pass(&mut self, now: f64) -> anyhow::Result<()> {
+        // Each job may trigger at most one preemption campaign per pass;
+        // together with the fits-precheck this bounds the pass and rules
+        // out preempt/readmit cycles.
+        let mut campaigned: Vec<usize> = Vec::new();
+        loop {
+            if self.waiting.is_empty() {
+                return Ok(());
+            }
+            let order = self.admission_order(now);
+            let mut progressed = false;
+            for (rank, &widx) in order.iter().enumerate() {
+                if self.try_admit(widx, now)? {
+                    progressed = true;
+                    break;
+                }
+                if rank == 0 {
+                    let cand_id = self.waiting[widx].job.id;
+                    if !campaigned.contains(&cand_id) {
+                        campaigned.push(cand_id);
+                        if self.try_preempt_for(widx, now)? {
+                            progressed = true;
+                            break;
+                        }
+                    }
+                }
+                if self.policy.head_of_line_blocking() {
+                    break;
+                }
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
+    }
+
+    fn into_report(self, policy: &str) -> ClusterReport {
+        let total_evaluations = self.records.iter().map(|r| r.evaluations).sum();
+        let mean_util =
+            if self.total_time > 0.0 { self.util_time / self.total_time } else { 0.0 };
+        ClusterReport {
+            policy: policy.to_string(),
+            method: self.cfg.spec.to_string(),
+            jobs: self.records,
+            timeline: self.timeline,
+            // Not the final clock: a trailing rejected arrival can
+            // advance the clock past the moment the cluster drained.
+            makespan_secs: self.last_completion,
+            cumulative_cost_usd: self.cumulative_cost_usd,
+            total_evaluations,
+            peak_units: self.peak_units,
+            util_deciles: self.util_hist.snapshot(),
+            util_render: self.util_hist.render(),
+            mean_util,
+            rejected: self.rejected,
+        }
+    }
+}
+
+/// Replay `queue` against `pool` under one policy. Deterministic in
+/// `(pool, queue, cfg, seed)`: two calls with identical inputs produce
+/// bit-identical reports.
+pub fn run_cluster(
+    pool: &ResourcePool,
+    queue: &JobQueue,
+    policy: &dyn ClusterPolicy,
+    cfg: &ClusterConfig,
+    seed: u64,
+) -> anyhow::Result<ClusterReport> {
+    pool.validate()?;
+    queue.validate()?;
+    cfg.validate()?;
+    let mut sim = Sim::new(pool, queue, policy, cfg, seed);
+    for (i, job) in queue.jobs.iter().enumerate() {
+        let at = job.arrival_secs;
+        sim.push_event(at, Pending::Arrival { queue_idx: i });
+    }
+    while let Some(ev) = sim.heap.pop() {
+        match ev.kind {
+            Pending::Arrival { queue_idx } => {
+                sim.advance(ev.at);
+                sim.on_arrival(queue_idx, ev.at)?;
+            }
+            Pending::Completion { job_id, epoch } => {
+                // A stale completion (its job was preempted after it was
+                // scheduled) must not advance the clock: a re-admitted
+                // job can finish *earlier* than its superseded event, and
+                // advancing past the true last completion would inflate
+                // the makespan and dilute the utilization accounting.
+                if sim.completion_is_live(job_id, epoch) {
+                    sim.advance(ev.at);
+                    sim.on_completion(job_id, epoch, ev.at)?;
+                }
+            }
+        }
+    }
+    // Every queued job is feasible on the empty pool (infeasible ones are
+    // rejected at arrival), and the final completion drains the cluster,
+    // so the queue must be empty here.
+    anyhow::ensure!(
+        sim.waiting.is_empty() && sim.running.is_empty(),
+        "cluster run ended with jobs stranded in the queue"
+    );
+    Ok(sim.into_report(policy.name()))
+}
+
+/// Render and emit one per-job table per report plus the cross-policy
+/// summary table (stdout + `results/<prefix>_*.csv`) — the single
+/// rendering the CLI and the example both call, so the two cannot drift
+/// apart on columns.
+pub fn emit_reports(prefix: &str, context: &str, reports: &[ClusterReport]) {
+    use crate::metrics::Table;
+    for r in reports {
+        let mut t = Table::new(
+            format!("Cluster jobs — {context}, policy {}, method {}", r.policy, r.method),
+            &JobRecord::TABLE_COLUMNS,
+        );
+        for j in &r.jobs {
+            t.row(&j.table_row());
+        }
+        t.emit(&format!("{prefix}_jobs_{}", r.policy));
+    }
+    let mut t = Table::new(
+        format!("Cluster policy comparison — {context}"),
+        &ClusterReport::SUMMARY_COLUMNS,
+    );
+    for r in reports {
+        t.row(&r.summary_row());
+    }
+    t.emit(&format!("{prefix}_policies"));
+}
+
+/// Run the mix once per registered policy, in [`super::policy_names`]
+/// order — the comparison the CLI, bench and example all render.
+pub fn run_all_policies(
+    pool: &ResourcePool,
+    queue: &JobQueue,
+    cfg: &ClusterConfig,
+    seed: u64,
+) -> anyhow::Result<Vec<ClusterReport>> {
+    super::policy_names()
+        .iter()
+        .map(|name| {
+            let policy = super::policy_by_name(name, pool).expect("registered policy");
+            run_cluster(pool, queue, policy.as_ref(), cfg, seed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::job::{tight_mix, tight_pool, uniform_mix};
+    use crate::cluster::policy_by_name;
+    use crate::resources::paper_testbed;
+
+    fn fast_cfg() -> ClusterConfig {
+        ClusterConfig { admit_budget_evals: 48, ..Default::default() }
+    }
+
+    #[test]
+    fn event_order_is_time_then_insertion() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Event { at: 5.0, seq: 0, kind: Pending::Arrival { queue_idx: 0 } });
+        heap.push(Event { at: 1.0, seq: 1, kind: Pending::Arrival { queue_idx: 1 } });
+        heap.push(Event { at: 1.0, seq: 2, kind: Pending::Arrival { queue_idx: 2 } });
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let pool = paper_testbed();
+        let queue = uniform_mix(1, 5, 20_000.0);
+        let policy = policy_by_name("fifo", &pool).unwrap();
+        let r = run_cluster(&pool, &queue, policy.as_ref(), &fast_cfg(), 5).unwrap();
+        assert_eq!(r.completed(), 1);
+        assert_eq!(r.rejected, 0);
+        let job = &r.jobs[0];
+        assert_eq!(job.admissions, 1);
+        assert_eq!(job.preemptions, 0);
+        assert!(job.jct_secs().unwrap() > 0.0);
+        assert!(r.cumulative_cost_usd > 0.0);
+        assert!(r.makespan_secs > 0.0);
+        // The lone job was admitted on arrival: no queueing delay.
+        assert_eq!(job.queueing_delay_secs, 0.0);
+    }
+
+    #[test]
+    fn impossible_job_is_rejected_and_does_not_block_the_queue() {
+        let pool = paper_testbed();
+        let mut queue = uniform_mix(2, 9, 20_000.0);
+        // No pool can deliver 1e12 samples/sec: job 0 must be rejected
+        // even under FIFO, letting job 1 run.
+        queue.jobs[0].sla_floor = 1e12;
+        let policy = policy_by_name("fifo", &pool).unwrap();
+        let r = run_cluster(&pool, &queue, policy.as_ref(), &fast_cfg(), 9).unwrap();
+        assert_eq!(r.rejected, 1);
+        assert!(r.jobs[0].rejected);
+        assert!(r.jobs[0].completion_secs.is_none());
+        assert!(r.jobs[1].completion_secs.is_some());
+    }
+
+    #[test]
+    fn timeline_and_peaks_respect_the_parent_pool() {
+        let pool = tight_pool();
+        let queue = tight_mix(5, 11, 20_000.0);
+        for name in crate::cluster::policy_names() {
+            let policy = policy_by_name(name, &pool).unwrap();
+            let r = run_cluster(&pool, &queue, policy.as_ref(), &fast_cfg(), 11).unwrap();
+            for (t, &peak) in r.peak_units.iter().enumerate() {
+                assert!(
+                    peak <= pool.get(t).max_units,
+                    "{name}: type {t} peaked at {peak} over limit {}",
+                    pool.get(t).max_units
+                );
+            }
+            assert_eq!(r.completed() + r.rejected, queue.len());
+        }
+    }
+
+    #[test]
+    fn drf_does_not_let_a_blocked_big_job_starve_small_ones() {
+        let pool = tight_pool();
+        let queue = tight_mix(6, 42, 20_000.0);
+        let cfg = fast_cfg();
+        let fifo = run_cluster(
+            &pool,
+            &queue,
+            policy_by_name("fifo", &pool).unwrap().as_ref(),
+            &cfg,
+            42,
+        )
+        .unwrap();
+        let drf = run_cluster(
+            &pool,
+            &queue,
+            policy_by_name("drf-cost", &pool).unwrap().as_ref(),
+            &cfg,
+            42,
+        )
+        .unwrap();
+        // The small NCE jobs (ids 2..) must start strictly earlier under
+        // DRF than under FIFO's head-of-line blocking.
+        let mean_small_queue = |r: &ClusterReport| {
+            let smalls: Vec<f64> =
+                r.jobs[2..].iter().map(|j| j.queueing_delay_secs).collect();
+            smalls.iter().sum::<f64>() / smalls.len() as f64
+        };
+        assert!(
+            mean_small_queue(&drf) < mean_small_queue(&fifo),
+            "drf {} !< fifo {}",
+            mean_small_queue(&drf),
+            mean_small_queue(&fifo)
+        );
+    }
+
+    #[test]
+    fn srtf_preempts_the_long_job_for_the_short_one() {
+        let pool = tight_pool();
+        let queue = tight_mix(2, 7, 20_000.0); // medium (2 h) then heavy (1 h)
+        let cfg = fast_cfg();
+        let r = run_cluster(
+            &pool,
+            &queue,
+            policy_by_name("srtf", &pool).unwrap().as_ref(),
+            &cfg,
+            7,
+        )
+        .unwrap();
+        assert!(
+            r.jobs[0].preemptions >= 1,
+            "the shorter heavy job should preempt medium"
+        );
+        assert_eq!(r.completed(), 2);
+        // Heavy finishes before medium despite arriving later.
+        assert!(r.jobs[1].completion_secs.unwrap() < r.jobs[0].completion_secs.unwrap());
+    }
+
+    #[test]
+    fn zero_admit_budget_is_rejected() {
+        let cfg = ClusterConfig { admit_budget_evals: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let pool = paper_testbed();
+        let queue = uniform_mix(1, 1, 20_000.0);
+        let policy = policy_by_name("fifo", &pool).unwrap();
+        assert!(run_cluster(&pool, &queue, policy.as_ref(), &cfg, 1).is_err());
+    }
+}

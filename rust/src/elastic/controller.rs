@@ -298,28 +298,14 @@ fn clamp_to_pool(
     ProvisioningPlan { replicas, ps_cpu_cores }
 }
 
-/// The canonical HeterPS split — data-intensive layers on the CPU type,
-/// the rest on the fastest accelerator — as a warm-start repair candidate:
-/// a demand step can strand the incumbent infeasible, and a budget-capped
-/// session may not rediscover a feasible region from scratch, but this
-/// shape stays provisionable across the widest floor range (§1's
-/// data/compute-intensive dichotomy). `None` when the pool is not
-/// heterogeneous.
+/// The canonical HeterPS split (now shared as
+/// [`crate::plan::canonical_split_plan`]) as a warm-start repair
+/// candidate: a demand step can strand the incumbent infeasible, and a
+/// budget-capped session may not rediscover a feasible region from
+/// scratch, but this shape stays provisionable across the widest floor
+/// range. `None` when the pool is not heterogeneous.
 fn fallback_split_plan(cm: &CostModel) -> Option<SchedulingPlan> {
-    let cpu = cm.pool.cpu_type()?;
-    let accel = cm
-        .pool
-        .types
-        .iter()
-        .filter(|t| t.kind != crate::resources::ResourceKind::Cpu)
-        .max_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap())?;
-    Some(SchedulingPlan::new(
-        cm.model
-            .layers
-            .iter()
-            .map(|l| if l.kind.data_intensive() { cpu.id } else { accel.id })
-            .collect(),
-    ))
+    crate::plan::canonical_split_plan(cm.model, cm.pool)
 }
 
 /// Dollars for holding a provisioned plan for `secs` seconds, priced

@@ -12,7 +12,9 @@
 //!   hot/cold tiering, aggregation+compression), the async communication
 //!   fabric with bounded-staleness workers over a link-modeled transport
 //!   (`comm`), a discrete-event cluster simulator, the trace-driven
-//!   elastic autoscaling loop (`elastic`), and the profiler.
+//!   elastic autoscaling loop (`elastic`), the multi-tenant cluster
+//!   scheduler with gang admission and fairness policies (`cluster`),
+//!   and the profiler.
 //! * **Layer 2 (python/compile)** — JAX definitions of the CTR models and
 //!   the scheduling policy, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
@@ -56,6 +58,7 @@
 //! ```
 
 pub mod cli;
+pub mod cluster;
 pub mod comm;
 pub mod config;
 pub mod cost;
@@ -75,6 +78,7 @@ pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::cluster::{ClusterConfig, ClusterReport, Job, JobQueue, JobRecord};
     pub use crate::comm::{CommConfig, CommReport};
     pub use crate::cost::{CostConfig, CostModel, PlanEval};
     pub use crate::data::compress::Codec;

@@ -4,7 +4,9 @@
 //! heterogeneous pool, `compare` the full §6.2 scheduler suite, `simulate`
 //! a plan on a virtual cluster, `elastic` a workload trace through the
 //! autoscaling loop, `comm` the bounded-staleness communication fabric
-//! against its synchronous reference, `info`/`methods` the catalogs.
+//! against its synchronous reference, `cluster` a multi-tenant job mix
+//! through the gang-admitting fairness policies, `info`/`methods` the
+//! catalogs.
 //!
 //! Schedulers are named through the typed spec registry: a positional like
 //! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
@@ -108,6 +110,23 @@ fn cli() -> Cli {
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
                     OptSpec { name: "seed", help: "workload + init seed", takes_value: true, default: Some("42") },
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "cluster",
+                about: "run a multi-tenant job mix through the cluster scheduler, comparing fairness policies",
+                opts: vec![
+                    OptSpec { name: "jobs", help: "number of jobs in the mix", takes_value: true, default: Some("6") },
+                    OptSpec { name: "mix", help: "bundled job mix (uniform|tight)", takes_value: true, default: Some("uniform") },
+                    OptSpec { name: "policy", help: "allocation policy (fifo|srtf|drf-cost|all)", takes_value: true, default: Some("all") },
+                    OptSpec { name: "method", help: "per-job scheduler spec used for admission searches, e.g. greedy or genetic:pop=16", takes_value: true, default: Some("greedy") },
+                    OptSpec { name: "arrival-seed", help: "seed for the job mix and every admission/measurement stream", takes_value: true, default: Some("42") },
+                    OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
+                    OptSpec { name: "throughput", help: "base SLA floor the mix scales, samples/sec", takes_value: true, default: Some("20000") },
+                    OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
+                    OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
+                    OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
                 ],
                 positionals: vec![],
             },
@@ -220,11 +239,74 @@ fn main() {
                     seed: args.u64_or("seed", 42)?,
                     ..Default::default()
                 };
-                let n_types = args.usize_or("types", 2)?.max(1);
-                let pool = simulated_types(n_types, !args.flag("no-cpu"));
+                let pool = heterps::cli::pool_from_args(&args, None)?;
                 let shards = args.usize_or("shards", 16)?;
                 let lr = args.f64_or("lr", 0.3)? as f32;
                 run_comm(&cfg, &pool, shards, lr, args.flag("tiered"))?;
+                Ok(())
+            }
+            "cluster" => {
+                use heterps::cluster;
+                let n_jobs = args.usize_or("jobs", 6)?;
+                anyhow::ensure!(n_jobs >= 1, "option `--jobs` must be at least 1");
+                let pool = if args.flag("tight-pool") {
+                    cluster::tight_pool()
+                } else {
+                    heterps::cli::pool_from_args(&args, None)?
+                };
+                let base_floor = args.f64_or("throughput", 20_000.0)?;
+                let mix_name = args.str_or("mix", "uniform");
+                let seed = args.u64_or("arrival-seed", 42)?;
+                let queue = cluster::mix_by_name(mix_name, n_jobs, seed, base_floor)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown mix `{mix_name}` (known: {})",
+                            cluster::mix_names().join(", ")
+                        )
+                    })?;
+                let spec = SchedulerSpec::parse(args.str_or("method", "greedy"))?;
+                let ccfg = cluster::ClusterConfig {
+                    spec,
+                    admit_budget_evals: args.usize_or("budget-evals", 96)?,
+                    ..Default::default()
+                };
+                let policy_name = args.str_or("policy", "all");
+                let reports = if policy_name == "all" {
+                    cluster::run_all_policies(&pool, &queue, &ccfg, seed)?
+                } else {
+                    let policy =
+                        cluster::policy_by_name(policy_name, &pool).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown policy `{policy_name}` (known: {}, all)",
+                                cluster::policy_names().join(", ")
+                            )
+                        })?;
+                    vec![cluster::run_cluster(&pool, &queue, policy.as_ref(), &ccfg, seed)?]
+                };
+                cluster::emit_reports(
+                    "cluster",
+                    &format!("mix {mix_name} ({} jobs)", queue.len()),
+                    &reports,
+                );
+                if reports.len() > 1 {
+                    let best_jct = reports
+                        .iter()
+                        .min_by(|a, b| a.mean_jct_secs().total_cmp(&b.mean_jct_secs()))
+                        .expect("non-empty reports");
+                    let best_cost = reports
+                        .iter()
+                        .min_by(|a, b| a.cumulative_cost_usd.total_cmp(&b.cumulative_cost_usd))
+                        .expect("non-empty reports");
+                    println!(
+                        "best mean JCT : {} ({:.0} s)",
+                        best_jct.policy,
+                        best_jct.mean_jct_secs()
+                    );
+                    println!(
+                        "best cluster $: {} (${:.2})",
+                        best_cost.policy, best_cost.cumulative_cost_usd
+                    );
+                }
                 Ok(())
             }
             "train" => {
@@ -244,16 +326,8 @@ fn main() {
                 let model_name = args.str_or("model", "ctrdnn");
                 let model = zoo::by_name(model_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
-                let n_types = match &file {
-                    Some(c) => c.usize_or("pool.types", args.usize_or("types", 2)?),
-                    None => args.usize_or("types", 2)?,
-                }
-                .max(1);
-                let include_cpu = match &file {
-                    Some(c) => c.bool_or("pool.include_cpu", !args.flag("no-cpu")),
-                    None => !args.flag("no-cpu"),
-                };
-                let pool = simulated_types(n_types, include_cpu);
+                let pool = heterps::cli::pool_from_args(&args, file.as_ref())?;
+                let n_types = pool.num_types();
                 let mut cfg = CostConfig::default();
                 if let Some(c) = &file {
                     cfg.batch_size = c.usize_or("cost.batch_size", cfg.batch_size as usize) as u64;

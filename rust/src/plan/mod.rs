@@ -7,7 +7,7 @@
 //! provisioning at stage granularity — exactly the paper's split.
 
 use crate::model::ModelSpec;
-use crate::resources::ResourcePool;
+use crate::resources::{ResourceKind, ResourcePool};
 
 /// Layer -> resource-type assignment.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -67,6 +67,29 @@ impl SchedulingPlan {
         let items: Vec<String> = self.assignment.iter().map(|t| t.to_string()).collect();
         format!("[{}]", items.join(" "))
     }
+}
+
+/// The canonical HeterPS split — data-intensive layers on the CPU type,
+/// the rest on the fastest accelerator (§1's data/compute-intensive
+/// dichotomy). This shape stays provisionable across the widest range of
+/// throughput floors, which makes it the standard warm-start/repair
+/// candidate: the elastic controller seeds adaptation sessions with it
+/// and the cluster scheduler seeds admission sessions with it. `None`
+/// when the pool is not heterogeneous.
+pub fn canonical_split_plan(model: &ModelSpec, pool: &ResourcePool) -> Option<SchedulingPlan> {
+    let cpu = pool.cpu_type()?;
+    let accel = pool
+        .types
+        .iter()
+        .filter(|t| t.kind != ResourceKind::Cpu)
+        .max_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap())?;
+    Some(SchedulingPlan::new(
+        model
+            .layers
+            .iter()
+            .map(|l| if l.kind.data_intensive() { cpu.id } else { accel.id })
+            .collect(),
+    ))
 }
 
 /// A stage: the contiguous layer span `[first_layer, last_layer]` scheduled
@@ -175,5 +198,23 @@ mod tests {
     #[test]
     fn render_is_stable() {
         assert_eq!(SchedulingPlan::new(vec![0, 2, 1]).render(), "[0 2 1]");
+    }
+
+    #[test]
+    fn canonical_split_separates_data_and_compute_layers() {
+        let model = zoo::ctrdnn();
+        let pool = crate::resources::paper_testbed();
+        let plan = canonical_split_plan(&model, &pool).unwrap();
+        plan.validate(&model, &pool).unwrap();
+        for (l, &t) in model.layers.iter().zip(&plan.assignment) {
+            if l.kind.data_intensive() {
+                assert_eq!(t, 0, "data-intensive layer off the CPU");
+            } else {
+                assert_eq!(t, 1, "compute layer off the accelerator");
+            }
+        }
+        // Homogeneous pools have no split to make.
+        let cpu_only = crate::resources::ResourcePool { types: vec![pool.types[0].clone()] };
+        assert!(canonical_split_plan(&model, &cpu_only).is_none());
     }
 }

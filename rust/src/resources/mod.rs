@@ -91,14 +91,39 @@ impl ResourcePool {
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(!self.types.is_empty(), "empty resource pool");
+        anyhow::ensure!(
+            !self.types.is_empty(),
+            "empty resource pool — a pool needs at least one resource type"
+        );
         for (i, t) in self.types.iter().enumerate() {
             anyhow::ensure!(t.id == i, "resource id {} at position {i}", t.id);
-            anyhow::ensure!(t.price_per_hour > 0.0, "{}: non-positive price", t.name);
-            anyhow::ensure!(t.flops_per_sec > 0.0, "{}: non-positive flops", t.name);
+            anyhow::ensure!(
+                t.price_per_hour > 0.0 && t.price_per_hour.is_finite(),
+                "{}: non-positive price (price_per_hour must be a positive $/unit/hour)",
+                t.name
+            );
+            anyhow::ensure!(
+                t.flops_per_sec > 0.0 && t.flops_per_sec.is_finite(),
+                "{}: non-positive flops (flops_per_sec is the Eq 1 compute rate; \
+                 a zero rate makes every compute-intensive stage infinitely slow)",
+                t.name
+            );
+            anyhow::ensure!(
+                t.io_bytes_per_sec > 0.0 && t.io_bytes_per_sec.is_finite(),
+                "{}: non-positive io_bytes_per_sec (the lookup bandwidth data-intensive \
+                 layers divide by — it must be a positive bytes/sec rate)",
+                t.name
+            );
+            anyhow::ensure!(
+                t.net_bytes_per_sec > 0.0 && t.net_bytes_per_sec.is_finite(),
+                "{}: non-positive net_bytes_per_sec (the Eq 2 transfer bandwidth — \
+                 it must be a positive bytes/sec rate)",
+                t.name
+            );
             anyhow::ensure!(
                 t.net_latency_secs > 0.0 && t.net_latency_secs.is_finite(),
-                "{}: non-positive net latency",
+                "{}: non-positive net latency (net_latency_secs is this endpoint's \
+                 per-link contribution; even RDMA fabrics are > 0)",
                 t.name
             );
             anyhow::ensure!((0.0..=1.0).contains(&t.alpha), "{}: alpha out of range", t.name);
@@ -227,6 +252,90 @@ mod tests {
         p.validate().unwrap();
         assert_eq!(p.num_types(), 3);
         assert!(p.cpu_type().is_none());
+    }
+
+    #[test]
+    fn prop_shipped_pools_validate() {
+        // Every pool a user can ask the CLI for must pass its own gate.
+        paper_testbed().validate().unwrap();
+        for n in 1..=8 {
+            for include_cpu in [true, false] {
+                simulated_types(n, include_cpu)
+                    .validate()
+                    .unwrap_or_else(|e| panic!("simulated_types({n}, {include_cpu}): {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_pool_is_rejected_with_an_actionable_error() {
+        let err = ResourcePool { types: Vec::new() }.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("empty resource pool"));
+    }
+
+    #[test]
+    fn prop_validate_rejects_zeroed_rates_naming_field_and_type() {
+        // Zeroing any rate/price/latency/limit field of any type in any
+        // shipped pool must fail validation with an error that names both
+        // the offending type and the offending field — an operator
+        // pasting a catalog typo needs to know what to fix.
+        crate::util::propcheck::check_result(
+            0x9001,
+            192,
+            |rng| {
+                let n = crate::util::propcheck::gen::usize_in(rng, 1, 9);
+                let include_cpu = rng.chance(0.5);
+                let victim = crate::util::propcheck::gen::usize_in(rng, 0, n);
+                let field = crate::util::propcheck::gen::usize_in(rng, 0, 6);
+                // Exercise both the zero and the non-finite rejection arm.
+                let poison = if rng.chance(0.5) { 0.0 } else { f64::INFINITY };
+                (n, include_cpu, victim, field, poison)
+            },
+            |&(n, include_cpu, victim, field, poison)| {
+                let mut pool = simulated_types(n, include_cpu);
+                let t = &mut pool.types[victim];
+                let name = t.name.clone();
+                let keyword = match field {
+                    0 => {
+                        t.price_per_hour = poison;
+                        "price"
+                    }
+                    1 => {
+                        t.flops_per_sec = poison;
+                        "flops"
+                    }
+                    2 => {
+                        t.io_bytes_per_sec = poison;
+                        "io_bytes_per_sec"
+                    }
+                    3 => {
+                        t.net_bytes_per_sec = poison;
+                        "net_bytes_per_sec"
+                    }
+                    4 => {
+                        t.net_latency_secs = poison;
+                        "net latency"
+                    }
+                    _ => {
+                        t.max_units = 0;
+                        "max_units"
+                    }
+                };
+                match pool.validate() {
+                    Ok(()) => Err(format!("poisoned {keyword} of {name} was accepted")),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        if !msg.contains(keyword) {
+                            return Err(format!("error does not name `{keyword}`: {msg}"));
+                        }
+                        if !msg.contains(&name) {
+                            return Err(format!("error does not name type `{name}`: {msg}"));
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
     }
 
     #[test]

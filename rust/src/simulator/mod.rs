@@ -138,8 +138,15 @@ pub fn simulate(
 }
 
 /// Convenience: schedule-plan in, measured eval out (provisioning via the
-/// §5.1 provisioner, measurement via the simulator).
+/// §5.1 provisioner, measurement via the simulator). `None` when the plan
+/// cannot be provisioned on this pool: it references a resource type the
+/// pool does not have (which would otherwise panic the profile-cache
+/// lookup), or no replica assignment within the Eq 10 limits reaches the
+/// Eq 13 floor.
 pub fn simulate_plan(cm: &CostModel, plan: &SchedulingPlan, cfg: &SimConfig, seed: u64) -> Option<SimResult> {
+    if plan.assignment.iter().any(|&t| t >= cm.pool.num_types()) {
+        return None;
+    }
     let (_stages, prov) = crate::provision::provision(cm, plan)?;
     Some(simulate(cm, plan, &prov, cfg, seed))
 }
@@ -222,6 +229,34 @@ mod tests {
         let a = simulate_plan(&cm, &plan, &SimConfig::default(), 1).unwrap();
         let b = simulate_plan(&cm, &plan, &SimConfig::default(), 2).unwrap();
         assert_ne!(a.throughput.to_bits(), b.throughput.to_bits());
+    }
+
+    #[test]
+    fn simulate_plan_is_none_for_types_absent_from_the_pool() {
+        // A stale plan can outlive a pool change (the elastic loop hands
+        // sessions plans from before a reconfiguration); referencing a
+        // type the pool no longer has must read as "unprovisionable",
+        // not panic.
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = SchedulingPlan::uniform(m.num_layers(), p.num_types());
+        assert!(simulate_plan(&cm, &plan, &SimConfig::default(), 1).is_none());
+        let mut mixed = split_plan();
+        *mixed.assignment.last_mut().unwrap() = 7;
+        assert!(simulate_plan(&cm, &mixed, &SimConfig::default(), 1).is_none());
+    }
+
+    #[test]
+    fn simulate_plan_is_none_when_no_replica_count_meets_the_floor() {
+        // Eq 10: the pool limits cap every stage's replicas; a floor no
+        // assignment can reach makes the plan unprovisionable.
+        let (m, p) = fixture();
+        let cfg = CostConfig { throughput_limit: 1e12, ..Default::default() };
+        let cm = CostModel::new(&m, &p, cfg);
+        assert!(simulate_plan(&cm, &split_plan(), &SimConfig::default(), 1).is_none());
+        // The same plan at the default floor provisions fine.
+        let cm_ok = CostModel::new(&m, &p, CostConfig::default());
+        assert!(simulate_plan(&cm_ok, &split_plan(), &SimConfig::default(), 1).is_some());
     }
 
     #[test]

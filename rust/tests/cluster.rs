@@ -1,0 +1,234 @@
+//! Integration tests for the multi-tenant cluster scheduler: the
+//! determinism contract, sub-pool conservation, the no-stranded-replica
+//! invariant under preemption, and policy equivalence on a lone job.
+
+use heterps::cluster::{
+    self, mix_by_name, policy_by_name, tight_mix, tight_pool, uniform_mix, ClusterConfig,
+    ClusterReport, EventKind,
+};
+use heterps::resources::{paper_testbed, simulated_types, ResourcePool};
+use heterps::sched::SchedulerSpec;
+
+fn cfg(spec: &str, budget: usize) -> ClusterConfig {
+    ClusterConfig {
+        spec: SchedulerSpec::parse(spec).unwrap(),
+        admit_budget_evals: budget,
+        ..Default::default()
+    }
+}
+
+/// Bit-level equality of everything numeric a report carries.
+fn assert_reports_bit_identical(a: &ClusterReport, b: &ClusterReport, ctx: &str) {
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{ctx}: job count");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        let id = x.id;
+        assert_eq!(
+            x.completion_secs.map(f64::to_bits),
+            y.completion_secs.map(f64::to_bits),
+            "{ctx}: completion of job {id}"
+        );
+        assert_eq!(
+            x.first_start_secs.map(f64::to_bits),
+            y.first_start_secs.map(f64::to_bits),
+            "{ctx}: start of job {id}"
+        );
+        assert_eq!(
+            x.queueing_delay_secs.to_bits(),
+            y.queueing_delay_secs.to_bits(),
+            "{ctx}: queueing of job {id}"
+        );
+        assert_eq!(
+            x.sla_violation_secs.to_bits(),
+            y.sla_violation_secs.to_bits(),
+            "{ctx}: violation of job {id}"
+        );
+        assert_eq!(x.cost_usd.to_bits(), y.cost_usd.to_bits(), "{ctx}: cost of job {id}");
+        assert_eq!(
+            (x.rejected, x.preemptions, x.admissions, x.evaluations),
+            (y.rejected, y.preemptions, y.admissions, y.evaluations),
+            "{ctx}: counters of job {id}"
+        );
+    }
+    assert_eq!(a.makespan_secs.to_bits(), b.makespan_secs.to_bits(), "{ctx}: makespan");
+    assert_eq!(
+        a.cumulative_cost_usd.to_bits(),
+        b.cumulative_cost_usd.to_bits(),
+        "{ctx}: cluster cost"
+    );
+    assert_eq!(a.total_evaluations, b.total_evaluations, "{ctx}: evaluations");
+    assert_eq!(a.peak_units, b.peak_units, "{ctx}: peak units");
+    assert_eq!(a.util_deciles, b.util_deciles, "{ctx}: utilization histogram");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{ctx}: timeline length");
+    for (x, y) in a.timeline.iter().zip(&b.timeline) {
+        assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits(), "{ctx}: event time");
+        assert_eq!((x.job_id, x.kind), (y.job_id, y.kind), "{ctx}: event identity");
+        assert_eq!(x.units, y.units, "{ctx}: event units");
+    }
+}
+
+#[test]
+fn cluster_runs_are_bit_deterministic_per_config_and_seed() {
+    // The CLI contract: a 6-job mix under every policy replays
+    // bit-identically for the same (pool, mix, config, seed) — including
+    // the stochastic per-job searches and the straggler measurements.
+    let pool = simulated_types(2, true);
+    // One deterministic and one stochastic per-job method: seed-stream
+    // bugs in a sampler (ignoring the per-(job, attempt) seed, global
+    // RNG state) would only show up under the stochastic one.
+    for (mix, seed, method) in [
+        ("uniform", 42u64, "greedy"),
+        ("uniform", 42u64, "rl-tabular:rounds=10"),
+        ("tight", 7u64, "greedy"),
+    ] {
+        let pool = if mix == "tight" { tight_pool() } else { pool.clone() };
+        let queue = mix_by_name(mix, 6, seed, 20_000.0).unwrap();
+        let c = cfg(method, 64);
+        for name in cluster::policy_names() {
+            let p1 = policy_by_name(name, &pool).unwrap();
+            let a = cluster::run_cluster(&pool, &queue, p1.as_ref(), &c, seed).unwrap();
+            let p2 = policy_by_name(name, &pool).unwrap();
+            let b = cluster::run_cluster(&pool, &queue, p2.as_ref(), &c, seed).unwrap();
+            assert_reports_bit_identical(&a, &b, &format!("{mix}/{method}/{name}"));
+        }
+    }
+}
+
+#[test]
+fn distinct_seeds_perturb_the_outcome() {
+    let pool = simulated_types(2, true);
+    let c = cfg("greedy", 64);
+    let policy = policy_by_name("drf-cost", &pool).unwrap();
+    let qa = uniform_mix(5, 1, 20_000.0);
+    let qb = uniform_mix(5, 2, 20_000.0);
+    let a = cluster::run_cluster(&pool, &qa, policy.as_ref(), &c, 1).unwrap();
+    let b = cluster::run_cluster(&pool, &qb, policy.as_ref(), &c, 2).unwrap();
+    assert_ne!(a.makespan_secs.to_bits(), b.makespan_secs.to_bits());
+}
+
+/// Replay a report's unit ledger: every `Admit` acquires its whole
+/// sub-pool (a job can hold at most one), every `Preempt`/`Complete`
+/// releases exactly what the job held, and the running total never
+/// exceeds the parent pool's per-type limits.
+fn check_ledger(report: &ClusterReport, pool: &ResourcePool, ctx: &str) {
+    let nt = pool.num_types();
+    let mut held: Vec<Option<Vec<usize>>> = vec![None; report.jobs.len()];
+    let mut total = vec![0usize; nt];
+    for ev in &report.timeline {
+        match ev.kind {
+            EventKind::Arrive | EventKind::Reject => {
+                assert!(ev.units.is_empty(), "{ctx}: {:?} carries units", ev.kind);
+            }
+            EventKind::Admit => {
+                assert!(
+                    held[ev.job_id].is_none(),
+                    "{ctx}: job {} admitted while already holding a sub-pool",
+                    ev.job_id
+                );
+                assert_eq!(ev.units.len(), nt, "{ctx}: unit arity");
+                for (t, &u) in ev.units.iter().enumerate() {
+                    total[t] += u;
+                    assert!(
+                        total[t] <= pool.get(t).max_units,
+                        "{ctx}: type {t} holds {} units over limit {} after admitting job {}",
+                        total[t],
+                        pool.get(t).max_units,
+                        ev.job_id
+                    );
+                }
+                held[ev.job_id] = Some(ev.units.clone());
+            }
+            EventKind::Preempt | EventKind::Complete => {
+                let h = held[ev.job_id].take().unwrap_or_else(|| {
+                    panic!("{ctx}: job {} released units it never held", ev.job_id)
+                });
+                assert_eq!(
+                    h, ev.units,
+                    "{ctx}: job {} released a sub-pool it did not acquire (stranded replicas)",
+                    ev.job_id
+                );
+                for (t, &u) in ev.units.iter().enumerate() {
+                    total[t] -= u;
+                }
+            }
+        }
+    }
+    for (jid, h) in held.iter().enumerate() {
+        assert!(h.is_none(), "{ctx}: job {jid} still holds a sub-pool at the end of the run");
+    }
+    assert!(total.iter().all(|&u| u == 0), "{ctx}: units leaked");
+    for (t, &peak) in report.peak_units.iter().enumerate() {
+        assert!(peak <= pool.get(t).max_units, "{ctx}: reported peak over limit for type {t}");
+    }
+}
+
+#[test]
+fn conservation_and_no_stranded_replicas_under_preemption() {
+    // The tight mix under srtf is the preemption-heavy path: the heavy
+    // job preempts medium, and the shorts can preempt heavy in turn. The
+    // ledger must balance exactly through every handoff.
+    let pool = tight_pool();
+    let queue = tight_mix(6, 42, 20_000.0);
+    let c = cfg("greedy", 64);
+    let srtf = policy_by_name("srtf", &pool).unwrap();
+    let report = cluster::run_cluster(&pool, &queue, srtf.as_ref(), &c, 42).unwrap();
+    assert!(
+        report.timeline.iter().any(|e| e.kind == EventKind::Preempt),
+        "the tight mix must actually exercise preemption under srtf"
+    );
+    check_ledger(&report, &pool, "tight/srtf");
+    // Preempted jobs still finish.
+    assert_eq!(report.completed(), queue.len());
+
+    // The non-preemptive policies must balance too.
+    for name in ["fifo", "drf-cost"] {
+        let p = policy_by_name(name, &pool).unwrap();
+        let r = cluster::run_cluster(&pool, &queue, p.as_ref(), &c, 42).unwrap();
+        check_ledger(&r, &pool, &format!("tight/{name}"));
+    }
+    // And on the heterogeneous pool with the generic mix.
+    let pool = simulated_types(2, true);
+    let queue = uniform_mix(6, 11, 20_000.0);
+    for name in cluster::policy_names() {
+        let p = policy_by_name(name, &pool).unwrap();
+        let r = cluster::run_cluster(&pool, &queue, p.as_ref(), &c, 11).unwrap();
+        check_ledger(&r, &pool, &format!("uniform/{name}"));
+    }
+}
+
+#[test]
+fn fifo_equals_srtf_on_a_single_job() {
+    // With one tenant there is nothing to order or preempt: the two
+    // policies must produce bit-identical runs, not merely similar ones.
+    let pool = paper_testbed();
+    let queue = uniform_mix(1, 9, 20_000.0);
+    let c = cfg("greedy", 64);
+    let fifo = policy_by_name("fifo", &pool).unwrap();
+    let srtf = policy_by_name("srtf", &pool).unwrap();
+    let a = cluster::run_cluster(&pool, &queue, fifo.as_ref(), &c, 9).unwrap();
+    let b = cluster::run_cluster(&pool, &queue, srtf.as_ref(), &c, 9).unwrap();
+    assert_reports_bit_identical(&a, &b, "single-job fifo vs srtf");
+    assert_eq!(a.policy, "fifo");
+    assert_eq!(b.policy, "srtf");
+}
+
+#[test]
+fn tight_mix_separates_the_policies() {
+    // The fig15 acceptance shape, exercised at test speed: srtf and
+    // drf-cost each strictly beat fifo on mean JCT for the bundled
+    // contention mix (head-of-line blocking is FIFO's whole cost).
+    let pool = tight_pool();
+    let queue = tight_mix(6, 42, 20_000.0);
+    let c = cfg("greedy", 64);
+    let reports = cluster::run_all_policies(&pool, &queue, &c, 42).unwrap();
+    let by_name = |n: &str| reports.iter().find(|r| r.policy == n).unwrap();
+    let fifo = by_name("fifo");
+    for challenger in ["srtf", "drf-cost"] {
+        let r = by_name(challenger);
+        assert!(
+            r.mean_jct_secs() < fifo.mean_jct_secs(),
+            "{challenger} mean JCT {:.0} s !< fifo {:.0} s",
+            r.mean_jct_secs(),
+            fifo.mean_jct_secs()
+        );
+    }
+}

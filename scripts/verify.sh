@@ -13,7 +13,12 @@
 #    staleness {0,2} (staleness 0 self-verifies bit-equality with the
 #    synchronous reference and exits non-zero on divergence), plus one
 #    disk-tiered-backend run;
-# 5. `cargo clippy --all-targets -- -D warnings` when the clippy
+# 5. a `heterps cluster` smoke: a small job mix through every allocation
+#    policy, run twice per policy with the same seed and diffed — any
+#    nondeterminism in the multi-tenant scheduler fails the gate;
+# 6. `cargo fmt --check` when rustfmt is installed (skipped with a loud
+#    warning otherwise);
+# 7. `cargo clippy --all-targets -- -D warnings` when the clippy
 #    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
@@ -74,6 +79,31 @@ done
 echo "   -- tiered backend, staleness 0"
 "$BIN" comm --workers 3 --steps 6 --rows 16 --slots 4 --dim 8 \
   --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 0 --tiered >/dev/null
+
+echo "== cluster smoke: 4-job mix, every policy, bit-determinism across reruns"
+CLUSTER_TMP="$(mktemp -d)"
+trap 'rm -rf "$CLUSTER_TMP"' EXIT
+for policy in fifo srtf drf-cost; do
+  echo "   -- policy $policy"
+  "$BIN" cluster --jobs 4 --mix uniform --policy "$policy" --method greedy \
+    --budget-evals 48 --arrival-seed 7 > "$CLUSTER_TMP/$policy.a.txt"
+  "$BIN" cluster --jobs 4 --mix uniform --policy "$policy" --method greedy \
+    --budget-evals 48 --arrival-seed 7 > "$CLUSTER_TMP/$policy.b.txt"
+  if ! diff -u "$CLUSTER_TMP/$policy.a.txt" "$CLUSTER_TMP/$policy.b.txt"; then
+    echo "error: cluster run under policy $policy is not deterministic for a fixed seed" >&2
+    exit 1
+  fi
+done
+echo "   -- tight mix, all policies (contention + preemption path)"
+"$BIN" cluster --jobs 5 --mix tight --tight-pool --policy all --method greedy \
+  --budget-evals 48 --arrival-seed 42 >/dev/null
+
+echo "== fmt gate: cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "warn: rustfmt component not installed — fmt gate SKIPPED" >&2
+fi
 
 echo "== clippy gate: cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
