@@ -1,11 +1,14 @@
 //! §Perf micro-benchmarks: the hot paths the optimization pass tracks.
 //!
 //! * cost-model evaluation (the inner loop of every scheduler)
+//! * the eval engine: batched parallel evaluation (1/2/4/8 threads),
+//!   cache-hit lookup, 50%-hit replay, incremental-vs-full evaluation
 //! * provisioning (Newton search per plan)
 //! * policy forward/step through PJRT (RL round latency)
 //! * PS pull/push, ring-allreduce, compression (training-path primitives)
 //!
-//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf; alongside
+//! the table, the run emits a machine-readable `results/BENCH_perf.json`.
 
 mod common;
 
@@ -17,6 +20,7 @@ use heterps::plan::SchedulingPlan;
 use heterps::resources::simulated_types;
 use heterps::runtime::artifacts_dir;
 use heterps::sched::rl::policy::{featurize, Policy, Sample};
+use heterps::sched::EvalEngine;
 use heterps::train::allreduce::ring_allreduce;
 use heterps::train::ParamServer;
 use heterps::util::rng::Rng;
@@ -26,8 +30,10 @@ fn main() {
         "§Perf hot paths",
         &["op", "mean", "std", "unit"],
     );
+    let mut rows_json: Vec<(String, f64, f64, String)> = Vec::new();
     let mut row = |name: &str, mean: f64, std: f64, unit: &str| {
         table.row(&[name.to_string(), format!("{mean:.3}"), format!("{std:.3}"), unit.to_string()]);
+        rows_json.push((name.to_string(), mean, std, unit.to_string()));
     };
 
     // Cost-model evaluation.
@@ -54,6 +60,99 @@ fn main() {
         }
     });
     row("cost_model.stage_profiles", m * 1e6, s * 1e6, "us");
+
+    // Eval engine: batched parallel evaluation, 64-plan batches. The
+    // engine commits results in submission order, so the only thing the
+    // thread count changes is wall-clock — exactly what this measures.
+    let mut serial_batch = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let engine = EvalEngine::new(&cm).with_threads(threads);
+        let (m, s) = common::time_it(3, 60, || {
+            std::hint::black_box(engine.compute_batch(&plans).len());
+        });
+        if threads == 1 {
+            serial_batch = m;
+        }
+        row(
+            &format!(
+                "eval_engine.batch64 threads={threads} ({:.2}x vs serial)",
+                serial_batch / m
+            ),
+            m * 1e6 / plans.len() as f64,
+            s * 1e6 / plans.len() as f64,
+            "us/plan",
+        );
+    }
+
+    // Cache-hit lookup: the memoized fast path of revisited plans.
+    let engine = EvalEngine::new(&cm);
+    std::hint::black_box(engine.evaluate(&plans[0]).cost_usd); // prime
+    let (m, s) = common::time_it(50, 5000, || {
+        std::hint::black_box(engine.evaluate(&plans[0]).cost_usd);
+    });
+    row("eval_engine.cache_hit lookup", m * 1e9, s * 1e9, "ns");
+
+    // 50%-cache-hit replay: a 128-plan stream in which every plan occurs
+    // twice (the genetic-elite / warm-start revisit shape), against the
+    // same stream evaluated with no cache reuse.
+    let stream: Vec<&SchedulingPlan> =
+        plans.iter().chain(plans.iter()).collect();
+    let (m_cold, _) = common::time_it(2, 20, || {
+        // `compute` bypasses the eval cache: all 128 are full evaluations.
+        let engine = EvalEngine::new(&cm);
+        for p in &plans {
+            std::hint::black_box(engine.compute(p).cost_usd);
+        }
+        for p in &plans {
+            std::hint::black_box(engine.compute(p).cost_usd);
+        }
+    });
+    let (m_hit, s_hit) = common::time_it(2, 20, || {
+        let engine = EvalEngine::new(&cm);
+        for p in &stream {
+            std::hint::black_box(engine.evaluate(p).cost_usd);
+        }
+    });
+    row(
+        &format!("eval_engine.replay128 50% hits ({:.2}x vs uncached)", m_cold / m_hit),
+        m_hit * 1e3,
+        s_hit * 1e3,
+        "ms",
+    );
+
+    // Incremental delta-evaluation: re-profile only the 1-2 stages a
+    // single-gene mutation touches, vs the full evaluator.
+    let base = &plans[0];
+    let base_stages = base.stages();
+    let base_profs = cm.stage_profiles(&base_stages);
+    let mut rng_mut = Rng::new(9);
+    let mutants: Vec<SchedulingPlan> = (0..64)
+        .map(|_| {
+            let mut a = base.assignment.clone();
+            let pos = rng_mut.below(a.len());
+            a[pos] = rng_mut.below(4);
+            SchedulingPlan::new(a)
+        })
+        .collect();
+    let mut i = 0;
+    let (m_full, _) = common::time_it(10, 500, || {
+        std::hint::black_box(cm.evaluate(&mutants[i % mutants.len()]).cost_usd);
+        i += 1;
+    });
+    let mut i = 0;
+    let (m_delta, s_delta) = common::time_it(10, 500, || {
+        let mutant = &mutants[i % mutants.len()];
+        std::hint::black_box(
+            cm.evaluate_delta(mutant, &base_stages, &base_profs).cost_usd,
+        );
+        i += 1;
+    });
+    row(
+        &format!("eval_engine.delta_eval ({:.2}x vs full)", m_full / m_delta),
+        m_delta * 1e6,
+        s_delta * 1e6,
+        "us",
+    );
 
     // PS pull/push (26 slots x 256 rows, dim 64).
     let ps = ParamServer::new(64, 32, 0.1, 3);
@@ -113,4 +212,24 @@ fn main() {
     }
 
     table.emit("perf_hotpath");
+
+    // Machine-readable artifact for EXPERIMENTS.md §Perf tracking.
+    let json = {
+        let mut out = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"rows\": [\n");
+        for (i, (name, mean, std, unit)) in rows_json.iter().enumerate() {
+            let esc = name.replace('\\', "\\\\").replace('"', "\\\"");
+            out.push_str(&format!(
+                "    {{\"op\": \"{esc}\", \"mean\": {mean:.6}, \"std\": {std:.6}, \"unit\": \"{unit}\"}}{}\n",
+                if i + 1 < rows_json.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    };
+    if std::fs::create_dir_all("results").is_ok() {
+        match std::fs::write("results/BENCH_perf.json", &json) {
+            Ok(()) => println!("[results] wrote results/BENCH_perf.json"),
+            Err(e) => eprintln!("warn: could not write results/BENCH_perf.json: {e}"),
+        }
+    }
 }

@@ -50,15 +50,19 @@ pub struct Waiting {
     /// Admission sessions spent on this job so far (seed derivation —
     /// retries must not replay the same stochastic search).
     pub attempts: u64,
-    /// Admission failures against the current residual:
-    /// `(residual-unit vector, consecutive failures on it)`. The
-    /// simulator allows one fresh-seeded retry per bit-identical
-    /// residual (a stochastic method may find a placement the previous
-    /// attempt missed) and then stops re-searching it — the
-    /// deterministic warm starts that usually decide feasibility cannot
-    /// change, so further sessions just burn evaluations. Any release of
-    /// units changes the vector and re-arms the attempt.
-    pub failed_attempts: Option<(Vec<usize>, u32)>,
+    /// Admission failures against the current residual: `(eval-engine
+    /// context fingerprint of (job model, residual pool, floor),
+    /// consecutive failures on it)` — see
+    /// [`crate::sched::context_fingerprint`]. The simulator allows one
+    /// fresh-seeded retry per bit-identical residual (a stochastic method
+    /// may find a placement the previous attempt missed) and then stops
+    /// re-searching it — the deterministic warm starts that usually
+    /// decide feasibility cannot change, so further sessions just burn
+    /// evaluations. Any release of units changes the fingerprint and
+    /// re-arms the attempt. The fingerprint is exactly the key under
+    /// which the run-wide eval cache files this residual's evaluations,
+    /// replacing the old bespoke residual-vector equality lookup.
+    pub failed_attempts: Option<(u64, u32)>,
 }
 
 impl Waiting {

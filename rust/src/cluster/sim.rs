@@ -37,7 +37,9 @@ use crate::cost::{CostConfig, CostModel};
 use crate::metrics::Histogram;
 use crate::plan::{canonical_split_plan, SchedulingPlan};
 use crate::resources::ResourcePool;
-use crate::sched::{self, Budget, ScheduleOutcome, SchedulerSpec};
+use crate::sched::{
+    self, context_fingerprint, Budget, EvalCache, EvalEngine, ScheduleOutcome, SchedulerSpec,
+};
 use crate::simulator::{simulate, SimConfig};
 
 /// Cluster-level knobs.
@@ -48,6 +50,10 @@ pub struct ClusterConfig {
     /// Evaluation cap per admission session (gang admission must stay
     /// cheap: the queue is re-examined on every arrival/completion).
     pub admit_budget_evals: usize,
+    /// Worker threads for batched plan evaluation inside admission
+    /// sessions (`--eval-threads`; 1 = serial). Reports are bit-identical
+    /// at any setting.
+    pub eval_threads: usize,
     /// Base cost-model parameters; `throughput_limit` is overridden per
     /// job from its SLA floor.
     pub cost: CostConfig,
@@ -60,6 +66,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             spec: SchedulerSpec::parse("greedy").expect("greedy is registered"),
             admit_budget_evals: 96,
+            eval_threads: 1,
             cost: CostConfig::default(),
             sim: SimConfig::default(),
         }
@@ -72,6 +79,7 @@ impl ClusterConfig {
             self.admit_budget_evals >= 1,
             "admit_budget_evals must be at least 1 — a zero budget could never admit a job"
         );
+        anyhow::ensure!(self.eval_threads >= 1, "eval_threads must be at least 1");
         Ok(())
     }
 }
@@ -119,9 +127,14 @@ pub struct JobRecord {
     pub sla_violation_secs: f64,
     pub preemptions: usize,
     pub admissions: usize,
-    /// Cost-model evaluations spent scheduling this job (profile plus
-    /// every admission attempt).
+    /// Cost-model evaluations actually computed scheduling this job
+    /// (profile plus every admission attempt) — the eval engine's
+    /// *charged* counter.
     pub evaluations: usize,
+    /// Evaluations served from the run-wide eval-engine cache while
+    /// scheduling this job (admission retries on identical residuals and
+    /// repeated warm starts land here) — the engine's *cached* counter.
+    pub cached_evals: usize,
     /// Dollars for the units this job actually held, integrated over its
     /// running time (Eq 7).
     pub cost_usd: f64,
@@ -180,7 +193,10 @@ pub struct ClusterReport {
     pub makespan_secs: f64,
     /// Dollars for all held sub-pools, integrated over the run (Eq 7).
     pub cumulative_cost_usd: f64,
+    /// Engine-charged evaluations across every job (Σ `evaluations`).
     pub total_evaluations: usize,
+    /// Engine cache hits across every job (Σ `cached_evals`).
+    pub total_cached: usize,
     /// Max units of each type simultaneously held (conservation: never
     /// above the parent pool's limits).
     pub peak_units: Vec<usize>,
@@ -230,7 +246,7 @@ impl ClusterReport {
     }
 
     /// Column headers matching [`ClusterReport::summary_row`].
-    pub const SUMMARY_COLUMNS: [&'static str; 9] = [
+    pub const SUMMARY_COLUMNS: [&'static str; 10] = [
         "policy",
         "mean JCT (s)",
         "mean queue (s)",
@@ -238,6 +254,7 @@ impl ClusterReport {
         "makespan (s)",
         "cluster $",
         "evals",
+        "cached",
         "rejected",
         "util deciles",
     ];
@@ -251,6 +268,7 @@ impl ClusterReport {
             format!("{:.0}", self.makespan_secs),
             format!("{:.2}", self.cumulative_cost_usd),
             self.total_evaluations.to_string(),
+            self.total_cached.to_string(),
             self.rejected.to_string(),
             self.util_render.clone(),
         ]
@@ -327,6 +345,11 @@ struct Sim<'a> {
     policy: &'a dyn ClusterPolicy,
     cfg: &'a ClusterConfig,
     seed: u64,
+    /// One eval-engine cache for the whole run: admission searches on a
+    /// bit-identical `(job, residual, floor)` context share evaluations
+    /// (the context fingerprint keys the cache), so retries and
+    /// re-admissions after a release are largely served from memory.
+    eval_cache: EvalCache,
     heap: BinaryHeap<Event>,
     next_seq: u64,
     clock: f64,
@@ -372,6 +395,7 @@ impl<'a> Sim<'a> {
                 preemptions: 0,
                 admissions: 0,
                 evaluations: 0,
+                cached_evals: 0,
                 cost_usd: 0.0,
             })
             .collect();
@@ -386,6 +410,7 @@ impl<'a> Sim<'a> {
             policy,
             cfg,
             seed,
+            eval_cache: EvalCache::new(),
             heap: BinaryHeap::new(),
             next_seq: 0,
             clock: 0.0,
@@ -468,18 +493,23 @@ impl<'a> Sim<'a> {
     }
 
     /// Run one budgeted, warm-started session for `job` on `search_pool`
-    /// and return the outcome plus the evaluations it consumed.
+    /// and return the outcome plus the `(charged, cached)` evaluation
+    /// counts the engine reports for it.
     fn admit_session(
         &self,
         job_idx_in_waiting: Option<usize>,
         job: &crate::cluster::job::Job,
         search_pool: &ResourcePool,
         attempt: u64,
-    ) -> (Option<ScheduleOutcome>, usize) {
+    ) -> (Option<ScheduleOutcome>, usize, usize) {
         let cm =
             CostModel::new(&job.model, search_pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
         let scheduler = self.cfg.spec.build(mix_seed(self.seed, job.id as u64, attempt));
-        let mut session = scheduler.session(&cm, Budget::evals(self.cfg.admit_budget_evals));
+        let engine = EvalEngine::new(&cm)
+            .with_threads(self.cfg.eval_threads)
+            .with_cache(self.eval_cache.clone());
+        let mut session =
+            scheduler.session_engine(engine, Budget::evals(self.cfg.admit_budget_evals));
         if let Some(widx) = job_idx_in_waiting {
             let w = &self.waiting[widx];
             if let Some(last) = &w.last_plan {
@@ -497,10 +527,10 @@ impl<'a> Sim<'a> {
         }
         match sched::drive(session.as_mut(), None) {
             Ok(out) => {
-                let evals = out.evaluations;
-                (Some(out), evals)
+                let (charged, cached) = (out.evaluations, out.cache_hits);
+                (Some(out), charged, cached)
             }
-            Err(_) => (None, 0),
+            Err(_) => (None, 0, 0),
         }
     }
 
@@ -516,8 +546,9 @@ impl<'a> Sim<'a> {
             kind: EventKind::Arrive,
             units: Vec::new(),
         });
-        let (outcome, spent) = self.admit_session(None, &job, self.pool, 0);
-        self.records[jid].evaluations += spent;
+        let (outcome, charged, cached) = self.admit_session(None, &job, self.pool, 0);
+        self.records[jid].evaluations += charged;
+        self.records[jid].cached_evals += cached;
         let feasible = outcome.as_ref().map(|o| o.eval.feasible).unwrap_or(false);
         let Some(out) = outcome.filter(|_| feasible) else {
             self.records[jid].rejected = true;
@@ -587,28 +618,34 @@ impl<'a> Sim<'a> {
     /// running set with its whole sub-pool acquired atomically.
     fn try_admit(&mut self, widx: usize, now: f64) -> anyhow::Result<bool> {
         let avail = self.residual_units();
-        // Futility damper: after two failures against a bit-identical
-        // residual (the second with a fresh search seed, for stochastic
-        // methods), re-running the session would burn the same
-        // evaluations on the same failure. A release re-arms.
+        let residual = self.residual_pool(&avail);
+        let job = self.waiting[widx].job.clone();
+        // Futility damper, keyed by the eval engine's context fingerprint
+        // of (job model, residual pool, floor) — the same key the
+        // run-wide cache files this search's evaluations under. After two
+        // failures on one fingerprint (the second with a fresh search
+        // seed, for stochastic methods), re-running the session would
+        // burn the same evaluations on the same failure. A release
+        // changes the residual, hence the fingerprint, and re-arms.
+        let job_cfg = job_cost_cfg(&self.cfg.cost, job.sla_floor);
+        let residual_fp = context_fingerprint(&job.model, &residual, &job_cfg);
         if matches!(
             &self.waiting[widx].failed_attempts,
-            Some((r, n)) if *n >= 2 && r.as_slice() == avail.as_slice()
+            Some((fp, n)) if *n >= 2 && *fp == residual_fp
         ) {
             return Ok(false);
         }
-        let residual = self.residual_pool(&avail);
-        let jid = self.waiting[widx].job.id;
+        let jid = job.id;
         let attempt = self.waiting[widx].attempts;
         self.waiting[widx].attempts += 1;
-        let job = self.waiting[widx].job.clone();
-        let (outcome, spent) = self.admit_session(Some(widx), &job, &residual, attempt);
-        self.records[jid].evaluations += spent;
+        let (outcome, charged, cached) = self.admit_session(Some(widx), &job, &residual, attempt);
+        self.records[jid].evaluations += charged;
+        self.records[jid].cached_evals += cached;
         let Some(out) = outcome.filter(|o| o.eval.feasible) else {
             let w = &mut self.waiting[widx];
             w.failed_attempts = match w.failed_attempts.take() {
-                Some((r, n)) if r == avail => Some((r, n + 1)),
-                _ => Some((avail, 1)),
+                Some((fp, n)) if fp == residual_fp => Some((fp, n + 1)),
+                _ => Some((residual_fp, 1)),
             };
             return Ok(false);
         };
@@ -800,6 +837,7 @@ impl<'a> Sim<'a> {
 
     fn into_report(self, policy: &str) -> ClusterReport {
         let total_evaluations = self.records.iter().map(|r| r.evaluations).sum();
+        let total_cached = self.records.iter().map(|r| r.cached_evals).sum();
         let mean_util =
             if self.total_time > 0.0 { self.util_time / self.total_time } else { 0.0 };
         ClusterReport {
@@ -812,6 +850,7 @@ impl<'a> Sim<'a> {
             makespan_secs: self.last_completion,
             cumulative_cost_usd: self.cumulative_cost_usd,
             total_evaluations,
+            total_cached,
             peak_units: self.peak_units,
             util_deciles: self.util_hist.snapshot(),
             util_render: self.util_hist.render(),
@@ -1039,6 +1078,30 @@ mod tests {
         assert_eq!(r.completed(), 2);
         // Heavy finishes before medium despite arriving later.
         assert!(r.jobs[1].completion_secs.unwrap() < r.jobs[0].completion_secs.unwrap());
+    }
+
+    #[test]
+    fn cluster_report_is_bit_identical_across_eval_thread_counts() {
+        let pool = paper_testbed();
+        let queue = uniform_mix(3, 13, 20_000.0);
+        let policy = policy_by_name("srtf", &pool).unwrap();
+        let run = |threads: usize| {
+            let cfg = ClusterConfig { eval_threads: threads, ..fast_cfg() };
+            run_cluster(&pool, &queue, policy.as_ref(), &cfg, 13).unwrap()
+        };
+        let a = run(1);
+        let b = run(8);
+        assert_eq!(a.makespan_secs.to_bits(), b.makespan_secs.to_bits());
+        assert_eq!(a.cumulative_cost_usd.to_bits(), b.cumulative_cost_usd.to_bits());
+        assert_eq!(a.total_evaluations, b.total_evaluations);
+        assert_eq!(a.total_cached, b.total_cached);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.completion_secs.map(f64::to_bits), y.completion_secs.map(f64::to_bits));
+            assert_eq!(
+                (x.evaluations, x.cached_evals, x.admissions, x.preemptions),
+                (y.evaluations, y.cached_evals, y.admissions, y.preemptions)
+            );
+        }
     }
 
     #[test]

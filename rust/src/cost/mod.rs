@@ -186,6 +186,67 @@ impl<'a> CostModel<'a> {
         crate::provision::provision_and_price(self, plan)
     }
 
+    /// Profile every stage of a derived stage list (Table 1 quadruples).
+    pub fn stage_profiles(&self, stages: &[StageSpan]) -> Vec<StageProfile> {
+        stages.iter().map(|s| self.stage_profile(s)).collect()
+    }
+
+    /// [`evaluate`] from precomputed stages + profiles. Profiles are pure
+    /// functions of their `(span, type)` — re-deriving them reproduces the
+    /// same bits — so this is bit-identical to [`evaluate`] while skipping
+    /// the profile derivation. The [`crate::sched::eval::EvalEngine`]
+    /// memoizes profiles across plans and feeds them through here (the
+    /// §Perf incremental path); parallel batch evaluation uses it so
+    /// worker threads never touch the shared memo.
+    ///
+    /// `stages` must be `plan.stages()` of the plan being evaluated and
+    /// `profs` its per-stage profiles, in order.
+    ///
+    /// [`evaluate`]: CostModel::evaluate
+    pub fn evaluate_with_profiles(
+        &self,
+        stages: &[StageSpan],
+        profs: &[StageProfile],
+    ) -> PlanEval {
+        crate::provision::provision_and_price_with(self, stages, profs)
+    }
+
+    /// Delta evaluation: score `mutated` reusing the incumbent's profiles
+    /// for every stage whose placement span is unchanged. A genetic
+    /// mutation or an RL per-layer move touches 1–2 stages of ~16; only
+    /// those are re-profiled. Bit-identical to [`evaluate`]`(mutated)`.
+    ///
+    /// `incumbent_stages`/`incumbent_profs` are the incumbent's
+    /// `plan.stages()` and matching [`stage_profiles`] output.
+    ///
+    /// [`evaluate`]: CostModel::evaluate
+    /// [`stage_profiles`]: CostModel::stage_profiles
+    pub fn evaluate_delta(
+        &self,
+        mutated: &SchedulingPlan,
+        incumbent_stages: &[StageSpan],
+        incumbent_profs: &[StageProfile],
+    ) -> PlanEval {
+        let stages = mutated.stages();
+        let profs: Vec<StageProfile> = stages
+            .iter()
+            .map(|s| {
+                incumbent_stages
+                    .iter()
+                    // Same span on the same type — position in the stage
+                    // list (`index`) is irrelevant to the profile.
+                    .position(|p| {
+                        p.type_id == s.type_id
+                            && p.first_layer == s.first_layer
+                            && p.last_layer == s.last_layer
+                    })
+                    .map(|i| incumbent_profs[i])
+                    .unwrap_or_else(|| self.stage_profile(s))
+            })
+            .collect();
+        self.evaluate_with_profiles(&stages, &profs)
+    }
+
     /// Communication time (seconds at `B_o`) from the layer's boundary on a
     /// type — exposed for the policy's feature vector (§5.2 feature 5).
     pub fn layer_comm_feature(&self, layer: usize) -> f64 {

@@ -19,7 +19,7 @@ use crate::cost::{CostConfig, CostModel};
 use crate::model::ModelSpec;
 use crate::plan::{ProvisioningPlan, SchedulingPlan};
 use crate::resources::ResourcePool;
-use crate::sched::{self, Budget, ScheduleOutcome, SchedulerSpec};
+use crate::sched::{self, Budget, EvalCache, EvalEngine, ScheduleOutcome, SchedulerSpec};
 use crate::simulator::{simulate, SimConfig};
 use crate::util::stats::Ema;
 
@@ -75,6 +75,10 @@ pub struct ControllerConfig {
     pub cooldown_ticks: usize,
     /// Evaluation cap per warm-started adaptation session.
     pub adapt_budget_evals: usize,
+    /// Worker threads for batched plan evaluation inside adaptation
+    /// sessions (`--eval-threads`; 1 = serial). Outcomes are bit-identical
+    /// at any setting — only wall-clock latency changes.
+    pub eval_threads: usize,
     /// Scheduling latency charged per cost-model evaluation; while an
     /// adaptation computes, the violating incumbent keeps serving, so this
     /// converts search effort into SLA damage (the Table 2/3 trade-off).
@@ -98,6 +102,7 @@ impl Default for ControllerConfig {
             overprovision_ticks: 3,
             cooldown_ticks: 2,
             adapt_budget_evals: 64,
+            eval_threads: 1,
             secs_per_eval: 0.05,
             sim: SimConfig::default(),
             cost: CostConfig::default(),
@@ -118,9 +123,15 @@ pub struct EpisodeReport {
     pub sla_violation_secs: f64,
     /// Number of completed adaptations.
     pub adaptations: usize,
-    /// Cost-model evaluations spent scheduling (initial placement plus
-    /// every adaptation).
+    /// Cost-model evaluations actually computed while scheduling (initial
+    /// placement plus every adaptation) — the eval engine's *charged*
+    /// counter; cache hits are reported separately.
     pub evaluations: usize,
+    /// Evaluations served from the episode's shared eval-engine cache
+    /// (the warm-start path keeps one cache across ticks, so re-scored
+    /// incumbents and repair candidates land here instead of burning
+    /// budget) — the engine's *cached* counter.
+    pub cached_evaluations: usize,
     /// Dollars paid for the units actually held, integrated over the trace.
     pub cumulative_cost_usd: f64,
     /// What holding the initial plan provisioned for the peak floor would
@@ -142,11 +153,12 @@ impl EpisodeReport {
     /// Column headers matching [`EpisodeReport::table_row`] — shared by
     /// the CLI, the bench and the example so the three renderings cannot
     /// drift apart.
-    pub const TABLE_COLUMNS: [&'static str; 7] = [
+    pub const TABLE_COLUMNS: [&'static str; 8] = [
         "policy",
         "SLA violation (s)",
         "adaptations",
         "evals",
+        "cached",
         "episode cost ($)",
         "static cost ($)",
         "saves vs static",
@@ -173,6 +185,7 @@ impl EpisodeReport {
             format!("{:.0}", self.sla_violation_secs),
             self.adaptations.to_string(),
             self.evaluations.to_string(),
+            self.cached_evaluations.to_string(),
             format!("{:.2}", self.cumulative_cost_usd),
             format!("{:.2}", self.static_cost_usd),
             format!("{:+.1}%", self.savings_vs_static() * 100.0),
@@ -195,20 +208,28 @@ pub fn run_all_policies(
     validate_config(cfg)?;
     // From-scratch and warm-start open with the identical deterministic
     // first-floor cold search — the most expensive step of an episode —
-    // so compute it once and share it. Never sizes for the peak and runs
-    // its own search inside `run_episode_inner`.
+    // so compute it once and share it, together with the engine cache its
+    // evaluations landed in (only the warm-start episode reads that
+    // cache; from-scratch episodes never touch it, so sharing the handle
+    // cannot couple the policies). Never sizes for the peak and runs its
+    // own search inside `run_episode_inner`.
+    let shared_cache = EvalCache::new();
     let shared = {
         let cm0 =
             CostModel::new(model, pool, floor_cfg(cfg, trace.points[0].throughput_floor));
-        let mut scheduler = spec.build(seed);
-        scheduler.schedule(&cm0)
+        let scheduler = spec.build(seed);
+        let engine = EvalEngine::new(&cm0)
+            .with_threads(cfg.eval_threads)
+            .with_cache(shared_cache.clone());
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        sched::drive(session.as_mut(), None)?
     };
     AdaptPolicy::all()
         .iter()
         .map(|&policy| {
             let initial = match policy {
                 AdaptPolicy::Never => None,
-                _ => Some(shared.clone()),
+                _ => Some((shared.clone(), shared_cache.clone())),
             };
             run_episode_inner(model, pool, spec, trace, policy, cfg, seed, initial)
         })
@@ -348,6 +369,7 @@ fn validate_config(cfg: &ControllerConfig) -> anyhow::Result<()> {
         "adapt_budget_evals must be at least 1 — a zero budget would silently turn \
          warm-start into never-adapt"
     );
+    anyhow::ensure!(cfg.eval_threads >= 1, "eval_threads must be at least 1");
     Ok(())
 }
 
@@ -369,8 +391,10 @@ pub fn run_episode(
 }
 
 /// [`run_episode`] with an optionally precomputed opening search outcome
-/// (must come from `spec.build(seed).schedule` on the first-floor cost
-/// model — [`run_all_policies`] shares one across the adapting policies).
+/// and the eval-engine cache its evaluations were committed to (must come
+/// from an unlimited session of `spec.build(seed)` on the first-floor
+/// cost model — [`run_all_policies`] shares one across the adapting
+/// policies).
 #[allow(clippy::too_many_arguments)]
 fn run_episode_inner(
     model: &ModelSpec,
@@ -380,7 +404,7 @@ fn run_episode_inner(
     policy: AdaptPolicy,
     cfg: &ControllerConfig,
     seed: u64,
-    initial: Option<ScheduleOutcome>,
+    initial: Option<(ScheduleOutcome, EvalCache)>,
 ) -> anyhow::Result<EpisodeReport> {
     trace.validate()?;
     validate_config(cfg)?;
@@ -395,12 +419,26 @@ fn run_episode_inner(
         AdaptPolicy::Never => peak_floor,
         _ => first_floor,
     };
-    let out0 = match initial {
-        Some(out) => out,
+    // The warm-start path keeps one eval-engine cache for the whole
+    // episode — including the opening search, so a first adaptation
+    // re-triggered at the opening floor re-reads those evaluations
+    // instead of re-charging them. Floors revisit the same levels across
+    // ticks, and every adaptation re-scores the incumbent and the
+    // canonical repair split; later sessions serve those from the cache
+    // instead of the budget. From-scratch deliberately gets a fresh
+    // engine per adaptation — it models the system with no
+    // cross-adaptation reuse at all.
+    let (out0, episode_cache) = match initial {
+        Some((out, cache)) => (out, cache),
         None => {
+            let cache = EvalCache::new();
             let cm0 = CostModel::new(model, pool, cm_cfg(init_floor));
-            let mut scheduler0 = spec.build(seed);
-            scheduler0.schedule(&cm0)
+            let scheduler0 = spec.build(seed);
+            let engine = EvalEngine::new(&cm0)
+                .with_threads(cfg.eval_threads)
+                .with_cache(cache.clone());
+            let mut session = scheduler0.session_engine(engine, Budget::unlimited());
+            (sched::drive(session.as_mut(), None)?, cache)
         }
     };
     // An infeasible opening search means no plan meets the floor on this
@@ -410,6 +448,7 @@ fn run_episode_inner(
     let mut incumbent = out0.plan;
     let mut prov = out0.eval.provisioning;
     let mut evaluations = out0.evaluations;
+    let mut cached_evaluations = out0.cache_hits;
 
     // Static baseline: the initial plan re-provisioned for the peak and
     // held for the full window (not charged to `evaluations`). A plan
@@ -503,24 +542,33 @@ fn run_episode_inner(
         let scheduler = spec.build(seed.wrapping_add(attempts));
         let mut session = match policy {
             AdaptPolicy::WarmStart => {
-                let mut s = scheduler.session(&cm, Budget::evals(cfg.adapt_budget_evals));
+                let engine = EvalEngine::new(&cm)
+                    .with_threads(cfg.eval_threads)
+                    .with_cache(episode_cache.clone());
+                let mut s =
+                    scheduler.session_engine(engine, Budget::evals(cfg.adapt_budget_evals));
                 s.warm_start(&incumbent);
                 if let Some(repair) = fallback_split_plan(&cm) {
                     s.warm_start(&repair);
                 }
                 s
             }
-            AdaptPolicy::FromScratch => scheduler.session(&cm, Budget::unlimited()),
+            AdaptPolicy::FromScratch => scheduler.session_engine(
+                EvalEngine::new(&cm).with_threads(cfg.eval_threads),
+                Budget::unlimited(),
+            ),
             AdaptPolicy::Never => unreachable!("handled above"),
         };
         match sched::drive(session.as_mut(), None) {
             Ok(out) => {
                 // The incumbent keeps serving while the search runs; if it
-                // was violating, the scheduling latency is SLA damage too.
+                // was violating, the scheduling latency is SLA damage too
+                // (cache hits are near-free and charge no latency).
                 if violating {
                     sla_violation_secs += out.evaluations as f64 * cfg.secs_per_eval;
                 }
                 evaluations += out.evaluations;
+                cached_evaluations += out.cache_hits;
                 let changed = out.plan != incumbent || out.eval.provisioning != prov;
                 if out.eval.feasible && changed {
                     adaptations += 1;
@@ -570,6 +618,7 @@ fn run_episode_inner(
         sla_violation_secs,
         adaptations,
         evaluations,
+        cached_evaluations,
         cumulative_cost_usd,
         static_cost_usd,
         initial_feasible,
@@ -648,6 +697,34 @@ mod tests {
         assert_eq!(a.cumulative_cost_usd.to_bits(), b.cumulative_cost_usd.to_bits());
         assert_eq!(a.adaptations, b.adaptations);
         assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn episode_is_bit_identical_across_eval_thread_counts() {
+        // The engine's deterministic commit order is the whole point:
+        // parallel evaluation must never change what an episode does.
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let spec = SchedulerSpec::parse("rl-tabular:rounds=10").unwrap();
+        let trace = step_trace(3, 10, 20_000.0, 2.0);
+        let run = |threads: usize| {
+            let cfg = ControllerConfig { eval_threads: threads, ..fast_cfg() };
+            run_episode(&model, &pool, &spec, &trace, AdaptPolicy::WarmStart, &cfg, 42)
+                .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(8);
+        assert_eq!(
+            serial.sla_violation_secs.to_bits(),
+            parallel.sla_violation_secs.to_bits()
+        );
+        assert_eq!(
+            serial.cumulative_cost_usd.to_bits(),
+            parallel.cumulative_cost_usd.to_bits()
+        );
+        assert_eq!(serial.adaptations, parallel.adaptations);
+        assert_eq!(serial.evaluations, parallel.evaluations);
+        assert_eq!(serial.cached_evaluations, parallel.cached_evaluations);
     }
 
     #[test]

@@ -90,8 +90,8 @@ pub mod prelude {
     pub use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
     pub use crate::resources::{paper_testbed, simulated_types, ResourceKind, ResourcePool};
     pub use crate::sched::{
-        Budget, ScheduleError, ScheduleOutcome, Scheduler, SchedulerSpec, SearchSession,
-        StepReport,
+        Budget, EvalCache, EvalEngine, ScheduleError, ScheduleOutcome, Scheduler,
+        SchedulerSpec, SearchSession, StepReport,
     };
     pub use crate::train::SparseStore;
     pub use crate::util::rng::Rng;

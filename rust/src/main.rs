@@ -47,9 +47,10 @@ fn cli() -> Cli {
     };
     let budget = || {
         vec![
-            OptSpec { name: "budget-evals", help: "stop the search after this many cost-model evaluations", takes_value: true, default: None },
+            OptSpec { name: "budget-evals", help: "stop the search after this many cost-model evaluations (cache hits are not charged)", takes_value: true, default: None },
             OptSpec { name: "budget-secs", help: "wall-clock deadline for the search, in seconds", takes_value: true, default: None },
             OptSpec { name: "target-cost", help: "stop once a feasible plan at or below this cost ($) is held", takes_value: true, default: None },
+            OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation (default 1 = serial; results are bit-identical at any setting; config `[scheduler] eval_threads` applies when unset)", takes_value: true, default: None },
             OptSpec { name: "progress", help: "print the incumbent after every search step", takes_value: false, default: None },
         ]
     };
@@ -86,6 +87,7 @@ fn cli() -> Cli {
                         OptSpec { name: "ticks", help: "trace length in ticks", takes_value: true, default: Some("36") },
                         OptSpec { name: "tick-secs", help: "seconds per trace tick", takes_value: true, default: Some("300") },
                         OptSpec { name: "adapt-evals", help: "evaluation budget per warm-started adaptation", takes_value: true, default: Some("64") },
+                        OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation inside adaptation sessions (default 1)", takes_value: true, default: None },
                     ])
                     .collect(),
                 positionals: vec![],
@@ -123,6 +125,7 @@ fn cli() -> Cli {
                     OptSpec { name: "method", help: "per-job scheduler spec used for admission searches, e.g. greedy or genetic:pop=16", takes_value: true, default: Some("greedy") },
                     OptSpec { name: "arrival-seed", help: "seed for the job mix and every admission/measurement stream", takes_value: true, default: Some("42") },
                     OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
+                    OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation inside admission sessions (default 1)", takes_value: true, default: None },
                     OptSpec { name: "throughput", help: "base SLA floor the mix scales, samples/sec", takes_value: true, default: Some("20000") },
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
@@ -268,6 +271,7 @@ fn main() {
                 let ccfg = cluster::ClusterConfig {
                     spec,
                     admit_budget_evals: args.usize_or("budget-evals", 96)?,
+                    eval_threads: args.usize_or("eval-threads", 1)?.max(1),
                     ..Default::default()
                 };
                 let policy_name = args.str_or("policy", "all");
@@ -340,6 +344,15 @@ fn main() {
                 cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit)?;
                 let cm = CostModel::new(&model, &pool, cfg);
                 let seed = args.u64_or("seed", 42)?;
+                // Engine sizing: explicit --eval-threads wins; else the
+                // `[scheduler] eval_threads` config key; else serial.
+                let eval_threads = match args.opt_usize("eval-threads")? {
+                    Some(t) => t.max(1),
+                    None => file
+                        .as_ref()
+                        .map_or(1, |c| c.usize_or("scheduler.eval_threads", 1))
+                        .max(1),
+                };
 
                 let budget_from_args = || -> anyhow::Result<Budget> {
                     let mut budget = Budget::unlimited();
@@ -376,7 +389,8 @@ fn main() {
                         };
                         let budget = budget_from_args()?;
                         let scheduler = spec.build(seed);
-                        let mut session = scheduler.session(&cm, budget.clone());
+                        let engine = sched::EvalEngine::new(&cm).with_threads(eval_threads);
+                        let mut session = scheduler.session_engine(engine, budget.clone());
                         let progress = args.flag("progress");
                         let mut observer = |r: &StepReport| {
                             if progress {
@@ -411,22 +425,24 @@ fn main() {
                             if out.eval.feasible { "" } else { "  (INFEASIBLE, penalized)" }
                         );
                         println!(
-                            "sched time  : {:.3} s ({} evaluations)",
-                            out.wall_time.as_secs_f64(),
-                            out.evaluations
+                            "evaluations : {} charged, {} cache hits",
+                            out.evaluations, out.cache_hits
                         );
+                        println!("sched time  : {:.3} s", out.wall_time.as_secs_f64());
                     }
                     "compare" => {
                         let budget = budget_from_args()?;
                         let mut t = Table::new(
                             format!("Scheduler comparison — {model_name}, {n_types} types"),
-                            &["spec", "cost ($)", "throughput", "feasible", "sched time (s)", "evals"],
+                            &["spec", "cost ($)", "throughput", "feasible", "sched time (s)", "evals", "hits"],
                         );
                         let progress = args.flag("progress");
                         for m in sched::comparison_methods() {
                             let spec = SchedulerSpec::parse(m)?;
                             let scheduler = spec.build(seed);
-                            let mut session = scheduler.session(&cm, budget.clone());
+                            let engine =
+                                sched::EvalEngine::new(&cm).with_threads(eval_threads);
+                            let mut session = scheduler.session_engine(engine, budget.clone());
                             let mut observer = |r: &StepReport| {
                                 if progress {
                                     if let Some(e) = &r.incumbent_eval {
@@ -445,6 +461,7 @@ fn main() {
                                 out.eval.feasible.to_string(),
                                 format!("{:.3}", out.wall_time.as_secs_f64()),
                                 out.evaluations.to_string(),
+                                out.cache_hits.to_string(),
                             ]);
                         }
                         println!("{}", t.render());
@@ -474,6 +491,7 @@ fn main() {
                         let spec = SchedulerSpec::parse(args.str_or("method", "rl"))?;
                         let ctl = elastic::ControllerConfig {
                             adapt_budget_evals: args.usize_or("adapt-evals", 64)?,
+                            eval_threads,
                             // Honor --config/--throughput cost settings
                             // (floor itself comes from the trace).
                             cost: cm.cfg.clone(),

@@ -152,18 +152,22 @@ fn price_profs(
     (throughput, train_time, cost)
 }
 
-/// Price a provisioning plan (Eq 5–7).
-fn price(cm: &CostModel, stages: &[StageSpan], plan: &ProvisioningPlan) -> (f64, f64, f64) {
-    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
-    price_profs(cm, stages, &profs, plan)
-}
-
 /// The §5.1 provisioner: Eq 13 floor for `k_1`, then a Newton search (with
 /// an integer refinement pass) for the `k_1` minimizing monetary cost
 /// subject to the throughput floor and pool limits.
 pub fn provision(cm: &CostModel, plan: &SchedulingPlan) -> Option<(Vec<StageSpan>, ProvisioningPlan)> {
     let stages = plan.stages();
-    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
+    let profs = cm.stage_profiles(&stages);
+    provision_profs(cm, &stages, &profs).map(|prov| (stages, prov))
+}
+
+/// [`provision`] from precomputed stages + profiles (the eval engine's
+/// profile memo feeds these; re-deriving them is bit-identical).
+fn provision_profs(
+    cm: &CostModel,
+    stages: &[StageSpan],
+    profs: &[StageProfile],
+) -> Option<ProvisioningPlan> {
     let target_et_max = cm.cfg.batch_size as f64 / cm.cfg.throughput_limit;
 
     let sparse_bytes = sparse_bytes_per_iter(cm);
@@ -180,7 +184,7 @@ pub fn provision(cm: &CostModel, plan: &SchedulingPlan) -> Option<(Vec<StageSpan
         }
         let cost_of = |ka: usize| -> Option<f64> {
             let (p, target) =
-                provision_for_anchor_inner(cm, &stages, &profs, anchor, ka, sparse_bytes)?;
+                provision_for_anchor_inner(cm, stages, profs, anchor, ka, sparse_bytes)?;
             // Anchor = bottleneck: throughput is B/target directly; price
             // allocation-free from the stage replicas (§Perf).
             let throughput = cm.cfg.batch_size as f64 / target.max(1e-12);
@@ -262,16 +266,30 @@ pub fn provision(cm: &CostModel, plan: &SchedulingPlan) -> Option<(Vec<StageSpan
         }
     }
     let (_, anchor, ka) = best?;
-    let prov = provision_for_anchor(cm, &stages, &profs, anchor, ka)?;
-    Some((stages, prov))
+    provision_for_anchor(cm, stages, profs, anchor, ka)
 }
 
 /// Provision + price a scheduling plan; this is `CostModel::evaluate`.
 /// Infeasible plans get a best-effort provisioning and a penalized cost so
 /// search methods can still rank them.
 pub fn provision_and_price(cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
-    if let Some((stages, prov)) = provision(cm, plan) {
-        let (throughput, train_time, cost) = price(cm, &stages, &prov);
+    let stages = plan.stages();
+    let profs = cm.stage_profiles(&stages);
+    provision_and_price_with(cm, &stages, &profs)
+}
+
+/// [`provision_and_price`] from precomputed stages + profiles — the eval
+/// engine's incremental/batched entry (`CostModel::evaluate_with_profiles`).
+/// Bit-identical to the wrapper: profiles are pure functions of their
+/// spans, and both the feasible and penalized paths price through the
+/// same [`price_profs`].
+pub(crate) fn provision_and_price_with(
+    cm: &CostModel,
+    stages: &[StageSpan],
+    profs: &[StageProfile],
+) -> PlanEval {
+    if let Some(prov) = provision_profs(cm, stages, profs) {
+        let (throughput, train_time, cost) = price_profs(cm, stages, profs, &prov);
         return PlanEval {
             provisioning: prov,
             throughput,
@@ -282,9 +300,8 @@ pub fn provision_and_price(cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
     }
     // Best effort: every stage at its type's limit (shared across stages of
     // the same type by even division).
-    let stages = plan.stages();
     let mut per_type_stages = vec![0usize; cm.pool.num_types()];
-    for s in &stages {
+    for s in stages {
         per_type_stages[s.type_id] += 1;
     }
     let replicas: Vec<usize> = stages
@@ -292,7 +309,7 @@ pub fn provision_and_price(cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
         .map(|s| (cm.pool.get(s.type_id).max_units / per_type_stages[s.type_id]).max(1))
         .collect();
     let prov = ProvisioningPlan { replicas, ps_cpu_cores: 0 };
-    let (throughput, train_time, cost) = price(cm, &stages, &prov);
+    let (throughput, train_time, cost) = price_profs(cm, stages, profs, &prov);
     let shortfall = (cm.cfg.throughput_limit / throughput.max(1e-9)).max(1.0);
     PlanEval {
         provisioning: prov,
@@ -363,7 +380,7 @@ pub fn provision_static_ratio(
             .map(|((_, p), &k)| cm.stage_et(p, k as f64))
             .fold(0.0f64, f64::max);
         if worst <= target {
-            let (throughput, train_time, cost) = price(cm, &stages, &prov);
+            let (throughput, train_time, cost) = price_profs(cm, &stages, &profs, &prov);
             return Some(PlanEval {
                 provisioning: prov,
                 throughput,

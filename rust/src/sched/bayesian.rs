@@ -9,8 +9,9 @@
 //! evaluates the random initial design and every following step runs one
 //! GP-guided acquisition iteration.
 
-use super::{session_delegate, Budget, Scheduler, SearchSession, SessionCore, StepReport};
-use crate::cost::CostModel;
+use super::{
+    session_delegate, Budget, EvalEngine, Scheduler, SearchSession, SessionCore, StepReport,
+};
 use crate::plan::SchedulingPlan;
 use crate::util::matrix::{cholesky, solve_lower, solve_upper_t, sqdist, Mat};
 use crate::util::rng::Rng;
@@ -65,9 +66,13 @@ impl Scheduler for BayesianOpt {
         "bo"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
         Box::new(BoSession {
-            core: SessionCore::new(cm, budget),
+            core: SessionCore::new(engine, budget),
             cfg: self.cfg.clone(),
             rng: Rng::new(self.seed),
             xs: Vec::new(),
@@ -216,13 +221,22 @@ impl SearchSession for BoSession<'_> {
             return self.core.report();
         }
         if !self.initialized {
-            // Initial random design.
+            // Initial random design: drawn serially (the rng sequence is
+            // part of the deterministic contract), evaluated as one
+            // engine batch, observed in draw order.
             let nl = self.core.cm().model.num_layers();
             let nt = self.core.cm().pool.num_types();
-            for _ in 0..self.cfg.init_samples {
-                let a: Vec<usize> = (0..nl).map(|_| self.rng.below(nt)).collect();
-                if !self.observe(a) {
-                    break;
+            let design: Vec<SchedulingPlan> = (0..self.cfg.init_samples)
+                .map(|_| SchedulingPlan::new((0..nl).map(|_| self.rng.below(nt)).collect()))
+                .collect();
+            let results = self.core.try_consider_batch(&design);
+            for (plan, result) in design.into_iter().zip(results) {
+                match result {
+                    Some(eval) => {
+                        self.xs.push(BayesianOpt::encode(&plan.assignment, nt));
+                        self.ys.push(eval.cost_usd.ln());
+                    }
+                    None => break,
                 }
             }
             self.initialized = true;
@@ -262,7 +276,7 @@ impl SearchSession for BoSession<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostConfig;
+    use crate::cost::{CostConfig, CostModel};
     use crate::model::zoo;
     use crate::resources::paper_testbed;
     use crate::sched::bruteforce::BruteForce;
@@ -313,7 +327,9 @@ mod tests {
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         let cfg = BoConfig { iterations: 0, ..Default::default() };
         let out = BayesianOpt::new(cfg.clone(), 11).schedule(&cm);
-        assert_eq!(out.evaluations, cfg.init_samples);
+        // Random-design collisions in the 32-plan space are uncharged
+        // cache hits; every sample is still observed.
+        assert_eq!(out.evaluations + out.cache_hits, cfg.init_samples);
     }
 
     #[test]

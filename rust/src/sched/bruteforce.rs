@@ -8,10 +8,9 @@
 //! truncated-enumeration baseline of the per-budget tables.
 
 use super::{
-    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
-    StepReport,
+    session_delegate, session_warm_start, Budget, EvalEngine, Scheduler, SearchSession,
+    SessionCore, StepReport,
 };
-use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
 
 /// Plans enumerated per [`SearchSession::step`] call.
@@ -50,7 +49,11 @@ impl Scheduler for BruteForce {
         "bf"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
         let mut budget = budget;
         if let Some(cap) = self.max_evaluations {
             // Legacy `with_cap` semantics evaluated the first plan before
@@ -61,9 +64,10 @@ impl Scheduler for BruteForce {
             budget.max_evaluations =
                 Some(budget.max_evaluations.map_or(legacy, |b| b.min(legacy)));
         }
+        let num_layers = engine.cm().model.num_layers();
         Box::new(BruteForceSession {
-            core: SessionCore::new(cm, budget),
-            assignment: vec![0; cm.model.num_layers()],
+            core: SessionCore::new(engine, budget),
+            assignment: vec![0; num_layers],
         })
     }
 }
@@ -98,15 +102,22 @@ impl SearchSession for BruteForceSession<'_> {
         if self.core.is_done() {
             return self.core.report();
         }
+        // Materialize one odometer chunk and evaluate it as a batch
+        // (fanned across the engine's threads, committed in enumeration
+        // order). A budget hit mid-chunk marks the session done inside
+        // the core; the over-advanced odometer is then never read again.
+        let mut chunk = Vec::with_capacity(STEP_CHUNK);
+        let mut exhausted = false;
         for _ in 0..STEP_CHUNK {
-            let plan = SchedulingPlan::new(self.assignment.clone());
-            if self.core.try_consider(&plan).is_none() {
-                break; // budget hit; the core already marked the session done
-            }
+            chunk.push(SchedulingPlan::new(self.assignment.clone()));
             if !self.advance() {
-                self.core.mark_done();
+                exhausted = true;
                 break;
             }
+        }
+        let results = self.core.try_consider_batch(&chunk);
+        if exhausted && results.last().is_some_and(|r| r.is_some()) {
+            self.core.mark_done();
         }
         self.core.report()
     }
@@ -118,7 +129,7 @@ impl SearchSession for BruteForceSession<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostConfig;
+    use crate::cost::{CostConfig, CostModel};
     use crate::model::zoo;
     use crate::resources::paper_testbed;
     use crate::sched::fixed::{CpuOnly, GpuOnly, Heuristic};

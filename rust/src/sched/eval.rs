@@ -1,0 +1,427 @@
+//! The shared evaluation engine behind every [`SearchSession`]: memoized,
+//! batched, optionally parallel plan evaluation (DESIGN.md §Eval-Engine).
+//!
+//! Every scheduler family burns its budget in the same inner loop —
+//! `CostModel::evaluate` called one plan at a time — and the elastic
+//! controller and cluster simulator re-open sessions that re-score plans
+//! evaluated moments earlier. The [`EvalEngine`] amortizes all of that:
+//!
+//! * **Memoization.** A plan-fingerprint → [`PlanEval`] cache. Genetic
+//!   re-visits, RL rollouts, warm starts and cluster-admission retries on
+//!   identical residuals become near-free lookups. Cache hits are *not*
+//!   charged against `Budget::max_evaluations`; sessions report them
+//!   separately (`StepReport::cache_hits`). The cache is keyed by a
+//!   context fingerprint of `(model, pool, cost config)` plus the plan's
+//!   assignment vector, so one [`EvalCache`] can safely span cost models
+//!   (elastic ticks at different floors, cluster residual pools).
+//! * **Stage-profile memo.** Per-`(span, type)` [`StageProfile`]s are
+//!   pure functions of the layer volumes and resource rates — independent
+//!   of pool limits and the throughput floor — so they are memoized under
+//!   a *coarser* fingerprint and survive elastic pool scaling and floor
+//!   changes. This is the incremental path: a genetic mutation or RL
+//!   per-layer move touches 1–2 stages of ~16, and only those are
+//!   re-profiled.
+//! * **Batched parallel evaluation.** [`EvalEngine::compute_batch`] fans
+//!   candidate evaluations across a scoped `std::thread` pool sized by
+//!   `with_threads` (`--eval-threads`; default 1 = serial). Results are
+//!   committed in submission order by the session core, so every session
+//!   is bit-identical to serial execution per `(config, seed)` at any
+//!   thread count — evaluation is a pure function of the plan, and the
+//!   incumbent trajectory, charge sequence and stop decisions only ever
+//!   observe the ordered commits.
+//!
+//! Sessions obtain an engine through [`Scheduler::session`] (private
+//! serial default) or [`Scheduler::session_engine`] (caller-built:
+//! threads and/or a shared cache).
+//!
+//! [`SearchSession`]: crate::sched::SearchSession
+//! [`Scheduler::session`]: crate::sched::Scheduler::session
+//! [`Scheduler::session_engine`]: crate::sched::Scheduler::session_engine
+
+use crate::cost::{CostConfig, CostModel, PlanEval, StageProfile};
+use crate::model::ModelSpec;
+use crate::plan::{SchedulingPlan, StageSpan};
+use crate::resources::ResourcePool;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One FNV-1a round over a 64-bit word. Not cryptographic — the
+/// fingerprints only need to be stable and to separate genuinely
+/// different evaluation contexts.
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+}
+
+fn hash_model(h: &mut u64, model: &ModelSpec) {
+    for b in model.name.as_bytes() {
+        fnv(h, *b as u64);
+    }
+    fnv(h, model.epochs);
+    fnv(h, model.examples_per_epoch);
+    for l in &model.layers {
+        fnv(h, l.index as u64);
+        fnv(h, l.kind.index() as u64);
+        fnv(h, l.input_bytes);
+        fnv(h, l.weight_bytes);
+        fnv(h, l.output_bytes);
+        fnv(h, l.flops);
+    }
+}
+
+/// Fingerprint of everything a full plan evaluation depends on: the model,
+/// the pool (rates, prices *and* limits) and the cost config (batch sizes,
+/// floor, penalty). Two cost models with equal fingerprints score every
+/// plan bit-identically, so their cached evaluations are interchangeable.
+/// The cluster simulator also uses this as the futility-damper key: a
+/// bit-identical residual pool reproduces the fingerprint exactly.
+pub fn context_fingerprint(model: &ModelSpec, pool: &ResourcePool, cfg: &CostConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, u64::from_le_bytes(*b"evalctx\0"));
+    hash_model(&mut h, model);
+    for t in &pool.types {
+        fnv(&mut h, t.id as u64);
+        fnv(&mut h, t.kind as u64);
+        fnv(&mut h, t.price_per_hour.to_bits());
+        fnv(&mut h, t.flops_per_sec.to_bits());
+        fnv(&mut h, t.io_bytes_per_sec.to_bits());
+        fnv(&mut h, t.net_bytes_per_sec.to_bits());
+        fnv(&mut h, t.net_latency_secs.to_bits());
+        fnv(&mut h, t.alpha.to_bits());
+        fnv(&mut h, t.beta.to_bits());
+        fnv(&mut h, t.max_units as u64);
+    }
+    fnv(&mut h, cfg.batch_size);
+    fnv(&mut h, cfg.profile_batch);
+    fnv(&mut h, cfg.throughput_limit.to_bits());
+    fnv(&mut h, cfg.infeasible_penalty.to_bits());
+    h
+}
+
+/// Fingerprint of what a [`StageProfile`] depends on — the model layers,
+/// the per-type *rates* (not prices or `max_units`) and the profiling
+/// batch. Deliberately coarser than [`context_fingerprint`]: elastic pool
+/// scaling and floor changes leave it untouched, so stage profiles
+/// memoized on one tick serve every later tick.
+fn profile_fingerprint(model: &ModelSpec, pool: &ResourcePool, cfg: &CostConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, u64::from_le_bytes(*b"profctx\0"));
+    hash_model(&mut h, model);
+    for t in &pool.types {
+        fnv(&mut h, t.id as u64);
+        fnv(&mut h, t.flops_per_sec.to_bits());
+        fnv(&mut h, t.io_bytes_per_sec.to_bits());
+        fnv(&mut h, t.net_bytes_per_sec.to_bits());
+        fnv(&mut h, t.alpha.to_bits());
+        fnv(&mut h, t.beta.to_bits());
+    }
+    fnv(&mut h, cfg.profile_batch);
+    h
+}
+
+/// Aggregate counters of an [`EvalCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    /// Full cost-model evaluations actually computed (budget-charged).
+    pub charged: u64,
+    /// Evaluations served from the memo cache (never budget-charged).
+    pub cached: u64,
+    /// Distinct `(context, plan)` entries held.
+    pub entries: usize,
+}
+
+#[derive(Default)]
+struct CacheState {
+    /// context fingerprint -> assignment -> evaluation.
+    evals: HashMap<u64, HashMap<Vec<usize>, PlanEval>>,
+    /// (profile fingerprint, type, first layer, last layer) -> profile.
+    profiles: HashMap<(u64, usize, usize, usize), StageProfile>,
+    charged: u64,
+    cached: u64,
+    entries: usize,
+}
+
+/// The shareable memo behind one or more [`EvalEngine`]s. Cloning the
+/// handle shares the underlying cache, which is how the elastic
+/// controller persists evaluations across ticks and the cluster simulator
+/// shares them across admission sessions. Single-threaded by design
+/// (`Rc`): the parallelism lives *inside* `compute_batch`, which never
+/// touches the cache from worker threads.
+#[derive(Clone, Default)]
+pub struct EvalCache {
+    state: Rc<RefCell<CacheState>>,
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Global counters across every engine sharing this cache.
+    pub fn stats(&self) -> EvalStats {
+        let s = self.state.borrow();
+        EvalStats { charged: s.charged, cached: s.cached, entries: s.entries }
+    }
+}
+
+/// A cost model plus the machinery that makes evaluating plans against it
+/// cheap: the memo cache, the profile memo and the batch thread pool.
+/// Bound to one `CostModel` (and hence one context fingerprint); build a
+/// fresh engine per cost model and share the [`EvalCache`] instead.
+pub struct EvalEngine<'a> {
+    cm: &'a CostModel<'a>,
+    threads: usize,
+    cache: EvalCache,
+    ctx_eval: u64,
+    ctx_prof: u64,
+}
+
+impl<'a> EvalEngine<'a> {
+    /// Serial engine over a fresh private cache — the default every
+    /// session gets when the caller does not supply one; behaviorally
+    /// identical to pre-engine evaluation except that revisited plans
+    /// become uncharged cache hits.
+    pub fn new(cm: &'a CostModel<'a>) -> Self {
+        EvalEngine {
+            cm,
+            threads: 1,
+            cache: EvalCache::new(),
+            ctx_eval: context_fingerprint(cm.model, cm.pool, &cm.cfg),
+            ctx_prof: profile_fingerprint(cm.model, cm.pool, &cm.cfg),
+        }
+    }
+
+    /// Size the batch thread pool (clamped to at least 1). 1 keeps
+    /// evaluation fully serial, including per-evaluation deadline checks.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Share a caller-owned cache (cross-session / cross-tick reuse).
+    pub fn with_cache(mut self, cache: EvalCache) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    pub fn cm(&self) -> &'a CostModel<'a> {
+        self.cm
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    /// Cached evaluation of `plan`, if present — no counters touched.
+    pub fn peek(&self, plan: &SchedulingPlan) -> Option<PlanEval> {
+        self.cache
+            .state
+            .borrow()
+            .evals
+            .get(&self.ctx_eval)
+            .and_then(|m| m.get(plan.assignment.as_slice()))
+            .cloned()
+    }
+
+    /// Cached evaluation of `plan`, counted as a cache hit when present.
+    pub fn lookup(&self, plan: &SchedulingPlan) -> Option<PlanEval> {
+        let hit = self.peek(plan);
+        if hit.is_some() {
+            self.cache.state.borrow_mut().cached += 1;
+        }
+        hit
+    }
+
+    /// Stages + profiles for `plan`, through the profile memo: only spans
+    /// never profiled under this context are derived fresh.
+    fn prepare(&self, plan: &SchedulingPlan) -> (Vec<StageSpan>, Vec<StageProfile>) {
+        let stages = plan.stages();
+        let mut state = self.cache.state.borrow_mut();
+        let profs = stages
+            .iter()
+            .map(|s| {
+                let key = (self.ctx_prof, s.type_id, s.first_layer, s.last_layer);
+                *state.profiles.entry(key).or_insert_with(|| self.cm.stage_profile(s))
+            })
+            .collect();
+        (stages, profs)
+    }
+
+    /// Full evaluation of one plan, profile-memoized but *not* cached —
+    /// callers decide whether the result is committed (cache insertion
+    /// must follow the deterministic commit order, never speculative
+    /// parallel computation).
+    pub fn compute(&self, plan: &SchedulingPlan) -> PlanEval {
+        let (stages, profs) = self.prepare(plan);
+        self.cm.evaluate_with_profiles(&stages, &profs)
+    }
+
+    /// Insert a committed evaluation into the cache and charge it.
+    pub fn commit(&self, plan: &SchedulingPlan, eval: &PlanEval) {
+        let mut state = self.cache.state.borrow_mut();
+        state.charged += 1;
+        let ctx = state.evals.entry(self.ctx_eval).or_default();
+        if ctx.insert(plan.assignment.clone(), eval.clone()).is_none() {
+            state.entries += 1;
+        }
+    }
+
+    /// Evaluate through the cache: hit, or compute + commit.
+    pub fn evaluate(&self, plan: &SchedulingPlan) -> PlanEval {
+        if let Some(hit) = self.lookup(plan) {
+            return hit;
+        }
+        let eval = self.compute(plan);
+        self.commit(plan, &eval);
+        eval
+    }
+
+    /// Evaluate a batch in parallel across the engine's thread pool.
+    /// Pure: no cache mutation, no counters, and `result[i]` is the exact
+    /// value serial `compute(plans[i])` would produce — parallelism only
+    /// reorders *computation*, never results.
+    pub fn compute_batch(&self, plans: &[SchedulingPlan]) -> Vec<PlanEval> {
+        let refs: Vec<&SchedulingPlan> = plans.iter().collect();
+        self.compute_batch_refs(&refs)
+    }
+
+    pub(crate) fn compute_batch_refs(&self, plans: &[&SchedulingPlan]) -> Vec<PlanEval> {
+        // Profiles come from the shared memo on the calling thread (cheap,
+        // O(layers)); only the provisioning searches — the hot part — fan
+        // out to workers, which read `cm` and their prepared inputs only.
+        if plans.is_empty() {
+            return Vec::new();
+        }
+        let prepared: Vec<(Vec<StageSpan>, Vec<StageProfile>)> =
+            plans.iter().map(|p| self.prepare(p)).collect();
+        let n = plans.len();
+        let threads = self.threads.min(n);
+        let cm = self.cm;
+        let mut results: Vec<Option<PlanEval>> = Vec::new();
+        results.resize_with(n, || None);
+        if threads <= 1 {
+            for (slot, (stages, profs)) in results.iter_mut().zip(&prepared) {
+                *slot = Some(cm.evaluate_with_profiles(stages, profs));
+            }
+        } else {
+            let per = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (slots, prepared) in results.chunks_mut(per).zip(prepared.chunks(per)) {
+                    scope.spawn(move || {
+                        for (slot, (stages, profs)) in slots.iter_mut().zip(prepared) {
+                            *slot = Some(cm.evaluate_with_profiles(stages, profs));
+                        }
+                    });
+                }
+            });
+        }
+        results.into_iter().map(|r| r.expect("every batch slot is filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostConfig;
+    use crate::model::zoo;
+    use crate::resources::{paper_testbed, simulated_types};
+
+    fn plan16(seed: u64) -> SchedulingPlan {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        SchedulingPlan::new((0..16).map(|_| rng.below(4)).collect())
+    }
+
+    #[test]
+    fn cache_hit_is_counted_and_bit_identical() {
+        let model = zoo::matchnet();
+        let pool = simulated_types(4, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let engine = EvalEngine::new(&cm);
+        let plan = plan16(1);
+        let first = engine.evaluate(&plan);
+        let second = engine.evaluate(&plan);
+        assert_eq!(first.cost_usd.to_bits(), second.cost_usd.to_bits());
+        assert_eq!(first.provisioning, second.provisioning);
+        let stats = engine.cache().stats();
+        assert_eq!((stats.charged, stats.cached, stats.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn shared_cache_spans_engines_with_equal_context() {
+        let model = zoo::matchnet();
+        let pool = simulated_types(4, true);
+        let cm_a = CostModel::new(&model, &pool, CostConfig::default());
+        let cm_b = CostModel::new(&model, &pool, CostConfig::default());
+        let cache = EvalCache::new();
+        let a = EvalEngine::new(&cm_a).with_cache(cache.clone());
+        let b = EvalEngine::new(&cm_b).with_cache(cache.clone());
+        let plan = plan16(2);
+        let ea = a.evaluate(&plan);
+        let eb = b.evaluate(&plan);
+        assert_eq!(ea.cost_usd.to_bits(), eb.cost_usd.to_bits());
+        assert_eq!(cache.stats().charged, 1, "second engine must hit, not recompute");
+        assert_eq!(cache.stats().cached, 1);
+    }
+
+    #[test]
+    fn context_fingerprint_separates_floor_and_pool_limits() {
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let base = CostConfig::default();
+        let mut tighter = base.clone();
+        tighter.throughput_limit *= 2.0;
+        let fp_base = context_fingerprint(&model, &pool, &base);
+        assert_eq!(fp_base, context_fingerprint(&model, &pool, &base));
+        assert_ne!(fp_base, context_fingerprint(&model, &pool, &tighter));
+        let mut scaled = pool.clone();
+        scaled.types[1].max_units /= 2;
+        assert_ne!(fp_base, context_fingerprint(&model, &scaled, &base));
+    }
+
+    #[test]
+    fn profile_fingerprint_survives_floor_and_limit_changes() {
+        // The profile memo must persist across elastic ticks: floors move
+        // and pool limits scale, but rates (and hence profiles) do not.
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let base = CostConfig::default();
+        let mut tighter = base.clone();
+        tighter.throughput_limit *= 3.0;
+        let mut scaled = pool.clone();
+        scaled.types[0].max_units = 7;
+        let fp = profile_fingerprint(&model, &pool, &base);
+        assert_eq!(fp, profile_fingerprint(&model, &pool, &tighter));
+        assert_eq!(fp, profile_fingerprint(&model, &scaled, &base));
+        let mut slower = pool.clone();
+        slower.types[1].flops_per_sec /= 2.0;
+        assert_ne!(fp, profile_fingerprint(&model, &slower, &base));
+    }
+
+    #[test]
+    fn compute_batch_matches_serial_compute_at_any_thread_count() {
+        let model = zoo::matchnet();
+        let pool = simulated_types(4, true);
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let plans: Vec<SchedulingPlan> = (0..17).map(|i| plan16(100 + i)).collect();
+        let serial: Vec<PlanEval> = {
+            let engine = EvalEngine::new(&cm);
+            plans.iter().map(|p| engine.compute(p)).collect()
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let engine = EvalEngine::new(&cm).with_threads(threads);
+            let batch = engine.compute_batch(&plans);
+            for (s, b) in serial.iter().zip(&batch) {
+                assert_eq!(s.cost_usd.to_bits(), b.cost_usd.to_bits(), "t={threads}");
+                assert_eq!(s.throughput.to_bits(), b.throughput.to_bits());
+                assert_eq!(s.feasible, b.feasible);
+                assert_eq!(s.provisioning, b.provisioning);
+            }
+        }
+    }
+}

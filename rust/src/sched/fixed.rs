@@ -4,8 +4,8 @@
 //! session that evaluates its one fixed plan and converges.
 
 use super::{
-    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
-    StepReport,
+    session_delegate, session_warm_start, Budget, EvalEngine, Scheduler, SearchSession,
+    SessionCore, StepReport,
 };
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
@@ -46,12 +46,12 @@ impl SearchSession for FixedSession<'_> {
 }
 
 fn fixed_session<'a>(
-    cm: &'a CostModel<'a>,
+    engine: EvalEngine<'a>,
     budget: Budget,
     plan: SchedulingPlan,
     label: &'static str,
 ) -> Box<dyn SearchSession + 'a> {
-    Box::new(FixedSession { core: SessionCore::new(cm, budget), plan, label })
+    Box::new(FixedSession { core: SessionCore::new(engine, budget), plan, label })
 }
 
 /// All layers on the CPU type (falls back to type 0 in CPU-less pools).
@@ -62,9 +62,15 @@ impl Scheduler for CpuOnly {
         "cpu"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
+        let cm = engine.cm();
         let t = cm.pool.cpu_type().map(|c| c.id).unwrap_or(0);
-        fixed_session(cm, budget, SchedulingPlan::uniform(cm.model.num_layers(), t), "cpu")
+        let plan = SchedulingPlan::uniform(cm.model.num_layers(), t);
+        fixed_session(engine, budget, plan, "cpu")
     }
 }
 
@@ -77,9 +83,14 @@ impl Scheduler for GpuOnly {
         "gpu"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
-        let t = anchor_gpu(cm);
-        fixed_session(cm, budget, SchedulingPlan::uniform(cm.model.num_layers(), t), "gpu")
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
+        let cm = engine.cm();
+        let plan = SchedulingPlan::uniform(cm.model.num_layers(), anchor_gpu(cm));
+        fixed_session(engine, budget, plan, "gpu")
     }
 }
 
@@ -96,7 +107,12 @@ impl Scheduler for Heuristic {
         "heuristic"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
+        let cm = engine.cm();
         let gpu = anchor_gpu(cm);
         let cpu = cm.pool.cpu_type().map(|c| c.id).unwrap_or(gpu);
         let assignment: Vec<usize> = cm
@@ -105,7 +121,7 @@ impl Scheduler for Heuristic {
             .iter()
             .map(|l| if l.index == 0 { gpu } else { cpu })
             .collect();
-        fixed_session(cm, budget, SchedulingPlan::new(assignment), "heuristic")
+        fixed_session(engine, budget, SchedulingPlan::new(assignment), "heuristic")
     }
 }
 

@@ -3,8 +3,9 @@
 //! first step evaluates the random initial population and every following
 //! step breeds and evaluates one generation.
 
-use super::{session_delegate, Budget, Scheduler, SearchSession, SessionCore, StepReport};
-use crate::cost::CostModel;
+use super::{
+    session_delegate, Budget, EvalEngine, Scheduler, SearchSession, SessionCore, StepReport,
+};
 use crate::plan::SchedulingPlan;
 use crate::util::rng::Rng;
 
@@ -47,9 +48,13 @@ impl Scheduler for Genetic {
         "genetic"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
         Box::new(GeneticSession {
-            core: SessionCore::new(cm, budget),
+            core: SessionCore::new(engine, budget),
             cfg: self.cfg.clone(),
             rng: Rng::new(self.seed),
             population: Vec::new(),
@@ -90,10 +95,15 @@ pub struct GeneticSession<'a> {
 impl GeneticSession<'_> {
     /// Fitness: negative cost, with infeasible plans already penalized by
     /// the evaluator. `false` when the budget cut the evaluation short.
+    /// The whole generation goes through one engine batch — re-visited
+    /// genomes are uncharged cache hits, fresh ones fan across the eval
+    /// threads, and results commit in population order.
     fn evaluate_population(&mut self) -> bool {
         self.fitness.clear();
-        for genome in &self.population {
-            match self.core.try_consider(&SchedulingPlan::new(genome.clone())) {
+        let plans: Vec<SchedulingPlan> =
+            self.population.iter().map(|g| SchedulingPlan::new(g.clone())).collect();
+        for result in self.core.try_consider_batch(&plans) {
+            match result {
                 Some(eval) => self.fitness.push(-eval.cost_usd),
                 None => return false,
             }
@@ -194,7 +204,7 @@ impl SearchSession for GeneticSession<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostConfig;
+    use crate::cost::{CostConfig, CostModel};
     use crate::model::zoo;
     use crate::resources::paper_testbed;
     use crate::sched::bruteforce::BruteForce;
@@ -240,7 +250,10 @@ mod tests {
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         let cfg = GeneticConfig { generations: 0, ..Default::default() };
         let out = Genetic::new(cfg.clone(), 1).schedule(&cm);
-        assert_eq!(out.evaluations, cfg.population);
+        // 48 random genomes in a 32-plan space: duplicates are served from
+        // the eval-engine cache (uncharged), but every genome is scored.
+        assert_eq!(out.evaluations + out.cache_hits, cfg.population);
+        assert!(out.evaluations <= 32, "nce x paper_testbed has only 32 distinct plans");
     }
 
     #[test]
@@ -254,14 +267,17 @@ mod tests {
         session.warm_start(&crate::plan::SchedulingPlan::uniform(5, 0));
         let out = crate::sched::drive(session.as_mut(), None).unwrap();
         // 1 warm evaluation + the random initial population; the warm
-        // genome's fitness is reused, not re-evaluated.
-        assert_eq!(out.evaluations, 1 + cfg.population);
+        // genome's fitness is reused, not re-evaluated, and random
+        // duplicates in the 32-plan space are uncharged cache hits.
+        assert_eq!(out.evaluations + out.cache_hits, 1 + cfg.population);
     }
 
     #[test]
     fn genetic_session_stops_mid_generation_on_budget() {
-        let model = zoo::nce();
-        let pool = paper_testbed();
+        // matchnet x 4 types: a 4^16 space, so random genomes essentially
+        // never collide and the charged count tracks the budget exactly.
+        let model = zoo::matchnet();
+        let pool = crate::resources::simulated_types(4, true);
         let cm = CostModel::new(&model, &pool, CostConfig::default());
         // 50 is not a multiple of the 48-genome population: the budget must
         // cut a generation partway through.

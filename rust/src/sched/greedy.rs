@@ -13,10 +13,10 @@
 //! each following step sweeps one layer.
 
 use super::{
-    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
-    StepReport,
+    session_delegate, session_warm_start, Budget, EvalEngine, Scheduler, SearchSession,
+    SessionCore, StepReport,
 };
-use crate::cost::{CostModel, PlanEval};
+use crate::cost::PlanEval;
 use crate::plan::{SchedulingPlan, StageSpan};
 
 pub struct Greedy;
@@ -38,9 +38,13 @@ impl Scheduler for Greedy {
         "greedy"
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
         Box::new(GreedySession {
-            core: SessionCore::new(cm, budget),
+            core: SessionCore::new(engine, budget),
             current: SchedulingPlan::new(Vec::new()),
             current_eval: None,
             layer: 0,
@@ -84,17 +88,24 @@ impl GreedySession<'_> {
     }
 
     /// Phase 2 unit: coordinate-descent over one layer's type choices.
+    /// The candidate flips are independent of which one is accepted (each
+    /// replaces layer `l` wholesale), so they evaluate as one engine
+    /// batch; acceptance replays in candidate order.
     fn sweep_layer(&mut self) {
         let nt = self.core.cm().pool.num_types();
         let l = self.layer;
         let orig = self.current.assignment[l];
-        for t in 0..nt {
-            if t == orig {
-                continue;
-            }
-            let mut cand = self.current.clone();
-            cand.assignment[l] = t;
-            match self.core.try_consider(&cand) {
+        let candidates: Vec<SchedulingPlan> = (0..nt)
+            .filter(|&t| t != orig)
+            .map(|t| {
+                let mut cand = self.current.clone();
+                cand.assignment[l] = t;
+                cand
+            })
+            .collect();
+        let results = self.core.try_consider_batch(&candidates);
+        for (cand, result) in candidates.into_iter().zip(results) {
+            match result {
                 None => return,
                 Some(eval) => {
                     let cur = self.current_eval.as_ref().expect("initialized before sweep");
@@ -144,7 +155,7 @@ impl SearchSession for GreedySession<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostConfig;
+    use crate::cost::{CostConfig, CostModel};
     use crate::model::zoo;
     use crate::resources::paper_testbed;
     use crate::sched::bruteforce::BruteForce;

@@ -21,15 +21,22 @@
 //! Methods are named and configured through the typed [`SchedulerSpec`]
 //! registry (see [`spec`]), parseable from CLI strings
 //! (`rl:rounds=80,lr=0.6`) and `[scheduler]` config sections.
+//!
+//! Every session evaluates plans through a shared [`EvalEngine`] (see
+//! [`eval`]): memoized (revisited plans are uncharged cache hits),
+//! batched across `--eval-threads` worker threads, and bit-identical to
+//! serial execution per `(config, seed)` at any thread count.
 
 pub mod bayesian;
 pub mod bruteforce;
+pub mod eval;
 pub mod fixed;
 pub mod genetic;
 pub mod greedy;
 pub mod rl;
 pub mod spec;
 
+pub use eval::{context_fingerprint, EvalCache, EvalEngine, EvalStats};
 pub use spec::{lookup, registry, FixedKind, MethodInfo, RlVariant, SchedulerSpec, SpecError};
 
 use crate::cost::{CostModel, PlanEval};
@@ -43,8 +50,12 @@ pub struct ScheduleOutcome {
     pub eval: PlanEval,
     /// Wall-clock scheduling time (the quantity of Tables 2–3).
     pub wall_time: Duration,
-    /// Cost-model evaluations consumed (search effort).
+    /// Cost-model evaluations actually computed (search effort, charged
+    /// against `Budget::max_evaluations`).
     pub evaluations: usize,
+    /// Evaluations served from the [`EvalEngine`] memo cache — never
+    /// charged against the budget (DESIGN.md §Eval-Engine).
+    pub cache_hits: usize,
 }
 
 /// Scheduling failed to produce any plan.
@@ -107,8 +118,11 @@ pub struct StepReport {
     pub incumbent_plan: Option<SchedulingPlan>,
     /// Evaluation of the incumbent plan.
     pub incumbent_eval: Option<PlanEval>,
-    /// Cumulative cost-model evaluations consumed.
+    /// Cumulative cost-model evaluations computed (budget-charged).
     pub evaluations: usize,
+    /// Cumulative evaluations served from the memo cache (not charged
+    /// against the budget; reported separately by design).
+    pub cache_hits: usize,
     /// The session will do no further work: the search exhausted itself,
     /// the budget ran out, or the target cost was reached.
     pub converged: bool,
@@ -177,8 +191,19 @@ pub fn drive(
 pub trait Scheduler {
     fn name(&self) -> &str;
 
-    /// Open an interruptible search session over `cm`, bounded by `budget`.
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a>;
+    /// Open an interruptible search session over a prepared [`EvalEngine`]
+    /// (thread pool and/or shared memo cache), bounded by `budget`.
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a>;
+
+    /// Open a session over `cm` with the default engine: serial
+    /// evaluation, fresh private memo cache.
+    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
+        self.session_engine(EvalEngine::new(cm), budget)
+    }
 
     /// Convenience wrapper: drive an unlimited session to exhaustion.
     fn schedule(&mut self, cm: &CostModel) -> ScheduleOutcome {
@@ -205,6 +230,14 @@ impl BestTracker {
     pub fn consider(&mut self, cm: &CostModel, plan: &SchedulingPlan) -> PlanEval {
         let eval = cm.evaluate(plan);
         self.evaluations += 1;
+        self.consider_eval(plan, eval.clone());
+        eval
+    }
+
+    /// Track an already-evaluated candidate without charging an
+    /// evaluation — the commit half of the engine's lookup/compute split
+    /// (cache hits and batch results both land here, in submission order).
+    pub fn consider_eval(&mut self, plan: &SchedulingPlan, eval: PlanEval) {
         let better = match &self.best_eval {
             None => true,
             Some(b) => {
@@ -214,9 +247,8 @@ impl BestTracker {
         };
         if better {
             self.best_plan = Some(plan.clone());
-            self.best_eval = Some(eval.clone());
+            self.best_eval = Some(eval);
         }
-        eval
     }
 
     /// One-shot outcome construction; sessions go through
@@ -230,42 +262,55 @@ impl BestTracker {
                 eval,
                 wall_time: started.elapsed(),
                 evaluations: self.evaluations,
+                cache_hits: 0,
             }),
             _ => Err(ScheduleError::NoPlansEvaluated),
         }
     }
 }
 
-/// Shared session state: the cost model, the incumbent tracker and the
-/// budget gate every evaluation passes through.
+/// Chunk sizing for batched evaluation: plans evaluated between two
+/// deadline checks, per pool thread. Each chunk spawns one round of
+/// scoped threads, so this must amortize the ~tens-of-microseconds spawn
+/// cost over enough provisioning searches to keep the parallel path
+/// ahead of serial — while staying small enough that a deadline cannot
+/// be overrun by a whole generation (16 evaluations per thread is
+/// low-single-digit milliseconds of work).
+const BATCH_CHUNK_PER_THREAD: usize = 16;
+
+/// Shared session state: the evaluation engine, the incumbent tracker and
+/// the budget gate every evaluation passes through.
 pub(crate) struct SessionCore<'a> {
-    cm: &'a CostModel<'a>,
+    engine: EvalEngine<'a>,
     bt: BestTracker,
     budget: Budget,
     started: Instant,
     done: bool,
     budget_stop: bool,
+    cache_hits: usize,
 }
 
 impl<'a> SessionCore<'a> {
-    pub(crate) fn new(cm: &'a CostModel<'a>, budget: Budget) -> Self {
+    pub(crate) fn new(engine: EvalEngine<'a>, budget: Budget) -> Self {
         SessionCore {
-            cm,
+            engine,
             bt: BestTracker::new(),
             budget,
             started: Instant::now(),
             done: false,
             budget_stop: false,
+            cache_hits: 0,
         }
     }
 
     pub(crate) fn cm(&self) -> &'a CostModel<'a> {
-        self.cm
+        self.engine.cm()
     }
 
     /// Evaluate a candidate unless the budget is spent. `None` means the
     /// session just became done (budget/deadline/target hit); the caller
-    /// must abandon its current unit of work.
+    /// must abandon its current unit of work. Cache hits are served free
+    /// of charge — only computed evaluations count toward the budget.
     pub(crate) fn try_consider(&mut self, plan: &SchedulingPlan) -> Option<PlanEval> {
         if self.done {
             return None;
@@ -275,7 +320,107 @@ impl<'a> SessionCore<'a> {
             self.budget_stop = true;
             return None;
         }
-        Some(self.bt.consider(self.cm, plan))
+        if let Some(hit) = self.engine.lookup(plan) {
+            self.cache_hits += 1;
+            self.bt.consider_eval(plan, hit.clone());
+            return Some(hit);
+        }
+        let eval = self.engine.compute(plan);
+        self.engine.commit(plan, &eval);
+        self.bt.evaluations += 1;
+        self.bt.consider_eval(plan, eval.clone());
+        Some(eval)
+    }
+
+    /// Batched [`try_consider`]: evaluate `plans` through the engine's
+    /// thread pool, committing results (incumbent updates, budget charges,
+    /// cache inserts) strictly in submission order — the returned vector
+    /// is bit-identical to calling `try_consider` serially, at any thread
+    /// count. Uncommitted speculative computations (a budget/target stop
+    /// landing mid-batch) are discarded *without* entering the cache, so
+    /// later charge accounting cannot diverge from serial execution.
+    /// Between chunks the whole budget — including the wall-clock
+    /// deadline, which serial evaluation checks per plan — is re-checked,
+    /// so one large batch cannot overrun a deadline by a generation.
+    ///
+    /// [`try_consider`]: SessionCore::try_consider
+    pub(crate) fn try_consider_batch(
+        &mut self,
+        plans: &[SchedulingPlan],
+    ) -> Vec<Option<PlanEval>> {
+        let mut out = Vec::with_capacity(plans.len());
+        if self.engine.threads() <= 1 {
+            // Serial engines keep the exact per-evaluation deadline
+            // granularity of the pre-batch code path.
+            for plan in plans {
+                out.push(self.try_consider(plan));
+            }
+            return out;
+        }
+        let chunk = self.engine.threads() * BATCH_CHUNK_PER_THREAD;
+        for chunk_plans in plans.chunks(chunk) {
+            if !self.done && self.budget_spent() {
+                self.done = true;
+                self.budget_stop = true;
+            }
+            if self.done {
+                out.extend(chunk_plans.iter().map(|_| None));
+                continue;
+            }
+            // Decide what actually needs computing: skip cached plans and
+            // intra-chunk duplicates (the duplicate resolves as a cache
+            // hit once its first occurrence commits), and never compute
+            // past the remaining evaluation budget — serial execution
+            // would not have either.
+            let mut to_compute: Vec<&SchedulingPlan> = Vec::new();
+            let mut slot: Vec<Option<usize>> = Vec::with_capacity(chunk_plans.len());
+            let remaining = self
+                .budget
+                .max_evaluations
+                .map(|m| m.saturating_sub(self.bt.evaluations));
+            for plan in chunk_plans {
+                if self.engine.peek(plan).is_some()
+                    || to_compute.iter().any(|p| p.assignment == plan.assignment)
+                    || remaining.is_some_and(|r| to_compute.len() >= r)
+                {
+                    slot.push(None);
+                    continue;
+                }
+                slot.push(Some(to_compute.len()));
+                to_compute.push(plan);
+            }
+            let computed = self.engine.compute_batch_refs(&to_compute);
+            for (plan, s) in chunk_plans.iter().zip(&slot) {
+                if self.done {
+                    out.push(None);
+                    continue;
+                }
+                if self.budget_spent() {
+                    self.done = true;
+                    self.budget_stop = true;
+                    out.push(None);
+                    continue;
+                }
+                if let Some(hit) = self.engine.lookup(plan) {
+                    self.cache_hits += 1;
+                    self.bt.consider_eval(plan, hit.clone());
+                    out.push(Some(hit));
+                    continue;
+                }
+                // Slot-less misses are unreachable by construction (the
+                // budget gate above fires first); compute defensively so
+                // correctness never rests on that argument.
+                let eval = match s {
+                    Some(i) => computed[*i].clone(),
+                    None => self.engine.compute(plan),
+                };
+                self.engine.commit(plan, &eval);
+                self.bt.evaluations += 1;
+                self.bt.consider_eval(plan, eval.clone());
+                out.push(Some(eval));
+            }
+        }
+        out
     }
 
     fn budget_spent(&self) -> bool {
@@ -311,8 +456,8 @@ impl<'a> SessionCore<'a> {
     /// `true` when the plan fits this session's model/pool shape — warm
     /// starts arriving after an elastic pool change may be stale.
     pub(crate) fn plan_fits(&self, plan: &SchedulingPlan) -> bool {
-        plan.num_layers() == self.cm.model.num_layers()
-            && plan.assignment.iter().all(|&t| t < self.cm.pool.num_types())
+        plan.num_layers() == self.cm().model.num_layers()
+            && plan.assignment.iter().all(|&t| t < self.cm().pool.num_types())
     }
 
     pub(crate) fn warm_start(&mut self, plan: &SchedulingPlan) {
@@ -334,6 +479,7 @@ impl<'a> SessionCore<'a> {
             incumbent_plan: self.bt.best_plan.clone(),
             incumbent_eval: self.bt.best_eval.clone(),
             evaluations: self.bt.evaluations,
+            cache_hits: self.cache_hits,
             converged: self.done,
             budget_exhausted: self.budget_stop,
         }
@@ -346,6 +492,7 @@ impl<'a> SessionCore<'a> {
                 eval: eval.clone(),
                 wall_time: self.started.elapsed(),
                 evaluations: self.bt.evaluations,
+                cache_hits: self.cache_hits,
             }),
             _ => Err(ScheduleError::NoPlansEvaluated),
         }
@@ -453,10 +600,71 @@ mod tests {
         let model = zoo::nce();
         let pool = paper_testbed();
         let cm = CostModel::new(&model, &pool, CostConfig::default());
-        let mut core = SessionCore::new(&cm, Budget::evals(0));
+        let mut core = SessionCore::new(EvalEngine::new(&cm), Budget::evals(0));
         assert!(core.try_consider(&SchedulingPlan::uniform(5, 0)).is_none());
         assert!(core.is_done());
         assert!(core.report().budget_exhausted);
         assert!(matches!(core.outcome(), Err(ScheduleError::NoPlansEvaluated)));
+    }
+
+    #[test]
+    fn cache_hits_are_reported_and_not_charged() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        let mut core = SessionCore::new(EvalEngine::new(&cm), Budget::evals(2));
+        let plan = SchedulingPlan::uniform(5, 0);
+        let first = core.try_consider(&plan).unwrap();
+        let second = core.try_consider(&plan).unwrap();
+        assert_eq!(first.cost_usd.to_bits(), second.cost_usd.to_bits());
+        let report = core.report();
+        assert_eq!(report.evaluations, 1, "the revisit must not be charged");
+        assert_eq!(report.cache_hits, 1);
+        // The freed budget still buys a fresh evaluation.
+        assert!(core.try_consider(&SchedulingPlan::uniform(5, 1)).is_some());
+        assert_eq!(core.report().evaluations, 2);
+    }
+
+    #[test]
+    fn batched_consideration_matches_serial_commit_order() {
+        let model = zoo::nce();
+        let pool = paper_testbed();
+        let cm = CostModel::new(&model, &pool, CostConfig::default());
+        // 6 plans (one duplicated) under a 4-eval budget, serial vs 4
+        // threads: identical results, charges and incumbent.
+        let plans: Vec<SchedulingPlan> = vec![
+            SchedulingPlan::new(vec![0, 0, 1, 1, 1]),
+            SchedulingPlan::uniform(5, 0),
+            SchedulingPlan::new(vec![0, 0, 1, 1, 1]), // intra-batch revisit
+            SchedulingPlan::new(vec![1, 0, 1, 0, 1]),
+            SchedulingPlan::uniform(5, 1),
+            SchedulingPlan::new(vec![0, 1, 1, 1, 0]),
+        ];
+        let run = |threads: usize| {
+            let engine = EvalEngine::new(&cm).with_threads(threads);
+            let mut core = SessionCore::new(engine, Budget::evals(4));
+            let results = core.try_consider_batch(&plans);
+            (results, core.report())
+        };
+        let (serial, serial_report) = run(1);
+        let (batched, batched_report) = run(4);
+        assert_eq!(serial.len(), batched.len());
+        for (s, b) in serial.iter().zip(&batched) {
+            match (s, b) {
+                (None, None) => {}
+                (Some(se), Some(be)) => {
+                    assert_eq!(se.cost_usd.to_bits(), be.cost_usd.to_bits());
+                }
+                other => panic!("serial/batched divergence: {other:?}"),
+            }
+        }
+        assert_eq!(serial_report.evaluations, batched_report.evaluations);
+        assert_eq!(serial_report.cache_hits, batched_report.cache_hits);
+        assert_eq!(serial_report.evaluations, 4);
+        assert_eq!(serial_report.cache_hits, 1);
+        assert_eq!(
+            serial_report.incumbent_plan, batched_report.incumbent_plan,
+            "incumbent trajectory must not depend on the thread count"
+        );
     }
 }

@@ -17,8 +17,8 @@
 pub mod policy;
 
 use super::{
-    session_delegate, session_warm_start, Budget, Scheduler, SearchSession, SessionCore,
-    StepReport,
+    session_delegate, session_warm_start, Budget, EvalEngine, Scheduler, SearchSession,
+    SessionCore, StepReport,
 };
 use crate::cost::CostModel;
 use crate::plan::SchedulingPlan;
@@ -112,13 +112,25 @@ impl RlScheduler {
     /// Open a concretely-typed session (the trait object path goes through
     /// [`Scheduler::session`]; this one keeps the policy extractable).
     pub fn open_session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> RlSession<'a> {
+        self.open_session_engine(EvalEngine::new(cm), budget)
+    }
+
+    /// [`open_session`] over a caller-prepared evaluation engine.
+    ///
+    /// [`open_session`]: RlScheduler::open_session
+    pub fn open_session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> RlSession<'a> {
         let mut rng = Rng::new(self.seed);
         let pol = make_policy(self.kind, &mut rng);
+        let feats = featurize(engine.cm());
         RlSession {
-            core: SessionCore::new(cm, budget),
+            core: SessionCore::new(engine, budget),
             cfg: self.cfg.clone(),
             label: self.label,
-            feats: featurize(cm),
+            feats,
             pol,
             rng,
             baseline: Ema::new(self.cfg.baseline_gamma),
@@ -148,8 +160,12 @@ impl Scheduler for RlScheduler {
         self.label
     }
 
-    fn session<'a>(&self, cm: &'a CostModel<'a>, budget: Budget) -> Box<dyn SearchSession + 'a> {
-        Box::new(self.open_session(cm, budget))
+    fn session_engine<'a>(
+        &self,
+        engine: EvalEngine<'a>,
+        budget: Budget,
+    ) -> Box<dyn SearchSession + 'a> {
+        Box::new(self.open_session_engine(engine, budget))
     }
 }
 
@@ -203,14 +219,23 @@ impl RlSession<'_> {
     }
 
     /// One Algorithm 1 round: sample `N` plans, score, update the policy.
-    /// A budget hit mid-round abandons the partial batch without updating.
+    /// Sampling stays serial (the rng sequence is the deterministic
+    /// contract); scoring goes through one engine batch — repeated
+    /// rollouts of plans the policy already proposed are uncharged cache
+    /// hits. A budget hit mid-round abandons the partial batch without
+    /// updating.
     fn run_round(&mut self) {
         let probs = self.pol.probs(&self.feats);
+        let sampled: Vec<Vec<usize>> = (0..self.cfg.samples_per_round)
+            .map(|_| sample_actions(&probs, &mut self.rng))
+            .collect();
+        let plans: Vec<SchedulingPlan> =
+            sampled.iter().map(|a| SchedulingPlan::new(a.clone())).collect();
+        let results = self.core.try_consider_batch(&plans);
         let mut rewards = Vec::with_capacity(self.cfg.samples_per_round);
         let mut actions_batch = Vec::with_capacity(self.cfg.samples_per_round);
-        for _ in 0..self.cfg.samples_per_round {
-            let actions = sample_actions(&probs, &mut self.rng);
-            match self.core.try_consider(&SchedulingPlan::new(actions.clone())) {
+        for (actions, result) in sampled.into_iter().zip(results) {
+            match result {
                 // Alg 1 line 5: R_n <- Cost(SP); we ascend -cost.
                 Some(eval) => {
                     rewards.push(-eval.cost_usd);
@@ -344,8 +369,11 @@ mod tests {
         let cm = cm(&model, &pool);
         let cfg = RlConfig { rounds: 10, samples_per_round: 4, ..Default::default() };
         let out = RlScheduler::tabular(cfg, 1).schedule(&cm);
-        // rounds*samples + warm starts (2 uniform + 1 split) + final decode.
-        assert_eq!(out.evaluations, 10 * 4 + 2 + 1 + 1);
+        // rounds*samples + warm starts (2 uniform + 1 split) + final
+        // decode; re-sampled plans are uncharged cache hits, so charged +
+        // cached covers every consideration.
+        assert_eq!(out.evaluations + out.cache_hits, 10 * 4 + 2 + 1 + 1);
+        assert!(out.evaluations <= 32, "nce x paper_testbed has 32 distinct plans");
     }
 
     #[test]

@@ -256,7 +256,9 @@ impl SchedulerSpec {
         let mut spec = Self::by_method(method)?;
         for key in &keys {
             let short = &key["scheduler.".len()..];
-            if short == "method" {
+            // `eval_threads` configures the evaluation engine (see
+            // `sched::eval`), not the method; the CLI reads it directly.
+            if short == "method" || short == "eval_threads" {
                 continue;
             }
             let value = cfg.get(key).expect("key listed under prefix");
@@ -558,6 +560,13 @@ mod tests {
         let cfg = Config::parse(&spec.to_toml()).unwrap();
         let back = SchedulerSpec::from_config(&cfg).unwrap().unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn config_eval_threads_is_engine_config_not_a_method_option() {
+        let cfg = Config::parse("[scheduler]\nmethod = \"greedy\"\neval_threads = 4\n").unwrap();
+        let spec = SchedulerSpec::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(spec, SchedulerSpec::Greedy);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Integration tests for the shared evaluation engine (DESIGN.md
+//! §Eval-Engine): the cross-method thread-count determinism suite, the
+//! incremental-vs-full bit-equality property, cache/budget semantics and
+//! the between-chunk deadline gate.
+
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::resources::{paper_testbed, simulated_types};
+use heterps::sched::{self, registry, Budget, EvalCache, EvalEngine, SchedulerSpec};
+use heterps::util::propcheck;
+use std::time::Duration;
+
+/// The acceptance bar of the engine: for seeds {1, 42} on `ctrdnn` +
+/// `paper_testbed`, every registered method driven under a 200-evaluation
+/// budget produces a bit-identical outcome — plan, cost, charged
+/// evaluations and cache hits — at 1 and 8 eval threads. Parallelism may
+/// only change wall-clock, never what the search does.
+#[test]
+fn every_method_is_bit_identical_across_eval_thread_counts() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for seed in [1u64, 42] {
+        for info in registry() {
+            let spec = SchedulerSpec::parse(info.canonical).unwrap();
+            let run = |threads: usize| {
+                let scheduler = spec.build(seed);
+                let engine = EvalEngine::new(&cm).with_threads(threads);
+                let mut session = scheduler.session_engine(engine, Budget::evals(200));
+                sched::drive(session.as_mut(), None).unwrap_or_else(|e| {
+                    panic!("{} seed {seed} t={threads}: {e}", info.canonical)
+                })
+            };
+            let serial = run(1);
+            let parallel = run(8);
+            assert_eq!(
+                serial.plan, parallel.plan,
+                "{} seed {seed}: plan differs across thread counts",
+                info.canonical
+            );
+            assert_eq!(
+                serial.eval.cost_usd.to_bits(),
+                parallel.eval.cost_usd.to_bits(),
+                "{} seed {seed}: cost differs across thread counts",
+                info.canonical
+            );
+            assert_eq!(
+                serial.eval.provisioning, parallel.eval.provisioning,
+                "{} seed {seed}: provisioning differs",
+                info.canonical
+            );
+            assert_eq!(
+                (serial.evaluations, serial.cache_hits),
+                (parallel.evaluations, parallel.cache_hits),
+                "{} seed {seed}: evaluation accounting differs",
+                info.canonical
+            );
+        }
+    }
+}
+
+/// Incremental delta-evaluation must match the full evaluator bit-for-bit
+/// across random plans and random 1–3 gene mutations: the reused profiles
+/// are pure functions of their spans, so no drift is tolerable.
+#[test]
+fn prop_incremental_delta_matches_full_evaluation() {
+    let model = zoo::matchnet();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let nl = model.num_layers();
+    propcheck::check_result(
+        0xDE17A,
+        128,
+        |rng| {
+            let base: Vec<usize> = (0..nl).map(|_| rng.below(4)).collect();
+            let mut mutated = base.clone();
+            for _ in 0..1 + rng.below(3) {
+                let pos = rng.below(nl);
+                mutated[pos] = rng.below(4);
+            }
+            (base, mutated)
+        },
+        |(base, mutated)| {
+            let base_plan = SchedulingPlan::new(base.clone());
+            let mutated_plan = SchedulingPlan::new(mutated.clone());
+            let stages = base_plan.stages();
+            let profs = cm.stage_profiles(&stages);
+            let full = cm.evaluate(&mutated_plan);
+            let delta = cm.evaluate_delta(&mutated_plan, &stages, &profs);
+            if full.cost_usd.to_bits() != delta.cost_usd.to_bits() {
+                return Err(format!(
+                    "cost diverged: full {} vs delta {}",
+                    full.cost_usd, delta.cost_usd
+                ));
+            }
+            if full.throughput.to_bits() != delta.throughput.to_bits() {
+                return Err("throughput diverged".into());
+            }
+            if full.train_time_secs.to_bits() != delta.train_time_secs.to_bits() {
+                return Err("train time diverged".into());
+            }
+            if full.feasible != delta.feasible || full.provisioning != delta.provisioning {
+                return Err("provisioning diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A shared cache spans sessions: what one session evaluated, a later
+/// session over an equal context gets as uncharged hits. This is the
+/// elastic-controller / cluster-admission reuse path.
+#[test]
+fn shared_cache_makes_a_rerun_nearly_free() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let spec = SchedulerSpec::parse("greedy").unwrap();
+    let cache = EvalCache::new();
+
+    let first = {
+        let scheduler = spec.build(7);
+        let engine = EvalEngine::new(&cm).with_cache(cache.clone());
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        sched::drive(session.as_mut(), None).unwrap()
+    };
+    assert!(first.evaluations > 0);
+    assert_eq!(first.cache_hits, 0, "greedy never revisits a plan on ctrdnn");
+
+    // Greedy is deterministic: the rerun replays the identical plan
+    // sequence, so every evaluation is served from the shared cache.
+    let second = {
+        let scheduler = spec.build(7);
+        let engine = EvalEngine::new(&cm).with_cache(cache.clone());
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        sched::drive(session.as_mut(), None).unwrap()
+    };
+    assert_eq!(second.plan, first.plan);
+    assert_eq!(second.evaluations, 0, "rerun must be fully cached");
+    assert_eq!(second.cache_hits, first.evaluations);
+    assert_eq!(cache.stats().charged, first.evaluations as u64);
+
+    // A different floor is a different context: no cross-contamination.
+    let tighter = CostConfig {
+        throughput_limit: CostConfig::default().throughput_limit * 2.0,
+        ..CostConfig::default()
+    };
+    let cm_tight = CostModel::new(&model, &pool, tighter);
+    let third = {
+        let scheduler = spec.build(7);
+        let engine = EvalEngine::new(&cm_tight).with_cache(cache.clone());
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        sched::drive(session.as_mut(), None).unwrap()
+    };
+    assert!(third.evaluations > 0, "a new floor must not reuse stale evaluations");
+}
+
+/// Cache hits are not charged against the evaluation budget, so a
+/// warm-started session whose candidates were already scored keeps its
+/// whole budget for fresh plans.
+#[test]
+fn cache_hits_do_not_consume_the_budget() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let cache = EvalCache::new();
+    let warm_plan = SchedulingPlan::new(
+        model.layers.iter().map(|l| if l.kind.data_intensive() { 0 } else { 1 }).collect(),
+    );
+    // Pre-score the warm plan through an engine on the shared cache.
+    EvalEngine::new(&cm).with_cache(cache.clone()).evaluate(&warm_plan);
+
+    let spec = SchedulerSpec::parse("genetic").unwrap();
+    let scheduler = spec.build(11);
+    let engine = EvalEngine::new(&cm).with_cache(cache.clone());
+    let mut session = scheduler.session_engine(engine, Budget::evals(1));
+    session.warm_start(&warm_plan); // hit: budget still untouched
+    let out = sched::drive(session.as_mut(), None).unwrap();
+    assert!(out.cache_hits >= 1);
+    assert_eq!(out.evaluations, 1, "the single budgeted evaluation goes to a fresh plan");
+}
+
+/// The deadline gate fires between batch chunks too: an already-expired
+/// deadline stops a parallel batched session before any evaluation, just
+/// like the serial path.
+#[test]
+fn expired_deadline_stops_parallel_batches_before_any_work() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for spec_str in ["genetic", "bf", "rl-tabular"] {
+        let scheduler = SchedulerSpec::parse(spec_str).unwrap().build(3);
+        let engine = EvalEngine::new(&cm).with_threads(8);
+        let mut session = scheduler
+            .session_engine(engine, Budget::unlimited().with_deadline(Duration::ZERO));
+        let result = sched::drive(session.as_mut(), None);
+        assert!(result.is_err(), "{spec_str}: expired deadline must yield no plans");
+        assert_eq!(session.evaluations(), 0, "{spec_str}");
+        assert!(session.report().budget_exhausted, "{spec_str}");
+    }
+}
+
+/// `schedule()` still equals a manually driven parallel session for a
+/// stochastic method — the engine default path and the explicit path
+/// share one deterministic contract.
+#[test]
+fn parallel_session_reproduces_schedule_for_stochastic_methods() {
+    let model = zoo::ctrdnn();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for spec_str in ["rl-tabular:rounds=15", "genetic:gens=6", "bo:iters=10"] {
+        let spec = SchedulerSpec::parse(spec_str).unwrap();
+        let one_shot = spec.build(42).schedule(&cm);
+        let scheduler = spec.build(42);
+        let engine = EvalEngine::new(&cm).with_threads(4);
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        let stepped = sched::drive(session.as_mut(), None).unwrap();
+        assert_eq!(stepped.plan, one_shot.plan, "{spec_str}");
+        assert_eq!(stepped.evaluations, one_shot.evaluations, "{spec_str}");
+        assert_eq!(stepped.cache_hits, one_shot.cache_hits, "{spec_str}");
+        assert_eq!(
+            stepped.eval.cost_usd.to_bits(),
+            one_shot.eval.cost_usd.to_bits(),
+            "{spec_str}"
+        );
+    }
+}

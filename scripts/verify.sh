@@ -5,7 +5,10 @@
 # 2. a budgeted `heterps schedule` invocation for every method the
 #    registry exposes (via `heterps methods`), so a scheduler that is
 #    registered but broken — wrong name, panicking session, spec that
-#    does not parse — fails fast here instead of in a bench;
+#    does not parse — fails fast here instead of in a bench; plus the
+#    eval-engine determinism gate: the same budgeted schedule at
+#    `--eval-threads 1` and `--eval-threads 4`, diffed (modulo the
+#    wall-clock line) — parallel evaluation must be bit-identical;
 # 3. a short `heterps elastic` episode (spike trace, small adaptation
 #    budget, all three policies) for every method, guarding the
 #    trace-driven autoscaling path;
@@ -56,6 +59,23 @@ for method in $("$BIN" methods); do
   "$BIN" schedule "$method" --model nce --types 2 --budget-evals 200 >/dev/null
 done
 
+echo "== eval-engine smoke: --eval-threads {1,4} must be bit-identical"
+# The engine commits batched evaluations in submission order, so the only
+# line allowed to differ across thread counts is the wall-clock one.
+EVAL_TMP="$(mktemp -d)"
+trap 'rm -rf "$EVAL_TMP"' EXIT
+for method in genetic rl-tabular greedy bf; do
+  echo "   -- $method"
+  "$BIN" schedule "$method" --model ctrdnn --types 2 --budget-evals 300 \
+    --eval-threads 1 | grep -v "sched time" > "$EVAL_TMP/$method.t1.txt"
+  "$BIN" schedule "$method" --model ctrdnn --types 2 --budget-evals 300 \
+    --eval-threads 4 | grep -v "sched time" > "$EVAL_TMP/$method.t4.txt"
+  if ! diff -u "$EVAL_TMP/$method.t1.txt" "$EVAL_TMP/$method.t4.txt"; then
+    echo "error: $method is not bit-identical across --eval-threads settings" >&2
+    exit 1
+  fi
+done
+
 echo "== elastic smoke: short trace episode (all policies) per method"
 # A broken adaptation path — trace that fails validation, a session that
 # panics mid-episode, a policy that never converges — fails here instead
@@ -82,7 +102,7 @@ echo "   -- tiered backend, staleness 0"
 
 echo "== cluster smoke: 4-job mix, every policy, bit-determinism across reruns"
 CLUSTER_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP"' EXIT
 for policy in fifo srtf drf-cost; do
   echo "   -- policy $policy"
   "$BIN" cluster --jobs 4 --mix uniform --policy "$policy" --method greedy \
