@@ -213,23 +213,15 @@ fn main() {
 
     table.emit("perf_hotpath");
 
-    // Machine-readable artifact for EXPERIMENTS.md §Perf tracking.
-    let json = {
-        let mut out = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"rows\": [\n");
-        for (i, (name, mean, std, unit)) in rows_json.iter().enumerate() {
-            let esc = name.replace('\\', "\\\\").replace('"', "\\\"");
-            out.push_str(&format!(
-                "    {{\"op\": \"{esc}\", \"mean\": {mean:.6}, \"std\": {std:.6}, \"unit\": \"{unit}\"}}{}\n",
-                if i + 1 < rows_json.len() { "," } else { "" }
-            ));
-        }
-        out.push_str("  ]\n}\n");
-        out
-    };
-    if std::fs::create_dir_all("results").is_ok() {
-        match std::fs::write("results/BENCH_perf.json", &json) {
-            Ok(()) => println!("[results] wrote results/BENCH_perf.json"),
-            Err(e) => eprintln!("warn: could not write results/BENCH_perf.json: {e}"),
-        }
+    // Machine-readable artifact for EXPERIMENTS.md §Perf tracking. The
+    // merge keeps other benches' rows (serve_stream shares the file).
+    let rows: Vec<heterps::metrics::BenchRow> = rows_json
+        .iter()
+        .map(|(name, mean, std, unit)| heterps::metrics::BenchRow::new(name, *mean, *std, unit))
+        .collect();
+    let path = std::path::Path::new("results/BENCH_perf.json");
+    match heterps::metrics::merge_bench_rows(path, "perf_hotpath", &rows) {
+        Ok(()) => println!("[results] wrote results/BENCH_perf.json"),
+        Err(e) => eprintln!("warn: could not write results/BENCH_perf.json: {e}"),
     }
 }

@@ -1,0 +1,121 @@
+//! §Serve throughput bench: the streaming admission daemon end to end.
+//!
+//! A 1k-job steady stream on the 48-core contention pool, greedy
+//! admissions: measure sustained admission throughput (decisions/sec)
+//! and the decision-latency quantiles with the probe off and on, plus
+//! the JSONL codec on a 10k-line stream. Every timed run must land on
+//! the same admission digest — the bench doubles as a determinism check
+//! at a scale the unit tests don't reach.
+//!
+//! Rows land in EXPERIMENTS.md §Serve and, machine-readably, in
+//! `results/BENCH_perf.json` under the `serve_stream` bench (merged
+//! alongside perf_hotpath's rows).
+
+mod common;
+
+use heterps::cluster::{steady_mix, tight_pool, ClusterConfig};
+use heterps::metrics::{merge_bench_rows, BenchRow, Table};
+use heterps::sched::SchedulerSpec;
+use heterps::serve::{self, parse_stream, render_stream, ClockMode, ProbeConfig, ServeConfig};
+
+fn main() {
+    let pool = tight_pool();
+    let seed = 42u64;
+    let queue = steady_mix(1_000, seed, 20_000.0);
+    let cfg = |probe: Option<ProbeConfig>| ServeConfig {
+        cluster: ClusterConfig {
+            spec: SchedulerSpec::parse("greedy").unwrap(),
+            admit_budget_evals: 32,
+            ..Default::default()
+        },
+        policy: "drf-cost".to_string(),
+        probe,
+        clock: ClockMode::Virtual,
+        progress_every: 0,
+    };
+
+    let mut table = Table::new("§Serve — streaming admission", &["op", "mean", "std", "unit"]);
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let mut row = |table: &mut Table, name: &str, mean: f64, std: f64, unit: &str| {
+        table.row(&[name.to_string(), format!("{mean:.3}"), format!("{std:.3}"), unit.to_string()]);
+        rows.push(BenchRow::new(name, mean, std, unit));
+    };
+
+    // Probe off: the baseline serial daemon.
+    let plain = cfg(None);
+    let mut digest = None;
+    let mut last = None;
+    let (m, s) = common::time_it(1, 5, || {
+        let out = serve::run_serve(&pool, &queue, &plain, seed).unwrap();
+        match digest {
+            None => digest = Some(out.admission_digest),
+            Some(d) => assert_eq!(d, out.admission_digest, "serve run not deterministic"),
+        }
+        last = Some(out);
+    });
+    let out = last.take().expect("at least one run");
+    row(&mut table, "serve.run 1k jobs (probe off)", m, s, "s");
+    row(
+        &mut table,
+        "serve.admission_throughput (probe off)",
+        out.decisions_per_sec,
+        0.0,
+        "decisions/s",
+    );
+    row(&mut table, "serve.decision_latency p50", out.report.lat_p50_us as f64, 0.0, "us");
+    row(&mut table, "serve.decision_latency p95", out.report.lat_p95_us as f64, 0.0, "us");
+    row(&mut table, "serve.decision_latency p99", out.report.lat_p99_us as f64, 0.0, "us");
+
+    // Probe on: self-tuned concurrency, digest must not move.
+    let probed = cfg(Some(ProbeConfig { window: 16, ..Default::default() }));
+    let mut last = None;
+    let (m, s) = common::time_it(1, 5, || {
+        let out = serve::run_serve(&pool, &queue, &probed, seed).unwrap();
+        assert_eq!(
+            digest,
+            Some(out.admission_digest),
+            "the probe perturbed admission decisions"
+        );
+        last = Some(out);
+    });
+    let out = last.take().expect("at least one run");
+    let p = out.probe.as_ref().expect("probe summary");
+    row(
+        &mut table,
+        &format!(
+            "serve.run 1k jobs (probe on, threads {} -> {})",
+            p.initial_threads, p.final_threads
+        ),
+        m,
+        s,
+        "s",
+    );
+    row(
+        &mut table,
+        "serve.admission_throughput (probe on)",
+        out.decisions_per_sec,
+        0.0,
+        "decisions/s",
+    );
+
+    // The JSONL codec on a 10k-line stream.
+    let big = steady_mix(10_000, seed, 20_000.0);
+    let text = render_stream(&big);
+    let lines = text.lines().count() as f64;
+    let (m, s) = common::time_it(2, 10, || {
+        std::hint::black_box(parse_stream(&text).unwrap().len());
+    });
+    row(&mut table, "serve.stream_parse 10k lines", m / lines * 1e6, s / lines * 1e6, "us/line");
+    let (m, s) = common::time_it(2, 10, || {
+        std::hint::black_box(render_stream(&big).len());
+    });
+    row(&mut table, "serve.stream_render 10k lines", m / lines * 1e6, s / lines * 1e6, "us/line");
+
+    table.emit("serve_stream");
+
+    let path = std::path::Path::new("results/BENCH_perf.json");
+    match merge_bench_rows(path, "serve_stream", &rows) {
+        Ok(()) => println!("[results] wrote results/BENCH_perf.json"),
+        Err(e) => eprintln!("warn: could not write results/BENCH_perf.json: {e}"),
+    }
+}

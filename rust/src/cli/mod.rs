@@ -101,6 +101,39 @@ pub fn pool_from_args(
     Ok(crate::resources::simulated_types(n_types, include_cpu))
 }
 
+/// Base cost-model parameters from a config file's `[cost]` section over
+/// the defaults. Shared by `schedule`/`compare`/`simulate`/`elastic`,
+/// `cluster` and `serve` so `[cost]` keys reach every subcommand
+/// uniformly (callers layer per-command overrides like `--throughput` on
+/// top).
+pub fn cost_from_file(file: Option<&crate::config::Config>) -> crate::cost::CostConfig {
+    let mut cfg = crate::cost::CostConfig::default();
+    if let Some(c) = file {
+        cfg.batch_size = c.usize_or("cost.batch_size", cfg.batch_size as usize) as u64;
+        cfg.profile_batch = c.usize_or("cost.profile_batch", cfg.profile_batch as usize) as u64;
+        cfg.throughput_limit = c.f64_or("cost.throughput_limit", cfg.throughput_limit);
+        cfg.infeasible_penalty = c.f64_or("cost.infeasible_penalty", cfg.infeasible_penalty);
+    }
+    cfg
+}
+
+/// Evaluation-thread count: `--eval-threads` wins, then the config
+/// file's `[scheduler] eval_threads`, then serial — clamped to at
+/// least 1. Shared by every eval-engine-driving subcommand.
+pub fn eval_threads_from(
+    args: &Args,
+    file: Option<&crate::config::Config>,
+) -> Result<usize, CliError> {
+    let threads = match args.opt_usize("eval-threads")? {
+        Some(t) => t,
+        None => match file {
+            Some(c) => c.usize_or("scheduler.eval_threads", 1),
+            None => 1,
+        },
+    };
+    Ok(threads.max(1))
+}
+
 /// Error from parsing.
 #[derive(Debug, thiserror::Error)]
 pub enum CliError {
@@ -299,6 +332,24 @@ mod tests {
         // Unparseable --types errors instead of silently defaulting.
         let bad = cli().parse(&sv(&["schedule", "--types", "zzz"])).unwrap();
         assert!(pool_from_args(&bad, None).is_err());
+    }
+
+    #[test]
+    fn cost_and_threads_merge_cli_and_config() {
+        let cfg = crate::config::Config::parse(
+            "[cost]\nbatch_size = 4096\n[scheduler]\neval_threads = 6\n",
+        )
+        .unwrap();
+        let cost = cost_from_file(Some(&cfg));
+        assert_eq!(cost.batch_size, 4096);
+        let default = crate::cost::CostConfig::default();
+        assert_eq!(cost.profile_batch, default.profile_batch);
+        assert_eq!(cost_from_file(None).batch_size, default.batch_size);
+
+        // No CLI value: the config file's scheduler section applies.
+        let args = cli().parse(&sv(&["schedule"])).unwrap();
+        assert_eq!(eval_threads_from(&args, Some(&cfg)).unwrap(), 6);
+        assert_eq!(eval_threads_from(&args, None).unwrap(), 1);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!   then a train of short small-footprint jobs arrives. FIFO's
 //!   head-of-line blocking starves the small jobs behind the blocked
 //!   big one; DRF admits them around it and SRTF additionally preempts —
-//!   the separation `fig15_cluster` asserts.
+//!   the separation `fig15_cluster` asserts;
+//! * [`steady_mix`] — a long sustained stream of small NCE jobs with
+//!   exponential inter-arrivals, sized so the [`tight_pool`] stays busy
+//!   but the queue stays short. The serve daemon's default generator:
+//!   10k-job streams finish in bounded virtual (and test) time.
 
 use crate::model::{zoo, ModelSpec};
 use crate::resources::{paper_testbed, ResourcePool};
@@ -203,9 +207,40 @@ pub fn tight_mix(n: usize, seed: u64, base_floor: f64) -> JobQueue {
     JobQueue::from_jobs(jobs)
 }
 
+/// The sustained-stream mix for the serve daemon: `n` small NCE jobs
+/// with exponential inter-arrivals (mean 300 s), floors at 30–70% of the
+/// base and 4–10 minutes of work each. On the [`tight_pool`] with the
+/// default 20k base floor each job needs ~3–8 of the 48 cores and the
+/// offered load averages well under capacity, so the cluster stays busy
+/// while the waiting queue stays short — the regime where a 10k-job
+/// stream drains in bounded time. Deterministic in
+/// `(n, seed, base_floor)`.
+pub fn steady_mix(n: usize, seed: u64, base_floor: f64) -> JobQueue {
+    assert!(n >= 1, "a job mix needs at least one job");
+    let mut rng = Rng::new(seed ^ 0x57EA_D75E_11A3_0F2B);
+    let mut at = 0.0f64;
+    let mut jobs = Vec::with_capacity(n);
+    for i in 0..n {
+        let floor = base_floor * (0.3 + 0.4 * rng.f64());
+        let samples = floor * (240.0 + 360.0 * rng.f64());
+        jobs.push(Job {
+            id: i,
+            name: format!("stream-{i}"),
+            model: zoo::nce(),
+            sla_floor: floor,
+            arrival_secs: at,
+            total_samples: samples,
+        });
+        // Inverse-CDF exponential draw; 1 - f64() keeps the log argument
+        // in (0, 1].
+        at += -(1.0 - rng.f64()).ln() * 300.0;
+    }
+    JobQueue::from_jobs(jobs)
+}
+
 /// Names of the bundled mixes, CLI order.
 pub fn mix_names() -> &'static [&'static str] {
-    &["uniform", "tight"]
+    &["uniform", "tight", "steady"]
 }
 
 /// Construct a bundled mix by name.
@@ -213,6 +248,7 @@ pub fn mix_by_name(name: &str, n: usize, seed: u64, base_floor: f64) -> Option<J
     match name {
         "uniform" => Some(uniform_mix(n, seed, base_floor)),
         "tight" => Some(tight_mix(n, seed, base_floor)),
+        "steady" => Some(steady_mix(n, seed, base_floor)),
         _ => None,
     }
 }
@@ -250,6 +286,23 @@ mod tests {
             assert!(small.arrival_secs > q.jobs[1].arrival_secs);
             assert!(small.sla_floor < q.jobs[0].sla_floor);
         }
+    }
+
+    #[test]
+    fn steady_mix_is_a_light_sustained_stream() {
+        let q = steady_mix(200, 11, 20_000.0);
+        q.validate().unwrap();
+        // Offered load: mean service * floor-share per job over mean
+        // inter-arrival must leave slack on the 48-core pool — every
+        // floor below 70% of base, every job under 10 minutes of work.
+        for j in &q.jobs {
+            assert!(j.sla_floor >= 0.3 * 20_000.0 && j.sla_floor <= 0.7 * 20_000.0);
+            let svc = j.ideal_service_secs();
+            assert!((240.0..=600.0).contains(&svc), "service {svc}");
+        }
+        // Exponential arrivals actually spread out (not all at t=0).
+        let span = q.jobs.last().unwrap().arrival_secs;
+        assert!(span > 200.0 * 100.0, "arrival span {span} too tight");
     }
 
     #[test]

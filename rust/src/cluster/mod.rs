@@ -13,9 +13,9 @@
 //! * [`job`] — a [`Job`] wraps a [`ModelSpec`](crate::model::ModelSpec)
 //!   with a throughput SLA, an arrival time and a total sample count; a
 //!   [`JobQueue`] is the arrival-ordered mix fed to the simulator.
-//!   Bundled deterministic mixes (`uniform`, `tight`) and the small
-//!   single-type [`tight_pool`] ship the contention scenarios the bench
-//!   compares.
+//!   Bundled deterministic mixes (`uniform`, `tight`, and the
+//!   long-stream `steady`) and the small single-type [`tight_pool`] ship
+//!   the contention scenarios the bench compares.
 //! * [`policy`] — the [`ClusterPolicy`] trait plus three implementations:
 //!   `fifo` (admit strictly in arrival order, head-of-line blocking),
 //!   `srtf` (shortest-remaining-service-first, preempting the
@@ -46,9 +46,11 @@ pub mod job;
 pub mod policy;
 pub mod sim;
 
-pub use job::{mix_by_name, mix_names, tight_mix, tight_pool, uniform_mix, Job, JobQueue};
+pub use job::{
+    mix_by_name, mix_names, steady_mix, tight_mix, tight_pool, uniform_mix, Job, JobQueue,
+};
 pub use policy::{policy_by_name, policy_names, ClusterPolicy};
 pub use sim::{
-    emit_reports, run_all_policies, run_cluster, ClusterConfig, ClusterReport, EventKind,
-    EventRecord, JobRecord,
+    emit_reports, run_all_policies, run_cluster, ClusterConfig, ClusterReport, ClusterSim,
+    EventKind, EventRecord, JobRecord, LAT_BUCKET_US,
 };

@@ -28,13 +28,24 @@
 //! * **Determinism.** All randomness (admission search, straggler draws)
 //!   derives from the cluster seed; two runs of the same
 //!   `(pool, queue, config, seed)` produce bit-identical reports.
+//! * **Streaming.** The simulator core is the public [`ClusterSim`]:
+//!   jobs are fed one at a time with [`ClusterSim::add_job`] and events
+//!   are pumped with [`ClusterSim::step`]/[`ClusterSim::run_until`], so a
+//!   long-running driver (the `serve` daemon, DESIGN.md §Serve) can
+//!   interleave arrivals from an external stream with event processing.
+//!   [`run_cluster`] is now a thin batch driver over the same steps:
+//!   enqueue every arrival, drain, report. Admission-decision latency
+//!   (wall-clock per admission session) is recorded into a
+//!   [`Histogram`] and reported as p50/p95/p99; being wall-clock, those
+//!   fields are excluded from the deterministic summary tables.
 
 use std::collections::BinaryHeap;
+use std::time::Instant;
 
-use super::job::JobQueue;
+use super::job::{Job, JobQueue};
 use super::policy::{ClusterPolicy, RequestProfile, Running, Waiting};
 use crate::cost::{CostConfig, CostModel};
-use crate::metrics::Histogram;
+use crate::metrics::{quantile_of, Histogram};
 use crate::plan::{canonical_split_plan, SchedulingPlan};
 use crate::resources::ResourcePool;
 use crate::sched::{
@@ -210,6 +221,19 @@ pub struct ClusterReport {
     /// Time-weighted mean $-utilization in [0, 1] over the event span.
     pub mean_util: f64,
     pub rejected: usize,
+    /// Admission sessions run (arrival profiling + every admission
+    /// attempt). Deterministic per `(pool, stream, config, seed)`.
+    pub decisions: u64,
+    /// Mean wall-clock admission-decision latency in microseconds.
+    /// Wall-clock, so *not* part of the determinism contract — two
+    /// identical runs agree on every field above but not on these.
+    pub lat_mean_us: f64,
+    /// Admission-decision latency quantiles in microseconds
+    /// (nearest-rank over [`LAT_BUCKET_US`]-wide buckets; 0 when no
+    /// decisions were made).
+    pub lat_p50_us: u64,
+    pub lat_p95_us: u64,
+    pub lat_p99_us: u64,
 }
 
 impl ClusterReport {
@@ -246,7 +270,7 @@ impl ClusterReport {
     }
 
     /// Column headers matching [`ClusterReport::summary_row`].
-    pub const SUMMARY_COLUMNS: [&'static str; 10] = [
+    pub const SUMMARY_COLUMNS: [&'static str; 11] = [
         "policy",
         "mean JCT (s)",
         "mean queue (s)",
@@ -256,8 +280,16 @@ impl ClusterReport {
         "evals",
         "cached",
         "rejected",
+        "util p90",
         "util deciles",
     ];
+
+    /// The p90 of the per-interval utilization deciles, as a fraction in
+    /// [0, 1] — a deterministic quantile (virtual-clock weighted), unlike
+    /// the wall-clock latency quantiles.
+    pub fn util_p90(&self) -> Option<f64> {
+        quantile_of(&self.util_deciles, 0.9).map(|d| d as f64 / 10.0)
+    }
 
     pub fn summary_row(&self) -> Vec<String> {
         vec![
@@ -270,6 +302,7 @@ impl ClusterReport {
             self.total_evaluations.to_string(),
             self.total_cached.to_string(),
             self.rejected.to_string(),
+            self.util_p90().map_or_else(|| "-".to_string(), |u| format!("{u:.1}")),
             self.util_render.clone(),
         ]
     }
@@ -278,7 +311,7 @@ impl ClusterReport {
 /// A pending event on the virtual clock.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Pending {
-    Arrival { queue_idx: usize },
+    Arrival { job_id: usize },
     Completion { job_id: usize, epoch: u64 },
 }
 
@@ -339,12 +372,30 @@ fn footprint(
     (units, hourly)
 }
 
-struct Sim<'a> {
+/// Admission-decision latency histogram resolution: bucket width in
+/// microseconds. With [`LAT_BUCKETS`] buckets the tail clamps at ~82 ms
+/// per decision (the clamp still counts, so p99 stays a lower bound).
+pub const LAT_BUCKET_US: u64 = 20;
+const LAT_BUCKETS: usize = 4096;
+
+/// The event-driven simulator core, stream-drivable: feed arrivals with
+/// [`ClusterSim::add_job`], pump events with [`ClusterSim::step`] /
+/// [`ClusterSim::run_until`] / [`ClusterSim::drain`], then close with
+/// [`ClusterSim::finish`]. [`run_cluster`] wraps exactly these steps for
+/// the batch CLI; the `serve` daemon interleaves them with an external
+/// event stream and live `eval_threads` retuning.
+pub struct ClusterSim<'a> {
     pool: &'a ResourcePool,
-    queue: &'a JobQueue,
     policy: &'a dyn ClusterPolicy,
     cfg: &'a ClusterConfig,
     seed: u64,
+    /// Worker threads for batched plan evaluation — live-tunable via
+    /// [`ClusterSim::set_eval_threads`] (the serve probe); results are
+    /// bit-identical at any setting, only wall-clock moves.
+    eval_threads: usize,
+    /// Every job ever fed in, indexed by its (dense, simulator-assigned)
+    /// id.
+    jobs: Vec<Job>,
     /// One eval-engine cache for the whole run: admission searches on a
     /// bit-identical `(job, residual, floor)` context share evaluations
     /// (the context fingerprint keys the cache), so retries and
@@ -368,56 +419,43 @@ struct Sim<'a> {
     total_time: f64,
     peak_units: Vec<usize>,
     rejected: usize,
+    /// Wall-clock latency of each admission decision, in
+    /// [`LAT_BUCKET_US`]-microsecond buckets.
+    decision_lat: Histogram,
+    decisions: u64,
 }
 
-impl<'a> Sim<'a> {
-    fn new(
+impl<'a> ClusterSim<'a> {
+    /// An empty simulator over `pool` under `policy`. Fails on an invalid
+    /// pool or config; jobs are validated as they are fed in.
+    pub fn new(
         pool: &'a ResourcePool,
-        queue: &'a JobQueue,
         policy: &'a dyn ClusterPolicy,
         cfg: &'a ClusterConfig,
         seed: u64,
-    ) -> Self {
-        let records = queue
-            .jobs
-            .iter()
-            .map(|j| JobRecord {
-                id: j.id,
-                name: j.name.clone(),
-                model: j.model.name.clone(),
-                sla_floor: j.sla_floor,
-                arrival_secs: j.arrival_secs,
-                completion_secs: None,
-                rejected: false,
-                first_start_secs: None,
-                queueing_delay_secs: 0.0,
-                sla_violation_secs: 0.0,
-                preemptions: 0,
-                admissions: 0,
-                evaluations: 0,
-                cached_evals: 0,
-                cost_usd: 0.0,
-            })
-            .collect();
+    ) -> anyhow::Result<Self> {
+        pool.validate()?;
+        cfg.validate()?;
         let capacity_hourly = pool
             .types
             .iter()
             .map(|t| t.price_per_hour * t.max_units as f64)
             .sum();
-        Sim {
+        Ok(ClusterSim {
             pool,
-            queue,
             policy,
             cfg,
             seed,
+            eval_threads: cfg.eval_threads,
+            jobs: Vec::new(),
             eval_cache: EvalCache::new(),
             heap: BinaryHeap::new(),
             next_seq: 0,
             clock: 0.0,
             waiting: Vec::new(),
             running: Vec::new(),
-            records,
-            epochs: vec![0; queue.jobs.len()],
+            records: Vec::new(),
+            epochs: Vec::new(),
             timeline: Vec::new(),
             last_completion: 0.0,
             cumulative_cost_usd: 0.0,
@@ -427,7 +465,142 @@ impl<'a> Sim<'a> {
             total_time: 0.0,
             peak_units: vec![0; pool.num_types()],
             rejected: 0,
+            decision_lat: Histogram::new(LAT_BUCKETS),
+            decisions: 0,
+        })
+    }
+
+    /// Feed one arrival. The simulator assigns the job's dense id (its
+    /// stream position) and enqueues the arrival event; the caller keeps
+    /// pumping [`ClusterSim::step`] to actually process it. Arrivals must
+    /// not predate the clock — a streaming driver must feed a job before
+    /// stepping past its arrival time.
+    pub fn add_job(&mut self, mut job: Job) -> anyhow::Result<usize> {
+        let id = self.jobs.len();
+        job.id = id;
+        job.validate()?;
+        anyhow::ensure!(
+            job.arrival_secs >= self.clock,
+            "job `{}` arrives at {:.3} s but the clock is already at {:.3} s — \
+             feed arrivals in stream order, before stepping past them",
+            job.name,
+            job.arrival_secs,
+            self.clock
+        );
+        self.records.push(JobRecord {
+            id,
+            name: job.name.clone(),
+            model: job.model.name.clone(),
+            sla_floor: job.sla_floor,
+            arrival_secs: job.arrival_secs,
+            completion_secs: None,
+            rejected: false,
+            first_start_secs: None,
+            queueing_delay_secs: 0.0,
+            sla_violation_secs: 0.0,
+            preemptions: 0,
+            admissions: 0,
+            evaluations: 0,
+            cached_evals: 0,
+            cost_usd: 0.0,
+        });
+        self.epochs.push(0);
+        let at = job.arrival_secs;
+        self.jobs.push(job);
+        self.push_event(at, Pending::Arrival { job_id: id });
+        Ok(id)
+    }
+
+    /// Virtual time of the next pending event, if any.
+    pub fn next_event_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop and process one event; `Ok(false)` when the heap is empty.
+    /// Stale completions (superseded by a preemption) are consumed
+    /// without advancing the clock: a re-admitted job can finish earlier
+    /// than its superseded event, and advancing past the true last
+    /// completion would inflate the makespan and dilute the utilization
+    /// accounting.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        let Some(ev) = self.heap.pop() else {
+            return Ok(false);
+        };
+        match ev.kind {
+            Pending::Arrival { job_id } => {
+                self.advance(ev.at);
+                self.on_arrival(job_id, ev.at)?;
+            }
+            Pending::Completion { job_id, epoch } => {
+                if self.completion_is_live(job_id, epoch) {
+                    self.advance(ev.at);
+                    self.on_completion(job_id, epoch, ev.at)?;
+                }
+            }
         }
+        Ok(true)
+    }
+
+    /// Process every event strictly before `t` (exclusive, so an arrival
+    /// fed at exactly `t` still precedes same-time completions queued
+    /// later). The clock does not advance to `t` itself — cost accrual up
+    /// to the next event happens when that event is processed.
+    pub fn run_until(&mut self, t: f64) -> anyhow::Result<()> {
+        while self.next_event_at().is_some_and(|at| at < t) {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Process every remaining event.
+    pub fn drain(&mut self) -> anyhow::Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Live-retune the evaluation thread pool (clamped to at least 1) —
+    /// the serve probe's actuator. Affects wall-clock only; admission
+    /// decisions are bit-identical at any setting.
+    pub fn set_eval_threads(&mut self, threads: usize) {
+        self.eval_threads = threads.max(1);
+    }
+
+    pub fn eval_threads(&self) -> usize {
+        self.eval_threads
+    }
+
+    /// Admission sessions run so far (the probe's work counter).
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Close the run: every fed job must have been resolved (completed or
+    /// rejected), which [`ClusterSim::drain`] guarantees — infeasible
+    /// jobs are rejected at arrival and the final completion drains the
+    /// cluster.
+    pub fn finish(self, policy_name: &str) -> anyhow::Result<ClusterReport> {
+        anyhow::ensure!(
+            self.waiting.is_empty() && self.running.is_empty(),
+            "cluster run ended with jobs stranded in the queue"
+        );
+        Ok(self.into_report(policy_name))
+    }
+
+    fn note_decision(&mut self, dt: std::time::Duration) {
+        self.decisions += 1;
+        self.decision_lat.record(dt.as_micros() as u64 / LAT_BUCKET_US);
     }
 
     fn push_event(&mut self, at: f64, kind: Pending) {
@@ -506,7 +679,7 @@ impl<'a> Sim<'a> {
             CostModel::new(&job.model, search_pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
         let scheduler = self.cfg.spec.build(mix_seed(self.seed, job.id as u64, attempt));
         let engine = EvalEngine::new(&cm)
-            .with_threads(self.cfg.eval_threads)
+            .with_threads(self.eval_threads)
             .with_cache(self.eval_cache.clone());
         let mut session =
             scheduler.session_engine(engine, Budget::evals(self.cfg.admit_budget_evals));
@@ -537,8 +710,8 @@ impl<'a> Sim<'a> {
     /// A new job arrives: compute its empty-pool request profile, reject
     /// it outright when even the whole pool cannot serve it, else queue
     /// it and re-run admission.
-    fn on_arrival(&mut self, queue_idx: usize, now: f64) -> anyhow::Result<()> {
-        let job = self.queue.jobs[queue_idx].clone();
+    fn on_arrival(&mut self, job_id: usize, now: f64) -> anyhow::Result<()> {
+        let job = self.jobs[job_id].clone();
         let jid = job.id;
         self.timeline.push(EventRecord {
             at_secs: now,
@@ -546,7 +719,9 @@ impl<'a> Sim<'a> {
             kind: EventKind::Arrive,
             units: Vec::new(),
         });
+        let t0 = Instant::now();
         let (outcome, charged, cached) = self.admit_session(None, &job, self.pool, 0);
+        self.note_decision(t0.elapsed());
         self.records[jid].evaluations += charged;
         self.records[jid].cached_evals += cached;
         let feasible = outcome.as_ref().map(|o| o.eval.feasible).unwrap_or(false);
@@ -638,7 +813,9 @@ impl<'a> Sim<'a> {
         let jid = job.id;
         let attempt = self.waiting[widx].attempts;
         self.waiting[widx].attempts += 1;
+        let t0 = Instant::now();
         let (outcome, charged, cached) = self.admit_session(Some(widx), &job, &residual, attempt);
+        self.note_decision(t0.elapsed());
         self.records[jid].evaluations += charged;
         self.records[jid].cached_evals += cached;
         let Some(out) = outcome.filter(|o| o.eval.feasible) else {
@@ -840,7 +1017,15 @@ impl<'a> Sim<'a> {
         let total_cached = self.records.iter().map(|r| r.cached_evals).sum();
         let mean_util =
             if self.total_time > 0.0 { self.util_time / self.total_time } else { 0.0 };
+        let lat_q = |q: f64| {
+            self.decision_lat.quantile(q).map_or(0, |bucket| bucket as u64 * LAT_BUCKET_US)
+        };
         ClusterReport {
+            decisions: self.decisions,
+            lat_mean_us: self.decision_lat.mean() * LAT_BUCKET_US as f64,
+            lat_p50_us: lat_q(0.50),
+            lat_p95_us: lat_q(0.95),
+            lat_p99_us: lat_q(0.99),
             policy: policy.to_string(),
             method: self.cfg.spec.to_string(),
             jobs: self.records,
@@ -870,41 +1055,16 @@ pub fn run_cluster(
     cfg: &ClusterConfig,
     seed: u64,
 ) -> anyhow::Result<ClusterReport> {
-    pool.validate()?;
     queue.validate()?;
-    cfg.validate()?;
-    let mut sim = Sim::new(pool, queue, policy, cfg, seed);
-    for (i, job) in queue.jobs.iter().enumerate() {
-        let at = job.arrival_secs;
-        sim.push_event(at, Pending::Arrival { queue_idx: i });
+    let mut sim = ClusterSim::new(pool, policy, cfg, seed)?;
+    // All arrivals are enqueued up front (queue ids are dense and
+    // arrival-ordered, so the simulator re-assigns identical ids and the
+    // event sequence matches the streaming driver's).
+    for job in &queue.jobs {
+        sim.add_job(job.clone())?;
     }
-    while let Some(ev) = sim.heap.pop() {
-        match ev.kind {
-            Pending::Arrival { queue_idx } => {
-                sim.advance(ev.at);
-                sim.on_arrival(queue_idx, ev.at)?;
-            }
-            Pending::Completion { job_id, epoch } => {
-                // A stale completion (its job was preempted after it was
-                // scheduled) must not advance the clock: a re-admitted
-                // job can finish *earlier* than its superseded event, and
-                // advancing past the true last completion would inflate
-                // the makespan and dilute the utilization accounting.
-                if sim.completion_is_live(job_id, epoch) {
-                    sim.advance(ev.at);
-                    sim.on_completion(job_id, epoch, ev.at)?;
-                }
-            }
-        }
-    }
-    // Every queued job is feasible on the empty pool (infeasible ones are
-    // rejected at arrival), and the final completion drains the cluster,
-    // so the queue must be empty here.
-    anyhow::ensure!(
-        sim.waiting.is_empty() && sim.running.is_empty(),
-        "cluster run ended with jobs stranded in the queue"
-    );
-    Ok(sim.into_report(policy.name()))
+    sim.drain()?;
+    sim.finish(policy.name())
 }
 
 /// Render and emit one per-job table per report plus the cross-policy
@@ -964,11 +1124,64 @@ mod tests {
     #[test]
     fn event_order_is_time_then_insertion() {
         let mut heap = BinaryHeap::new();
-        heap.push(Event { at: 5.0, seq: 0, kind: Pending::Arrival { queue_idx: 0 } });
-        heap.push(Event { at: 1.0, seq: 1, kind: Pending::Arrival { queue_idx: 1 } });
-        heap.push(Event { at: 1.0, seq: 2, kind: Pending::Arrival { queue_idx: 2 } });
+        heap.push(Event { at: 5.0, seq: 0, kind: Pending::Arrival { job_id: 0 } });
+        heap.push(Event { at: 1.0, seq: 1, kind: Pending::Arrival { job_id: 1 } });
+        heap.push(Event { at: 1.0, seq: 2, kind: Pending::Arrival { job_id: 2 } });
         let order: Vec<u64> = std::iter::from_fn(|| heap.pop()).map(|e| e.seq).collect();
         assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn streamed_feeding_matches_the_batch_run() {
+        // Feeding jobs one at a time with run_until between arrivals (the
+        // serve daemon's loop) must produce the same virtual outcome as
+        // enqueueing everything up front: run_until is strictly
+        // exclusive, so an arrival fed at exactly t still lands before
+        // any same-time completion queued later, matching batch seq
+        // order.
+        let pool = tight_pool();
+        let queue = tight_mix(5, 3, 20_000.0);
+        let cfg = fast_cfg();
+        let policy = policy_by_name("srtf", &pool).unwrap();
+        let batch = run_cluster(&pool, &queue, policy.as_ref(), &cfg, 3).unwrap();
+        let policy = policy_by_name("srtf", &pool).unwrap();
+        let mut sim = ClusterSim::new(&pool, policy.as_ref(), &cfg, 3).unwrap();
+        for job in &queue.jobs {
+            sim.run_until(job.arrival_secs).unwrap();
+            sim.add_job(job.clone()).unwrap();
+        }
+        sim.drain().unwrap();
+        assert_eq!(sim.waiting_len(), 0);
+        assert_eq!(sim.running_len(), 0);
+        let streamed = sim.finish("srtf").unwrap();
+        assert_eq!(streamed.makespan_secs.to_bits(), batch.makespan_secs.to_bits());
+        assert_eq!(
+            streamed.cumulative_cost_usd.to_bits(),
+            batch.cumulative_cost_usd.to_bits()
+        );
+        assert_eq!(streamed.total_evaluations, batch.total_evaluations);
+        assert_eq!(streamed.decisions, batch.decisions);
+        assert_eq!(streamed.timeline.len(), batch.timeline.len());
+        for (x, y) in streamed.timeline.iter().zip(&batch.timeline) {
+            assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits());
+            assert_eq!((x.job_id, x.kind), (y.job_id, y.kind));
+        }
+    }
+
+    #[test]
+    fn arrivals_behind_the_clock_are_refused() {
+        let pool = paper_testbed();
+        let queue = uniform_mix(2, 21, 20_000.0);
+        let policy = policy_by_name("fifo", &pool).unwrap();
+        let cfg = fast_cfg();
+        let mut sim = ClusterSim::new(&pool, policy.as_ref(), &cfg, 21).unwrap();
+        sim.add_job(queue.jobs[1].clone()).unwrap();
+        sim.drain().unwrap();
+        assert!(sim.clock() > 0.0);
+        // Job 0 arrives earlier than the clock now reads: streaming out
+        // of order must be an error, not silent time travel.
+        let err = sim.add_job(queue.jobs[0].clone()).unwrap_err();
+        assert!(err.to_string().contains("stream order"), "{err}");
     }
 
     #[test]

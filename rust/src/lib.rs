@@ -14,7 +14,8 @@
 //!   (`comm`), a discrete-event cluster simulator, the trace-driven
 //!   elastic autoscaling loop (`elastic`), the multi-tenant cluster
 //!   scheduler with gang admission and fairness policies (`cluster`),
-//!   and the profiler.
+//!   the streaming admission daemon with a self-tuning evaluation
+//!   concurrency probe (`serve`), and the profiler.
 //! * **Layer 2 (python/compile)** — JAX definitions of the CTR models and
 //!   the scheduling policy, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
@@ -72,13 +73,16 @@ pub mod provision;
 pub mod resources;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod simulator;
 pub mod train;
 pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::cluster::{ClusterConfig, ClusterReport, Job, JobQueue, JobRecord};
+    pub use crate::cluster::{
+        ClusterConfig, ClusterReport, ClusterSim, Job, JobQueue, JobRecord,
+    };
     pub use crate::comm::{CommConfig, CommReport};
     pub use crate::cost::{CostConfig, CostModel, PlanEval};
     pub use crate::data::compress::Codec;
@@ -92,6 +96,9 @@ pub mod prelude {
     pub use crate::sched::{
         Budget, EvalCache, EvalEngine, ScheduleError, ScheduleOutcome, Scheduler,
         SchedulerSpec, SearchSession, StepReport,
+    };
+    pub use crate::serve::{
+        run_serve, ClockMode, ProbeConfig, ServeConfig, ServeOutcome, ThroughputProbe,
     };
     pub use crate::train::SparseStore;
     pub use crate::util::rng::Rng;

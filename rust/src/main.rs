@@ -5,8 +5,9 @@
 //! a plan on a virtual cluster, `elastic` a workload trace through the
 //! autoscaling loop, `comm` the bounded-staleness communication fabric
 //! against its synchronous reference, `cluster` a multi-tenant job mix
-//! through the gang-admitting fairness policies, `info`/`methods` the
-//! catalogs.
+//! through the gang-admitting fairness policies, `serve` a continuous
+//! arrival stream through the admission daemon with its self-tuning
+//! concurrency probe, `info`/`methods` the catalogs.
 //!
 //! Schedulers are named through the typed spec registry: a positional like
 //! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
@@ -14,7 +15,7 @@
 //! `--target-cost` bound the search session.
 
 use heterps::cli::{Cli, CliError, CmdSpec, OptSpec};
-use heterps::cost::{CostConfig, CostModel};
+use heterps::cost::CostModel;
 use heterps::elastic;
 use heterps::metrics::Table;
 use heterps::model::zoo;
@@ -120,13 +121,45 @@ fn cli() -> Cli {
                 about: "run a multi-tenant job mix through the cluster scheduler, comparing fairness policies",
                 opts: vec![
                     OptSpec { name: "jobs", help: "number of jobs in the mix", takes_value: true, default: Some("6") },
-                    OptSpec { name: "mix", help: "bundled job mix (uniform|tight)", takes_value: true, default: Some("uniform") },
+                    OptSpec { name: "mix", help: "bundled job mix (uniform|tight|steady)", takes_value: true, default: Some("uniform") },
                     OptSpec { name: "policy", help: "allocation policy (fifo|srtf|drf-cost|all)", takes_value: true, default: Some("all") },
-                    OptSpec { name: "method", help: "per-job scheduler spec used for admission searches, e.g. greedy or genetic:pop=16", takes_value: true, default: Some("greedy") },
+                    OptSpec { name: "method", help: "per-job scheduler spec used for admission searches, e.g. greedy or genetic:pop=16 (config `[scheduler]` applies when unset)", takes_value: true, default: None },
                     OptSpec { name: "arrival-seed", help: "seed for the job mix and every admission/measurement stream", takes_value: true, default: Some("42") },
                     OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
-                    OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation inside admission sessions (default 1)", takes_value: true, default: None },
+                    OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation inside admission sessions (default 1; config `[scheduler] eval_threads` applies when unset)", takes_value: true, default: None },
                     OptSpec { name: "throughput", help: "base SLA floor the mix scales, samples/sec", takes_value: true, default: Some("20000") },
+                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]` sections apply)", takes_value: true, default: None },
+                    OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
+                    OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
+                    OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "serve",
+                about: "run the streaming admission daemon: a JSONL arrival stream (or a seeded generator) gang-admitted against live cluster state, with an optional self-tuning eval-concurrency probe",
+                opts: vec![
+                    OptSpec { name: "stream", help: "JSONL arrival stream to serve (`-` = stdin); omit to generate from --mix/--jobs", takes_value: true, default: None },
+                    OptSpec { name: "mix", help: "generated job mix when no --stream (uniform|tight|steady)", takes_value: true, default: Some("steady") },
+                    OptSpec { name: "jobs", help: "number of generated jobs when no --stream", takes_value: true, default: Some("200") },
+                    OptSpec { name: "arrival-seed", help: "seed for the generated mix and every admission/measurement stream", takes_value: true, default: Some("42") },
+                    OptSpec { name: "throughput", help: "base SLA floor the generated mix scales, samples/sec", takes_value: true, default: Some("20000") },
+                    OptSpec { name: "policy", help: "allocation policy (fifo|srtf|drf-cost)", takes_value: true, default: Some("drf-cost") },
+                    OptSpec { name: "method", help: "per-job scheduler spec used for admission searches (config `[scheduler]` applies when unset)", takes_value: true, default: None },
+                    OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
+                    OptSpec { name: "eval-threads", help: "initial worker threads for batched plan evaluation (default 1; config `[scheduler] eval_threads` applies when unset; the probe retunes this online)", takes_value: true, default: None },
+                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]` sections apply)", takes_value: true, default: None },
+                    OptSpec { name: "probe", help: "enable the self-tuning eval-concurrency probe", takes_value: false, default: None },
+                    OptSpec { name: "probe-min", help: "probe: smallest eval-thread count", takes_value: true, default: Some("1") },
+                    OptSpec { name: "probe-max", help: "probe: largest eval-thread count", takes_value: true, default: Some("8") },
+                    OptSpec { name: "probe-step", help: "probe: relative excursion step (stable * (1 ± step))", takes_value: true, default: Some("0.5") },
+                    OptSpec { name: "probe-ema", help: "probe: EMA weight of a newly accepted concurrency", takes_value: true, default: Some("0.3") },
+                    OptSpec { name: "probe-window", help: "probe: admission decisions per measurement window", takes_value: true, default: Some("32") },
+                    OptSpec { name: "clock", help: "event clock (virtual = as fast as possible, bit-deterministic; wall = paced)", takes_value: true, default: Some("virtual") },
+                    OptSpec { name: "speedup", help: "wall clock only: virtual seconds per real second", takes_value: true, default: Some("600") },
+                    OptSpec { name: "json-out", help: "write the machine-readable serve report to this path", takes_value: true, default: None },
+                    OptSpec { name: "emit-stream", help: "write the served arrival stream as JSONL to this path (replayable via --stream)", takes_value: true, default: None },
+                    OptSpec { name: "progress-every", help: "stderr progress line every N arrivals (0 = off)", takes_value: true, default: Some("0") },
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
@@ -250,12 +283,13 @@ fn main() {
             }
             "cluster" => {
                 use heterps::cluster;
+                let file = args.get("config").map(heterps::config::Config::load).transpose()?;
                 let n_jobs = args.usize_or("jobs", 6)?;
                 anyhow::ensure!(n_jobs >= 1, "option `--jobs` must be at least 1");
                 let pool = if args.flag("tight-pool") {
                     cluster::tight_pool()
                 } else {
-                    heterps::cli::pool_from_args(&args, None)?
+                    heterps::cli::pool_from_args(&args, file.as_ref())?
                 };
                 let base_floor = args.f64_or("throughput", 20_000.0)?;
                 let mix_name = args.str_or("mix", "uniform");
@@ -267,11 +301,11 @@ fn main() {
                             cluster::mix_names().join(", ")
                         )
                     })?;
-                let spec = SchedulerSpec::parse(args.str_or("method", "greedy"))?;
                 let ccfg = cluster::ClusterConfig {
-                    spec,
+                    spec: admission_spec(&args, file.as_ref())?,
                     admit_budget_evals: args.usize_or("budget-evals", 96)?,
-                    eval_threads: args.usize_or("eval-threads", 1)?.max(1),
+                    eval_threads: heterps::cli::eval_threads_from(&args, file.as_ref())?,
+                    cost: heterps::cli::cost_from_file(file.as_ref()),
                     ..Default::default()
                 };
                 let policy_name = args.str_or("policy", "all");
@@ -313,6 +347,84 @@ fn main() {
                 }
                 Ok(())
             }
+            "serve" => {
+                use heterps::cluster;
+                use heterps::serve;
+                let file = args.get("config").map(heterps::config::Config::load).transpose()?;
+                let pool = if args.flag("tight-pool") {
+                    cluster::tight_pool()
+                } else {
+                    heterps::cli::pool_from_args(&args, file.as_ref())?
+                };
+                let seed = args.u64_or("arrival-seed", 42)?;
+                let (queue, source) = match args.get("stream") {
+                    Some(path) => {
+                        let text = if path == "-" {
+                            use std::io::Read as _;
+                            let mut buf = String::new();
+                            std::io::stdin().read_to_string(&mut buf)?;
+                            buf
+                        } else {
+                            std::fs::read_to_string(path).map_err(|e| {
+                                anyhow::anyhow!("cannot read stream `{path}`: {e}")
+                            })?
+                        };
+                        (serve::parse_stream(&text)?, format!("stream {path}"))
+                    }
+                    None => {
+                        let n_jobs = args.usize_or("jobs", 200)?;
+                        anyhow::ensure!(n_jobs >= 1, "option `--jobs` must be at least 1");
+                        let mix_name = args.str_or("mix", "steady");
+                        let base_floor = args.f64_or("throughput", 20_000.0)?;
+                        let queue = cluster::mix_by_name(mix_name, n_jobs, seed, base_floor)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "unknown mix `{mix_name}` (known: {})",
+                                    cluster::mix_names().join(", ")
+                                )
+                            })?;
+                        (queue, format!("mix {mix_name} ({n_jobs} jobs)"))
+                    }
+                };
+                if let Some(path) = args.get("emit-stream") {
+                    std::fs::write(path, serve::render_stream(&queue))?;
+                    eprintln!("[wall] wrote {} arrivals to {path}", queue.len());
+                }
+                let probe = if args.flag("probe") {
+                    Some(serve::ProbeConfig {
+                        min_threads: args.usize_or("probe-min", 1)?,
+                        max_threads: args.usize_or("probe-max", 8)?,
+                        step_multiple: args.f64_or("probe-step", 0.5)?,
+                        ema_weight: args.f64_or("probe-ema", 0.3)?,
+                        window: args.u64_or("probe-window", 32)?,
+                    })
+                } else {
+                    None
+                };
+                let scfg = serve::ServeConfig {
+                    cluster: cluster::ClusterConfig {
+                        spec: admission_spec(&args, file.as_ref())?,
+                        admit_budget_evals: args.usize_or("budget-evals", 96)?,
+                        eval_threads: heterps::cli::eval_threads_from(&args, file.as_ref())?,
+                        cost: heterps::cli::cost_from_file(file.as_ref()),
+                        ..Default::default()
+                    },
+                    policy: args.str_or("policy", "drf-cost").to_string(),
+                    probe,
+                    clock: serve::ClockMode::parse(
+                        args.str_or("clock", "virtual"),
+                        args.f64_or("speedup", 600.0)?,
+                    )?,
+                    progress_every: args.usize_or("progress-every", 0)?,
+                };
+                let outcome = serve::run_serve(&pool, &queue, &scfg, seed)?;
+                print!("{}", outcome.render(&source));
+                if let Some(path) = args.get("json-out") {
+                    std::fs::write(path, outcome.to_json(&source).render_pretty())?;
+                    eprintln!("[wall] wrote serve report to {path}");
+                }
+                Ok(())
+            }
             "train" => {
                 let file = args.get("config").map(heterps::config::Config::load).transpose()?;
                 let cfg_get = |k: &str, d: usize| {
@@ -332,27 +444,11 @@ fn main() {
                     .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
                 let pool = heterps::cli::pool_from_args(&args, file.as_ref())?;
                 let n_types = pool.num_types();
-                let mut cfg = CostConfig::default();
-                if let Some(c) = &file {
-                    cfg.batch_size = c.usize_or("cost.batch_size", cfg.batch_size as usize) as u64;
-                    cfg.profile_batch =
-                        c.usize_or("cost.profile_batch", cfg.profile_batch as usize) as u64;
-                    cfg.throughput_limit = c.f64_or("cost.throughput_limit", cfg.throughput_limit);
-                    cfg.infeasible_penalty =
-                        c.f64_or("cost.infeasible_penalty", cfg.infeasible_penalty);
-                }
+                let mut cfg = heterps::cli::cost_from_file(file.as_ref());
                 cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit)?;
                 let cm = CostModel::new(&model, &pool, cfg);
                 let seed = args.u64_or("seed", 42)?;
-                // Engine sizing: explicit --eval-threads wins; else the
-                // `[scheduler] eval_threads` config key; else serial.
-                let eval_threads = match args.opt_usize("eval-threads")? {
-                    Some(t) => t.max(1),
-                    None => file
-                        .as_ref()
-                        .map_or(1, |c| c.usize_or("scheduler.eval_threads", 1))
-                        .max(1),
-                };
+                let eval_threads = heterps::cli::eval_threads_from(&args, file.as_ref())?;
 
                 let budget_from_args = || -> anyhow::Result<Budget> {
                     let mut budget = Budget::unlimited();
@@ -572,6 +668,24 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// The per-job admission method for `cluster`/`serve`: an explicit
+/// `--method` wins, then the config file's `[scheduler]` section, then
+/// cheap greedy (admission searches rerun on every arrival, so the
+/// default favors speed over plan quality).
+fn admission_spec(
+    args: &heterps::cli::Args,
+    file: Option<&heterps::config::Config>,
+) -> anyhow::Result<SchedulerSpec> {
+    Ok(match args.get("method") {
+        Some(m) => SchedulerSpec::parse(m)?,
+        None => match file {
+            Some(c) => SchedulerSpec::from_config(c)?
+                .map_or_else(|| SchedulerSpec::parse("greedy"), Ok)?,
+            None => SchedulerSpec::parse("greedy")?,
+        },
+    })
 }
 
 

@@ -112,6 +112,15 @@ impl Histogram {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
+    /// Nearest-rank quantile over the bucket counts: the smallest bucket
+    /// index whose cumulative count reaches `ceil(q * total)`. Returns
+    /// `None` when the histogram is empty. Because the last bucket holds
+    /// the clamped tail, a quantile that lands there is a lower bound on
+    /// the true value, not an exact one.
+    pub fn quantile(&self, q: f64) -> Option<usize> {
+        quantile_of(&self.snapshot(), q)
+    }
+
     /// Compact `value:count` rendering of the non-empty buckets; the last
     /// bucket renders as `N+` because it holds the clamped tail.
     pub fn render(&self) -> String {
@@ -135,6 +144,79 @@ impl Histogram {
             parts.join(" ")
         }
     }
+}
+
+/// Nearest-rank quantile over raw bucket counts (`counts[i]` = number of
+/// observations with value `i`): the smallest index whose cumulative count
+/// reaches `ceil(q * total)`, with `q` clamped to [0, 1]. `None` when all
+/// counts are zero.
+pub fn quantile_of(counts: &[u64], q: f64) -> Option<usize> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return Some(i);
+        }
+    }
+    // Unreachable: cum == total >= rank by the clamp above.
+    Some(counts.len() - 1)
+}
+
+/// One row of a bench artifact: an operation and its mean/stddev timing.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub op: String,
+    pub mean: f64,
+    pub std: f64,
+    pub unit: String,
+}
+
+impl BenchRow {
+    pub fn new(op: impl Into<String>, mean: f64, std: f64, unit: impl Into<String>) -> Self {
+        BenchRow { op: op.into(), mean, std, unit: unit.into() }
+    }
+}
+
+/// Merge one bench's rows into the shared `results/BENCH_perf.json`
+/// artifact, schema `{"benches": {"<name>": [{"op","mean","std","unit"}]}}`.
+/// Rows from other benches already in the file are preserved; this bench's
+/// previous rows are replaced wholesale. A missing or unparsable existing
+/// file is treated as empty rather than an error, so a corrupt artifact
+/// never blocks regenerating it.
+pub fn merge_bench_rows(path: &Path, bench: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let mut benches: Vec<(String, Json)> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|root| root.get("benches").and_then(Json::as_obj).cloned())
+        .unwrap_or_default();
+    let entry = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("op".to_string(), Json::Str(r.op.clone())),
+                    ("mean".to_string(), Json::Num(r.mean)),
+                    ("std".to_string(), Json::Num(r.std)),
+                    ("unit".to_string(), Json::Str(r.unit.clone())),
+                ])
+            })
+            .collect(),
+    );
+    match benches.iter_mut().find(|(name, _)| name == bench) {
+        Some((_, slot)) => *slot = entry,
+        None => benches.push((bench.to_string(), entry)),
+    }
+    let root = Json::Obj(vec![("benches".to_string(), Json::Obj(benches))]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, root.render_pretty())
 }
 
 /// A rectangular results table with a title; renders aligned text and CSV.
@@ -269,6 +351,66 @@ mod tests {
         assert!(r.contains("1:2") && r.contains("3+:1"), "{r}");
         assert_eq!(Histogram::new(2).render(), "(empty)");
         assert_eq!(Histogram::new(2).max_bucket(), None);
+    }
+
+    #[test]
+    fn quantile_is_nearest_rank() {
+        // counts for values 0..4: ten 0s, ten 1s, ten 3s.
+        let counts = [10u64, 10, 0, 10];
+        assert_eq!(quantile_of(&counts, 0.5), Some(1));
+        assert_eq!(quantile_of(&counts, 0.34), Some(1)); // rank 11 lands in bucket 1
+        assert_eq!(quantile_of(&counts, 1.0 / 3.0), Some(0)); // rank 10 is the last 0
+        assert_eq!(quantile_of(&counts, 0.95), Some(3));
+        // q is clamped; q=0 still needs rank >= 1 (the first observation).
+        assert_eq!(quantile_of(&counts, 0.0), Some(0));
+        assert_eq!(quantile_of(&counts, -3.0), Some(0));
+        assert_eq!(quantile_of(&counts, 7.0), Some(3));
+        assert_eq!(quantile_of(&[], 0.5), None);
+        assert_eq!(quantile_of(&[0, 0, 0], 0.5), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_respect_the_clamped_tail() {
+        let h = Histogram::new(4);
+        for v in [0, 1, 1, 2, 9, 100] {
+            h.record(v); // 9 and 100 both clamp into bucket 3
+        }
+        assert_eq!(h.quantile(0.5), Some(1));
+        assert_eq!(h.quantile(0.99), Some(3)); // lower bound, not 100
+        assert_eq!(h.quantile(0.0), Some(0));
+        assert_eq!(h.quantile(1.0), Some(3));
+        assert_eq!(Histogram::new(3).quantile(0.5), None);
+        // Single-bucket histogram: everything clamps to index 0.
+        let one = Histogram::new(1);
+        one.record(42);
+        assert_eq!(one.quantile(0.5), Some(0));
+        assert_eq!(one.quantile(1.0), Some(0));
+    }
+
+    #[test]
+    fn merge_bench_rows_preserves_other_benches() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("heterps-bench-{}", std::process::id()));
+        let path = dir.join("BENCH_perf.json");
+        let _ = std::fs::remove_file(&path);
+        merge_bench_rows(&path, "alpha", &[BenchRow::new("op_a", 1.5, 0.1, "ms")]).unwrap();
+        merge_bench_rows(&path, "beta", &[BenchRow::new("op_b", 2.5, 0.2, "us")]).unwrap();
+        // Replacing alpha's rows must not disturb beta's.
+        merge_bench_rows(&path, "alpha", &[BenchRow::new("op_a2", 9.0, 0.0, "s")]).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = root.get("benches").unwrap();
+        let alpha = benches.get("alpha").unwrap().as_arr().unwrap();
+        assert_eq!(alpha.len(), 1);
+        assert_eq!(alpha[0].get("op").and_then(Json::as_str), Some("op_a2"));
+        let beta = benches.get("beta").unwrap().as_arr().unwrap();
+        assert_eq!(beta[0].get("mean").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(beta[0].get("unit").and_then(Json::as_str), Some("us"));
+        // A corrupt file is treated as empty, not an error.
+        std::fs::write(&path, "{not json").unwrap();
+        merge_bench_rows(&path, "gamma", &[]).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(root.get("benches").unwrap().get("gamma").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -200,6 +200,17 @@ impl<'a> EvalEngine<'a> {
         self
     }
 
+    /// Resize the batch thread pool in place (clamped to at least 1).
+    ///
+    /// This is the online-retuning hook for the serve daemon's throughput
+    /// probe: because batch results are committed in submission order,
+    /// changing the thread count between (or even within) sessions moves
+    /// wall-clock only — computed results, charge sequences and stop
+    /// decisions are unaffected.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
     /// Share a caller-owned cache (cross-session / cross-tick reuse).
     pub fn with_cache(mut self, cache: EvalCache) -> Self {
         self.cache = cache;

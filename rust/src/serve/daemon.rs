@@ -1,0 +1,436 @@
+//! The long-running admission loop (DESIGN.md §Serve).
+//!
+//! [`run_serve`] drives a [`ClusterSim`] from an arrival stream instead
+//! of a pre-loaded batch: for each arrival it first pumps every
+//! simulator event *strictly before* the arrival time, then feeds the
+//! job, and after the last arrival drains the remaining events. On the
+//! **virtual** clock that is the entire loop and the run is
+//! bit-deterministic per `(pool, stream, config, seed)`; on the **wall**
+//! clock each event additionally waits for scaled wall time to catch up
+//! (best-effort — sleeps are clamped and never block determinism-bearing
+//! state, but wall timings obviously vary run to run).
+//!
+//! The optional [`ThroughputProbe`] closes the self-tuning loop: every
+//! `window` admission decisions it measures decisions per wall-clock
+//! second and retunes the simulator's live `eval_threads`. Thread count
+//! never changes computed results (DESIGN.md §Eval-Engine), so the probe
+//! moves wall-clock throughput only and the admission digest is
+//! identical with the probe on or off.
+
+use std::time::Instant;
+
+use crate::cluster::{
+    policy_by_name, policy_names, ClusterConfig, ClusterReport, ClusterSim, JobQueue,
+};
+use crate::resources::ResourcePool;
+use crate::util::json::Json;
+
+use super::probe::{ProbeConfig, ProbeSummary, ThroughputProbe};
+
+/// Longest single sleep while pacing the wall clock, so a sparse stream
+/// stays responsive to Ctrl-C and progress output.
+const MAX_SLEEP_SECS: f64 = 5.0;
+
+/// How serve maps virtual event time to real time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClockMode {
+    /// Process events as fast as possible. Bit-deterministic.
+    Virtual,
+    /// Pace events against the wall clock, `speedup` virtual seconds per
+    /// real second. Admission decisions are still deterministic; only
+    /// the wall-clock metrics vary.
+    Wall { speedup: f64 },
+}
+
+impl ClockMode {
+    /// Parse the CLI's `--clock` value (`virtual` or `wall`).
+    pub fn parse(name: &str, speedup: f64) -> anyhow::Result<Self> {
+        match name {
+            "virtual" => Ok(ClockMode::Virtual),
+            "wall" => {
+                anyhow::ensure!(
+                    speedup > 0.0 && speedup.is_finite(),
+                    "wall-clock speedup must be positive and finite, got {speedup}"
+                );
+                Ok(ClockMode::Wall { speedup })
+            }
+            other => anyhow::bail!("unknown clock mode `{other}` (expected virtual|wall)"),
+        }
+    }
+}
+
+/// Everything one serve run needs beyond the pool and the stream.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub cluster: ClusterConfig,
+    /// Admission policy name (`cluster::policy_names`).
+    pub policy: String,
+    /// `None` disables self-tuning; threads stay at `cluster.eval_threads`.
+    pub probe: Option<ProbeConfig>,
+    pub clock: ClockMode,
+    /// Emit a progress line to stderr every this many arrivals (0 = off).
+    pub progress_every: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            cluster: ClusterConfig::default(),
+            policy: "drf-cost".to_string(),
+            probe: None,
+            clock: ClockMode::Virtual,
+            progress_every: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.cluster.validate()?;
+        if let Some(p) = &self.probe {
+            p.validate()?;
+        }
+        if let ClockMode::Wall { speedup } = self.clock {
+            anyhow::ensure!(speedup > 0.0 && speedup.is_finite(), "invalid wall speedup");
+        }
+        Ok(())
+    }
+}
+
+/// What one serve run produced: the full cluster report plus the
+/// serve-level wall-clock metrics and the probe trajectory.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub report: ClusterReport,
+    pub arrivals: usize,
+    /// FNV-1a digest over the admission timeline (kind, job, time bits,
+    /// units) — the one-line determinism witness two runs can compare.
+    pub admission_digest: u64,
+    pub initial_eval_threads: usize,
+    pub final_eval_threads: usize,
+    pub probe: Option<ProbeSummary>,
+    /// Wall-clock run time and decision throughput (not deterministic).
+    pub wall_secs: f64,
+    pub decisions_per_sec: f64,
+}
+
+/// FNV-1a over every determinism-bearing field of the timeline.
+pub fn admission_digest(report: &ClusterReport) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for ev in &report.timeline {
+        eat(ev.kind as u64);
+        eat(ev.job_id as u64);
+        eat(ev.at_secs.to_bits());
+        eat(ev.units.len() as u64);
+        for &u in &ev.units {
+            eat(u as u64);
+        }
+    }
+    h
+}
+
+/// Pace the wall clock: sleep until `virtual_t / speedup` seconds of real
+/// time have passed since `wall_start`, in bounded slices.
+fn pace(clock: ClockMode, wall_start: Instant, virtual_t: f64) {
+    let ClockMode::Wall { speedup } = clock else {
+        return;
+    };
+    let target = virtual_t / speedup;
+    loop {
+        let behind = target - wall_start.elapsed().as_secs_f64();
+        if behind <= 0.0 {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(behind.min(MAX_SLEEP_SECS)));
+    }
+}
+
+/// Serve `queue` as a stream against `pool`: arrivals are fed one at a
+/// time in order, events strictly before each arrival are processed
+/// first, and the run drains after the last arrival. Deterministic in
+/// `(pool, queue, cfg.cluster, seed)` on the virtual clock — the probe
+/// and the clock mode change wall-clock metrics only.
+pub fn run_serve(
+    pool: &ResourcePool,
+    queue: &JobQueue,
+    cfg: &ServeConfig,
+    seed: u64,
+) -> anyhow::Result<ServeOutcome> {
+    queue.validate()?;
+    cfg.validate()?;
+    let policy = policy_by_name(&cfg.policy, pool).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy `{}` (known policies: {})",
+            cfg.policy,
+            policy_names().join(", ")
+        )
+    })?;
+    let mut sim = ClusterSim::new(pool, policy.as_ref(), &cfg.cluster, seed)?;
+    let initial_threads = sim.eval_threads();
+    let mut probe = cfg
+        .probe
+        .clone()
+        .map(|p| ThroughputProbe::new(p, initial_threads))
+        .transpose()?;
+    let wall_start = Instant::now();
+    // The probe's measurement window: decisions counted and wall time
+    // elapsed since the window opened.
+    let mut win_decisions = 0u64;
+    let mut win_start = Instant::now();
+    let mut tick = |sim: &mut ClusterSim| {
+        let Some(p) = probe.as_mut() else {
+            return;
+        };
+        let done = sim.decisions() - win_decisions;
+        if done >= p.window() {
+            let dt = win_start.elapsed().as_secs_f64().max(1e-9);
+            sim.set_eval_threads(p.observe(done as f64 / dt));
+            win_decisions = sim.decisions();
+            win_start = Instant::now();
+        }
+    };
+    for (i, job) in queue.jobs.iter().enumerate() {
+        while let Some(at) = sim.next_event_at() {
+            if at >= job.arrival_secs {
+                break;
+            }
+            pace(cfg.clock, wall_start, at);
+            sim.step()?;
+            tick(&mut sim);
+        }
+        pace(cfg.clock, wall_start, job.arrival_secs);
+        sim.add_job(job.clone())?;
+        tick(&mut sim);
+        if cfg.progress_every > 0 && (i + 1) % cfg.progress_every == 0 {
+            eprintln!(
+                "[wall] serve: {} / {} arrivals, clock {:.0} s, {} waiting, {} running, \
+                 {} decisions, {} eval threads",
+                i + 1,
+                queue.len(),
+                sim.clock(),
+                sim.waiting_len(),
+                sim.running_len(),
+                sim.decisions(),
+                sim.eval_threads()
+            );
+        }
+    }
+    while let Some(at) = sim.next_event_at() {
+        pace(cfg.clock, wall_start, at);
+        sim.step()?;
+        tick(&mut sim);
+    }
+    let wall_secs = wall_start.elapsed().as_secs_f64();
+    let final_eval_threads = sim.eval_threads();
+    let report = sim.finish(&cfg.policy)?;
+    let digest = admission_digest(&report);
+    Ok(ServeOutcome {
+        arrivals: queue.len(),
+        admission_digest: digest,
+        initial_eval_threads: initial_threads,
+        final_eval_threads,
+        probe: probe.map(|p| p.summary()),
+        wall_secs,
+        decisions_per_sec: report.decisions as f64 / wall_secs.max(1e-9),
+        report,
+    })
+}
+
+impl ServeOutcome {
+    /// Human rendering. Deterministic facts first; every wall-clock line
+    /// carries the `[wall]` prefix so the verify.sh determinism gate can
+    /// strip them (`grep -v '^\[wall\]'`) before diffing two runs.
+    pub fn render(&self, context: &str) -> String {
+        use std::fmt::Write as _;
+        let r = &self.report;
+        let mut out = String::new();
+        let _ = writeln!(out, "== Serve — {context} ==");
+        let _ = writeln!(out, "policy {}, method {}", r.policy, r.method);
+        let _ = writeln!(
+            out,
+            "arrivals {}, completed {}, rejected {}",
+            self.arrivals,
+            r.completed(),
+            r.rejected
+        );
+        let _ = writeln!(
+            out,
+            "makespan {:.0} s, mean JCT {:.0} s, mean queue {:.0} s, SLA viol {:.0} s",
+            r.makespan_secs,
+            r.mean_jct_secs(),
+            r.mean_queueing_delay_secs(),
+            r.total_sla_violation_secs()
+        );
+        let _ = writeln!(
+            out,
+            "cluster $ {:.2}, evals charged {}, cached {}, decisions {}",
+            r.cumulative_cost_usd, r.total_evaluations, r.total_cached, r.decisions
+        );
+        let _ = writeln!(
+            out,
+            "util p90 {}, util deciles {}",
+            r.util_p90().map_or_else(|| "-".to_string(), |u| format!("{u:.1}")),
+            r.util_render
+        );
+        let _ = writeln!(out, "admission digest {:016x}", self.admission_digest);
+        let _ = writeln!(
+            out,
+            "[wall] {:.3} s wall, {:.0} decisions/s",
+            self.wall_secs, self.decisions_per_sec
+        );
+        let _ = writeln!(
+            out,
+            "[wall] decision latency µs: p50 {}, p95 {}, p99 {}, mean {:.0}",
+            r.lat_p50_us, r.lat_p95_us, r.lat_p99_us, r.lat_mean_us
+        );
+        match &self.probe {
+            None => {
+                let _ = writeln!(
+                    out,
+                    "[wall] probe off, eval threads fixed at {}",
+                    self.final_eval_threads
+                );
+            }
+            Some(p) => {
+                let _ = writeln!(
+                    out,
+                    "[wall] probe: eval threads {} -> {}, applied range [{}, {}], \
+                     {} adjustments over {} windows, stable {:.2}",
+                    p.initial_threads,
+                    p.final_threads,
+                    p.min_applied,
+                    p.max_applied,
+                    p.adjustments,
+                    p.observations,
+                    p.stable_concurrency
+                );
+            }
+        }
+        out
+    }
+
+    /// The machine-readable report (`--json-out`).
+    pub fn to_json(&self, context: &str) -> Json {
+        let r = &self.report;
+        let probe = match &self.probe {
+            None => Json::Null,
+            Some(p) => Json::Obj(vec![
+                ("initial_threads".into(), Json::Num(p.initial_threads as f64)),
+                ("final_threads".into(), Json::Num(p.final_threads as f64)),
+                ("min_applied".into(), Json::Num(p.min_applied as f64)),
+                ("max_applied".into(), Json::Num(p.max_applied as f64)),
+                ("adjustments".into(), Json::Num(p.adjustments as f64)),
+                ("windows".into(), Json::Num(p.observations as f64)),
+                ("stable_concurrency".into(), Json::Num(p.stable_concurrency)),
+            ]),
+        };
+        Json::Obj(vec![
+            ("context".into(), Json::Str(context.to_string())),
+            ("policy".into(), Json::Str(r.policy.clone())),
+            ("method".into(), Json::Str(r.method.clone())),
+            ("arrivals".into(), Json::Num(self.arrivals as f64)),
+            ("completed".into(), Json::Num(r.completed() as f64)),
+            ("rejected".into(), Json::Num(r.rejected as f64)),
+            ("makespan_secs".into(), Json::Num(r.makespan_secs)),
+            ("mean_jct_secs".into(), Json::Num(r.mean_jct_secs())),
+            ("mean_queue_secs".into(), Json::Num(r.mean_queueing_delay_secs())),
+            ("sla_violation_secs".into(), Json::Num(r.total_sla_violation_secs())),
+            ("cluster_usd".into(), Json::Num(r.cumulative_cost_usd)),
+            ("evaluations".into(), Json::Num(r.total_evaluations as f64)),
+            ("cached_evals".into(), Json::Num(r.total_cached as f64)),
+            ("decisions".into(), Json::Num(r.decisions as f64)),
+            (
+                "util_p90".into(),
+                r.util_p90().map_or(Json::Null, Json::Num),
+            ),
+            (
+                "admission_digest".into(),
+                Json::Str(format!("{:016x}", self.admission_digest)),
+            ),
+            ("initial_eval_threads".into(), Json::Num(self.initial_eval_threads as f64)),
+            ("final_eval_threads".into(), Json::Num(self.final_eval_threads as f64)),
+            ("wall_secs".into(), Json::Num(self.wall_secs)),
+            ("decisions_per_sec".into(), Json::Num(self.decisions_per_sec)),
+            (
+                "latency_us".into(),
+                Json::Obj(vec![
+                    ("mean".into(), Json::Num(r.lat_mean_us)),
+                    ("p50".into(), Json::Num(r.lat_p50_us as f64)),
+                    ("p95".into(), Json::Num(r.lat_p95_us as f64)),
+                    ("p99".into(), Json::Num(r.lat_p99_us as f64)),
+                ]),
+            ),
+            ("probe".into(), probe),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_mode_parses() {
+        assert_eq!(ClockMode::parse("virtual", 1.0).unwrap(), ClockMode::Virtual);
+        assert_eq!(
+            ClockMode::parse("wall", 600.0).unwrap(),
+            ClockMode::Wall { speedup: 600.0 }
+        );
+        assert!(ClockMode::parse("wall", 0.0).is_err());
+        assert!(ClockMode::parse("lamport", 1.0).is_err());
+    }
+
+    #[test]
+    fn digest_is_order_and_value_sensitive() {
+        use crate::cluster::{EventKind, EventRecord};
+        let base = ClusterReport {
+            policy: "fifo".into(),
+            method: "greedy".into(),
+            jobs: Vec::new(),
+            timeline: vec![
+                EventRecord {
+                    at_secs: 1.0,
+                    job_id: 0,
+                    kind: EventKind::Arrive,
+                    units: Vec::new(),
+                },
+                EventRecord {
+                    at_secs: 1.0,
+                    job_id: 0,
+                    kind: EventKind::Admit,
+                    units: vec![3, 0],
+                },
+            ],
+            makespan_secs: 0.0,
+            cumulative_cost_usd: 0.0,
+            total_evaluations: 0,
+            total_cached: 0,
+            peak_units: Vec::new(),
+            util_deciles: Vec::new(),
+            util_render: String::new(),
+            mean_util: 0.0,
+            rejected: 0,
+            decisions: 0,
+            lat_mean_us: 0.0,
+            lat_p50_us: 0,
+            lat_p95_us: 0,
+            lat_p99_us: 0,
+        };
+        let a = admission_digest(&base);
+        let mut swapped = base.clone();
+        swapped.timeline.swap(0, 1);
+        assert_ne!(a, admission_digest(&swapped));
+        let mut moved = base.clone();
+        moved.timeline[1].units = vec![0, 3];
+        assert_ne!(a, admission_digest(&moved));
+        let mut later = base;
+        later.timeline[1].at_secs = 2.0;
+        assert_ne!(a, admission_digest(&later));
+    }
+}

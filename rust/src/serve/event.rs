@@ -1,0 +1,193 @@
+//! The serve daemon's JSONL arrival stream (DESIGN.md §Serve).
+//!
+//! One JSON object per line, one job arrival per object:
+//!
+//! ```text
+//! {"at": 12.5, "model": "nce", "floor": 18000, "samples": 3.2e7, "name": "tenant-a"}
+//! ```
+//!
+//! * `at` — arrival time on the virtual clock, seconds, non-decreasing
+//!   across lines (the stream *is* the arrival order);
+//! * `model` — a zoo model name ([`zoo::by_name`]);
+//! * `floor` — the SLA throughput floor, samples/sec;
+//! * `samples` — total samples to process;
+//! * `name` — optional tenant label (defaults to `<model>-<line index>`).
+//!
+//! Blank lines are skipped. Unknown keys, unknown models, missing fields,
+//! out-of-order arrivals and per-job validation failures are all hard
+//! errors carrying the 1-based line number — a malformed stream must
+//! never be half-admitted. [`render_stream`] is the exact inverse of
+//! [`parse_stream`]: numbers render through `f64`'s shortest-round-trip
+//! `Display`, so parse∘render is bit-exact and the verify.sh determinism
+//! gate can diff regenerated streams.
+
+use anyhow::Context as _;
+
+use crate::cluster::{Job, JobQueue};
+use crate::model::zoo;
+use crate::util::json::Json;
+
+const KNOWN_KEYS: [&str; 5] = ["at", "model", "floor", "samples", "name"];
+const KNOWN_MODELS: &str =
+    "ctrdnn, ctrdnn1, ctrdnn2, ctrdnn8, ctrdnn12, ctrdnn16, ctrdnn20, matchnet, 2emb, nce";
+
+fn required_f64(obj: &Json, key: &str) -> anyhow::Result<f64> {
+    let v = obj
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing required key \"{key}\""))?;
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("key \"{key}\" must be a number, found {}", v.kind()))
+}
+
+/// Parse one JSONL arrival stream into an arrival-ordered [`JobQueue`].
+/// Every error names the offending 1-based line.
+pub fn parse_stream(text: &str) -> anyhow::Result<JobQueue> {
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut last_at = f64::NEG_INFINITY;
+    let mut last_line = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("stream line {lineno}: invalid JSON: {e}"))?;
+        let members = obj.as_obj().ok_or_else(|| {
+            anyhow::anyhow!("stream line {lineno}: expected a JSON object, found {}", obj.kind())
+        })?;
+        for (key, _) in members {
+            anyhow::ensure!(
+                KNOWN_KEYS.contains(&key.as_str()),
+                "stream line {lineno}: unknown key \"{key}\" (known keys: {})",
+                KNOWN_KEYS.join(", ")
+            );
+        }
+        let at = required_f64(&obj, "at")
+            .with_context(|| format!("stream line {lineno}"))?;
+        let floor = required_f64(&obj, "floor")
+            .with_context(|| format!("stream line {lineno}"))?;
+        let samples = required_f64(&obj, "samples")
+            .with_context(|| format!("stream line {lineno}"))?;
+        let model_name = obj
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("stream line {lineno}: missing required key \"model\""))?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("stream line {lineno}: key \"model\" must be a string"))?
+            .to_string();
+        let model = zoo::by_name(&model_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "stream line {lineno}: unknown model \"{model_name}\" (known models: {KNOWN_MODELS})"
+            )
+        })?;
+        anyhow::ensure!(
+            at >= last_at,
+            "stream line {lineno}: arrival {at} s predates line {last_line}'s {last_at} s — \
+             the stream must be sorted by \"at\"",
+        );
+        let name = match obj.get("name") {
+            None => format!("{model_name}-{}", jobs.len()),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("stream line {lineno}: key \"name\" must be a string")
+                })?
+                .to_string(),
+        };
+        let job = Job {
+            id: jobs.len(),
+            name,
+            model,
+            sla_floor: floor,
+            arrival_secs: at,
+            total_samples: samples,
+        };
+        job.validate().with_context(|| format!("stream line {lineno}"))?;
+        last_at = at;
+        last_line = lineno;
+        jobs.push(job);
+    }
+    let queue = JobQueue { jobs };
+    queue.validate().context("arrival stream")?;
+    Ok(queue)
+}
+
+/// Render a queue back to the JSONL stream format, one compact object per
+/// line (names always included). The exact inverse of [`parse_stream`]
+/// bit-for-bit: `--emit-stream` uses this so a generated mix can be
+/// replayed from a file.
+pub fn render_stream(queue: &JobQueue) -> String {
+    let mut out = String::new();
+    for job in &queue.jobs {
+        let line = Json::Obj(vec![
+            ("at".to_string(), Json::Num(job.arrival_secs)),
+            ("model".to_string(), Json::Str(job.model.name.clone())),
+            ("floor".to_string(), Json::Num(job.sla_floor)),
+            ("samples".to_string(), Json::Num(job.total_samples)),
+            ("name".to_string(), Json::Str(job.name.clone())),
+        ]);
+        out.push_str(&line.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::steady_mix;
+
+    #[test]
+    fn parses_a_minimal_stream() {
+        let text = "\n{\"at\": 0, \"model\": \"nce\", \"floor\": 9000, \"samples\": 4.0e6}\n\
+                    {\"at\": 30.5, \"model\": \"ctrdnn8\", \"floor\": 12000, \"samples\": 8e6, \"name\": \"b\"}\n\n";
+        let q = parse_stream(text).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.jobs[0].name, "nce-0");
+        assert_eq!(q.jobs[1].name, "b");
+        assert_eq!(q.jobs[1].arrival_secs, 30.5);
+        assert_eq!(q.jobs[1].model.num_layers(), 8);
+    }
+
+    #[test]
+    fn round_trips_a_generated_mix_bit_exactly() {
+        let q = steady_mix(50, 9, 20_000.0);
+        let text = render_stream(&q);
+        let back = parse_stream(&text).unwrap();
+        assert_eq!(back.len(), q.len());
+        for (a, b) in q.jobs.iter().zip(&back.jobs) {
+            assert_eq!(a.arrival_secs.to_bits(), b.arrival_secs.to_bits());
+            assert_eq!(a.sla_floor.to_bits(), b.sla_floor.to_bits());
+            assert_eq!(a.total_samples.to_bits(), b.total_samples.to_bits());
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.model.name, b.model.name);
+        }
+        // And the re-render is byte-identical (the verify.sh diff gate).
+        assert_eq!(render_stream(&back), text);
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_the_line_number() {
+        let ok = "{\"at\": 0, \"model\": \"nce\", \"floor\": 9000, \"samples\": 4e6}";
+        for (bad, needle) in [
+            ("{\"at\": 1, model: \"nce\"}", "invalid JSON"),
+            ("[1, 2]", "expected a JSON object"),
+            ("{\"at\": 1, \"model\": \"warp9\", \"floor\": 1.0, \"samples\": 1.0}", "unknown model"),
+            ("{\"model\": \"nce\", \"floor\": 9000, \"samples\": 4e6}", "missing required key \"at\""),
+            ("{\"at\": 1, \"model\": \"nce\", \"floor\": 9000, \"samples\": 4e6, \"prio\": 1}", "unknown key \"prio\""),
+            ("{\"at\": \"soon\", \"model\": \"nce\", \"floor\": 9000, \"samples\": 4e6}", "must be a number"),
+            ("{\"at\": 1, \"model\": \"nce\", \"floor\": -5.0, \"samples\": 4e6}", "sla_floor"),
+        ] {
+            let text = format!("{ok}\n{bad}\n");
+            let err = parse_stream(&text).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("line 2"), "{bad}: {msg}");
+            assert!(msg.contains(needle), "{bad}: {msg}");
+        }
+        // Out-of-order arrivals name both lines.
+        let text = format!("{ok}\n{}\n", ok.replace("\"at\": 0", "\"at\": -1"));
+        let err = parse_stream(&text).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("line 1"), "{msg}");
+        assert!(msg.contains("sorted"), "{msg}");
+    }
+}

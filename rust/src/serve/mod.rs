@@ -1,0 +1,29 @@
+//! The serve daemon: streaming job admission at production scale with
+//! self-tuning evaluation concurrency (DESIGN.md §Serve).
+//!
+//! Everything else in the crate is batch — one CLI invocation, one
+//! episode or simulation, exit. This module is the long-lived deployment
+//! shape the paper assumes (a parameter-server cluster absorbing a
+//! continuous stream of heterogeneous training jobs, §1), assembled from
+//! the existing parts rather than forking them:
+//!
+//! * [`event`] — the deterministic JSONL arrival-stream format (file,
+//!   stdin, or a seeded [`steady_mix`](crate::cluster::steady_mix)
+//!   generator), with hard per-line validation;
+//! * [`daemon`] — [`run_serve`]: the admission loop over the
+//!   stream-drivable [`ClusterSim`](crate::cluster::ClusterSim)
+//!   (arrivals fed one at a time, events pumped strictly before each
+//!   arrival, virtual-or-wall clock), reporting admission-decision
+//!   latency p50/p95/p99 and an admission digest — the one-line
+//!   bit-determinism witness;
+//! * [`probe`] — the mongo-style kStable/kUp/kDown throughput probe that
+//!   retunes the eval engine's thread count online from measured
+//!   decisions/sec, without ever perturbing the decisions themselves.
+
+pub mod daemon;
+pub mod event;
+pub mod probe;
+
+pub use daemon::{admission_digest, run_serve, ClockMode, ServeConfig, ServeOutcome};
+pub use event::{parse_stream, render_stream};
+pub use probe::{ProbeConfig, ProbeState, ProbeSummary, ThroughputProbe};

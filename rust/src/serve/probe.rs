@@ -1,0 +1,316 @@
+//! The self-tuning evaluation-concurrency probe (DESIGN.md §Serve).
+//!
+//! A port of the execution-control throughput probe used by production
+//! databases (SNIPPETS.md §1): a kStable/kUp/kDown state machine over a
+//! measured-throughput signal. From **stable**, the probe perturbs the
+//! concurrency one step up or down; in **up**/**down** it keeps the
+//! perturbed setting for one measurement window and accepts it into the
+//! EMA-smoothed stable concurrency only if throughput actually improved,
+//! then returns to stable.
+//!
+//! One deliberate deviation from the original: mongo probes up only when
+//! its ticket pool was exhausted during the window. The eval engine has
+//! no equivalent backpressure signal, so the stable state *alternates*
+//! probe directions instead. Under a monotone throughput-vs-threads
+//! curve the EMA then ratchets toward the better end and the probe
+//! converges to `max_threads` (or `min_threads`); under a peaked curve
+//! it hovers around the knee.
+//!
+//! Determinism: the probe only ever feeds
+//! [`ClusterSim::set_eval_threads`](crate::cluster::ClusterSim::set_eval_threads),
+//! and thread count affects wall-clock only (batched evaluations commit
+//! in submission order — DESIGN.md §Eval-Engine). So even though the
+//! probe's inputs are wall-clock measurements, admission decisions stay
+//! bit-deterministic with the probe enabled, disabled, or jittering.
+
+/// Probe tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// Concurrency bounds the probe may never leave.
+    pub min_threads: usize,
+    pub max_threads: usize,
+    /// Relative step for a probe excursion: stable * (1 ± step).
+    pub step_multiple: f64,
+    /// EMA weight of a newly accepted concurrency (mongo's 0.3: new
+    /// value 30%, history 70%).
+    pub ema_weight: f64,
+    /// Admission decisions per throughput measurement window.
+    pub window: u64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            min_threads: 1,
+            max_threads: 8,
+            step_multiple: 0.5,
+            ema_weight: 0.3,
+            window: 32,
+        }
+    }
+}
+
+impl ProbeConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.min_threads >= 1, "probe min_threads must be at least 1");
+        anyhow::ensure!(
+            self.max_threads >= self.min_threads,
+            "probe max_threads ({}) must be >= min_threads ({})",
+            self.max_threads,
+            self.min_threads
+        );
+        anyhow::ensure!(
+            self.step_multiple > 0.0 && self.step_multiple.is_finite(),
+            "probe step_multiple must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.ema_weight > 0.0 && self.ema_weight <= 1.0,
+            "probe ema_weight must be in (0, 1]"
+        );
+        anyhow::ensure!(self.window >= 1, "probe window must be at least 1 decision");
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeState {
+    Stable,
+    Up,
+    Down,
+}
+
+/// End-of-run probe summary for reports.
+#[derive(Clone, Debug)]
+pub struct ProbeSummary {
+    pub initial_threads: usize,
+    pub final_threads: usize,
+    /// Smallest / largest concurrency the probe actually applied.
+    pub min_applied: usize,
+    pub max_applied: usize,
+    /// Windows whose outcome changed the applied concurrency.
+    pub adjustments: u64,
+    pub observations: u64,
+    /// The EMA-smoothed stable concurrency (fractional; the applied
+    /// value is its rounded clamp).
+    pub stable_concurrency: f64,
+}
+
+/// The state machine. Call [`ThroughputProbe::observe`] once per
+/// measurement window with that window's decisions/sec; apply the
+/// returned concurrency.
+#[derive(Clone, Debug)]
+pub struct ThroughputProbe {
+    cfg: ProbeConfig,
+    state: ProbeState,
+    stable_concurrency: f64,
+    stable_throughput: f64,
+    current: usize,
+    probe_up_next: bool,
+    initial: usize,
+    min_applied: usize,
+    max_applied: usize,
+    adjustments: u64,
+    observations: u64,
+}
+
+impl ThroughputProbe {
+    pub fn new(cfg: ProbeConfig, initial_threads: usize) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            (cfg.min_threads..=cfg.max_threads).contains(&initial_threads),
+            "initial eval threads ({initial_threads}) outside the probe range [{}, {}]",
+            cfg.min_threads,
+            cfg.max_threads
+        );
+        Ok(ThroughputProbe {
+            state: ProbeState::Stable,
+            stable_concurrency: initial_threads as f64,
+            stable_throughput: 0.0,
+            current: initial_threads,
+            probe_up_next: true,
+            initial: initial_threads,
+            min_applied: initial_threads,
+            max_applied: initial_threads,
+            adjustments: 0,
+            observations: 0,
+            cfg,
+        })
+    }
+
+    pub fn state(&self) -> ProbeState {
+        self.state
+    }
+
+    /// The concurrency currently applied.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// Admission decisions per measurement window.
+    pub fn window(&self) -> u64 {
+        self.cfg.window
+    }
+
+    /// Feed one window's measured throughput (admission decisions per
+    /// wall-clock second) and get the concurrency to apply for the next
+    /// window.
+    pub fn observe(&mut self, throughput: f64) -> usize {
+        self.observations += 1;
+        match self.state {
+            ProbeState::Stable => {
+                // The throughput at the stable setting is re-measured
+                // every stable window, so drift in the workload itself
+                // does not fossilize an old baseline.
+                self.stable_throughput = throughput;
+                let can_up = self.round_clamp(self.up_target()) > self.current;
+                let can_down = self.round_clamp(self.down_target()) < self.current;
+                let go_up = match (can_up, can_down) {
+                    (true, false) => true,
+                    (false, true) => false,
+                    // Both available: alternate (no ticket-exhaustion
+                    // signal to pick a side; see the module doc).
+                    (true, true) => {
+                        let up = self.probe_up_next;
+                        self.probe_up_next = !up;
+                        up
+                    }
+                    // Range too tight to move anywhere: stay put.
+                    (false, false) => {
+                        return self.current;
+                    }
+                };
+                if go_up {
+                    self.apply(self.up_target());
+                    self.state = ProbeState::Up;
+                } else {
+                    self.apply(self.down_target());
+                    self.state = ProbeState::Down;
+                }
+            }
+            ProbeState::Up | ProbeState::Down => {
+                if throughput > self.stable_throughput {
+                    // The excursion improved throughput: blend it into
+                    // the stable concurrency (mongo's EMA) and keep the
+                    // better baseline.
+                    self.stable_concurrency = self.current as f64 * self.cfg.ema_weight
+                        + self.stable_concurrency * (1.0 - self.cfg.ema_weight);
+                    self.stable_throughput = throughput;
+                }
+                self.apply(self.stable_concurrency);
+                self.state = ProbeState::Stable;
+            }
+        }
+        self.current
+    }
+
+    pub fn summary(&self) -> ProbeSummary {
+        ProbeSummary {
+            initial_threads: self.initial,
+            final_threads: self.current,
+            min_applied: self.min_applied,
+            max_applied: self.max_applied,
+            adjustments: self.adjustments,
+            observations: self.observations,
+            stable_concurrency: self.stable_concurrency,
+        }
+    }
+
+    fn up_target(&self) -> f64 {
+        // `max(+1)` keeps the excursion meaningful at small concurrency,
+        // where stable * (1 + step) can round back onto itself.
+        (self.stable_concurrency * (1.0 + self.cfg.step_multiple))
+            .max(self.stable_concurrency + 1.0)
+    }
+
+    fn down_target(&self) -> f64 {
+        (self.stable_concurrency * (1.0 - self.cfg.step_multiple))
+            .min(self.stable_concurrency - 1.0)
+    }
+
+    fn round_clamp(&self, c: f64) -> usize {
+        (c.round() as i64).clamp(self.cfg.min_threads as i64, self.cfg.max_threads as i64) as usize
+    }
+
+    fn apply(&mut self, c: f64) {
+        let next = self.round_clamp(c);
+        if next != self.current {
+            self.adjustments += 1;
+        }
+        self.current = next;
+        self.min_applied = self.min_applied.min(next);
+        self.max_applied = self.max_applied.max(next);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn probe(min: usize, max: usize, initial: usize) -> ThroughputProbe {
+        let cfg = ProbeConfig { min_threads: min, max_threads: max, ..Default::default() };
+        ThroughputProbe::new(cfg, initial).unwrap()
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_ranges() {
+        assert!(ProbeConfig { min_threads: 0, ..Default::default() }.validate().is_err());
+        assert!(ProbeConfig { max_threads: 0, ..Default::default() }.validate().is_err());
+        assert!(ProbeConfig { ema_weight: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ProbeConfig { step_multiple: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ProbeConfig { window: 0, ..Default::default() }.validate().is_err());
+        assert!(ThroughputProbe::new(ProbeConfig::default(), 9).is_err());
+        ProbeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn converges_to_max_when_throughput_scales_with_threads() {
+        // Monotone-increasing curve: more threads, more decisions/sec.
+        // Every up-excursion is accepted, every down-excursion rejected,
+        // so the EMA must ratchet to the top and stay there.
+        let mut p = probe(1, 8, 1);
+        for _ in 0..200 {
+            let c = p.current();
+            p.observe(100.0 * c as f64);
+        }
+        let s = p.summary();
+        assert_eq!(s.final_threads, 8, "stable {:.2}", s.stable_concurrency);
+        assert!(s.adjustments >= 2);
+        assert!(s.max_applied == 8 && s.min_applied >= 1);
+    }
+
+    #[test]
+    fn converges_to_min_when_threads_only_hurt() {
+        // Monotone-decreasing curve (contention): down-excursions win.
+        let mut p = probe(1, 8, 8);
+        for _ in 0..200 {
+            let c = p.current();
+            p.observe(100.0 / c as f64);
+        }
+        assert_eq!(p.summary().final_threads, 1);
+    }
+
+    #[test]
+    fn never_leaves_the_configured_range_under_noise() {
+        let mut rng = Rng::new(0xBEEF);
+        let mut p = probe(2, 6, 4);
+        for _ in 0..500 {
+            let c = p.current();
+            assert!((2..=6).contains(&c), "applied {c} outside [2, 6]");
+            p.observe(50.0 + 100.0 * rng.f64());
+        }
+        let s = p.summary();
+        assert!(s.min_applied >= 2 && s.max_applied <= 6);
+        assert!(s.observations == 500);
+    }
+
+    #[test]
+    fn degenerate_range_stays_put() {
+        let mut p = probe(3, 3, 3);
+        for t in [10.0, 20.0, 5.0] {
+            assert_eq!(p.observe(t), 3);
+        }
+        assert_eq!(p.summary().adjustments, 0);
+        assert_eq!(p.state(), ProbeState::Stable);
+    }
+}

@@ -6,6 +6,7 @@
 //! for the profiler/bench harness (no `criterion`), and a property-testing
 //! harness (no `proptest`).
 
+pub mod json;
 pub mod matrix;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,168 @@
+//! Integration tests for the serve daemon: bit-deterministic admission
+//! across reruns and with the probe on or off, ledger conservation under
+//! a 10k-job stream, probe convergence inside the full loop, and
+//! actionable rejection of malformed streams.
+
+use heterps::cluster::{steady_mix, tight_pool, ClusterConfig, ClusterReport, EventKind};
+use heterps::resources::ResourcePool;
+use heterps::sched::SchedulerSpec;
+use heterps::serve::{self, parse_stream, render_stream, ClockMode, ProbeConfig, ServeConfig};
+
+fn serve_cfg(method: &str, budget: usize) -> ServeConfig {
+    ServeConfig {
+        cluster: ClusterConfig {
+            spec: SchedulerSpec::parse(method).unwrap(),
+            admit_budget_evals: budget,
+            ..Default::default()
+        },
+        policy: "drf-cost".to_string(),
+        probe: None,
+        clock: ClockMode::Virtual,
+        progress_every: 0,
+    }
+}
+
+/// Replay a report's unit ledger (the serve twin of the cluster test):
+/// every `Admit` acquires its whole sub-pool, every `Preempt`/`Complete`
+/// releases exactly what the job held, and the running total never
+/// exceeds the parent pool's per-type limits.
+fn check_ledger(report: &ClusterReport, pool: &ResourcePool, ctx: &str) {
+    let nt = pool.num_types();
+    let mut held: Vec<Option<Vec<usize>>> = vec![None; report.jobs.len()];
+    let mut total = vec![0usize; nt];
+    for ev in &report.timeline {
+        match ev.kind {
+            EventKind::Arrive | EventKind::Reject => {
+                assert!(ev.units.is_empty(), "{ctx}: {:?} carries units", ev.kind);
+            }
+            EventKind::Admit => {
+                assert!(
+                    held[ev.job_id].is_none(),
+                    "{ctx}: job {} admitted while already holding a sub-pool",
+                    ev.job_id
+                );
+                assert_eq!(ev.units.len(), nt, "{ctx}: unit arity");
+                for (t, &u) in ev.units.iter().enumerate() {
+                    total[t] += u;
+                    assert!(
+                        total[t] <= pool.get(t).max_units,
+                        "{ctx}: type {t} over limit after admitting job {}",
+                        ev.job_id
+                    );
+                }
+                held[ev.job_id] = Some(ev.units.clone());
+            }
+            EventKind::Preempt | EventKind::Complete => {
+                let h = held[ev.job_id].take().unwrap_or_else(|| {
+                    panic!("{ctx}: job {} released units it never held", ev.job_id)
+                });
+                assert_eq!(
+                    h, ev.units,
+                    "{ctx}: job {} released a sub-pool it did not acquire",
+                    ev.job_id
+                );
+                for (t, &u) in ev.units.iter().enumerate() {
+                    total[t] -= u;
+                }
+            }
+        }
+    }
+    for (jid, h) in held.iter().enumerate() {
+        assert!(h.is_none(), "{ctx}: job {jid} still holds a sub-pool at the end");
+    }
+    assert!(total.iter().all(|&u| u == 0), "{ctx}: units leaked");
+}
+
+#[test]
+fn serve_runs_are_bit_deterministic_probe_on_or_off() {
+    // The daemon contract: identical (pool, stream, config, seed) means
+    // an identical admission digest — rerun to rerun, and with the probe
+    // enabled (which may only move wall-clock throughput, never the
+    // decisions). One deterministic and one stochastic per-job method,
+    // and the stream goes through the JSONL codec first so the
+    // serialized path the CLI takes is covered too.
+    let pool = tight_pool();
+    let queue = parse_stream(&render_stream(&steady_mix(60, 11, 20_000.0))).unwrap();
+    for method in ["greedy", "rl-tabular:rounds=10"] {
+        let cfg = serve_cfg(method, 64);
+        let a = serve::run_serve(&pool, &queue, &cfg, 11).unwrap();
+        let b = serve::run_serve(&pool, &queue, &cfg, 11).unwrap();
+        assert_eq!(a.admission_digest, b.admission_digest, "{method}: rerun digest");
+        assert_eq!(a.report.decisions, b.report.decisions, "{method}: decisions");
+
+        let mut probed = serve_cfg(method, 64);
+        probed.probe = Some(ProbeConfig { window: 8, ..Default::default() });
+        let c = serve::run_serve(&pool, &queue, &probed, 11).unwrap();
+        assert_eq!(
+            a.admission_digest, c.admission_digest,
+            "{method}: the probe perturbed admission decisions"
+        );
+    }
+}
+
+#[test]
+fn a_ten_thousand_job_stream_conserves_the_ledger() {
+    // Production scale: 10k arrivals through the streaming loop. Every
+    // job must resolve (completed or rejected), the unit ledger must
+    // balance through every handoff, and a rerun must land on the same
+    // digest.
+    let pool = tight_pool();
+    let queue = steady_mix(10_000, 42, 20_000.0);
+    let cfg = serve_cfg("greedy", 16);
+    let a = serve::run_serve(&pool, &queue, &cfg, 42).unwrap();
+    let b = serve::run_serve(&pool, &queue, &cfg, 42).unwrap();
+    assert_eq!(a.admission_digest, b.admission_digest, "10k digest");
+    assert_eq!(a.arrivals, 10_000);
+    assert_eq!(a.report.completed() + a.report.rejected, 10_000, "jobs left unresolved");
+    assert!(a.report.decisions >= 10_000, "fewer decisions than arrivals");
+    check_ledger(&a.report, &pool, "serve/10k");
+}
+
+#[test]
+fn the_probe_tunes_threads_inside_the_daemon() {
+    // With a short window the probe must actually fire: at least one
+    // applied adjustment, never outside [min, max], and — the core
+    // guarantee — a digest identical to the probe-less run.
+    let pool = tight_pool();
+    let queue = steady_mix(300, 7, 20_000.0);
+    let plain = serve_cfg("greedy", 32);
+    let base = serve::run_serve(&pool, &queue, &plain, 7).unwrap();
+    let mut cfg = serve_cfg("greedy", 32);
+    cfg.probe = Some(ProbeConfig {
+        min_threads: 1,
+        max_threads: 4,
+        window: 4,
+        ..Default::default()
+    });
+    let out = serve::run_serve(&pool, &queue, &cfg, 7).unwrap();
+    let p = out.probe.expect("probe summary present");
+    assert!(p.observations >= 4, "probe barely fired: {} windows", p.observations);
+    assert!(p.adjustments >= 1, "probe never moved the concurrency");
+    assert!(p.max_applied > p.initial_threads, "probe never left the initial setting");
+    assert!(
+        p.min_applied >= 1 && p.max_applied <= 4,
+        "probe left [1, 4]: applied [{}, {}]",
+        p.min_applied,
+        p.max_applied
+    );
+    assert_eq!(out.final_eval_threads, p.final_threads);
+    assert_eq!(
+        base.admission_digest, out.admission_digest,
+        "self-tuning perturbed admission decisions"
+    );
+}
+
+#[test]
+fn malformed_streams_are_rejected_with_line_context() {
+    let ok = r#"{"at": 0.0, "model": "nce", "floor": 9000.0, "samples": 4.0e6}"#;
+    for (bad, needle) in [
+        ("not json", "line 2"),
+        (r#"{"at": -1.0, "model": "nce", "floor": 1.0, "samples": 1.0}"#, "line 2"),
+        (r#"{"at": 0.5, "model": "warpnet", "floor": 1.0, "samples": 1.0}"#, "warpnet"),
+    ] {
+        let text = format!("{ok}\n{bad}\n");
+        let err = parse_stream(&text).expect_err("malformed line accepted");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "error lacks `{needle}`: {msg}");
+    }
+}

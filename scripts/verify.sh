@@ -19,9 +19,14 @@
 # 5. a `heterps cluster` smoke: a small job mix through every allocation
 #    policy, run twice per policy with the same seed and diffed — any
 #    nondeterminism in the multi-tenant scheduler fails the gate;
-# 6. `cargo fmt --check` when rustfmt is installed (skipped with a loud
+# 6. a `heterps serve` smoke: a generated steady stream written to JSONL
+#    via --emit-stream, served twice from the file and diffed modulo
+#    `[wall]` lines (the streaming-admission determinism gate), plus a
+#    probe-enabled run whose deterministic output — admission digest
+#    included — must match the probe-less runs exactly;
+# 7. `cargo fmt --check` when rustfmt is installed (skipped with a loud
 #    warning otherwise);
-# 7. `cargo clippy --all-targets -- -D warnings` when the clippy
+# 8. `cargo clippy --all-targets -- -D warnings` when the clippy
 #    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
@@ -117,6 +122,33 @@ done
 echo "   -- tight mix, all policies (contention + preemption path)"
 "$BIN" cluster --jobs 5 --mix tight --tight-pool --policy all --method greedy \
   --budget-evals 48 --arrival-seed 42 >/dev/null
+
+echo "== serve smoke: JSONL stream served twice + probe run, diffed modulo [wall]"
+SERVE_TMP="$(mktemp -d)"
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP"' EXIT
+# Generate a small steady stream and persist it as the replayable JSONL.
+"$BIN" serve --mix steady --jobs 40 --arrival-seed 7 --budget-evals 32 \
+  --emit-stream "$SERVE_TMP/stream.jsonl" >/dev/null 2>/dev/null
+for run in a b; do
+  "$BIN" serve --stream "$SERVE_TMP/stream.jsonl" --arrival-seed 7 --budget-evals 32 \
+    2>/dev/null | grep -v '^\[wall\]' > "$SERVE_TMP/$run.txt"
+done
+if ! diff -u "$SERVE_TMP/a.txt" "$SERVE_TMP/b.txt"; then
+  echo "error: serve is not deterministic across reruns of the same stream" >&2
+  exit 1
+fi
+echo "   -- probe-enabled run must keep the deterministic output (digest included)"
+"$BIN" serve --stream "$SERVE_TMP/stream.jsonl" --arrival-seed 7 --budget-evals 32 \
+  --probe --probe-window 4 --json-out "$SERVE_TMP/serve.json" \
+  2>/dev/null | grep -v '^\[wall\]' > "$SERVE_TMP/probe.txt"
+if ! diff -u "$SERVE_TMP/a.txt" "$SERVE_TMP/probe.txt"; then
+  echo "error: the probe perturbed serve's deterministic output" >&2
+  exit 1
+fi
+if [ ! -s "$SERVE_TMP/serve.json" ]; then
+  echo "error: serve --json-out wrote no report" >&2
+  exit 1
+fi
 
 echo "== fmt gate: cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then
