@@ -6,10 +6,16 @@ here are *structural*: bytes resident per program instance and the
 fraction of 128x128 MXU lanes a tile keeps busy. See DESIGN.md §Perf.
 
 Usage: cd python && python -m compile.perf_report [--artifacts ../artifacts]
+                                                  [--json PATH]
+
+`--json PATH` additionally writes the L1 tile rows as
+`{"kernels": [{"label", "vmem_bytes", "mxu_util"}]}` — the machine-readable
+feed `heterps calibrate --kernels` folds into its residual ledger.
 """
 
 import argparse
 import collections
+import json
 import os
 import re
 
@@ -33,6 +39,8 @@ def hlo_census(path):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the L1 tile rows as JSON for `heterps calibrate --kernels`")
     args = ap.parse_args()
 
     print("== L2: HLO op census per artifact ==")
@@ -58,6 +66,15 @@ def main():
     ]
     for label, bytes_, util in rows:
         print(f"{label:<42} {bytes_ / 1024:>9.1f} {util:>9.2f}")
+    if args.json:
+        report = {"kernels": [
+            {"label": label, "vmem_bytes": bytes_, "mxu_util": util}
+            for label, bytes_, util in rows
+        ]}
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"\nwrote kernel report to {args.json}")
     print()
     print("All tiles sit far under the 16 MiB VMEM budget; the two tower")
     print("matmuls are MXU-shaped (util 1.0). The LSTM cell is B=1 control-")

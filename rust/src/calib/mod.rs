@@ -1,0 +1,686 @@
+//! Calibration: closing the analytic-vs-measured gap (DESIGN.md
+//! §Calibration).
+//!
+//! The §4.1 cost model is the reward signal for every scheduler, yet its
+//! coefficients are derived, not measured — and the measured side of this
+//! codebase (the discrete-event [`simulator`](crate::simulator), the comm
+//! fabric's wire accounting, the Pallas kernel perf reports) systematically
+//! disagrees with it: stragglers and dispatch overheads inflate service
+//! times, message coalescing deflates wire bytes, accelerator tiles run
+//! below the roofline the flops term assumes. This module closes the loop:
+//!
+//! * A [`ResidualLedger`] collects `(analytic, measured)` pairs per
+//!   [`CostTerm`] and resource type from every measurement source.
+//! * [`ResidualLedger::fit`] turns them into per-`(term, type)` scale
+//!   corrections — the least-squares optimum in log space (the geometric
+//!   mean of the measured/analytic ratios), guarded by the median when
+//!   outliers drag the mean so a fitted overlay is never worse than
+//!   identity in absolute log-residual. Fully deterministic: no RNG, and
+//!   the ledger preserves insertion order.
+//! * The resulting [`Calibration`] is an overlay parameter of
+//!   [`CostModel`](crate::cost::CostModel): scales multiply the cached
+//!   per-layer term seconds at model-build time. The *identity* overlay
+//!   multiplies by exactly `1.0` — bit-identical to the uncalibrated
+//!   evaluator (IEEE 754 `x * 1.0 == x` for finite `x`), which the
+//!   determinism suite asserts for every scheduler family.
+//! * Each fit bumps the calibration `epoch`; the eval engine hashes the
+//!   overlay (epoch + scale bits) into its context fingerprints, so
+//!   memoized evaluations can never serve a stale calibration.
+//!
+//! The ledger also derives the srtf preemption margin
+//! ([`ResidualLedger::derived_margin`]): instead of the historical 1.25
+//! constant, the observed spread of measured/analytic service-time ratios
+//! bounds how far the analytic remaining-time estimate can undershoot.
+
+use crate::config::{Config, Value};
+use crate::resources::ResourcePool;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One FNV-1a round over a 64-bit word (the eval engine's fingerprint
+/// primitive, re-stated here so the overlay can hash itself).
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+}
+
+/// Fitted scales outside this band are treated as fit blow-ups (a handful
+/// of degenerate samples, not a real hardware trait) and clamped.
+const SCALE_MIN: f64 = 0.05;
+const SCALE_MAX: f64 = 20.0;
+
+/// The cost-model term a residual (and its fitted scale) applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostTerm {
+    /// The Eq 1 flops term of `OCT` (roofline compute seconds).
+    Compute,
+    /// The IO/memory-streaming part of `OCT` (data-intensive layers and
+    /// the dense activation-streaming share).
+    Io,
+    /// The Eq 2 communication terms of `ODT` (boundary + weight sync).
+    Comm,
+}
+
+impl CostTerm {
+    pub const COUNT: usize = 3;
+    pub const ALL: [CostTerm; CostTerm::COUNT] =
+        [CostTerm::Compute, CostTerm::Io, CostTerm::Comm];
+
+    pub fn index(self) -> usize {
+        match self {
+            CostTerm::Compute => 0,
+            CostTerm::Io => 1,
+            CostTerm::Comm => 2,
+        }
+    }
+
+    /// The `[calibration]` config key for this term's scale array.
+    pub fn name(self) -> &'static str {
+        match self {
+            CostTerm::Compute => "compute",
+            CostTerm::Io => "io",
+            CostTerm::Comm => "comm",
+        }
+    }
+}
+
+/// Where a residual sample was measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Discrete-event replay of a provisioned plan (stage service times).
+    Simulator,
+    /// The comm fabric's wire accounting (`comm::analytic_comm_check`).
+    CommFabric,
+    /// Structural Pallas kernel profiles (`python/compile/perf_report.py
+    /// --json`): VMEM footprints and MXU utilization per tile.
+    KernelProfile,
+    /// Online: a cluster job's measured service vs its admission estimate.
+    Cluster,
+}
+
+impl Source {
+    pub fn name(self) -> &'static str {
+        match self {
+            Source::Simulator => "simulator",
+            Source::CommFabric => "comm-fabric",
+            Source::KernelProfile => "kernel-profile",
+            Source::Cluster => "cluster",
+        }
+    }
+}
+
+/// One `(analytic prediction, measured value)` pair. Units cancel in the
+/// fit — only the ratio enters — so seconds (simulator), bytes (comm
+/// fabric) and unitless roofline fractions (kernel tiles) can share one
+/// ledger.
+#[derive(Clone, Copy, Debug)]
+pub struct Residual {
+    pub term: CostTerm,
+    pub type_id: usize,
+    pub analytic: f64,
+    pub measured: f64,
+    pub source: Source,
+}
+
+impl Residual {
+    /// measured / analytic — above 1.0 the model undershot reality.
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.analytic
+    }
+}
+
+/// Per-`(term, resource type)` multiplicative corrections for
+/// [`CostModel`](crate::cost::CostModel). Empty scales = the identity
+/// overlay (every scale reads as exactly `1.0`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Fit generation: bumped on every refit so eval-engine fingerprints
+    /// (and with them memoized evaluations) roll over.
+    epoch: u64,
+    /// Resource-type count the scale table was fitted for.
+    num_types: usize,
+    /// Term-major scale table: `scales[term.index() * num_types + type]`.
+    scales: Vec<f64>,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::identity()
+    }
+}
+
+impl Calibration {
+    /// The do-nothing overlay: every scale is `1.0`, and applying it is
+    /// bit-identical to not calibrating at all.
+    pub fn identity() -> Self {
+        Calibration { epoch: 0, num_types: 0, scales: Vec::new() }
+    }
+
+    /// A fitted overlay. `scales` is term-major
+    /// (`CostTerm::COUNT * num_types` entries) and must be finite and
+    /// positive throughout.
+    pub fn fitted(epoch: u64, num_types: usize, scales: Vec<f64>) -> anyhow::Result<Self> {
+        let c = Calibration { epoch, num_types, scales };
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.scales.is_empty() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.scales.len() == CostTerm::COUNT * self.num_types,
+            "calibration: expected {} scales ({} terms x {} types), got {}",
+            CostTerm::COUNT * self.num_types,
+            CostTerm::COUNT,
+            self.num_types,
+            self.scales.len()
+        );
+        for term in CostTerm::ALL {
+            for t in 0..self.num_types {
+                let s = self.scales[term.index() * self.num_types + t];
+                anyhow::ensure!(
+                    s.is_finite() && s > 0.0,
+                    "calibration.{}[{t}]: scale must be a finite value > 0 (got {s})",
+                    term.name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn num_types(&self) -> usize {
+        self.num_types
+    }
+
+    /// Whether applying this overlay changes nothing (the determinism
+    /// contract's "identity" — scales absent or all exactly `1.0`).
+    pub fn is_identity(&self) -> bool {
+        self.scales.iter().all(|&s| s == 1.0)
+    }
+
+    /// The multiplicative correction for one `(term, type)`. Reads as
+    /// `1.0` for the identity overlay and for any type outside the fitted
+    /// table (a pool can grow after a fit; unseen types stay analytic).
+    #[inline]
+    pub fn scale(&self, term: CostTerm, type_id: usize) -> f64 {
+        if self.scales.is_empty() || type_id >= self.num_types {
+            return 1.0;
+        }
+        self.scales[term.index() * self.num_types + type_id]
+    }
+
+    /// Stable hash of the overlay (epoch + scale bits) — folded into the
+    /// eval engine's context fingerprints so cached evaluations roll over
+    /// on every refit, even one that reproduces identical scales.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        fnv(&mut h, u64::from_le_bytes(*b"calibfp\0"));
+        fnv(&mut h, self.epoch);
+        fnv(&mut h, self.scales.len() as u64);
+        for s in &self.scales {
+            fnv(&mut h, s.to_bits());
+        }
+        h
+    }
+
+    /// Render as a `[calibration]` config section (the `calibrate`
+    /// subcommand's output; [`Calibration::from_config`] reads it back
+    /// bit-exactly — Rust's shortest-round-trip float formatting).
+    pub fn to_config_section(&self) -> String {
+        let mut out = String::from("[calibration]\n");
+        out.push_str(&format!("epoch = {}\n", self.epoch));
+        out.push_str(&format!("types = {}\n", self.num_types));
+        if !self.scales.is_empty() {
+            for term in CostTerm::ALL {
+                let row: Vec<String> =
+                    (0..self.num_types).map(|t| format!("{}", self.scale(term, t))).collect();
+                out.push_str(&format!("{} = [{}]\n", term.name(), row.join(", ")));
+            }
+        }
+        out
+    }
+
+    /// Load a `[calibration]` section. `Ok(None)` when the config has no
+    /// such section; an `epoch`/`types` header with no scale arrays is an
+    /// explicit identity overlay.
+    pub fn from_config(cfg: &Config) -> anyhow::Result<Option<Calibration>> {
+        if cfg.keys_under("calibration.").is_empty() {
+            return Ok(None);
+        }
+        let epoch = cfg.usize_or("calibration.epoch", 0) as u64;
+        let num_types = cfg.usize_or("calibration.types", 0);
+        let mut rows: Vec<Option<Vec<f64>>> = Vec::new();
+        for term in CostTerm::ALL {
+            let key = format!("calibration.{}", term.name());
+            let Some(v) = cfg.get(&key) else {
+                rows.push(None);
+                continue;
+            };
+            let arr = match v {
+                Value::Array(items) => items,
+                _ => anyhow::bail!("{key}: expected an array of scales"),
+            };
+            let mut parsed = Vec::with_capacity(arr.len());
+            for (i, item) in arr.iter().enumerate() {
+                let s = item
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{key}[{i}]: expected a number"))?;
+                parsed.push(s);
+            }
+            rows.push(Some(parsed));
+        }
+        if rows.iter().all(Option::is_none) {
+            // Header-only section: an explicit identity overlay (used by
+            // the verify smoke to pin the bit-identity contract).
+            return Ok(Some(Calibration { epoch, num_types: 0, scales: Vec::new() }));
+        }
+        let mut scales = Vec::with_capacity(CostTerm::COUNT * num_types);
+        for (term, row) in CostTerm::ALL.iter().zip(&rows) {
+            let row = row.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "calibration.{}: missing — a fitted section needs all of {}",
+                    term.name(),
+                    CostTerm::ALL.map(CostTerm::name).join("/")
+                )
+            })?;
+            anyhow::ensure!(
+                row.len() == num_types,
+                "calibration.{}: expected {num_types} scales (one per type), got {}",
+                term.name(),
+                row.len()
+            );
+            scales.extend_from_slice(row);
+        }
+        Ok(Some(Calibration::fitted(epoch, num_types, scales)?))
+    }
+}
+
+/// The `(analytic, measured)` sample store every measurement source feeds.
+#[derive(Clone, Debug, Default)]
+pub struct ResidualLedger {
+    residuals: Vec<Residual>,
+}
+
+impl ResidualLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.residuals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residuals.is_empty()
+    }
+
+    pub fn records(&self) -> &[Residual] {
+        &self.residuals
+    }
+
+    /// Record one pair. Non-finite or non-positive values carry no ratio
+    /// information (the fit works in log space) and are dropped; returns
+    /// whether the sample was kept.
+    pub fn record(
+        &mut self,
+        term: CostTerm,
+        type_id: usize,
+        analytic: f64,
+        measured: f64,
+        source: Source,
+    ) -> bool {
+        let ok = analytic.is_finite() && analytic > 0.0 && measured.is_finite() && measured > 0.0;
+        if ok {
+            self.residuals.push(Residual { term, type_id, analytic, measured, source });
+        }
+        ok
+    }
+
+    /// Feed every per-stage `(analytic ET, measured service)` pair of one
+    /// simulated run — the compute-side residual source. The simulator's
+    /// service times fold jitter and dispatch overheads over the whole Eq 3
+    /// stage time, so the samples land on [`CostTerm::Compute`] (the term
+    /// that dominates every provisioned stage's ET).
+    pub fn record_sim(&mut self, sim: &crate::simulator::SimResult) -> usize {
+        let mut kept = 0;
+        for s in &sim.stage_samples {
+            if self.record(
+                CostTerm::Compute,
+                s.type_id,
+                s.analytic_et,
+                s.measured_et,
+                Source::Simulator,
+            ) {
+                kept += 1;
+            }
+        }
+        kept
+    }
+
+    /// Feed one comm-fabric cross-check (analytic Eq 2 bytes vs bytes
+    /// actually put on the wire; coalescing makes the ratio < 1).
+    /// `type_id` is the worker type whose sync traffic was measured.
+    pub fn record_comm_check(&mut self, check: &crate::comm::CommCheck, type_id: usize) -> bool {
+        self.record(
+            CostTerm::Comm,
+            type_id,
+            check.analytic_bytes,
+            check.measured_bytes,
+            Source::CommFabric,
+        )
+    }
+
+    /// Ingest a structural kernel report (`python/compile/perf_report.py
+    /// --json`): every Pallas tile with a nonzero MXU utilization `u` says
+    /// the roofline flops term undershoots real compute time by `1/u` on
+    /// accelerator types. Recorded as `(analytic = 1, measured = 1/u)`
+    /// against [`CostTerm::Compute`] for each non-CPU type (the tiles are
+    /// accelerator kernels; CPU stages never run them). Returns the number
+    /// of samples recorded.
+    pub fn ingest_kernel_report(&mut self, report: &Json, pool: &ResourcePool) -> usize {
+        let Some(kernels) = report.get("kernels").and_then(Json::as_arr) else {
+            return 0;
+        };
+        let cpu_id = pool.cpu_type().map(|c| c.id);
+        let mut kept = 0;
+        for k in kernels {
+            let Some(util) = k.get("mxu_util").and_then(Json::as_f64) else {
+                continue;
+            };
+            if !(util > 0.0 && util <= 1.0) {
+                continue; // memory-bound tiles (util 0) say nothing about flops
+            }
+            for t in 0..pool.num_types() {
+                if Some(t) == cpu_id {
+                    continue;
+                }
+                if self.record(CostTerm::Compute, t, 1.0, 1.0 / util, Source::KernelProfile) {
+                    kept += 1;
+                }
+            }
+        }
+        kept
+    }
+
+    /// Mean absolute log-residual `|ln(measured / analytic)|` over the
+    /// ledger — the gap metric the fit shrinks. 0.0 when empty.
+    pub fn mean_abs_log_residual(&self) -> f64 {
+        self.mean_abs_log_residual_under(&Calibration::identity())
+    }
+
+    /// The same metric with an overlay applied:
+    /// `|ln(measured / (scale * analytic))|`.
+    pub fn mean_abs_log_residual_under(&self, calib: &Calibration) -> f64 {
+        if self.residuals.is_empty() {
+            return 0.0;
+        }
+        let logs: Vec<f64> = self
+            .residuals
+            .iter()
+            .map(|r| (r.measured / (calib.scale(r.term, r.type_id) * r.analytic)).ln().abs())
+            .collect();
+        stats::mean(&logs)
+    }
+
+    /// Fit per-`(term, type)` scales: for each group, the log-space
+    /// least-squares optimum (geometric mean of the ratios), falling back
+    /// to the median log-ratio whenever that gives a smaller absolute
+    /// log-residual — the guard that makes a fitted overlay never worse
+    /// than identity on the data it was fitted on (the median minimizes
+    /// the group's L1 residual; with all-positive log-ratios it beats
+    /// zero strictly). Groups with no samples keep scale 1.0.
+    /// Deterministic: insertion order, no RNG.
+    pub fn fit(&self, num_types: usize, epoch: u64) -> Calibration {
+        let mut scales = vec![1.0f64; CostTerm::COUNT * num_types];
+        for term in CostTerm::ALL {
+            for t in 0..num_types {
+                let logs: Vec<f64> = self
+                    .residuals
+                    .iter()
+                    .filter(|r| r.term == term && r.type_id == t)
+                    .map(|r| r.ratio().ln())
+                    .collect();
+                if logs.is_empty() {
+                    continue;
+                }
+                let l1 = |c: f64| logs.iter().map(|r| (r - c).abs()).sum::<f64>();
+                let ls = stats::mean(&logs);
+                let med = stats::median(&logs);
+                let center = if l1(ls) <= l1(med) { ls } else { med };
+                scales[term.index() * num_types + t] = center.exp().clamp(SCALE_MIN, SCALE_MAX);
+            }
+        }
+        Calibration { epoch, num_types, scales }
+    }
+
+    /// Derive the srtf preemption margin from the observed service-time
+    /// residual spread: the p95 of measured/analytic ratios over the
+    /// service-time sources ([`Source::Simulator`], [`Source::Cluster`]),
+    /// clamped into `[1.0, cap]`. With fewer than [`MARGIN_MIN_SAMPLES`]
+    /// samples the spread is not trustworthy and the configured cap (the
+    /// operator's knob) stands. The derived margin can only *shrink* the
+    /// knob, never raise it — preemption never gets more conservative than
+    /// configured.
+    pub fn derived_margin(&self, cap: f64) -> f64 {
+        let ratios: Vec<f64> = self
+            .residuals
+            .iter()
+            .filter(|r| matches!(r.source, Source::Simulator | Source::Cluster))
+            .map(Residual::ratio)
+            .collect();
+        if ratios.len() < MARGIN_MIN_SAMPLES {
+            return cap;
+        }
+        stats::percentile(&ratios, 95.0).clamp(1.0, cap)
+    }
+}
+
+/// Service-time samples needed before [`ResidualLedger::derived_margin`]
+/// trusts the observed spread over the configured cap.
+pub const MARGIN_MIN_SAMPLES: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::paper_testbed;
+
+    #[test]
+    fn term_indices_cover_count() {
+        for (i, term) in CostTerm::ALL.iter().enumerate() {
+            assert_eq!(term.index(), i);
+        }
+        assert_eq!(CostTerm::COUNT, CostTerm::ALL.len());
+    }
+
+    #[test]
+    fn identity_scales_are_exactly_one() {
+        let id = Calibration::identity();
+        assert!(id.is_identity());
+        assert_eq!(id.epoch(), 0);
+        for term in CostTerm::ALL {
+            for t in 0..5 {
+                assert_eq!(id.scale(term, t).to_bits(), 1.0f64.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_rejects_degenerate_samples() {
+        let mut ledger = ResidualLedger::new();
+        assert!(!ledger.record(CostTerm::Compute, 0, 0.0, 1.0, Source::Simulator));
+        assert!(!ledger.record(CostTerm::Compute, 0, 1.0, -2.0, Source::Simulator));
+        assert!(!ledger.record(CostTerm::Compute, 0, f64::NAN, 1.0, Source::Simulator));
+        assert!(!ledger.record(CostTerm::Compute, 0, 1.0, f64::INFINITY, Source::Simulator));
+        assert!(ledger.is_empty());
+        assert!(ledger.record(CostTerm::Compute, 0, 1.0, 1.2, Source::Simulator));
+        assert_eq!(ledger.len(), 1);
+    }
+
+    #[test]
+    fn fit_recovers_a_known_scale() {
+        // Every compute sample on type 1 runs exactly 2x the analytic
+        // estimate: the fitted scale must be 2, other groups stay 1.
+        let mut ledger = ResidualLedger::new();
+        for i in 1..=6 {
+            let a = i as f64 * 0.01;
+            ledger.record(CostTerm::Compute, 1, a, 2.0 * a, Source::Simulator);
+        }
+        let calib = ledger.fit(2, 1);
+        assert!((calib.scale(CostTerm::Compute, 1) - 2.0).abs() < 1e-12);
+        assert_eq!(calib.scale(CostTerm::Compute, 0).to_bits(), 1.0f64.to_bits());
+        assert_eq!(calib.scale(CostTerm::Io, 1).to_bits(), 1.0f64.to_bits());
+        assert_eq!(calib.scale(CostTerm::Comm, 1).to_bits(), 1.0f64.to_bits());
+        assert_eq!(calib.epoch(), 1);
+        assert!(!calib.is_identity());
+        calib.validate().unwrap();
+    }
+
+    #[test]
+    fn fit_never_increases_abs_log_residual() {
+        // Mixed, skewed ratios across terms and types: the fitted overlay
+        // must shrink the mean absolute log-residual (the median guard
+        // makes this a guarantee, not a tendency).
+        let mut ledger = ResidualLedger::new();
+        let ratios = [1.05, 1.08, 1.1, 1.35, 2.4];
+        for (i, &r) in ratios.iter().enumerate() {
+            let a = 0.5 + i as f64 * 0.1;
+            ledger.record(CostTerm::Compute, 0, a, r * a, Source::Simulator);
+            ledger.record(CostTerm::Comm, 1, a, 0.8 * a, Source::CommFabric);
+        }
+        let before = ledger.mean_abs_log_residual();
+        let calib = ledger.fit(2, 1);
+        let after = ledger.mean_abs_log_residual_under(&calib);
+        assert!(after < before, "residual did not shrink: {after} !< {before}");
+    }
+
+    #[test]
+    fn fit_clamps_blowups() {
+        let mut ledger = ResidualLedger::new();
+        ledger.record(CostTerm::Io, 0, 1e-9, 1.0, Source::Simulator); // ratio 1e9
+        let calib = ledger.fit(1, 1);
+        assert!((calib.scale(CostTerm::Io, 0) - SCALE_MAX).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_roundtrip_is_bit_exact() {
+        let mut ledger = ResidualLedger::new();
+        for i in 1..=5 {
+            let a = i as f64;
+            ledger.record(CostTerm::Compute, 0, a, 1.17 * a, Source::Simulator);
+            ledger.record(CostTerm::Compute, 1, a, 1.03 * a, Source::Simulator);
+            ledger.record(CostTerm::Comm, 1, a, 0.77 * a, Source::CommFabric);
+        }
+        let calib = ledger.fit(2, 3);
+        let text = calib.to_config_section();
+        let cfg = Config::parse(&text).unwrap();
+        let back = Calibration::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(back.epoch(), calib.epoch());
+        assert_eq!(back.num_types(), calib.num_types());
+        for term in CostTerm::ALL {
+            for t in 0..2 {
+                assert_eq!(
+                    back.scale(term, t).to_bits(),
+                    calib.scale(term, t).to_bits(),
+                    "{}[{t}]",
+                    term.name()
+                );
+            }
+        }
+        assert_eq!(back.fingerprint(), calib.fingerprint());
+    }
+
+    #[test]
+    fn header_only_section_is_explicit_identity() {
+        let cfg = Config::parse("[calibration]\nepoch = 0\n").unwrap();
+        let calib = Calibration::from_config(&cfg).unwrap().unwrap();
+        assert!(calib.is_identity());
+        assert_eq!(calib.fingerprint(), Calibration::identity().fingerprint());
+        // No section at all: None, so callers fall back to the default.
+        let empty = Config::parse("[cost]\nbatch_size = 64\n").unwrap();
+        assert!(Calibration::from_config(&empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn from_config_rejects_malformed_sections() {
+        // Wrong arity.
+        let cfg =
+            Config::parse("[calibration]\nepoch = 1\ntypes = 2\ncompute = [1.0]\nio = [1, 1]\ncomm = [1, 1]\n")
+                .unwrap();
+        assert!(Calibration::from_config(&cfg).unwrap_err().to_string().contains("compute"));
+        // Missing one term's array.
+        let cfg = Config::parse("[calibration]\nepoch = 1\ntypes = 1\ncompute = [1.1]\n").unwrap();
+        assert!(Calibration::from_config(&cfg).is_err());
+        // Non-positive scale.
+        let cfg = Config::parse(
+            "[calibration]\nepoch = 1\ntypes = 1\ncompute = [0.0]\nio = [1]\ncomm = [1]\n",
+        )
+        .unwrap();
+        let err = Calibration::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("calibration.compute[0]"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_separates_epochs_and_scales() {
+        let a = Calibration::fitted(1, 1, vec![1.0, 1.0, 1.0]).unwrap();
+        let b = Calibration::fitted(2, 1, vec![1.0, 1.0, 1.0]).unwrap();
+        // Same scales, different epoch: a refit must still roll caches.
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let c = Calibration::fitted(1, 1, vec![1.1, 1.0, 1.0]).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn derived_margin_needs_samples_and_clamps() {
+        let mut ledger = ResidualLedger::new();
+        // Too few samples: the configured cap stands.
+        ledger.record(CostTerm::Compute, 0, 1.0, 1.1, Source::Simulator);
+        assert_eq!(ledger.derived_margin(1.25), 1.25);
+        // Enough samples with a tight spread: margin shrinks below cap.
+        for i in 0..10 {
+            let m = 1.04 + 0.005 * i as f64;
+            ledger.record(CostTerm::Compute, 0, 1.0, m, Source::Simulator);
+        }
+        let margin = ledger.derived_margin(1.25);
+        assert!(margin < 1.25, "margin {margin}");
+        assert!(margin >= 1.0);
+        // Comm-fabric ratios (coalescing, < 1) must not drag the margin
+        // below 1 — they are not service-time evidence.
+        for _ in 0..20 {
+            ledger.record(CostTerm::Comm, 0, 1.0, 0.6, Source::CommFabric);
+        }
+        assert!(ledger.derived_margin(1.25) >= 1.0);
+    }
+
+    #[test]
+    fn kernel_report_ingestion_skips_cpu_and_memory_bound_tiles() {
+        let pool = paper_testbed();
+        let report = Json::parse(
+            r#"{"kernels": [
+                {"label": "embedding_bag", "vmem_bytes": 1024, "mxu_util": 0.0},
+                {"label": "lstm_cell", "vmem_bytes": 2048, "mxu_util": 0.25},
+                {"label": "matmul", "vmem_bytes": 4096, "mxu_util": 1.0}
+            ]}"#,
+        )
+        .unwrap();
+        let mut ledger = ResidualLedger::new();
+        let kept = ledger.ingest_kernel_report(&report, &pool);
+        // 2 usable tiles x every non-CPU type in the testbed.
+        let non_cpu = pool.num_types() - 1;
+        assert_eq!(kept, 2 * non_cpu);
+        assert!(ledger.records().iter().all(|r| {
+            r.source == Source::KernelProfile
+                && r.term == CostTerm::Compute
+                && Some(r.type_id) != pool.cpu_type().map(|c| c.id)
+        }));
+        // A report with no kernels key is a no-op.
+        let empty = Json::parse(r#"{"rows": []}"#).unwrap();
+        assert_eq!(ledger.ingest_kernel_report(&empty, &pool), 0);
+    }
+}

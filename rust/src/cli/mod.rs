@@ -117,6 +117,21 @@ pub fn cost_from_file(file: Option<&crate::config::Config>) -> crate::cost::Cost
     cfg
 }
 
+/// Fitted cost-model calibration from a config file's `[calibration]`
+/// section. Absent section (or no config file at all) means the
+/// identity calibration, which is bit-identical to the uncalibrated
+/// evaluator — so every subcommand can load it unconditionally. A
+/// present-but-malformed section is an error, never a silent identity.
+pub fn calibration_from_file(
+    file: Option<&crate::config::Config>,
+) -> anyhow::Result<crate::calib::Calibration> {
+    match file {
+        Some(c) => Ok(crate::calib::Calibration::from_config(c)?
+            .unwrap_or_else(crate::calib::Calibration::identity)),
+        None => Ok(crate::calib::Calibration::identity()),
+    }
+}
+
 /// Evaluation-thread count: `--eval-threads` wins, then the config
 /// file's `[scheduler] eval_threads`, then serial — clamped to at
 /// least 1. Shared by every eval-engine-driving subcommand.
@@ -350,6 +365,17 @@ mod tests {
         let args = cli().parse(&sv(&["schedule"])).unwrap();
         assert_eq!(eval_threads_from(&args, Some(&cfg)).unwrap(), 6);
         assert_eq!(eval_threads_from(&args, None).unwrap(), 1);
+    }
+
+    #[test]
+    fn calibration_from_file_defaults_to_identity() {
+        assert!(calibration_from_file(None).unwrap().is_identity());
+        let cfg = crate::config::Config::parse("[cost]\nbatch_size = 4096\n").unwrap();
+        assert!(calibration_from_file(Some(&cfg)).unwrap().is_identity());
+        // A malformed section is an error, not a silent identity.
+        let bad = crate::config::Config::parse("[calibration]\nepoch = 1\ntypes = 1\ncompute = [1.1]\n")
+            .unwrap();
+        assert!(calibration_from_file(Some(&bad)).is_err());
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct Running {
     /// Throughput measured by the discrete-event simulator for this
     /// admission (stragglers and dispatch overheads included).
     pub measured_throughput: f64,
+    /// The cost model's analytic throughput estimate for the admitted
+    /// plan — what the measured value is compared against when the
+    /// completed job feeds the calibration ledger.
+    pub analytic_throughput: f64,
     /// The measured throughput sits below the job's floor — the whole
     /// running stretch counts as SLA violation.
     pub below_floor: bool,
@@ -130,9 +134,20 @@ pub trait ClusterPolicy {
     /// simulator preempts victims one at a time — gang-releasing each
     /// victim's whole sub-pool — until the candidate's request fits, and
     /// preempts nothing when even the full victim list would not free
-    /// enough.
-    fn preempt_victims(&self, cand: &Waiting, running: &[Running], now: f64) -> Vec<usize> {
-        let _ = (cand, running, now);
+    /// enough. `margin` is the analytic-vs-measured service margin the
+    /// simulator derived for this pass ([`ClusterConfig`]'s validated
+    /// `srtf_preempt_margin` knob, shrunk by the online calibration
+    /// ledger when enabled); non-preempting policies ignore it.
+    ///
+    /// [`ClusterConfig`]: crate::cluster::ClusterConfig
+    fn preempt_victims(
+        &self,
+        cand: &Waiting,
+        running: &[Running],
+        now: f64,
+        margin: f64,
+    ) -> Vec<usize> {
+        let _ = (cand, running, now, margin);
         Vec::new()
     }
 }
@@ -158,23 +173,29 @@ impl ClusterPolicy for Fifo {
 
 /// Shortest-remaining-service-first: the waiting job with the least
 /// estimated remaining service admits first, and may preempt running
-/// jobs whose remaining service is longer by at least
-/// [`SRTF_PREEMPT_MARGIN`] — cheapest-to-pause (lowest hourly holding
-/// cost) first, so the cluster loses as little paid-for momentum as
-/// possible. The margin is what makes preemption acyclic: a candidate's
-/// remaining service is the *analytic* profile estimate while a
-/// victim's is the straggler-derated simulator *measurement* (up to
-/// ~1.15x slower under the default [`SimConfig`]), and without the
-/// margin two similar-sized jobs could preempt each other back and
-/// forth across that instrument gap. With the margin above the
-/// worst-case derate, a fresh preemptor can never in turn be displaced
-/// by its victim, and a preempted job's remaining service only shrinks.
+/// jobs whose remaining service is longer by at least the pass's
+/// `margin` — cheapest-to-pause (lowest hourly holding cost) first, so
+/// the cluster loses as little paid-for momentum as possible. The
+/// margin is what makes preemption acyclic: a candidate's remaining
+/// service is the *analytic* profile estimate while a victim's is the
+/// straggler-derated simulator *measurement* (up to ~1.15x slower under
+/// the default [`SimConfig`]), and without the margin two similar-sized
+/// jobs could preempt each other back and forth across that instrument
+/// gap. With the margin above the worst-case derate, a fresh preemptor
+/// can never in turn be displaced by its victim, and a preempted job's
+/// remaining service only shrinks. The margin defaults to
+/// [`SRTF_PREEMPT_MARGIN`] via the validated `ClusterConfig` knob and
+/// shrinks toward the *observed* residual spread when online
+/// calibration is enabled (see [`crate::calib`]).
 ///
 /// [`SimConfig`]: crate::simulator::SimConfig
 pub struct Srtf;
 
-/// A victim's measured remaining service must exceed the candidate's
-/// analytic estimate by this factor before SRTF will pause it.
+/// Default analytic-vs-measured service margin: a victim's measured
+/// remaining service must exceed the candidate's analytic estimate by
+/// this factor before SRTF will pause it. The live value is the
+/// validated `ClusterConfig::srtf_preempt_margin` knob (possibly
+/// shrunk, never raised, by the calibration ledger).
 pub const SRTF_PREEMPT_MARGIN: f64 = 1.25;
 
 impl ClusterPolicy for Srtf {
@@ -186,8 +207,14 @@ impl ClusterPolicy for Srtf {
         (w.est_remaining_secs(), w.profile.hourly_usd)
     }
 
-    fn preempt_victims(&self, cand: &Waiting, running: &[Running], now: f64) -> Vec<usize> {
-        let threshold = cand.est_remaining_secs() * SRTF_PREEMPT_MARGIN;
+    fn preempt_victims(
+        &self,
+        cand: &Waiting,
+        running: &[Running],
+        now: f64,
+        margin: f64,
+    ) -> Vec<usize> {
+        let threshold = cand.est_remaining_secs() * margin;
         let mut victims: Vec<usize> = (0..running.len())
             .filter(|&i| running[i].remaining_secs(now) > threshold)
             .collect();
@@ -297,7 +324,7 @@ mod tests {
         let late = waiting(jobs[1].clone(), vec![1, 0], 20_000.0, 1.0);
         assert!(fifo.priority(&early, 0.0) <= fifo.priority(&late, 0.0));
         assert!(fifo.head_of_line_blocking());
-        assert!(fifo.preempt_victims(&early, &[], 0.0).is_empty());
+        assert!(fifo.preempt_victims(&early, &[], 0.0, SRTF_PREEMPT_MARGIN).is_empty());
     }
 
     #[test]
@@ -319,6 +346,7 @@ mod tests {
             units: w.profile.units.clone(),
             hourly_usd: hourly,
             measured_throughput: 20_000.0,
+            analytic_throughput: 20_000.0,
             below_floor: false,
             started_secs: 0.0,
             remaining_at_start: remaining,
@@ -329,8 +357,15 @@ mod tests {
         };
         let expensive = mk_running(&long, 5.0, 1e9);
         let cheap = mk_running(&waiting(jobs[2].clone(), vec![1, 0], 20_000.0, 1.0), 0.5, 1e9);
-        let victims = srtf.preempt_victims(&short, &[expensive, cheap], 0.0);
+        let victims =
+            srtf.preempt_victims(&short, &[expensive.clone(), cheap.clone()], 0.0, SRTF_PREEMPT_MARGIN);
         assert_eq!(victims, vec![1, 0], "cheapest-to-pause first");
+        // A tighter margin can only widen the victim set; a margin large
+        // enough to cover the gap empties it.
+        let tight = srtf.preempt_victims(&short, &[expensive.clone(), cheap.clone()], 0.0, 1.0);
+        assert!(tight.len() >= victims.len());
+        let huge = srtf.preempt_victims(&short, &[expensive, cheap], 0.0, 1e12);
+        assert!(huge.is_empty());
     }
 
     #[test]

@@ -38,12 +38,20 @@
 //!   (wall-clock per admission session) is recorded into a
 //!   [`Histogram`] and reported as p50/p95/p99; being wall-clock, those
 //!   fields are excluded from the deterministic summary tables.
+//! * **Online calibration.** With `ClusterConfig::calibrate_online`,
+//!   every admission's per-stage simulator measurements and every
+//!   completed job's service time feed a run-local
+//!   [`ResidualLedger`], and SRTF's preemption margin is derived from
+//!   the *observed* residual spread (p95, capped at the validated
+//!   `srtf_preempt_margin` knob) instead of a hardcoded constant
+//!   (DESIGN.md §Calibration).
 
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use super::job::{Job, JobQueue};
-use super::policy::{ClusterPolicy, RequestProfile, Running, Waiting};
+use super::policy::{ClusterPolicy, RequestProfile, Running, Waiting, SRTF_PREEMPT_MARGIN};
+use crate::calib::{Calibration, CostTerm, ResidualLedger, Source};
 use crate::cost::{CostConfig, CostModel};
 use crate::metrics::{quantile_of, Histogram};
 use crate::plan::{canonical_split_plan, SchedulingPlan};
@@ -70,6 +78,23 @@ pub struct ClusterConfig {
     pub cost: CostConfig,
     /// Discrete-event measurement knobs for admitted plans.
     pub sim: SimConfig,
+    /// SRTF's analytic-vs-measured preemption margin: a victim's measured
+    /// remaining service must exceed the candidate's analytic estimate by
+    /// this factor (see [`SRTF_PREEMPT_MARGIN`], the default). Must be a
+    /// finite value >= 1.0 — below 1.0 the margin stops covering the
+    /// instrument gap and preemption can cycle.
+    pub srtf_preempt_margin: f64,
+    /// Feed admission-time simulator measurements and completed-job
+    /// service residuals into a run-local [`ResidualLedger`], and derive
+    /// the live preemption margin from the observed residual spread
+    /// (p95, capped at `srtf_preempt_margin` — the ledger can only
+    /// shrink the margin, never raise it). Off by default: the default
+    /// run is bit-identical to the pre-calibration simulator.
+    pub calibrate_online: bool,
+    /// Calibration overlay applied to every admission cost model (and to
+    /// the futility-damper fingerprint, so a refit re-arms damped jobs).
+    /// Identity by default.
+    pub calibration: Calibration,
 }
 
 impl Default for ClusterConfig {
@@ -80,6 +105,9 @@ impl Default for ClusterConfig {
             eval_threads: 1,
             cost: CostConfig::default(),
             sim: SimConfig::default(),
+            srtf_preempt_margin: SRTF_PREEMPT_MARGIN,
+            calibrate_online: false,
+            calibration: Calibration::identity(),
         }
     }
 }
@@ -91,6 +119,14 @@ impl ClusterConfig {
             "admit_budget_evals must be at least 1 — a zero budget could never admit a job"
         );
         anyhow::ensure!(self.eval_threads >= 1, "eval_threads must be at least 1");
+        anyhow::ensure!(
+            self.srtf_preempt_margin.is_finite() && self.srtf_preempt_margin >= 1.0,
+            "srtf_preempt_margin: must be a finite value >= 1.0 (got {}) — below 1.0 \
+             the margin stops covering the analytic-vs-measured gap and preemption \
+             can cycle",
+            self.srtf_preempt_margin
+        );
+        self.calibration.validate()?;
         Ok(())
     }
 }
@@ -423,6 +459,14 @@ pub struct ClusterSim<'a> {
     /// [`LAT_BUCKET_US`]-microsecond buckets.
     decision_lat: Histogram,
     decisions: u64,
+    /// Analytic-vs-measured residuals observed this run (admission-time
+    /// simulator measurements plus completed-job service times). Only fed
+    /// when `cfg.calibrate_online` is set.
+    ledger: ResidualLedger,
+    /// Live SRTF preemption margin: starts at the validated config knob
+    /// and shrinks toward the ledger's observed p95 residual spread
+    /// (never below 1.0, never above the knob).
+    margin: f64,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -467,6 +511,8 @@ impl<'a> ClusterSim<'a> {
             rejected: 0,
             decision_lat: Histogram::new(LAT_BUCKETS),
             decisions: 0,
+            ledger: ResidualLedger::new(),
+            margin: cfg.srtf_preempt_margin,
         })
     }
 
@@ -574,6 +620,19 @@ impl<'a> ClusterSim<'a> {
         self.decisions
     }
 
+    /// The live SRTF preemption margin: the config knob until the online
+    /// ledger has [`crate::calib::MARGIN_MIN_SAMPLES`] residuals, then
+    /// the observed p95 spread clamped to `[1.0, knob]`.
+    pub fn preempt_margin(&self) -> f64 {
+        self.margin
+    }
+
+    /// The run-local residual ledger (empty unless
+    /// `cfg.calibrate_online`).
+    pub fn ledger(&self) -> &ResidualLedger {
+        &self.ledger
+    }
+
     pub fn clock(&self) -> f64 {
         self.clock
     }
@@ -675,8 +734,12 @@ impl<'a> ClusterSim<'a> {
         search_pool: &ResourcePool,
         attempt: u64,
     ) -> (Option<ScheduleOutcome>, usize, usize) {
-        let cm =
-            CostModel::new(&job.model, search_pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+        let cm = CostModel::with_calibration(
+            &job.model,
+            search_pool,
+            job_cost_cfg(&self.cfg.cost, job.sla_floor),
+            self.cfg.calibration.clone(),
+        );
         let scheduler = self.cfg.spec.build(mix_seed(self.seed, job.id as u64, attempt));
         let engine = EvalEngine::new(&cm)
             .with_threads(self.eval_threads)
@@ -737,8 +800,12 @@ impl<'a> ClusterSim<'a> {
             return Ok(());
         };
         let (units, hourly) = {
-            let cm =
-                CostModel::new(&job.model, self.pool, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+            let cm = CostModel::with_calibration(
+                &job.model,
+                self.pool,
+                job_cost_cfg(&self.cfg.cost, job.sla_floor),
+                self.cfg.calibration.clone(),
+            );
             footprint(self.pool, &cm, &out)
         };
         let profile = RequestProfile {
@@ -773,6 +840,27 @@ impl<'a> ClusterSim<'a> {
             return Ok(()); // stale (also fenced by the caller)
         };
         let r = self.running.remove(ridx);
+        if self.cfg.calibrate_online {
+            // The completed job's end-to-end service time vs the admitted
+            // plan's analytic estimate, attributed to the job's dominant
+            // resource type.
+            let analytic = r.remaining_at_start / r.analytic_throughput.max(1e-9);
+            let dom = r
+                .units
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.cmp(b.1))
+                .map(|(t, _)| t)
+                .unwrap_or(0);
+            self.ledger.record(
+                CostTerm::Compute,
+                dom,
+                analytic,
+                now - r.started_secs,
+                Source::Cluster,
+            );
+            self.margin = self.ledger.derived_margin(self.cfg.srtf_preempt_margin);
+        }
         let rec = &mut self.records[job_id];
         if r.below_floor {
             rec.sla_violation_secs += now - r.started_secs;
@@ -803,7 +891,8 @@ impl<'a> ClusterSim<'a> {
         // burn the same evaluations on the same failure. A release
         // changes the residual, hence the fingerprint, and re-arms.
         let job_cfg = job_cost_cfg(&self.cfg.cost, job.sla_floor);
-        let residual_fp = context_fingerprint(&job.model, &residual, &job_cfg);
+        let residual_fp =
+            context_fingerprint(&job.model, &residual, &job_cfg, &self.cfg.calibration);
         if matches!(
             &self.waiting[widx].failed_attempts,
             Some((fp, n)) if *n >= 2 && *fp == residual_fp
@@ -829,8 +918,12 @@ impl<'a> ClusterSim<'a> {
         self.epochs[jid] += 1;
         let epoch = self.epochs[jid];
         let (units, hourly, measured) = {
-            let cm =
-                CostModel::new(&job.model, &residual, job_cost_cfg(&self.cfg.cost, job.sla_floor));
+            let cm = CostModel::with_calibration(
+                &job.model,
+                &residual,
+                job_cost_cfg(&self.cfg.cost, job.sla_floor),
+                self.cfg.calibration.clone(),
+            );
             let (units, hourly) = footprint(self.pool, &cm, &out);
             let sim = simulate(
                 &cm,
@@ -839,6 +932,12 @@ impl<'a> ClusterSim<'a> {
                 &self.cfg.sim,
                 mix_seed(self.seed, jid as u64, 0x10_0000 + epoch),
             );
+            if self.cfg.calibrate_online {
+                // Every admission's per-stage (analytic, measured) pairs
+                // feed the ledger; the live margin tracks the spread.
+                self.ledger.record_sim(&sim);
+                self.margin = self.ledger.derived_margin(self.cfg.srtf_preempt_margin);
+            }
             (units, hourly, sim.throughput)
         };
         let w = self.waiting.remove(widx);
@@ -859,6 +958,7 @@ impl<'a> ClusterSim<'a> {
         });
         self.running.push(Running {
             below_floor: measured < w.job.sla_floor,
+            analytic_throughput: out.eval.throughput,
             job: w.job,
             plan: out.plan,
             prov: out.eval.provisioning,
@@ -931,7 +1031,8 @@ impl<'a> ClusterSim<'a> {
     /// request — then re-run its admission. Returns whether anything
     /// changed (preempted and/or admitted).
     fn try_preempt_for(&mut self, widx: usize, now: f64) -> anyhow::Result<bool> {
-        let victims = self.policy.preempt_victims(&self.waiting[widx], &self.running, now);
+        let victims =
+            self.policy.preempt_victims(&self.waiting[widx], &self.running, now, self.margin);
         if victims.is_empty() {
             return Ok(false);
         }
@@ -1325,5 +1426,70 @@ mod tests {
         let queue = uniform_mix(1, 1, 20_000.0);
         let policy = policy_by_name("fifo", &pool).unwrap();
         assert!(run_cluster(&pool, &queue, policy.as_ref(), &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn degenerate_preempt_margins_are_rejected_by_name() {
+        for bad in [0.99, 0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let cfg = ClusterConfig { srtf_preempt_margin: bad, ..Default::default() };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("srtf_preempt_margin"), "{bad}: {err}");
+        }
+        // The boundary and the default are both valid.
+        assert!(ClusterConfig { srtf_preempt_margin: 1.0, ..Default::default() }
+            .validate()
+            .is_ok());
+        assert!(ClusterConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn online_calibration_feeds_the_ledger_and_derives_the_margin() {
+        let pool = tight_pool();
+        let queue = tight_mix(4, 7, 20_000.0);
+        let cfg = ClusterConfig { calibrate_online: true, ..fast_cfg() };
+        let policy = policy_by_name("srtf", &pool).unwrap();
+        let mut sim = ClusterSim::new(&pool, policy.as_ref(), &cfg, 7).unwrap();
+        assert_eq!(sim.preempt_margin(), cfg.srtf_preempt_margin);
+        for job in &queue.jobs {
+            sim.run_until(job.arrival_secs).unwrap();
+            sim.add_job(job.clone()).unwrap();
+        }
+        sim.drain().unwrap();
+        assert!(!sim.ledger().is_empty(), "admissions must feed the ledger");
+        assert!(
+            sim.ledger()
+                .records()
+                .iter()
+                .any(|r| matches!(r.source, Source::Cluster)),
+            "completed jobs must contribute Cluster-source residuals"
+        );
+        let margin = sim.preempt_margin();
+        assert!(
+            (1.0..=cfg.srtf_preempt_margin).contains(&margin),
+            "derived margin {margin} must sit in [1.0, knob]"
+        );
+        // The derivation can only ever shrink the knob, never raise it —
+        // even on a ledger whose p95 ratio exceeds the cap.
+        assert!(margin <= cfg.srtf_preempt_margin);
+    }
+
+    #[test]
+    fn calibration_off_is_bit_identical_to_the_explicit_default_knob() {
+        // The new knobs default to off/identity: a run under the explicit
+        // defaults must be bit-identical to one under `Default`.
+        let pool = tight_pool();
+        let queue = tight_mix(4, 11, 20_000.0);
+        let policy = policy_by_name("srtf", &pool).unwrap();
+        let a = run_cluster(&pool, &queue, policy.as_ref(), &fast_cfg(), 11).unwrap();
+        let explicit = ClusterConfig {
+            srtf_preempt_margin: SRTF_PREEMPT_MARGIN,
+            calibrate_online: false,
+            calibration: Calibration::identity(),
+            ..fast_cfg()
+        };
+        let b = run_cluster(&pool, &queue, policy.as_ref(), &explicit, 11).unwrap();
+        assert_eq!(a.makespan_secs.to_bits(), b.makespan_secs.to_bits());
+        assert_eq!(a.cumulative_cost_usd.to_bits(), b.cumulative_cost_usd.to_bits());
+        assert_eq!(a.total_evaluations, b.total_evaluations);
     }
 }

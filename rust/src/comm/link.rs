@@ -41,7 +41,10 @@ impl LinkClass {
 /// Extra one-way latency of crossing the inter-cluster backbone (seconds).
 const BACKBONE_HOP_SECS: f64 = 200e-6;
 /// Effective-bandwidth derate for inter-cluster traffic (congested spine).
-const BACKBONE_DERATE: f64 = 0.6;
+/// Public so the analytic cost model prices cross-kind stage boundaries
+/// with the same wire model the fabric charges (`cost::CostModel`'s ODT
+/// derivation) — one constant, no drift.
+pub const BACKBONE_DERATE: f64 = 0.6;
 
 /// One worker↔server link with its cost model.
 #[derive(Clone, Copy, Debug)]

@@ -6,7 +6,21 @@
 //! Amdahl's law, pipeline throughput (min over stages) and the monetary
 //! cost of the full training run. This evaluator is the inner loop of
 //! every scheduler, so it is deliberately allocation-light.
+//!
+//! Two refinements over the bare §4.1 equations:
+//!
+//! * **Endpoint-aware boundaries.** The stage-boundary activation/gradient
+//!   transfer is bounded by the slower of the two endpoint NICs and pays
+//!   the inter-cluster backbone derate when the boundary crosses resource
+//!   *kinds* — the same wire model the comm fabric charges
+//!   ([`crate::comm::link`]). Pricing it at the sender's NIC alone (the
+//!   original derivation) systematically undershot CPU→GPU boundaries.
+//! * **Calibration overlay.** A [`Calibration`] fitted from measured
+//!   residuals (DESIGN.md §Calibration) scales each cost term per resource
+//!   type at model-build time. The identity overlay multiplies by exactly
+//!   `1.0` and is bit-identical to an uncalibrated model.
 
+use crate::calib::{Calibration, CostTerm};
 use crate::model::{LayerKind, ModelSpec};
 use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
 use crate::resources::{ResourcePool, ResourceType};
@@ -62,40 +76,68 @@ pub struct PlanEval {
     pub feasible: bool,
 }
 
-/// The §4.1 cost model bound to a model, pool and config.
+/// The §4.1 cost model bound to a model, pool, config and calibration
+/// overlay.
 pub struct CostModel<'a> {
     pub model: &'a ModelSpec,
     pub pool: &'a ResourcePool,
     pub cfg: CostConfig,
-    /// Cached per-(layer, type) compute seconds at batch `B_o`.
+    /// The fitted (or identity) per-(term, type) scale overlay. Folded
+    /// into the cached term seconds at build time; the eval engine hashes
+    /// it into its context fingerprints.
+    pub calib: Calibration,
+    /// Cached per-(layer, type) compute seconds at batch `B_o`
+    /// (calibration applied: flops part scaled by `Compute`, streaming
+    /// part by `Io`).
     layer_ct: Vec<f64>,
-    /// Cached per-(layer, type) stage-boundary transfer seconds at `B_o`
-    /// (activations forward + gradients back; paid only by a stage's LAST
-    /// layer — intra-stage activations never cross the network).
-    layer_boundary: Vec<f64>,
+    /// Per-layer stage-boundary transfer *bytes* at `B_o` (activations
+    /// forward + gradients back; paid only by a stage's LAST layer —
+    /// intra-stage activations never cross the network). Priced per
+    /// endpoint pair in [`CostModel::boundary_secs`].
+    layer_boundary_bytes: Vec<f64>,
     /// Cached per-(layer, type) weight-synchronization seconds at `B_o`
     /// (PS push/pull for sparse, ring-allreduce volume for dense; paid by
-    /// every layer regardless of stage shape).
+    /// every layer regardless of stage shape). `Comm`-calibrated.
     layer_sync: Vec<f64>,
 }
 
 impl<'a> CostModel<'a> {
     pub fn new(model: &'a ModelSpec, pool: &'a ResourcePool, cfg: CostConfig) -> Self {
+        Self::with_calibration(model, pool, cfg, Calibration::identity())
+    }
+
+    /// [`CostModel::new`] with a calibration overlay. The identity overlay
+    /// reproduces `new` bit-for-bit (`x * 1.0 == x` for finite IEEE 754
+    /// values, and every cached term stays finite).
+    pub fn with_calibration(
+        model: &'a ModelSpec,
+        pool: &'a ResourcePool,
+        cfg: CostConfig,
+        calib: Calibration,
+    ) -> Self {
         let nt = pool.num_types();
         let nl = model.num_layers();
         let mut layer_ct = vec![0.0; nl * nt];
-        let mut layer_boundary = vec![0.0; nl * nt];
+        let mut layer_boundary_bytes = vec![0.0; nl];
         let mut layer_sync = vec![0.0; nl * nt];
         for (l, layer) in model.layers.iter().enumerate() {
+            layer_boundary_bytes[l] =
+                2.0 * layer.output_bytes as f64 * cfg.profile_batch as f64;
             for t in 0..nt {
                 let rt = pool.get(t);
-                layer_ct[l * nt + t] = layer_compute_secs(layer, rt, cfg.profile_batch);
-                let (boundary, sync) = layer_comm_secs(layer, rt, cfg.profile_batch);
-                layer_boundary[l * nt + t] = boundary;
-                layer_sync[l * nt + t] = sync;
+                layer_ct[l * nt + t] = layer_compute_secs(
+                    layer,
+                    rt,
+                    cfg.profile_batch,
+                    calib.scale(CostTerm::Compute, t),
+                    calib.scale(CostTerm::Io, t),
+                );
+                layer_sync[l * nt + t] = layer_sync_bytes(layer, cfg.profile_batch)
+                    / rt.net_bytes_per_sec
+                    * calib.scale(CostTerm::Comm, t);
             }
         }
-        CostModel { model, pool, cfg, layer_ct, layer_boundary, layer_sync }
+        CostModel { model, pool, cfg, calib, layer_ct, layer_boundary_bytes, layer_sync }
     }
 
     #[inline]
@@ -103,14 +145,44 @@ impl<'a> CostModel<'a> {
         self.layer_ct[layer * self.pool.num_types() + type_id]
     }
 
-    #[inline]
-    fn dt(&self, layer: usize, type_id: usize) -> f64 {
-        let i = layer * self.pool.num_types() + type_id;
-        self.layer_boundary[i] + self.layer_sync[i]
+    /// Boundary transfer seconds for `layer`'s activations + gradients
+    /// leaving a stage on type `from` toward a successor stage on type
+    /// `to`. The transfer is bounded by the slower endpoint NIC and pays
+    /// the backbone derate when it crosses resource kinds — the comm
+    /// fabric's [`crate::comm::link::LinkSpec`] wire model. `None` (the
+    /// terminal stage, or a single-endpoint proxy) prices at the sender's
+    /// NIC alone.
+    pub fn boundary_secs(&self, layer: usize, from: usize, to: Option<usize>) -> f64 {
+        let bytes = self.layer_boundary_bytes[layer];
+        let tx = self.pool.get(from);
+        let secs = match to {
+            None => bytes / tx.net_bytes_per_sec,
+            Some(to) => {
+                let rx = self.pool.get(to);
+                let nic = tx.net_bytes_per_sec.min(rx.net_bytes_per_sec);
+                if tx.kind == rx.kind {
+                    bytes / nic
+                } else {
+                    bytes / (nic * crate::comm::link::BACKBONE_DERATE)
+                }
+            }
+        };
+        secs * self.calib.scale(CostTerm::Comm, from)
     }
 
-    /// Profile one stage (Table 1's `OCT_i`, `ODT_i`, `alpha_i`, `beta_i`).
+    /// Profile one stage (Table 1's `OCT_i`, `ODT_i`, `alpha_i`, `beta_i`)
+    /// with the boundary priced at the sender's NIC — the terminal-stage
+    /// variant of [`CostModel::stage_profile_to`], kept for single-span
+    /// heuristics (greedy's myopic ranking) and the last pipeline stage.
     pub fn stage_profile(&self, span: &StageSpan) -> StageProfile {
+        self.stage_profile_to(span, None)
+    }
+
+    /// Profile one stage given the *receiving* stage's resource type.
+    /// `next_type` determines how the last layer's boundary transfer is
+    /// priced (slower-endpoint NIC, cross-kind backbone derate); `None`
+    /// means no successor (terminal stage).
+    pub fn stage_profile_to(&self, span: &StageSpan, next_type: Option<usize>) -> StageProfile {
         let rt = self.pool.get(span.type_id);
         let mut oct = 0.0;
         for l in span.layers() {
@@ -121,7 +193,7 @@ impl<'a> CostModel<'a> {
         // layer's weight synchronization (PS for sparse, ring-allreduce
         // for dense).
         let nt = self.pool.num_types();
-        let mut odt = self.layer_boundary[span.last_layer * nt + span.type_id];
+        let mut odt = self.boundary_secs(span.last_layer, span.type_id, next_type);
         for l in span.layers() {
             odt += self.layer_sync[l * nt + span.type_id];
         }
@@ -150,8 +222,9 @@ impl<'a> CostModel<'a> {
     /// Eq 4–5: pipeline throughput (samples/sec) for a provisioned plan.
     pub fn throughput(&self, stages: &[StageSpan], prov: &ProvisioningPlan) -> f64 {
         let mut worst_et = 0.0f64;
-        for (span, &k) in stages.iter().zip(&prov.replicas) {
-            let prof = self.stage_profile(span);
+        for (i, (span, &k)) in stages.iter().zip(&prov.replicas).enumerate() {
+            let next = stages.get(i + 1).map(|n| n.type_id);
+            let prof = self.stage_profile_to(span, next);
             worst_et = worst_et.max(self.stage_et(&prof, k as f64));
         }
         if worst_et <= 0.0 {
@@ -186,9 +259,15 @@ impl<'a> CostModel<'a> {
         crate::provision::provision_and_price(self, plan)
     }
 
-    /// Profile every stage of a derived stage list (Table 1 quadruples).
+    /// Profile every stage of a derived stage list (Table 1 quadruples),
+    /// successor-aware: each stage's boundary is priced against the next
+    /// stage's resource type; the last stage has no successor.
     pub fn stage_profiles(&self, stages: &[StageSpan]) -> Vec<StageProfile> {
-        stages.iter().map(|s| self.stage_profile(s)).collect()
+        stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| self.stage_profile_to(s, stages.get(i + 1).map(|n| n.type_id)))
+            .collect()
     }
 
     /// [`evaluate`] from precomputed stages + profiles. Profiles are pure
@@ -230,18 +309,25 @@ impl<'a> CostModel<'a> {
         let stages = mutated.stages();
         let profs: Vec<StageProfile> = stages
             .iter()
-            .map(|s| {
+            .enumerate()
+            .map(|(i, s)| {
+                let next = stages.get(i + 1).map(|n| n.type_id);
                 incumbent_stages
                     .iter()
-                    // Same span on the same type — position in the stage
-                    // list (`index`) is irrelevant to the profile.
-                    .position(|p| {
+                    .enumerate()
+                    // Same span on the same type with the same successor
+                    // type — position in the stage list (`index`) is
+                    // irrelevant to the profile, but the boundary term
+                    // depends on who receives it, so only a span whose
+                    // successor type also matches reuses bits.
+                    .find(|(j, p)| {
                         p.type_id == s.type_id
                             && p.first_layer == s.first_layer
                             && p.last_layer == s.last_layer
+                            && incumbent_stages.get(j + 1).map(|n| n.type_id) == next
                     })
-                    .map(|i| incumbent_profs[i])
-                    .unwrap_or_else(|| self.stage_profile(s))
+                    .map(|(j, _)| incumbent_profs[j])
+                    .unwrap_or_else(|| self.stage_profile_to(s, next))
             })
             .collect();
         self.evaluate_with_profiles(&stages, &profs)
@@ -250,26 +336,40 @@ impl<'a> CostModel<'a> {
     /// Communication time (seconds at `B_o`) from the layer's boundary on a
     /// type — exposed for the policy's feature vector (§5.2 feature 5).
     pub fn layer_comm_feature(&self, layer: usize) -> f64 {
-        // Feature uses the *cheapest* network path as a scale-free proxy;
-        // the policy sees relative magnitudes, not absolute seconds.
-        (0..self.pool.num_types()).map(|t| self.dt(layer, t)).fold(f64::INFINITY, f64::min)
+        // Feature uses the *cheapest* network path as a scale-free proxy
+        // (sender-NIC boundary, no successor); the policy sees relative
+        // magnitudes, not absolute seconds.
+        let nt = self.pool.num_types();
+        (0..nt)
+            .map(|t| self.boundary_secs(layer, t, None) + self.layer_sync[layer * nt + t])
+            .fold(f64::INFINITY, f64::min)
     }
 }
 
-/// Compute seconds for one layer's fwd+bwd of a `batch` on one unit.
-fn layer_compute_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch: u64) -> f64 {
+/// Compute seconds for one layer's fwd+bwd of a `batch` on one unit, with
+/// the calibration scales for the flops and IO shares (`1.0` = identity,
+/// which is bit-identical to the unscaled derivation).
+fn layer_compute_secs(
+    layer: &crate::model::LayerSpec,
+    rt: &ResourceType,
+    batch: u64,
+    flops_scale: f64,
+    io_scale: f64,
+) -> f64 {
     let b = batch as f64;
     if layer.kind.data_intensive() {
         // IO-bound: time = bytes touched / io rate (embedding lookups,
         // pooling reads). Weight bytes are touched sparsely: only the rows
         // hit by the batch, proportional to input volume, not table size.
         let bytes = (layer.input_bytes + layer.output_bytes) as f64 * b;
-        bytes / rt.io_bytes_per_sec
+        io_scale * (bytes / rt.io_bytes_per_sec)
     } else {
         let flops = layer.flops as f64 * b;
-        flops / rt.flops_per_sec
+        flops_scale * (flops / rt.flops_per_sec)
             // Dense layers still stream activations through memory.
-            + (layer.input_bytes + layer.output_bytes) as f64 * b / (10.0 * rt.io_bytes_per_sec)
+            + io_scale
+                * ((layer.input_bytes + layer.output_bytes) as f64 * b
+                    / (10.0 * rt.io_bytes_per_sec))
     }
 }
 
@@ -286,17 +386,6 @@ pub fn layer_sync_bytes(layer: &crate::model::LayerSpec, batch: u64) -> f64 {
         // reduce-scatter + all-gather), independent of batch.
         _ => 2.0 * layer.weight_bytes as f64,
     }
-}
-
-/// Communication seconds for one layer, split into (boundary, sync):
-/// boundary = activation + gradient transfer to the next stage (paid only
-/// when this layer ends a stage); sync = weight-synchronization traffic
-/// (PS pull/push for sparse layers, ring-allreduce volume for dense).
-fn layer_comm_secs(layer: &crate::model::LayerSpec, rt: &ResourceType, batch: u64) -> (f64, f64) {
-    let b = batch as f64;
-    let boundary = 2.0 * layer.output_bytes as f64 * b; // activation fwd + grad bwd
-    let weight_sync = layer_sync_bytes(layer, batch);
-    (boundary / rt.net_bytes_per_sec, weight_sync / rt.net_bytes_per_sec)
 }
 
 #[cfg(test)]
@@ -374,12 +463,81 @@ mod tests {
         let stages = plan.stages();
         let prov = ProvisioningPlan { replicas: vec![1, 1], ps_cpu_cores: 0 };
         let thr = cm.throughput(&stages, &prov);
-        // Manually: min of per-stage B/ET.
-        let expect = stages
+        // Manually: min of per-stage B/ET over the successor-aware
+        // profiles (the CPU stage's boundary is priced against the GPU
+        // endpoint it hands off to).
+        let expect = cm
+            .stage_profiles(&stages)
             .iter()
-            .map(|s| cm.cfg.batch_size as f64 / cm.stage_et(&cm.stage_profile(s), 1.0))
+            .map(|prof| cm.cfg.batch_size as f64 / cm.stage_et(prof, 1.0))
             .fold(f64::INFINITY, f64::min);
         assert!((thr - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn cross_kind_boundary_costs_more_than_same_kind() {
+        // The boundary transfer is bounded by the slower endpoint and pays
+        // the backbone derate across kinds: CPU→GPU must cost strictly
+        // more than GPU→GPU for the same layer, and more than the old
+        // sender-NIC-only price ever charged.
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let fc = m.layers.iter().position(|l| l.kind == LayerKind::FullyConnected).unwrap();
+        let cpu_gpu = cm.boundary_secs(fc, 0, Some(1));
+        let gpu_gpu = cm.boundary_secs(fc, 1, Some(1));
+        assert!(cpu_gpu > gpu_gpu, "CPU→GPU {cpu_gpu} !> GPU→GPU {gpu_gpu}");
+        assert!(cpu_gpu > cm.boundary_secs(fc, 0, None), "derate must bind cross-kind");
+        // Same-type successor is the plain sender-NIC price, to the bit.
+        assert_eq!(gpu_gpu.to_bits(), cm.boundary_secs(fc, 1, None).to_bits());
+        // And the successor-aware stage profile carries the difference.
+        let span = StageSpan { index: 0, type_id: 0, first_layer: fc, last_layer: fc };
+        let to_gpu = cm.stage_profile_to(&span, Some(1));
+        let terminal = cm.stage_profile(&span);
+        assert!(to_gpu.odt > terminal.odt);
+        assert_eq!(to_gpu.oct.to_bits(), terminal.oct.to_bits());
+    }
+
+    #[test]
+    fn identity_calibration_is_bit_identical() {
+        let (m, p) = fixture();
+        let plan = SchedulingPlan::new(
+            (0..16).map(|l| if l < 2 { 0 } else { 1 }).collect::<Vec<_>>(),
+        );
+        let plain = CostModel::new(&m, &p, CostConfig::default()).evaluate(&plan);
+        let overlay = CostModel::with_calibration(
+            &m,
+            &p,
+            CostConfig::default(),
+            crate::calib::Calibration::identity(),
+        )
+        .evaluate(&plan);
+        assert_eq!(plain.throughput.to_bits(), overlay.throughput.to_bits());
+        assert_eq!(plain.train_time_secs.to_bits(), overlay.train_time_secs.to_bits());
+        assert_eq!(plain.cost_usd.to_bits(), overlay.cost_usd.to_bits());
+        assert_eq!(plain.provisioning, overlay.provisioning);
+        assert_eq!(plain.feasible, overlay.feasible);
+    }
+
+    #[test]
+    fn calibration_scales_move_the_right_terms() {
+        use crate::calib::{Calibration, CostTerm};
+        let (m, p) = fixture();
+        let nt = p.num_types();
+        // Double the compute scale on every type: dense-layer OCT grows,
+        // sync/boundary (Comm) stays put.
+        let mut scales = vec![1.0; CostTerm::COUNT * nt];
+        for t in 0..nt {
+            scales[CostTerm::Compute.index() * nt + t] = 2.0;
+        }
+        let calib = Calibration::fitted(1, nt, scales).unwrap();
+        let base = CostModel::new(&m, &p, CostConfig::default());
+        let scaled = CostModel::with_calibration(&m, &p, CostConfig::default(), calib);
+        let fc = m.layers.iter().position(|l| l.kind == LayerKind::FullyConnected).unwrap();
+        let span = StageSpan { index: 0, type_id: 1, first_layer: fc, last_layer: fc };
+        let b = base.stage_profile(&span);
+        let s = scaled.stage_profile(&span);
+        assert!(s.oct > b.oct, "compute scale must raise OCT");
+        assert_eq!(s.odt.to_bits(), b.odt.to_bits(), "comm terms must not move");
     }
 
     #[test]

@@ -58,6 +58,7 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod calib;
 pub mod cli;
 pub mod cluster;
 pub mod comm;
@@ -80,6 +81,7 @@ pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::calib::{Calibration, CostTerm, ResidualLedger};
     pub use crate::cluster::{
         ClusterConfig, ClusterReport, ClusterSim, Job, JobQueue, JobRecord,
     };

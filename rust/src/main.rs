@@ -7,7 +7,8 @@
 //! against its synchronous reference, `cluster` a multi-tenant job mix
 //! through the gang-admitting fairness policies, `serve` a continuous
 //! arrival stream through the admission daemon with its self-tuning
-//! concurrency probe, `info`/`methods` the catalogs.
+//! concurrency probe, `calibrate` a measurement sweep into a fitted
+//! `[calibration]` cost-model overlay, `info`/`methods` the catalogs.
 //!
 //! Schedulers are named through the typed spec registry: a positional like
 //! `rl:rounds=80,lr=0.6` (or a `[scheduler]` config section) selects and
@@ -94,6 +95,22 @@ fn cli() -> Cli {
                 positionals: vec![],
             },
             CmdSpec {
+                name: "calibrate",
+                about: "fit a cost-model calibration from a simulator measurement sweep (plus optional comm/kernel evidence) and emit a [calibration] config section",
+                opts: common()
+                    .into_iter()
+                    .chain(vec![
+                        OptSpec { name: "sweep-seeds", help: "simulator seeds replayed per sweep plan", takes_value: true, default: Some("4") },
+                        OptSpec { name: "budget-evals", help: "evaluation budget per scheduler when gathering sweep plans", takes_value: true, default: Some("96") },
+                        OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation (default 1)", takes_value: true, default: None },
+                        OptSpec { name: "comm", help: "also run the comm fabric and feed its analytic-vs-wire-bytes cross-check into the ledger", takes_value: false, default: None },
+                        OptSpec { name: "kernels", help: "JSON kernel report from `python/compile/perf_report.py --json` to fold into the ledger", takes_value: true, default: None },
+                        OptSpec { name: "out", help: "write the fitted [calibration] section to this path (default: print to stdout)", takes_value: true, default: None },
+                    ])
+                    .collect(),
+                positionals: vec![],
+            },
+            CmdSpec {
                 name: "comm",
                 about: "run the async comm fabric: SSP workers against the sharded PS over a link-modeled transport",
                 opts: vec![
@@ -128,7 +145,7 @@ fn cli() -> Cli {
                     OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
                     OptSpec { name: "eval-threads", help: "worker threads for batched plan evaluation inside admission sessions (default 1; config `[scheduler] eval_threads` applies when unset)", takes_value: true, default: None },
                     OptSpec { name: "throughput", help: "base SLA floor the mix scales, samples/sec", takes_value: true, default: Some("20000") },
-                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]` sections apply)", takes_value: true, default: None },
+                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]`, `[calibration]`, `[cluster]` sections apply)", takes_value: true, default: None },
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
@@ -148,7 +165,7 @@ fn cli() -> Cli {
                     OptSpec { name: "method", help: "per-job scheduler spec used for admission searches (config `[scheduler]` applies when unset)", takes_value: true, default: None },
                     OptSpec { name: "budget-evals", help: "evaluation budget per gang-admission session", takes_value: true, default: Some("96") },
                     OptSpec { name: "eval-threads", help: "initial worker threads for batched plan evaluation (default 1; config `[scheduler] eval_threads` applies when unset; the probe retunes this online)", takes_value: true, default: None },
-                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]` sections apply)", takes_value: true, default: None },
+                    OptSpec { name: "config", help: "TOML config file (`[pool]`, `[cost]`, `[scheduler]`, `[calibration]`, `[cluster]` sections apply)", takes_value: true, default: None },
                     OptSpec { name: "probe", help: "enable the self-tuning eval-concurrency probe", takes_value: false, default: None },
                     OptSpec { name: "probe-min", help: "probe: smallest eval-thread count", takes_value: true, default: Some("1") },
                     OptSpec { name: "probe-max", help: "probe: largest eval-thread count", takes_value: true, default: Some("8") },
@@ -301,13 +318,14 @@ fn main() {
                             cluster::mix_names().join(", ")
                         )
                     })?;
-                let ccfg = cluster::ClusterConfig {
+                let mut ccfg = cluster::ClusterConfig {
                     spec: admission_spec(&args, file.as_ref())?,
                     admit_budget_evals: args.usize_or("budget-evals", 96)?,
                     eval_threads: heterps::cli::eval_threads_from(&args, file.as_ref())?,
                     cost: heterps::cli::cost_from_file(file.as_ref()),
                     ..Default::default()
                 };
+                apply_calibration_knobs(&mut ccfg, file.as_ref())?;
                 let policy_name = args.str_or("policy", "all");
                 let reports = if policy_name == "all" {
                     cluster::run_all_policies(&pool, &queue, &ccfg, seed)?
@@ -401,14 +419,16 @@ fn main() {
                 } else {
                     None
                 };
+                let mut cluster_cfg = cluster::ClusterConfig {
+                    spec: admission_spec(&args, file.as_ref())?,
+                    admit_budget_evals: args.usize_or("budget-evals", 96)?,
+                    eval_threads: heterps::cli::eval_threads_from(&args, file.as_ref())?,
+                    cost: heterps::cli::cost_from_file(file.as_ref()),
+                    ..Default::default()
+                };
+                apply_calibration_knobs(&mut cluster_cfg, file.as_ref())?;
                 let scfg = serve::ServeConfig {
-                    cluster: cluster::ClusterConfig {
-                        spec: admission_spec(&args, file.as_ref())?,
-                        admit_budget_evals: args.usize_or("budget-evals", 96)?,
-                        eval_threads: heterps::cli::eval_threads_from(&args, file.as_ref())?,
-                        cost: heterps::cli::cost_from_file(file.as_ref()),
-                        ..Default::default()
-                    },
+                    cluster: cluster_cfg,
                     policy: args.str_or("policy", "drf-cost").to_string(),
                     probe,
                     clock: serve::ClockMode::parse(
@@ -437,6 +457,135 @@ fn main() {
                 run_train(steps, microbatches, vocab)?;
                 Ok(())
             }
+            "calibrate" => {
+                use heterps::calib::{CostTerm, ResidualLedger};
+                let file = args.get("config").map(heterps::config::Config::load).transpose()?;
+                let model_name = args.str_or("model", "ctrdnn");
+                let model = zoo::by_name(model_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+                let pool = heterps::cli::pool_from_args(&args, file.as_ref())?;
+                let mut cfg = heterps::cli::cost_from_file(file.as_ref());
+                cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit)?;
+                let seed = args.u64_or("seed", 42)?;
+                let sweep_seeds = args.usize_or("sweep-seeds", 4)?;
+                anyhow::ensure!(sweep_seeds >= 1, "option `--sweep-seeds` must be at least 1");
+                let budget_evals = args.usize_or("budget-evals", 96)?;
+                anyhow::ensure!(budget_evals >= 1, "option `--budget-evals` must be at least 1");
+                let eval_threads = heterps::cli::eval_threads_from(&args, file.as_ref())?;
+                // The prior overlay (if the config carries one) contributes
+                // only its epoch: residuals are measured against the
+                // *uncalibrated* model, so a refit replaces the prior
+                // instead of compounding onto it.
+                let prior = heterps::cli::calibration_from_file(file.as_ref())?;
+                let cm = CostModel::new(&model, &pool, cfg);
+
+                // A diverse plan set: one budgeted search per comparison
+                // method, plus the canonical CPU/accelerator split —
+                // deduplicated, so the sweep doesn't over-weight plans every
+                // scheduler converges to.
+                let mut plans = Vec::new();
+                for m in sched::comparison_methods() {
+                    let spec = SchedulerSpec::parse(m)?;
+                    let scheduler = spec.build(seed);
+                    let engine = sched::EvalEngine::new(&cm).with_threads(eval_threads);
+                    let mut budget = Budget::unlimited();
+                    budget.max_evaluations = Some(budget_evals);
+                    let mut session = scheduler.session_engine(engine, budget);
+                    plans.push(sched::drive(session.as_mut(), None)?.plan);
+                }
+                if let Some(split) = heterps::plan::canonical_split_plan(&model, &pool) {
+                    plans.push(split);
+                }
+                let mut seen = std::collections::BTreeSet::new();
+                plans.retain(|p| seen.insert(p.render()));
+
+                let mut ledger = ResidualLedger::new();
+                let simcfg = SimConfig::default();
+                for (i, plan) in plans.iter().enumerate() {
+                    for s in 0..sweep_seeds as u64 {
+                        // Decorrelate replays across plans and sweep slots.
+                        let sim_seed = seed ^ ((i as u64 + 1) << 32) ^ s;
+                        if let Some(sim) = simulate_plan(&cm, plan, &simcfg, sim_seed) {
+                            ledger.record_sim(&sim);
+                        }
+                    }
+                }
+                let sim_samples = ledger.len();
+
+                if args.flag("comm") {
+                    use heterps::comm::{analytic_comm_check, run_async, CommConfig};
+                    let ccfg = CommConfig {
+                        workers: 2,
+                        steps: 12,
+                        compute_ms: 0.5,
+                        seed,
+                        ..Default::default()
+                    };
+                    let store = heterps::train::ParamServer::new(ccfg.dim, 16, 0.3, seed);
+                    let report = run_async(&ccfg, &pool, &store)?;
+                    let check = analytic_comm_check(&ccfg, &report.snapshot);
+                    // Sync traffic terminates at the CPU-hosted PS.
+                    let ty = pool.cpu_type().map(|t| t.id).unwrap_or(0);
+                    ledger.record_comm_check(&check, ty);
+                }
+                if let Some(path) = args.get("kernels") {
+                    let text = std::fs::read_to_string(path).map_err(|e| {
+                        anyhow::anyhow!("cannot read kernel report `{path}`: {e}")
+                    })?;
+                    let report = heterps::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("kernel report `{path}`: {e}"))?;
+                    let n = ledger.ingest_kernel_report(&report, &pool);
+                    println!("kernel tiles ingested: {n}");
+                }
+
+                anyhow::ensure!(
+                    !ledger.is_empty(),
+                    "no residuals collected — every sweep plan failed to provision on this pool"
+                );
+                let before = ledger.mean_abs_log_residual();
+                let calib = ledger.fit(pool.num_types(), prior.epoch() + 1);
+                let after = ledger.mean_abs_log_residual_under(&calib);
+                let cap = heterps::cluster::policy::SRTF_PREEMPT_MARGIN;
+                let margin = ledger.derived_margin(cap);
+
+                println!(
+                    "calibration sweep    : {} plans x {sweep_seeds} seeds -> {} residuals ({sim_samples} simulator)",
+                    plans.len(),
+                    ledger.len()
+                );
+                let headers: Vec<String> = std::iter::once("term".to_string())
+                    .chain(pool.types.iter().map(|t| t.name.clone()))
+                    .collect();
+                let headers: Vec<&str> = headers.iter().map(String::as_str).collect();
+                let mut t = Table::new(
+                    format!("Fitted calibration scales (epoch {})", calib.epoch()),
+                    &headers,
+                );
+                for term in CostTerm::ALL {
+                    let mut row = vec![term.name().to_string()];
+                    for ty in 0..pool.num_types() {
+                        row.push(format!("{:.3}", calib.scale(term, ty)));
+                    }
+                    t.row(&row);
+                }
+                println!("{}", t.render());
+                println!(
+                    "mean |log residual|  : {before:.4} uncalibrated -> {after:.4} calibrated"
+                );
+                println!("suggested srtf margin: {margin:.3} (cap {cap})");
+                let section = calib.to_config_section();
+                match args.get("out") {
+                    Some(path) => {
+                        std::fs::write(path, &section)?;
+                        eprintln!("[wall] wrote [calibration] section to {path}");
+                    }
+                    None => {
+                        println!();
+                        print!("{section}");
+                    }
+                }
+                Ok(())
+            }
             "schedule" | "compare" | "simulate" | "elastic" => {
                 let file = args.get("config").map(heterps::config::Config::load).transpose()?;
                 let model_name = args.str_or("model", "ctrdnn");
@@ -446,7 +595,14 @@ fn main() {
                 let n_types = pool.num_types();
                 let mut cfg = heterps::cli::cost_from_file(file.as_ref());
                 cfg.throughput_limit = args.f64_or("throughput", cfg.throughput_limit)?;
-                let cm = CostModel::new(&model, &pool, cfg);
+                // A `[calibration]` section (from `calibrate --out`) overlays
+                // the cost model; absent, the identity overlay reproduces the
+                // uncalibrated evaluator bit-for-bit. (Elastic's *internal*
+                // re-scheduling sessions build their own models from the
+                // CostConfig alone and stay uncalibrated — the overlay scopes
+                // to this top-level model.)
+                let calib = heterps::cli::calibration_from_file(file.as_ref())?;
+                let cm = CostModel::with_calibration(&model, &pool, cfg, calib);
                 let seed = args.u64_or("seed", 42)?;
                 let eval_threads = heterps::cli::eval_threads_from(&args, file.as_ref())?;
 
@@ -688,6 +844,24 @@ fn admission_spec(
     })
 }
 
+
+/// Calibration-loop knobs for `cluster`/`serve`: the `[calibration]`
+/// cost-model overlay plus the `[cluster]` section's preemption-margin
+/// and online-refinement switches. Config-file-only by design — fitted
+/// overlays come from files emitted by `calibrate --out`, not from
+/// hand-typed flags.
+fn apply_calibration_knobs(
+    ccfg: &mut heterps::cluster::ClusterConfig,
+    file: Option<&heterps::config::Config>,
+) -> anyhow::Result<()> {
+    ccfg.calibration = heterps::cli::calibration_from_file(file)?;
+    if let Some(c) = file {
+        ccfg.srtf_preempt_margin =
+            c.f64_or("cluster.srtf_preempt_margin", ccfg.srtf_preempt_margin);
+        ccfg.calibrate_online = c.bool_or("cluster.calibrate_online", ccfg.calibrate_online);
+    }
+    Ok(())
+}
 
 /// `heterps comm`: drive the async comm fabric and its synchronous
 /// reference over the same deterministic workload, report throughput,

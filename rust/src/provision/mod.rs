@@ -330,7 +330,7 @@ pub fn provision_static_ratio(
     with_ps: bool,
 ) -> Option<PlanEval> {
     let stages = plan.stages();
-    let profs: Vec<StageProfile> = stages.iter().map(|s| cm.stage_profile(s)).collect();
+    let profs: Vec<StageProfile> = cm.stage_profiles(&stages);
     let target = cm.cfg.batch_size as f64 / cm.cfg.throughput_limit;
     let gpu_limit: usize = cm
         .pool
@@ -447,18 +447,22 @@ mod tests {
         let cm = cm_fixture(&model, &pool);
         let plan = split_plan();
         let (stages, prov) = provision(&cm, &plan).unwrap();
-        // Bottleneck target = slowest provisioned stage.
-        let ets: Vec<f64> = stages
+        // Bottleneck target = slowest provisioned stage (successor-aware
+        // profiles, matching what the provisioner itself priced).
+        let profs = cm.stage_profiles(&stages);
+        let ets: Vec<f64> = profs
             .iter()
             .zip(&prov.replicas)
-            .map(|(s, &k)| cm.stage_et(&cm.stage_profile(s), k as f64))
+            .map(|(prof, &k)| cm.stage_et(prof, k as f64))
             .collect();
         let target = ets.iter().cloned().fold(0.0f64, f64::max);
-        for ((s, &k), &et) in stages.iter().zip(&prov.replicas).zip(&ets) {
+        for (((s, prof), &k), &et) in
+            stages.iter().zip(&profs).zip(&prov.replicas).zip(&ets)
+        {
             // Every non-bottleneck stage is minimally provisioned: one
             // replica fewer would make it the (worse) bottleneck.
             if k > 1 && et < target * (1.0 - 1e-9) {
-                let et_less = cm.stage_et(&cm.stage_profile(s), (k - 1) as f64);
+                let et_less = cm.stage_et(prof, (k - 1) as f64);
                 assert!(et_less > target * (1.0 - 1e-9), "stage {} over-provisioned", s.index);
             }
         }

@@ -38,6 +38,7 @@
 //! [`Scheduler::session`]: crate::sched::Scheduler::session
 //! [`Scheduler::session_engine`]: crate::sched::Scheduler::session_engine
 
+use crate::calib::Calibration;
 use crate::cost::{CostConfig, CostModel, PlanEval, StageProfile};
 use crate::model::ModelSpec;
 use crate::plan::{SchedulingPlan, StageSpan};
@@ -72,14 +73,23 @@ fn hash_model(h: &mut u64, model: &ModelSpec) {
 }
 
 /// Fingerprint of everything a full plan evaluation depends on: the model,
-/// the pool (rates, prices *and* limits) and the cost config (batch sizes,
-/// floor, penalty). Two cost models with equal fingerprints score every
-/// plan bit-identically, so their cached evaluations are interchangeable.
-/// The cluster simulator also uses this as the futility-damper key: a
-/// bit-identical residual pool reproduces the fingerprint exactly.
-pub fn context_fingerprint(model: &ModelSpec, pool: &ResourcePool, cfg: &CostConfig) -> u64 {
+/// the pool (rates, prices *and* limits), the cost config (batch sizes,
+/// floor, penalty) and the calibration overlay. Two cost models with equal
+/// fingerprints score every plan bit-identically, so their cached
+/// evaluations are interchangeable. The cluster simulator also uses this
+/// as the futility-damper key: a bit-identical residual pool reproduces
+/// the fingerprint exactly. Bumping the calibration epoch (a refit)
+/// changes the fingerprint, so stale pre-refit evaluations in a shared
+/// [`EvalCache`] can never be served to a calibrated engine.
+pub fn context_fingerprint(
+    model: &ModelSpec,
+    pool: &ResourcePool,
+    cfg: &CostConfig,
+    calib: &Calibration,
+) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     fnv(&mut h, u64::from_le_bytes(*b"evalctx\0"));
+    fnv(&mut h, calib.fingerprint());
     hash_model(&mut h, model);
     for t in &pool.types {
         fnv(&mut h, t.id as u64);
@@ -101,13 +111,20 @@ pub fn context_fingerprint(model: &ModelSpec, pool: &ResourcePool, cfg: &CostCon
 }
 
 /// Fingerprint of what a [`StageProfile`] depends on — the model layers,
-/// the per-type *rates* (not prices or `max_units`) and the profiling
-/// batch. Deliberately coarser than [`context_fingerprint`]: elastic pool
-/// scaling and floor changes leave it untouched, so stage profiles
+/// the per-type *rates* (not prices or `max_units`), the profiling batch
+/// and the calibration overlay (scales fold into the cached per-layer
+/// tables). Deliberately coarser than [`context_fingerprint`]: elastic
+/// pool scaling and floor changes leave it untouched, so stage profiles
 /// memoized on one tick serve every later tick.
-fn profile_fingerprint(model: &ModelSpec, pool: &ResourcePool, cfg: &CostConfig) -> u64 {
+fn profile_fingerprint(
+    model: &ModelSpec,
+    pool: &ResourcePool,
+    cfg: &CostConfig,
+    calib: &Calibration,
+) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     fnv(&mut h, u64::from_le_bytes(*b"profctx\0"));
+    fnv(&mut h, calib.fingerprint());
     hash_model(&mut h, model);
     for t in &pool.types {
         fnv(&mut h, t.id as u64);
@@ -136,8 +153,11 @@ pub struct EvalStats {
 struct CacheState {
     /// context fingerprint -> assignment -> evaluation.
     evals: HashMap<u64, HashMap<Vec<usize>, PlanEval>>,
-    /// (profile fingerprint, type, first layer, last layer) -> profile.
-    profiles: HashMap<(u64, usize, usize, usize), StageProfile>,
+    /// (profile fingerprint, type, first layer, last layer, successor
+    /// type) -> profile. The successor type (`usize::MAX` for the
+    /// terminal stage) participates because the boundary transfer is
+    /// priced at the slower endpoint of the stage cut.
+    profiles: HashMap<(u64, usize, usize, usize, usize), StageProfile>,
     charged: u64,
     cached: u64,
     entries: usize,
@@ -188,8 +208,8 @@ impl<'a> EvalEngine<'a> {
             cm,
             threads: 1,
             cache: EvalCache::new(),
-            ctx_eval: context_fingerprint(cm.model, cm.pool, &cm.cfg),
-            ctx_prof: profile_fingerprint(cm.model, cm.pool, &cm.cfg),
+            ctx_eval: context_fingerprint(cm.model, cm.pool, &cm.cfg, &cm.calib),
+            ctx_prof: profile_fingerprint(cm.model, cm.pool, &cm.cfg, &cm.calib),
         }
     }
 
@@ -256,9 +276,20 @@ impl<'a> EvalEngine<'a> {
         let mut state = self.cache.state.borrow_mut();
         let profs = stages
             .iter()
-            .map(|s| {
-                let key = (self.ctx_prof, s.type_id, s.first_layer, s.last_layer);
-                *state.profiles.entry(key).or_insert_with(|| self.cm.stage_profile(s))
+            .enumerate()
+            .map(|(i, s)| {
+                let next = stages.get(i + 1).map(|n| n.type_id);
+                let key = (
+                    self.ctx_prof,
+                    s.type_id,
+                    s.first_layer,
+                    s.last_layer,
+                    next.unwrap_or(usize::MAX),
+                );
+                *state
+                    .profiles
+                    .entry(key)
+                    .or_insert_with(|| self.cm.stage_profile_to(s, next))
             })
             .collect();
         (stages, profs)
@@ -387,12 +418,33 @@ mod tests {
         let base = CostConfig::default();
         let mut tighter = base.clone();
         tighter.throughput_limit *= 2.0;
-        let fp_base = context_fingerprint(&model, &pool, &base);
-        assert_eq!(fp_base, context_fingerprint(&model, &pool, &base));
-        assert_ne!(fp_base, context_fingerprint(&model, &pool, &tighter));
+        let id = Calibration::identity();
+        let fp_base = context_fingerprint(&model, &pool, &base, &id);
+        assert_eq!(fp_base, context_fingerprint(&model, &pool, &base, &id));
+        assert_ne!(fp_base, context_fingerprint(&model, &pool, &tighter, &id));
         let mut scaled = pool.clone();
         scaled.types[1].max_units /= 2;
-        assert_ne!(fp_base, context_fingerprint(&model, &scaled, &base));
+        assert_ne!(fp_base, context_fingerprint(&model, &scaled, &base, &id));
+    }
+
+    #[test]
+    fn calibration_epoch_separates_both_fingerprints() {
+        // A refit must invalidate cached evaluations *and* cached stage
+        // profiles: scales fold into the per-layer tables.
+        let model = zoo::ctrdnn();
+        let pool = paper_testbed();
+        let cfg = CostConfig::default();
+        let id = Calibration::identity();
+        let nt = pool.types.len();
+        let fitted = Calibration::fitted(1, nt, vec![1.1; 3 * nt]).unwrap();
+        assert_ne!(
+            context_fingerprint(&model, &pool, &cfg, &id),
+            context_fingerprint(&model, &pool, &cfg, &fitted),
+        );
+        assert_ne!(
+            profile_fingerprint(&model, &pool, &cfg, &id),
+            profile_fingerprint(&model, &pool, &cfg, &fitted),
+        );
     }
 
     #[test]
@@ -406,12 +458,13 @@ mod tests {
         tighter.throughput_limit *= 3.0;
         let mut scaled = pool.clone();
         scaled.types[0].max_units = 7;
-        let fp = profile_fingerprint(&model, &pool, &base);
-        assert_eq!(fp, profile_fingerprint(&model, &pool, &tighter));
-        assert_eq!(fp, profile_fingerprint(&model, &scaled, &base));
+        let id = Calibration::identity();
+        let fp = profile_fingerprint(&model, &pool, &base, &id);
+        assert_eq!(fp, profile_fingerprint(&model, &pool, &tighter, &id));
+        assert_eq!(fp, profile_fingerprint(&model, &scaled, &base, &id));
         let mut slower = pool.clone();
         slower.types[1].flops_per_sec /= 2.0;
-        assert_ne!(fp, profile_fingerprint(&model, &slower, &base));
+        assert_ne!(fp, profile_fingerprint(&model, &slower, &base, &id));
     }
 
     #[test]

@@ -12,10 +12,12 @@
 //!
 //! The optional [`ThroughputProbe`] closes the self-tuning loop: every
 //! `window` admission decisions it measures decisions per wall-clock
-//! second and retunes the simulator's live `eval_threads`. Thread count
-//! never changes computed results (DESIGN.md §Eval-Engine), so the probe
-//! moves wall-clock throughput only and the admission digest is
-//! identical with the probe on or off.
+//! second — *net of pacing sleeps*, so a slow wall-clock stream measures
+//! the decision engine rather than its own idleness — and retunes the
+//! simulator's live `eval_threads`. Thread count never changes computed
+//! results (DESIGN.md §Eval-Engine), so the probe moves wall-clock
+//! throughput only and the admission digest is identical with the probe
+//! on or off.
 
 use std::time::Instant;
 
@@ -136,18 +138,26 @@ pub fn admission_digest(report: &ClusterReport) -> u64 {
 }
 
 /// Pace the wall clock: sleep until `virtual_t / speedup` seconds of real
-/// time have passed since `wall_start`, in bounded slices.
-fn pace(clock: ClockMode, wall_start: Instant, virtual_t: f64) {
+/// time have passed since `wall_start`, in bounded slices. Returns the
+/// seconds actually spent sleeping, so the probe's measurement windows
+/// can exclude pacing idleness from their throughput denominator.
+fn pace(clock: ClockMode, wall_start: Instant, virtual_t: f64) -> f64 {
     let ClockMode::Wall { speedup } = clock else {
-        return;
+        return 0.0;
     };
     let target = virtual_t / speedup;
+    let mut slept = 0.0;
     loop {
         let behind = target - wall_start.elapsed().as_secs_f64();
         if behind <= 0.0 {
-            return;
+            return slept;
         }
+        // Accumulate the time *actually* spent asleep (overshoot
+        // included), so the probe's window accounting subtracts exactly
+        // what pacing consumed.
+        let t = Instant::now();
         std::thread::sleep(std::time::Duration::from_secs_f64(behind.min(MAX_SLEEP_SECS)));
+        slept += t.elapsed().as_secs_f64();
     }
 }
 
@@ -180,19 +190,28 @@ pub fn run_serve(
         .transpose()?;
     let wall_start = Instant::now();
     // The probe's measurement window: decisions counted and wall time
-    // elapsed since the window opened.
+    // elapsed since the window opened. Pacing sleeps are tracked
+    // separately (`paced_secs`) and subtracted from each window's
+    // denominator: under `--clock wall` a slow stream spends most of the
+    // window asleep waiting for virtual time, and counting that idleness
+    // would report near-zero throughput at *every* thread setting,
+    // blinding the probe's up/down comparison.
+    let mut paced_secs = 0.0f64;
     let mut win_decisions = 0u64;
     let mut win_start = Instant::now();
-    let mut tick = |sim: &mut ClusterSim| {
+    let mut win_paced = 0.0f64;
+    let mut tick = |sim: &mut ClusterSim, paced: f64| {
         let Some(p) = probe.as_mut() else {
             return;
         };
         let done = sim.decisions() - win_decisions;
         if done >= p.window() {
-            let dt = win_start.elapsed().as_secs_f64().max(1e-9);
+            let dt =
+                (win_start.elapsed().as_secs_f64() - (paced - win_paced)).max(1e-9);
             sim.set_eval_threads(p.observe(done as f64 / dt));
             win_decisions = sim.decisions();
             win_start = Instant::now();
+            win_paced = paced;
         }
     };
     for (i, job) in queue.jobs.iter().enumerate() {
@@ -200,13 +219,13 @@ pub fn run_serve(
             if at >= job.arrival_secs {
                 break;
             }
-            pace(cfg.clock, wall_start, at);
+            paced_secs += pace(cfg.clock, wall_start, at);
             sim.step()?;
-            tick(&mut sim);
+            tick(&mut sim, paced_secs);
         }
-        pace(cfg.clock, wall_start, job.arrival_secs);
+        paced_secs += pace(cfg.clock, wall_start, job.arrival_secs);
         sim.add_job(job.clone())?;
-        tick(&mut sim);
+        tick(&mut sim, paced_secs);
         if cfg.progress_every > 0 && (i + 1) % cfg.progress_every == 0 {
             eprintln!(
                 "[wall] serve: {} / {} arrivals, clock {:.0} s, {} waiting, {} running, \
@@ -222,9 +241,9 @@ pub fn run_serve(
         }
     }
     while let Some(at) = sim.next_event_at() {
-        pace(cfg.clock, wall_start, at);
+        paced_secs += pace(cfg.clock, wall_start, at);
         sim.step()?;
-        tick(&mut sim);
+        tick(&mut sim, paced_secs);
     }
     let wall_secs = wall_start.elapsed().as_secs_f64();
     let final_eval_threads = sim.eval_threads();
@@ -301,14 +320,16 @@ impl ServeOutcome {
                 let _ = writeln!(
                     out,
                     "[wall] probe: eval threads {} -> {}, applied range [{}, {}], \
-                     {} adjustments over {} windows, stable {:.2}",
+                     {} adjustments over {} windows, stable {:.2}, \
+                     mean window tput {:.0}/s",
                     p.initial_threads,
                     p.final_threads,
                     p.min_applied,
                     p.max_applied,
                     p.adjustments,
                     p.observations,
-                    p.stable_concurrency
+                    p.stable_concurrency,
+                    p.mean_throughput
                 );
             }
         }
@@ -328,6 +349,7 @@ impl ServeOutcome {
                 ("adjustments".into(), Json::Num(p.adjustments as f64)),
                 ("windows".into(), Json::Num(p.observations as f64)),
                 ("stable_concurrency".into(), Json::Num(p.stable_concurrency)),
+                ("mean_throughput".into(), Json::Num(p.mean_throughput)),
             ]),
         };
         Json::Obj(vec![
@@ -384,6 +406,56 @@ mod tests {
         );
         assert!(ClockMode::parse("wall", 0.0).is_err());
         assert!(ClockMode::parse("lamport", 1.0).is_err());
+    }
+
+    #[test]
+    fn pace_reports_the_time_it_slept() {
+        let t0 = Instant::now();
+        assert_eq!(pace(ClockMode::Virtual, t0, 1e9), 0.0);
+        // A target already in the past sleeps nothing.
+        assert_eq!(pace(ClockMode::Wall { speedup: 1e12 }, t0, 1.0), 0.0);
+        // A ~30 ms future target sleeps and reports what it slept.
+        let t0 = Instant::now();
+        let slept = pace(ClockMode::Wall { speedup: 100.0 }, t0, 3.0);
+        assert!(slept >= 0.029, "reported {slept}");
+        assert!(t0.elapsed().as_secs_f64() >= 0.029);
+    }
+
+    #[test]
+    fn wall_clock_probe_windows_exclude_pacing_sleeps() {
+        use crate::cluster::{uniform_mix, ClusterConfig};
+        use crate::resources::paper_testbed;
+        let pool = paper_testbed();
+        let queue = uniform_mix(2, 17, 20_000.0);
+        let mk = |clock| ServeConfig {
+            cluster: ClusterConfig { admit_budget_evals: 48, ..Default::default() },
+            policy: "fifo".into(),
+            probe: Some(ProbeConfig { window: 1, ..Default::default() }),
+            clock,
+            progress_every: 0,
+        };
+        let virt = run_serve(&pool, &queue, &mk(ClockMode::Virtual), 17).unwrap();
+        let vp = virt.probe.clone().unwrap();
+        assert!(vp.observations > 0 && vp.mean_throughput > 0.0);
+        assert!(virt.report.makespan_secs > 0.0);
+        // Pace the same stream so sleeps dwarf decision time (~20x the
+        // virtual run's wall clock, floored at half a second).
+        let target = (20.0 * virt.wall_secs).max(0.5);
+        let speedup = virt.report.makespan_secs / target;
+        let wall = run_serve(&pool, &queue, &mk(ClockMode::Wall { speedup }), 17).unwrap();
+        assert_eq!(virt.admission_digest, wall.admission_digest);
+        let wp = wall.probe.clone().unwrap();
+        assert_eq!(wp.observations, vp.observations);
+        // The regression: with pacing excluded, a slow stream's windows
+        // still measure the decision engine — the same signal the
+        // virtual-clock run sees — instead of sleep-dominated
+        // near-zero throughput that blinds the up/down comparison.
+        assert!(
+            wp.mean_throughput >= vp.mean_throughput / 4.0,
+            "paced windows leaked sleep into dt: wall {:.1}/s vs virtual {:.1}/s",
+            wp.mean_throughput,
+            vp.mean_throughput
+        );
     }
 
     #[test]

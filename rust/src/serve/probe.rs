@@ -93,6 +93,12 @@ pub struct ProbeSummary {
     /// The EMA-smoothed stable concurrency (fractional; the applied
     /// value is its rounded clamp).
     pub stable_concurrency: f64,
+    /// Mean measured throughput across observed windows (decisions/sec,
+    /// net of pacing on the wall clock; 0 with no observations). The
+    /// regression witness that pacing sleeps stay out of the windows: a
+    /// paced run's windows must still measure the decision engine, not
+    /// the stream's idle time.
+    pub mean_throughput: f64,
 }
 
 /// The state machine. Call [`ThroughputProbe::observe`] once per
@@ -111,6 +117,7 @@ pub struct ThroughputProbe {
     max_applied: usize,
     adjustments: u64,
     observations: u64,
+    sum_throughput: f64,
 }
 
 impl ThroughputProbe {
@@ -133,6 +140,7 @@ impl ThroughputProbe {
             max_applied: initial_threads,
             adjustments: 0,
             observations: 0,
+            sum_throughput: 0.0,
             cfg,
         })
     }
@@ -156,6 +164,7 @@ impl ThroughputProbe {
     /// window.
     pub fn observe(&mut self, throughput: f64) -> usize {
         self.observations += 1;
+        self.sum_throughput += throughput;
         match self.state {
             ProbeState::Stable => {
                 // The throughput at the stable setting is re-measured
@@ -212,6 +221,11 @@ impl ThroughputProbe {
             adjustments: self.adjustments,
             observations: self.observations,
             stable_concurrency: self.stable_concurrency,
+            mean_throughput: if self.observations > 0 {
+                self.sum_throughput / self.observations as f64
+            } else {
+                0.0
+            },
         }
     }
 

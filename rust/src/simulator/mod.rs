@@ -39,6 +39,22 @@ impl Default for SimConfig {
     }
 }
 
+/// One stage's analytic-vs-measured timing pair from a simulated run —
+/// the compute-side residual source for the calibration ledger
+/// (`calib::ResidualLedger::record_sim`, DESIGN.md §Calibration).
+#[derive(Clone, Copy, Debug)]
+pub struct StageSample {
+    /// Stage index in the plan's stage list.
+    pub stage: usize,
+    /// Resource type the stage ran on.
+    pub type_id: usize,
+    /// Analytic Eq 3 stage time at the provisioned replica count (secs).
+    pub analytic_et: f64,
+    /// Mean measured per-iteration service time: the analytic base plus
+    /// straggler jitter and dispatch/coordination overheads (secs).
+    pub measured_et: f64,
+}
+
 /// Result of a simulated run.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -51,6 +67,8 @@ pub struct SimResult {
     pub iter_latency: f64,
     /// Slowest-stage index (the bottleneck the provisioner balanced for).
     pub bottleneck_stage: usize,
+    /// Per-stage `(analytic, measured)` timing pairs for calibration.
+    pub stage_samples: Vec<StageSample>,
 }
 
 /// Event-driven replay of a provisioned pipeline.
@@ -73,14 +91,14 @@ pub fn simulate(
     let mut rng = Rng::new(seed);
     let n_stages = stages.len();
 
-    // Per-stage base execution time at the provisioned k (Eq 1–3).
-    let base_et: Vec<f64> = stages
+    // Per-stage base execution time at the provisioned k (Eq 1–3),
+    // successor-aware: boundaries are priced against the receiving
+    // stage's endpoint, exactly as the analytic evaluator prices them.
+    let profs = cm.stage_profiles(&stages);
+    let base_et: Vec<f64> = profs
         .iter()
         .zip(&prov.replicas)
-        .map(|(s, &k)| {
-            let prof = cm.stage_profile(s);
-            cm.stage_et(&prof, k as f64)
-        })
+        .map(|(prof, &k)| cm.stage_et(prof, k as f64))
         .collect();
 
     // stage_free[i] = when stage i's servers next become free;
@@ -134,7 +152,23 @@ pub fn simulate(
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap_or(0);
-    SimResult { throughput, cost_usd, iter_latency: last_exit / iters, bottleneck_stage }
+    let stage_samples = stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| StageSample {
+            stage: i,
+            type_id: s.type_id,
+            analytic_et: base_et[i],
+            measured_et: total_busy[i] / cfg.iterations.max(1) as f64,
+        })
+        .collect();
+    SimResult {
+        throughput,
+        cost_usd,
+        iter_latency: last_exit / iters,
+        bottleneck_stage,
+        stage_samples,
+    }
 }
 
 /// Convenience: schedule-plan in, measured eval out (provisioning via the
@@ -257,6 +291,36 @@ mod tests {
         // The same plan at the default floor provisions fine.
         let cm_ok = CostModel::new(&m, &p, CostConfig::default());
         assert!(simulate_plan(&cm_ok, &split_plan(), &SimConfig::default(), 1).is_some());
+    }
+
+    #[test]
+    fn stage_samples_expose_the_analytic_vs_measured_gap() {
+        let (m, p) = fixture();
+        let cm = CostModel::new(&m, &p, CostConfig::default());
+        let plan = split_plan();
+        let sim = simulate_plan(&cm, &plan, &SimConfig::default(), 4).unwrap();
+        assert_eq!(sim.stage_samples.len(), plan.stages().len());
+        for s in &sim.stage_samples {
+            assert!(s.analytic_et > 0.0);
+            // Jitter and dispatch overheads only ever inflate service.
+            assert!(s.measured_et > s.analytic_et, "stage {}", s.stage);
+        }
+        // Zero-noise run: measured collapses onto analytic.
+        let clean = simulate_plan(
+            &cm,
+            &plan,
+            &SimConfig {
+                straggler_jitter: 0.0,
+                dispatch_overhead: 0.0,
+                per_replica_overhead: 0.0,
+                iterations: 50,
+            },
+            4,
+        )
+        .unwrap();
+        for s in &clean.stage_samples {
+            assert!((s.measured_et / s.analytic_et - 1.0).abs() < 1e-9, "stage {}", s.stage);
+        }
     }
 
     #[test]

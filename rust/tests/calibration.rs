@@ -1,0 +1,156 @@
+//! Integration tests for the calibration loop (DESIGN.md §Calibration):
+//! the identity overlay's bit-identity contract across every scheduler
+//! family, calibration-epoch cache invalidation on a shared `EvalCache`,
+//! and the residual-shrinks property of the fit.
+
+use heterps::calib::Calibration;
+use heterps::calib::ResidualLedger;
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::zoo;
+use heterps::plan::SchedulingPlan;
+use heterps::resources::{paper_testbed, simulated_types};
+use heterps::sched::{self, registry, Budget, EvalCache, EvalEngine, SchedulerSpec};
+use heterps::simulator::{simulate_plan, SimConfig};
+use heterps::util::propcheck;
+
+/// The determinism contract of the overlay: the *identity* calibration
+/// multiplies every cached term by exactly 1.0, so for seeds {1, 42} and
+/// every registered scheduler family the outcome — plan, cost bits,
+/// charged evaluations, cache hits — must be bit-identical to the
+/// uncalibrated evaluator.
+#[test]
+fn identity_calibration_is_bit_identical_for_every_scheduler_family() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let plain = CostModel::new(&model, &pool, CostConfig::default());
+    let overlaid = CostModel::with_calibration(
+        &model,
+        &pool,
+        CostConfig::default(),
+        Calibration::identity(),
+    );
+    for seed in [1u64, 42] {
+        for info in registry() {
+            let spec = SchedulerSpec::parse(info.canonical).unwrap();
+            let run = |cm: &CostModel| {
+                let scheduler = spec.build(seed);
+                let engine = EvalEngine::new(cm);
+                let mut session = scheduler.session_engine(engine, Budget::evals(150));
+                sched::drive(session.as_mut(), None)
+                    .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", info.canonical))
+            };
+            let a = run(&plain);
+            let b = run(&overlaid);
+            assert_eq!(a.plan, b.plan, "{} seed {seed}: plan differs", info.canonical);
+            assert_eq!(
+                a.eval.cost_usd.to_bits(),
+                b.eval.cost_usd.to_bits(),
+                "{} seed {seed}: cost differs under the identity overlay",
+                info.canonical
+            );
+            assert_eq!(
+                a.eval.throughput.to_bits(),
+                b.eval.throughput.to_bits(),
+                "{} seed {seed}: throughput differs",
+                info.canonical
+            );
+            assert_eq!(
+                (a.evaluations, a.cache_hits),
+                (b.evaluations, b.cache_hits),
+                "{} seed {seed}: evaluation accounting differs",
+                info.canonical
+            );
+        }
+    }
+}
+
+/// A refit bumps the calibration epoch, and the epoch is hashed into the
+/// engine's context fingerprint — so a shared cache can never serve an
+/// evaluation scored under a stale overlay, even when the scales are
+/// numerically unchanged.
+#[test]
+fn calibration_epoch_rolls_the_shared_cache() {
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let nt = pool.num_types();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let spec = SchedulerSpec::parse("greedy").unwrap();
+    let cache = EvalCache::new();
+
+    let run = |cm: &CostModel| {
+        let scheduler = spec.build(7);
+        let engine = EvalEngine::new(cm).with_cache(cache.clone());
+        let mut session = scheduler.session_engine(engine, Budget::unlimited());
+        sched::drive(session.as_mut(), None).unwrap()
+    };
+    let first = run(&cm);
+    assert!(first.evaluations > 0);
+
+    // Same model, same config, identity overlay: fully cached.
+    let replay = run(&CostModel::with_calibration(
+        &model,
+        &pool,
+        CostConfig::default(),
+        Calibration::identity(),
+    ));
+    assert_eq!(replay.evaluations, 0, "identity overlay must reuse the shared cache");
+    assert_eq!(replay.cache_hits, first.evaluations);
+
+    // Epoch 1 with all-1.0 scales evaluates to the same numbers, but it
+    // is a *different* calibration — the fingerprint must miss.
+    let bumped = Calibration::fitted(1, nt, vec![1.0; 3 * nt]).unwrap();
+    let refit =
+        run(&CostModel::with_calibration(&model, &pool, CostConfig::default(), bumped));
+    assert_eq!(
+        refit.evaluations, first.evaluations,
+        "a bumped epoch must re-evaluate instead of serving stale cache entries"
+    );
+    assert_eq!(refit.plan, first.plan, "all-1.0 scales change nothing numerically");
+}
+
+/// The fit property: on any batch of simulator measurements, the fitted
+/// overlay's mean absolute log-residual is never worse than identity —
+/// and with the default simulator's systematic overheads (every measured
+/// stage time exceeds its analytic estimate) it is strictly better.
+#[test]
+fn prop_fitted_overlay_shrinks_the_residual() {
+    let model = zoo::matchnet();
+    let pool = simulated_types(4, true);
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    let nl = model.num_layers();
+    let simcfg = SimConfig::default();
+    propcheck::check_result(
+        0xCA11B,
+        32,
+        |rng| {
+            let genes: Vec<usize> = (0..nl).map(|_| rng.below(4)).collect();
+            let sim_seed = rng.below(1 << 20) as u64;
+            (genes, sim_seed)
+        },
+        |(genes, sim_seed)| {
+            let plan = SchedulingPlan::new(genes.clone());
+            let mut ledger = ResidualLedger::new();
+            for s in 0..3u64 {
+                if let Some(sim) = simulate_plan(&cm, &plan, &simcfg, sim_seed ^ (s << 40)) {
+                    ledger.record_sim(&sim);
+                }
+            }
+            if ledger.is_empty() {
+                return Ok(()); // not provisionable on this pool — nothing to fit
+            }
+            let before = ledger.mean_abs_log_residual();
+            let calib = ledger.fit(pool.num_types(), 1);
+            let after = ledger.mean_abs_log_residual_under(&calib);
+            if after > before + 1e-12 {
+                return Err(format!("fit worsened the residual: {before} -> {after}"));
+            }
+            // Default SimConfig folds dispatch/jitter overheads into every
+            // stage, so the uncalibrated residual is bounded away from 0
+            // and the fit must strictly improve on it.
+            if before > 1e-9 && after >= before {
+                return Err(format!("fit failed to shrink a real residual: {before}"));
+            }
+            Ok(())
+        },
+    );
+}

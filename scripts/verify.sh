@@ -24,9 +24,13 @@
 #    `[wall]` lines (the streaming-admission determinism gate), plus a
 #    probe-enabled run whose deterministic output — admission digest
 #    included — must match the probe-less runs exactly;
-# 7. `cargo fmt --check` when rustfmt is installed (skipped with a loud
+# 7. a `heterps calibrate` smoke: fit an overlay from the simulator
+#    sweep, check the emitted `[calibration]` section loads back, and
+#    pin the identity-overlay bit-identity contract (a header-only
+#    `[calibration]` config section must not change `schedule` output);
+# 8. `cargo fmt --check` when rustfmt is installed (skipped with a loud
 #    warning otherwise);
-# 8. `cargo clippy --all-targets -- -D warnings` when the clippy
+# 9. `cargo clippy --all-targets -- -D warnings` when the clippy
 #    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
@@ -149,6 +153,34 @@ if [ ! -s "$SERVE_TMP/serve.json" ]; then
   echo "error: serve --json-out wrote no report" >&2
   exit 1
 fi
+
+echo "== calibrate smoke: fit, reload, and the identity bit-identity contract"
+CALIB_TMP="$(mktemp -d)"
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$CALIB_TMP"' EXIT
+"$BIN" calibrate --model ctrdnn --types 2 --sweep-seeds 2 --budget-evals 48 \
+  --out "$CALIB_TMP/calib.toml"
+if [ ! -s "$CALIB_TMP/calib.toml" ]; then
+  echo "error: calibrate --out wrote no [calibration] section" >&2
+  exit 1
+fi
+# The fitted section must load cleanly into a schedule run.
+"$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
+  --config "$CALIB_TMP/calib.toml" >/dev/null
+# A header-only [calibration] section is the explicit identity overlay:
+# schedule output must be bit-identical to a config-less run.
+printf '[calibration]\nepoch = 0\n' > "$CALIB_TMP/identity.toml"
+"$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
+  | grep -v "sched time" > "$CALIB_TMP/plain.txt"
+"$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
+  --config "$CALIB_TMP/identity.toml" | grep -v "sched time" > "$CALIB_TMP/identity.txt"
+if ! diff -u "$CALIB_TMP/plain.txt" "$CALIB_TMP/identity.txt"; then
+  echo "error: the identity calibration overlay is not bit-identical to the uncalibrated run" >&2
+  exit 1
+fi
+# The fitted overlay drives cluster/serve too (config-section plumbing).
+printf '[cluster]\ncalibrate_online = true\n' >> "$CALIB_TMP/calib.toml"
+"$BIN" cluster --jobs 3 --mix uniform --policy srtf --method greedy \
+  --budget-evals 48 --config "$CALIB_TMP/calib.toml" >/dev/null
 
 echo "== fmt gate: cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then
