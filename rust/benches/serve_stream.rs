@@ -32,6 +32,7 @@ fn main() {
         probe,
         clock: ClockMode::Virtual,
         progress_every: 0,
+        stats_every: 0,
     };
 
     let mut table = Table::new("§Serve — streaming admission", &["op", "mean", "std", "unit"]);

@@ -51,6 +51,6 @@ pub use job::{
 };
 pub use policy::{policy_by_name, policy_names, ClusterPolicy};
 pub use sim::{
-    emit_reports, run_all_policies, run_cluster, ClusterConfig, ClusterReport, ClusterSim,
-    EventKind, EventRecord, JobRecord, LAT_BUCKET_US,
+    emit_reports, run_all_policies, run_cluster, run_cluster_traced, ClusterConfig,
+    ClusterReport, ClusterSim, EventKind, EventRecord, JobRecord, LAT_BUCKET_US,
 };

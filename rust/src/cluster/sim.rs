@@ -54,7 +54,9 @@ use super::policy::{ClusterPolicy, RequestProfile, Running, Waiting, SRTF_PREEMP
 use crate::calib::{Calibration, CostTerm, ResidualLedger, Source};
 use crate::cost::{CostConfig, CostModel};
 use crate::metrics::{quantile_of, Histogram};
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::plan::{canonical_split_plan, SchedulingPlan};
+use crate::util::json::Json;
 use crate::resources::ResourcePool;
 use crate::sched::{
     self, context_fingerprint, Budget, EvalCache, EvalEngine, ScheduleOutcome, SchedulerSpec,
@@ -467,6 +469,11 @@ pub struct ClusterSim<'a> {
     /// and shrinks toward the ledger's observed p95 residual spread
     /// (never below 1.0, never above the knob).
     margin: f64,
+    /// Span/event tracer, disabled by default ([`ClusterSim::set_tracer`]).
+    /// Records are stamped with the virtual clock, so a trace is as
+    /// deterministic as the simulation itself; only `decision_latency`
+    /// events carry wall values (flagged `wall`).
+    tracer: Tracer,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -513,7 +520,16 @@ impl<'a> ClusterSim<'a> {
             decisions: 0,
             ledger: ResidualLedger::new(),
             margin: cfg.srtf_preempt_margin,
+            tracer: Tracer::disabled(),
         })
+    }
+
+    /// Attach a tracer; its virtual clock is pinned to the simulator's.
+    /// Tracing is observational only — admission decisions, reports and
+    /// digests are bit-identical with it on or off (the verify.sh gate).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        tracer.set_virtual(self.clock);
+        self.tracer = tracer;
     }
 
     /// Feed one arrival. The simulator assigns the job's dense id (its
@@ -581,6 +597,18 @@ impl<'a> ClusterSim<'a> {
                 if self.completion_is_live(job_id, epoch) {
                     self.advance(ev.at);
                     self.on_completion(job_id, epoch, ev.at)?;
+                } else if self.tracer.is_enabled() {
+                    // Fenced: a preemption bumped the job's epoch, so this
+                    // completion belongs to a superseded admission.
+                    self.tracer.instant(
+                        "cluster",
+                        "stale_completion",
+                        vec![
+                            ("job".to_string(), Json::Num(job_id as f64)),
+                            ("epoch".to_string(), Json::Num(epoch as f64)),
+                            ("at".to_string(), Json::Num(ev.at)),
+                        ],
+                    );
                 }
             }
         }
@@ -657,9 +685,46 @@ impl<'a> ClusterSim<'a> {
         Ok(self.into_report(policy_name))
     }
 
+    /// Snapshot the simulator's live instruments into `reg` under
+    /// `cluster.*` / `eval.*` names (observation order is fixed, so the
+    /// serve daemon's `[stats]` line and the `--metrics-out` dump render
+    /// fields stably). Counts come from virtual-clock state and are
+    /// deterministic; only `cluster.decision_lat_us` summarizes
+    /// wall-clock values.
+    pub fn snapshot_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.observe_gauge("cluster.clock_secs", self.clock);
+        reg.observe_count("cluster.waiting", self.waiting.len() as u64);
+        reg.observe_count("cluster.running", self.running.len() as u64);
+        reg.observe_count("cluster.decisions", self.decisions);
+        reg.observe_count("cluster.rejected", self.rejected as u64);
+        let completed =
+            self.records.iter().filter(|r| r.completion_secs.is_some()).count() as u64;
+        reg.observe_count("cluster.completed", completed);
+        reg.observe_gauge("cluster.cost_usd", self.cumulative_cost_usd);
+        reg.observe_histogram("cluster.util_decile", &self.util_hist, 1.0);
+        reg.observe_histogram(
+            "cluster.decision_lat_us",
+            &self.decision_lat,
+            LAT_BUCKET_US as f64,
+        );
+        let stats = self.eval_cache.stats();
+        reg.observe_count("eval.charged", stats.charged);
+        reg.observe_count("eval.cached", stats.cached);
+        reg.observe_count("eval.entries", stats.entries as u64);
+    }
+
     fn note_decision(&mut self, dt: std::time::Duration) {
         self.decisions += 1;
         self.decision_lat.record(dt.as_micros() as u64 / LAT_BUCKET_US);
+        if self.tracer.is_enabled() {
+            // Wall-clock value: flagged `wall` so determinism diffs strip
+            // it, like the serve daemon's `[wall]` lines.
+            self.tracer.wall_instant(
+                "cluster",
+                "decision_latency",
+                vec![("us".to_string(), Json::Num(dt.as_micros() as f64))],
+            );
+        }
     }
 
     fn push_event(&mut self, at: f64, kind: Pending) {
@@ -721,6 +786,7 @@ impl<'a> ClusterSim<'a> {
             self.util_time += util * dt;
             self.total_time += dt;
             self.clock = to;
+            self.tracer.set_virtual(to);
         }
     }
 
@@ -743,7 +809,29 @@ impl<'a> ClusterSim<'a> {
         let scheduler = self.cfg.spec.build(mix_seed(self.seed, job.id as u64, attempt));
         let engine = EvalEngine::new(&cm)
             .with_threads(self.eval_threads)
-            .with_cache(self.eval_cache.clone());
+            .with_cache(self.eval_cache.clone())
+            .with_tracer(self.tracer.clone());
+        let span = if self.tracer.is_enabled() {
+            // The residual summary: how much of the pool this admission
+            // can actually search over.
+            let free: usize = search_pool.types.iter().map(|t| t.max_units).sum();
+            self.tracer.open(
+                "cluster",
+                "admit_attempt",
+                vec![
+                    ("job".to_string(), Json::Num(job.id as f64)),
+                    ("attempt".to_string(), Json::Num(attempt as f64)),
+                    ("method".to_string(), Json::Str(self.cfg.spec.to_string())),
+                    ("residual_units".to_string(), Json::Num(free as f64)),
+                    (
+                        "residual_types".to_string(),
+                        Json::Num(search_pool.types.len() as f64),
+                    ),
+                ],
+            )
+        } else {
+            self.tracer.open("cluster", "admit_attempt", Vec::new())
+        };
         let mut session =
             scheduler.session_engine(engine, Budget::evals(self.cfg.admit_budget_evals));
         if let Some(widx) = job_idx_in_waiting {
@@ -761,13 +849,27 @@ impl<'a> ClusterSim<'a> {
         if let Some(cpu) = search_pool.cpu_type() {
             session.warm_start(&SchedulingPlan::uniform(job.model.num_layers(), cpu.id));
         }
-        match sched::drive(session.as_mut(), None) {
+        let result = match sched::drive_traced(session.as_mut(), None, &self.tracer) {
             Ok(out) => {
                 let (charged, cached) = (out.evaluations, out.cache_hits);
                 (Some(out), charged, cached)
             }
             Err(_) => (None, 0, 0),
+        };
+        if self.tracer.is_enabled() {
+            let feasible = result.0.as_ref().map(|o| o.eval.feasible).unwrap_or(false);
+            self.tracer.close_with(
+                span,
+                vec![
+                    ("feasible".to_string(), Json::Bool(feasible)),
+                    ("charged".to_string(), Json::Num(result.1 as f64)),
+                    ("cached".to_string(), Json::Num(result.2 as f64)),
+                ],
+            );
+        } else {
+            self.tracer.close(span);
         }
+        result
     }
 
     /// A new job arrives: compute its empty-pool request profile, reject
@@ -782,6 +884,17 @@ impl<'a> ClusterSim<'a> {
             kind: EventKind::Arrive,
             units: Vec::new(),
         });
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "cluster",
+                "arrival",
+                vec![
+                    ("job".to_string(), Json::Num(jid as f64)),
+                    ("model".to_string(), Json::Str(job.model.name.clone())),
+                    ("sla_floor".to_string(), Json::Num(job.sla_floor)),
+                ],
+            );
+        }
         let t0 = Instant::now();
         let (outcome, charged, cached) = self.admit_session(None, &job, self.pool, 0);
         self.note_decision(t0.elapsed());
@@ -797,6 +910,13 @@ impl<'a> ClusterSim<'a> {
                 kind: EventKind::Reject,
                 units: Vec::new(),
             });
+            if self.tracer.is_enabled() {
+                self.tracer.instant(
+                    "cluster",
+                    "reject",
+                    vec![("job".to_string(), Json::Num(jid as f64))],
+                );
+            }
             return Ok(());
         };
         let (units, hourly) = {
@@ -873,6 +993,16 @@ impl<'a> ClusterSim<'a> {
             kind: EventKind::Complete,
             units: r.units.clone(),
         });
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "cluster",
+                "complete",
+                vec![
+                    ("job".to_string(), Json::Num(job_id as f64)),
+                    ("epoch".to_string(), Json::Num(epoch as f64)),
+                ],
+            );
+        }
         self.admission_pass(now)
     }
 
@@ -897,6 +1027,19 @@ impl<'a> ClusterSim<'a> {
             &self.waiting[widx].failed_attempts,
             Some((fp, n)) if *n >= 2 && *fp == residual_fp
         ) {
+            if self.tracer.is_enabled() {
+                self.tracer.instant(
+                    "cluster",
+                    "admit_skip",
+                    vec![
+                        ("job".to_string(), Json::Num(job.id as f64)),
+                        (
+                            "context_fp".to_string(),
+                            Json::Str(format!("{residual_fp:016x}")),
+                        ),
+                    ],
+                );
+            }
             return Ok(false);
         }
         let jid = job.id;
@@ -913,6 +1056,13 @@ impl<'a> ClusterSim<'a> {
                 Some((fp, n)) if fp == residual_fp => Some((fp, n + 1)),
                 _ => Some((residual_fp, 1)),
             };
+            if self.tracer.is_enabled() {
+                self.tracer.instant(
+                    "cluster",
+                    "admit_fail",
+                    vec![("job".to_string(), Json::Num(jid as f64))],
+                );
+            }
             return Ok(false);
         };
         self.epochs[jid] += 1;
@@ -956,6 +1106,19 @@ impl<'a> ClusterSim<'a> {
             kind: EventKind::Admit,
             units: units.clone(),
         });
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "cluster",
+                "admit",
+                vec![
+                    ("job".to_string(), Json::Num(jid as f64)),
+                    ("epoch".to_string(), Json::Num(epoch as f64)),
+                    ("units".to_string(), Json::Num(units.iter().sum::<usize>() as f64)),
+                    ("throughput".to_string(), Json::Num(measured)),
+                    ("expected_completion".to_string(), Json::Num(now + service)),
+                ],
+            );
+        }
         self.running.push(Running {
             below_floor: measured < w.job.sla_floor,
             analytic_throughput: out.eval.throughput,
@@ -993,6 +1156,16 @@ impl<'a> ClusterSim<'a> {
             kind: EventKind::Preempt,
             units: r.units.clone(),
         });
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "cluster",
+                "preempt",
+                vec![
+                    ("job".to_string(), Json::Num(jid as f64)),
+                    ("remaining_samples".to_string(), Json::Num(remaining)),
+                ],
+            );
+        }
         self.waiting.push(Waiting {
             job: r.job,
             remaining_samples: remaining,
@@ -1057,6 +1230,18 @@ impl<'a> ClusterSim<'a> {
             return Ok(false); // even pausing every victim would not fit
         }
         let cand_id = self.waiting[widx].job.id;
+        let span = if self.tracer.is_enabled() {
+            self.tracer.open(
+                "cluster",
+                "preempt_campaign",
+                vec![
+                    ("job".to_string(), Json::Num(cand_id as f64)),
+                    ("victims".to_string(), Json::Num(take.len() as f64)),
+                ],
+            )
+        } else {
+            self.tracer.open("cluster", "preempt_campaign", Vec::new())
+        };
         for vid in take {
             let ridx = self
                 .running
@@ -1070,7 +1255,13 @@ impl<'a> ClusterSim<'a> {
             .iter()
             .position(|w| w.job.id == cand_id)
             .expect("candidate still waiting");
-        self.try_admit(widx, now)?;
+        let admitted = self.try_admit(widx, now)?;
+        if self.tracer.is_enabled() {
+            self.tracer
+                .close_with(span, vec![("admitted".to_string(), Json::Bool(admitted))]);
+        } else {
+            self.tracer.close(span);
+        }
         Ok(true)
     }
 
@@ -1156,8 +1347,35 @@ pub fn run_cluster(
     cfg: &ClusterConfig,
     seed: u64,
 ) -> anyhow::Result<ClusterReport> {
+    run_cluster_traced(pool, queue, policy, cfg, seed, &Tracer::disabled())
+}
+
+/// [`run_cluster`] with a tracer attached: the whole replay sits under a
+/// `cluster`/`run` span and every simulator event lands in the trace.
+/// The report is bit-identical to the untraced run.
+pub fn run_cluster_traced(
+    pool: &ResourcePool,
+    queue: &JobQueue,
+    policy: &dyn ClusterPolicy,
+    cfg: &ClusterConfig,
+    seed: u64,
+    tracer: &Tracer,
+) -> anyhow::Result<ClusterReport> {
     queue.validate()?;
+    let span = if tracer.is_enabled() {
+        tracer.open(
+            "cluster",
+            "run",
+            vec![
+                ("policy".to_string(), Json::Str(policy.name().to_string())),
+                ("jobs".to_string(), Json::Num(queue.jobs.len() as f64)),
+            ],
+        )
+    } else {
+        tracer.open("cluster", "run", Vec::new())
+    };
     let mut sim = ClusterSim::new(pool, policy, cfg, seed)?;
+    sim.set_tracer(tracer.clone());
     // All arrivals are enqueued up front (queue ids are dense and
     // arrival-ordered, so the simulator re-assigns identical ids and the
     // event sequence matches the streaming driver's).
@@ -1165,7 +1383,20 @@ pub fn run_cluster(
         sim.add_job(job.clone())?;
     }
     sim.drain()?;
-    sim.finish(policy.name())
+    let report = sim.finish(policy.name())?;
+    if tracer.is_enabled() {
+        tracer.close_with(
+            span,
+            vec![
+                ("decisions".to_string(), Json::Num(report.decisions as f64)),
+                ("makespan_secs".to_string(), Json::Num(report.makespan_secs)),
+                ("cost_usd".to_string(), Json::Num(report.cumulative_cost_usd)),
+            ],
+        );
+    } else {
+        tracer.close(span);
+    }
+    Ok(report)
 }
 
 /// Render and emit one per-job table per report plus the cross-policy

@@ -68,6 +68,7 @@ pub mod data;
 pub mod elastic;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod plan;
 pub mod profiler;
 pub mod provision;
@@ -93,6 +94,7 @@ pub mod prelude {
         TraceConfig, WorkloadTrace,
     };
     pub use crate::model::{LayerKind, LayerSpec, ModelSpec};
+    pub use crate::obs::{MetricsRegistry, TraceFormat, Tracer};
     pub use crate::plan::{ProvisioningPlan, SchedulingPlan, StageSpan};
     pub use crate::resources::{paper_testbed, simulated_types, ResourceKind, ResourcePool};
     pub use crate::sched::{

@@ -56,6 +56,17 @@ fn cli() -> Cli {
             OptSpec { name: "progress", help: "print the incumbent after every search step", takes_value: false, default: None },
         ]
     };
+    let trace = || {
+        vec![
+            OptSpec { name: "trace-out", help: "write a span/event trace of the run to this path; the run's outputs are bit-identical with tracing on or off", takes_value: true, default: None },
+            OptSpec { name: "trace-format", help: "trace export format (jsonl = one record per line via util::json; chrome = Perfetto-loadable trace-event JSON)", takes_value: true, default: Some("jsonl") },
+        ]
+    };
+    let metrics_out = || {
+        vec![
+            OptSpec { name: "metrics-out", help: "write a metrics-registry JSON snapshot of the run to this path", takes_value: true, default: None },
+        ]
+    };
     Cli {
         bin: "heterps",
         about: "distributed DNN training with RL-based scheduling in heterogeneous environments",
@@ -63,7 +74,7 @@ fn cli() -> Cli {
             CmdSpec {
                 name: "schedule",
                 about: "run one scheduler and print the plan, provisioning and cost",
-                opts: common().into_iter().chain(budget()).collect(),
+                opts: common().into_iter().chain(budget()).chain(trace()).collect(),
                 positionals: vec![("spec", spec_help)],
             },
             CmdSpec {
@@ -149,7 +160,11 @@ fn cli() -> Cli {
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
-                ],
+                ]
+                .into_iter()
+                .chain(trace())
+                .chain(metrics_out())
+                .collect(),
                 positionals: vec![],
             },
             CmdSpec {
@@ -177,11 +192,22 @@ fn cli() -> Cli {
                     OptSpec { name: "json-out", help: "write the machine-readable serve report to this path", takes_value: true, default: None },
                     OptSpec { name: "emit-stream", help: "write the served arrival stream as JSONL to this path (replayable via --stream)", takes_value: true, default: None },
                     OptSpec { name: "progress-every", help: "stderr progress line every N arrivals (0 = off)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "stats-every", help: "stderr [stats] metrics-registry line every N arrivals (0 = off)", takes_value: true, default: Some("0") },
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
-                ],
+                ]
+                .into_iter()
+                .chain(trace())
+                .chain(metrics_out())
+                .collect(),
                 positionals: vec![],
+            },
+            CmdSpec {
+                name: "trace-lint",
+                about: "validate a trace file written by --trace-out (either format): every record must parse and every span must close in order",
+                opts: vec![],
+                positionals: vec![("file", "trace file to validate (JSONL or Chrome trace-event JSON)")],
             },
             CmdSpec {
                 name: "train",
@@ -232,6 +258,19 @@ fn main() {
                 for m in sched::registry() {
                     println!("{}", m.canonical);
                 }
+                Ok(())
+            }
+            "trace-lint" => {
+                let path = args.positionals.first().ok_or_else(|| {
+                    anyhow::anyhow!("trace-lint needs a trace file argument")
+                })?;
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read trace `{path}`: {e}"))?;
+                let s = heterps::obs::lint_trace(&text)?;
+                println!(
+                    "trace ok: {} records — {} spans, {} events, {} wall-stamped",
+                    s.records, s.spans, s.events, s.wall_records
+                );
                 Ok(())
             }
             "info" => {
@@ -326,9 +365,30 @@ fn main() {
                     ..Default::default()
                 };
                 apply_calibration_knobs(&mut ccfg, file.as_ref())?;
+                let (tracer, trace_sink) = tracer_from_args(&args)?;
                 let policy_name = args.str_or("policy", "all");
                 let reports = if policy_name == "all" {
-                    cluster::run_all_policies(&pool, &queue, &ccfg, seed)?
+                    if tracer.is_enabled() {
+                        // One trace across all policies: each replay is its
+                        // own `cluster`/`run` span.
+                        cluster::policy_names()
+                            .iter()
+                            .map(|name| {
+                                let policy = cluster::policy_by_name(name, &pool)
+                                    .expect("registered policy");
+                                cluster::run_cluster_traced(
+                                    &pool,
+                                    &queue,
+                                    policy.as_ref(),
+                                    &ccfg,
+                                    seed,
+                                    &tracer,
+                                )
+                            })
+                            .collect::<anyhow::Result<Vec<_>>>()?
+                    } else {
+                        cluster::run_all_policies(&pool, &queue, &ccfg, seed)?
+                    }
                 } else {
                     let policy =
                         cluster::policy_by_name(policy_name, &pool).ok_or_else(|| {
@@ -337,7 +397,14 @@ fn main() {
                                 cluster::policy_names().join(", ")
                             )
                         })?;
-                    vec![cluster::run_cluster(&pool, &queue, policy.as_ref(), &ccfg, seed)?]
+                    vec![cluster::run_cluster_traced(
+                        &pool,
+                        &queue,
+                        policy.as_ref(),
+                        &ccfg,
+                        seed,
+                        &tracer,
+                    )?]
                 };
                 cluster::emit_reports(
                     "cluster",
@@ -363,6 +430,25 @@ fn main() {
                         best_cost.policy, best_cost.cumulative_cost_usd
                     );
                 }
+                if let Some(path) = args.get("metrics-out") {
+                    let mut reg = heterps::obs::MetricsRegistry::new();
+                    for r in &reports {
+                        let p = format!("cluster.{}", r.policy);
+                        reg.observe_count(&format!("{p}.decisions"), r.decisions);
+                        reg.observe_count(&format!("{p}.rejected"), r.rejected as u64);
+                        reg.observe_count(
+                            &format!("{p}.evaluations"),
+                            r.total_evaluations as u64,
+                        );
+                        reg.observe_count(&format!("{p}.cached_evals"), r.total_cached as u64);
+                        reg.observe_gauge(&format!("{p}.makespan_secs"), r.makespan_secs);
+                        reg.observe_gauge(&format!("{p}.cost_usd"), r.cumulative_cost_usd);
+                        reg.observe_gauge(&format!("{p}.mean_util"), r.mean_util);
+                    }
+                    reg.write_json(std::path::Path::new(path))?;
+                    eprintln!("[wall] wrote metrics to {path}");
+                }
+                write_trace(&tracer, trace_sink.as_ref())?;
                 Ok(())
             }
             "serve" => {
@@ -436,13 +522,20 @@ fn main() {
                         args.f64_or("speedup", 600.0)?,
                     )?,
                     progress_every: args.usize_or("progress-every", 0)?,
+                    stats_every: args.usize_or("stats-every", 0)?,
                 };
-                let outcome = serve::run_serve(&pool, &queue, &scfg, seed)?;
+                let (tracer, trace_sink) = tracer_from_args(&args)?;
+                let outcome = serve::run_serve_traced(&pool, &queue, &scfg, seed, &tracer)?;
                 print!("{}", outcome.render(&source));
                 if let Some(path) = args.get("json-out") {
                     std::fs::write(path, outcome.to_json(&source).render_pretty())?;
                     eprintln!("[wall] wrote serve report to {path}");
                 }
+                if let Some(path) = args.get("metrics-out") {
+                    outcome.metrics.write_json(std::path::Path::new(path))?;
+                    eprintln!("[wall] wrote metrics to {path}");
+                }
+                write_trace(&tracer, trace_sink.as_ref())?;
                 Ok(())
             }
             "train" => {
@@ -641,7 +734,10 @@ fn main() {
                         };
                         let budget = budget_from_args()?;
                         let scheduler = spec.build(seed);
-                        let engine = sched::EvalEngine::new(&cm).with_threads(eval_threads);
+                        let (tracer, trace_sink) = tracer_from_args(&args)?;
+                        let engine = sched::EvalEngine::new(&cm)
+                            .with_threads(eval_threads)
+                            .with_tracer(tracer.clone());
                         let mut session = scheduler.session_engine(engine, budget.clone());
                         let progress = args.flag("progress");
                         let mut observer = |r: &StepReport| {
@@ -656,7 +752,8 @@ fn main() {
                                 }
                             }
                         };
-                        let out = sched::drive(session.as_mut(), Some(&mut observer))?;
+                        let out =
+                            sched::drive_traced(session.as_mut(), Some(&mut observer), &tracer)?;
                         println!("spec        : {spec}");
                         if !budget.is_unlimited() {
                             println!("budget      : evals {:?}, deadline {:?}, target {:?}",
@@ -681,6 +778,7 @@ fn main() {
                             out.evaluations, out.cache_hits
                         );
                         println!("sched time  : {:.3} s", out.wall_time.as_secs_f64());
+                        write_trace(&tracer, trace_sink.as_ref())?;
                     }
                     "compare" => {
                         let budget = budget_from_args()?;
@@ -824,6 +922,33 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// `--trace-out`/`--trace-format`: an enabled tracer plus its export
+/// sink, or the disabled no-op handle when tracing is off.
+fn tracer_from_args(
+    args: &heterps::cli::Args,
+) -> anyhow::Result<(heterps::obs::Tracer, Option<(String, heterps::obs::TraceFormat)>)> {
+    match args.get("trace-out") {
+        Some(path) => {
+            let name = args.str_or("trace-format", "jsonl");
+            let format = heterps::obs::TraceFormat::parse(name)?;
+            Ok((heterps::obs::Tracer::new(), Some((path.to_string(), format))))
+        }
+        None => Ok((heterps::obs::Tracer::disabled(), None)),
+    }
+}
+
+/// Export the trace when `--trace-out` was given; a no-op otherwise.
+fn write_trace(
+    tracer: &heterps::obs::Tracer,
+    sink: Option<&(String, heterps::obs::TraceFormat)>,
+) -> anyhow::Result<()> {
+    if let Some((path, format)) = sink {
+        tracer.write(std::path::Path::new(path), *format)?;
+        eprintln!("[wall] wrote {} trace records to {path}", tracer.len());
+    }
+    Ok(())
 }
 
 /// The per-job admission method for `cluster`/`serve`: an explicit

@@ -50,6 +50,9 @@ impl Throughput {
     pub fn record(&self, n: u64) {
         self.samples.add(n);
     }
+    pub fn samples(&self) -> u64 {
+        self.samples.get()
+    }
     pub fn per_sec(&self) -> f64 {
         let dt = self.started.elapsed().as_secs_f64();
         if dt <= 0.0 {
@@ -184,39 +187,63 @@ impl BenchRow {
 }
 
 /// Merge one bench's rows into the shared `results/BENCH_perf.json`
-/// artifact, schema `{"benches": {"<name>": [{"op","mean","std","unit"}]}}`.
-/// Rows from other benches already in the file are preserved; this bench's
-/// previous rows are replaced wholesale. A missing or unparsable existing
-/// file is treated as empty rather than an error, so a corrupt artifact
-/// never blocks regenerating it.
+/// artifact, schema
+/// `{"benches": {"<name>": {"status", "rows": [{"op","mean","std","unit"}]}}}`.
+/// Each bench entry stamps its own `status` — `"measured"` when it holds
+/// rows and every mean is finite, `"pending"` otherwise — so a
+/// partially-measured artifact is self-describing per bench instead of
+/// carrying one artifact-wide staleness marker. Entries of other benches
+/// already in the file are preserved verbatim (legacy bare-array entries
+/// included); this bench's entry is replaced wholesale. Top-level keys
+/// other than the legacy artifact-wide `status` marker (which is
+/// superseded by the per-bench stamps and dropped) ride along untouched.
+/// A missing or unparsable existing file is treated as empty rather than
+/// an error, so a corrupt artifact never blocks regenerating it.
 pub fn merge_bench_rows(path: &Path, bench: &str, rows: &[BenchRow]) -> std::io::Result<()> {
     use crate::util::json::Json;
-    let mut benches: Vec<(String, Json)> = std::fs::read_to_string(path)
+    let mut root: Vec<(String, Json)> = std::fs::read_to_string(path)
         .ok()
         .and_then(|text| Json::parse(&text).ok())
-        .and_then(|root| root.get("benches").and_then(Json::as_obj).cloned())
+        .and_then(|json| json.as_obj().cloned())
         .unwrap_or_default();
-    let entry = Json::Arr(
-        rows.iter()
-            .map(|r| {
-                Json::Obj(vec![
-                    ("op".to_string(), Json::Str(r.op.clone())),
-                    ("mean".to_string(), Json::Num(r.mean)),
-                    ("std".to_string(), Json::Num(r.std)),
-                    ("unit".to_string(), Json::Str(r.unit.clone())),
-                ])
-            })
-            .collect(),
-    );
-    match benches.iter_mut().find(|(name, _)| name == bench) {
-        Some((_, slot)) => *slot = entry,
-        None => benches.push((bench.to_string(), entry)),
+    root.retain(|(key, _)| key != "status");
+    let measured = !rows.is_empty() && rows.iter().all(|r| r.mean.is_finite());
+    let status = if measured { "measured" } else { "pending" };
+    let entry = Json::Obj(vec![
+        ("status".to_string(), Json::Str(status.to_string())),
+        (
+            "rows".to_string(),
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("op".to_string(), Json::Str(r.op.clone())),
+                            ("mean".to_string(), Json::Num(r.mean)),
+                            ("std".to_string(), Json::Num(r.std)),
+                            ("unit".to_string(), Json::Str(r.unit.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    if root.iter().all(|(key, _)| key != "benches") {
+        root.push(("benches".to_string(), Json::Obj(Vec::new())));
     }
-    let root = Json::Obj(vec![("benches".to_string(), Json::Obj(benches))]);
+    let (_, slot) = root.iter_mut().find(|(key, _)| key == "benches").expect("inserted above");
+    if !matches!(slot, Json::Obj(_)) {
+        *slot = Json::Obj(Vec::new());
+    }
+    if let Json::Obj(benches) = slot {
+        match benches.iter_mut().find(|(name, _)| name == bench) {
+            Some((_, existing)) => *existing = entry,
+            None => benches.push((bench.to_string(), entry)),
+        }
+    }
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, root.render_pretty())
+    std::fs::write(path, Json::Obj(root).render_pretty())
 }
 
 /// A rectangular results table with a title; renders aligned text and CSV.
@@ -383,12 +410,23 @@ mod tests {
         // Single-bucket histogram: everything clamps to index 0.
         let one = Histogram::new(1);
         one.record(42);
+        assert_eq!(one.quantile(0.0), Some(0));
         assert_eq!(one.quantile(0.5), Some(0));
         assert_eq!(one.quantile(1.0), Some(0));
+        // Saturated tail: every observation clamps into the last bucket,
+        // so the whole quantile range collapses onto it.
+        let sat = Histogram::new(3);
+        for _ in 0..5 {
+            sat.record(10);
+        }
+        assert_eq!(sat.quantile(0.0), Some(2));
+        assert_eq!(sat.quantile(1.0), Some(2));
+        assert_eq!(quantile_of(&sat.snapshot(), 0.0), Some(2));
+        assert_eq!(quantile_of(&sat.snapshot(), 1.0), Some(2));
     }
 
     #[test]
-    fn merge_bench_rows_preserves_other_benches() {
+    fn merge_bench_rows_preserves_other_benches_and_stamps_status() {
         use crate::util::json::Json;
         let dir = std::env::temp_dir().join(format!("heterps-bench-{}", std::process::id()));
         let path = dir.join("BENCH_perf.json");
@@ -399,17 +437,41 @@ mod tests {
         merge_bench_rows(&path, "alpha", &[BenchRow::new("op_a2", 9.0, 0.0, "s")]).unwrap();
         let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         let benches = root.get("benches").unwrap();
-        let alpha = benches.get("alpha").unwrap().as_arr().unwrap();
-        assert_eq!(alpha.len(), 1);
-        assert_eq!(alpha[0].get("op").and_then(Json::as_str), Some("op_a2"));
-        let beta = benches.get("beta").unwrap().as_arr().unwrap();
+        let alpha = benches.get("alpha").unwrap();
+        assert_eq!(alpha.get("status").and_then(Json::as_str), Some("measured"));
+        let rows = alpha.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("op").and_then(Json::as_str), Some("op_a2"));
+        let beta = benches.get("beta").unwrap().get("rows").unwrap().as_arr().unwrap();
         assert_eq!(beta[0].get("mean").and_then(Json::as_f64), Some(2.5));
         assert_eq!(beta[0].get("unit").and_then(Json::as_str), Some("us"));
+        // Unmeasured rows (none at all, or a non-finite mean placeholder)
+        // mark only their own bench pending — never the whole artifact.
+        merge_bench_rows(&path, "empty", &[]).unwrap();
+        merge_bench_rows(&path, "nan", &[BenchRow::new("op_n", f64::NAN, 0.0, "ms")]).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = root.get("benches").unwrap();
+        let status = |name: &str| {
+            benches.get(name).and_then(|b| b.get("status")).and_then(Json::as_str)
+        };
+        assert_eq!(status("empty"), Some("pending"));
+        assert_eq!(status("nan"), Some("pending"));
+        assert_eq!(status("alpha"), Some("measured"));
+        assert!(root.get("status").is_none(), "no artifact-wide status marker");
         // A corrupt file is treated as empty, not an error.
         std::fs::write(&path, "{not json").unwrap();
         merge_bench_rows(&path, "gamma", &[]).unwrap();
         let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(root.get("benches").unwrap().get("gamma").is_some());
+        // Other top-level keys ride along; the legacy artifact-wide
+        // `status` marker is dropped in favor of the per-bench stamps.
+        std::fs::write(&path, "{\"note\": \"keep me\", \"status\": \"pending: legacy\"}").unwrap();
+        merge_bench_rows(&path, "delta", &[BenchRow::new("op_d", 1.0, 0.0, "ms")]).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("note").and_then(Json::as_str), Some("keep me"));
+        assert!(root.get("status").is_none());
+        let delta = root.get("benches").unwrap().get("delta").unwrap();
+        assert_eq!(delta.get("status").and_then(Json::as_str), Some("measured"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -424,6 +486,21 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.starts_with("name,cost\n"));
         assert!(csv.contains("\"rl,lstm\""));
+    }
+
+    #[test]
+    fn csv_escapes_quotes_commas_and_newlines_rfc4180() {
+        let mut t = Table::new("Edge", &["cell", "plain"]);
+        // A cell containing `", "` needs quoting for the comma AND
+        // doubled quotes for the embedded quote characters.
+        t.row_strs(&["util p90 \", \" spread", "ok"]);
+        t.row_strs(&["line\nbreak", "also ok"]);
+        let csv = t.to_csv();
+        assert!(
+            csv.contains("\"util p90 \"\", \"\" spread\",ok"),
+            "embedded quotes must double and the cell must be quoted: {csv}"
+        );
+        assert!(csv.contains("\"line\nbreak\",also ok"), "{csv}");
     }
 
     #[test]

@@ -1,0 +1,29 @@
+//! Observability: the deterministic span/event tracer and the metrics
+//! registry (DESIGN.md §Observability).
+//!
+//! After seven PRs the stack could only report *outcomes* — final
+//! tables, p50/p95/p99 summaries. This module adds the inside view the
+//! north-star demands before learned cluster control can be debugged:
+//!
+//! * [`trace`] — a [`Tracer`] handle threaded through the four
+//!   decision-making layers (`sched` sessions, the `EvalEngine`, the
+//!   cluster simulator, the serve daemon). Records are stamped with the
+//!   virtual clock wherever one exists, so a virtual-clock trace is
+//!   bit-deterministic per `(config, seed)`; wall-stamped records carry
+//!   a `wall` flag and are stripped before determinism diffs, exactly
+//!   like the serve daemon's `[wall]` lines. Exports as our own JSONL
+//!   (`util::json`, round-trip tested) or Chrome trace-event JSON
+//!   (Perfetto-loadable) via `--trace-out`; [`lint_trace`] re-validates
+//!   either format. Disabled (the default) it records nothing and must
+//!   change nothing: trace-on vs trace-off outputs are diffed
+//!   bit-identical in tests and `scripts/verify.sh`.
+//! * [`registry`] — a [`MetricsRegistry`] naming and snapshotting the
+//!   live `Counter`/`Throughput`/`Histogram` instruments in one place;
+//!   powers the serve daemon's periodic `[stats]` stderr line and the
+//!   `--metrics-out` JSON dump.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{MetricValue, MetricsRegistry};
+pub use trace::{lint_trace, LintSummary, SpanId, TraceFormat, TraceRecord, Tracer};

@@ -1,0 +1,225 @@
+//! The metrics registry: every `Counter`/`Throughput`/`Histogram` named
+//! and snapshotted in one place (DESIGN.md §Observability).
+//!
+//! The live instruments in [`crate::metrics`] are owned by the structs
+//! that update them (the cluster simulator's latency histogram, the eval
+//! cache's counters, …); a [`MetricsRegistry`] is the *read side*: a
+//! named, insertion-ordered snapshot refreshed whenever a layer calls its
+//! `observe_*` methods (re-observing a name replaces its value). It
+//! powers the serve daemon's periodic `[stats]` stderr line and the
+//! `--metrics-out` JSON dump on the `cluster` and `serve` subcommands.
+
+use std::path::Path;
+
+use crate::metrics::{Counter, Histogram, Throughput};
+use crate::util::json::Json;
+
+/// One snapshotted metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic count.
+    Counter(u64),
+    /// Point-in-time scalar.
+    Gauge(f64),
+    /// Events per second since the underlying `Throughput` started.
+    Throughput { count: u64, per_sec: f64 },
+    /// Histogram summary; `mean` and the quantiles are in the unit the
+    /// observing layer scaled bucket indices to (e.g. microseconds).
+    Histogram { count: u64, mean: f64, p50: f64, p95: f64, p99: f64 },
+}
+
+/// Named, insertion-ordered metric snapshots.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The snapshotted value for `name`, if observed.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    fn set(&mut self, name: &str, value: MetricValue) {
+        match self.entries.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v = value,
+            None => self.entries.push((name.to_string(), value)),
+        }
+    }
+
+    /// Snapshot a live [`Counter`].
+    pub fn observe_counter(&mut self, name: &str, counter: &Counter) {
+        self.set(name, MetricValue::Counter(counter.get()));
+    }
+
+    /// Record a plain monotonic count not backed by a `Counter`.
+    pub fn observe_count(&mut self, name: &str, count: u64) {
+        self.set(name, MetricValue::Counter(count));
+    }
+
+    /// Record a point-in-time scalar.
+    pub fn observe_gauge(&mut self, name: &str, value: f64) {
+        self.set(name, MetricValue::Gauge(value));
+    }
+
+    /// Snapshot a live [`Throughput`].
+    pub fn observe_throughput(&mut self, name: &str, tp: &Throughput) {
+        self.set(name, MetricValue::Throughput { count: tp.samples(), per_sec: tp.per_sec() });
+    }
+
+    /// Snapshot a live [`Histogram`]. `scale` converts a bucket index to
+    /// the reported unit (e.g. [`LAT_BUCKET_US`](crate::cluster::LAT_BUCKET_US)
+    /// for a microsecond latency histogram); the histogram's `mean` is of
+    /// recorded (already bucket-scaled) values, so the same scale applies.
+    pub fn observe_histogram(&mut self, name: &str, hist: &Histogram, scale: f64) {
+        let q = |p: f64| hist.quantile(p).map_or(0.0, |bucket| bucket as f64 * scale);
+        self.set(
+            name,
+            MetricValue::Histogram {
+                count: hist.count(),
+                mean: hist.mean() * scale,
+                p50: q(0.50),
+                p95: q(0.95),
+                p99: q(0.99),
+            },
+        );
+    }
+
+    /// One-line `name=value` rendering for the serve daemon's `[stats]`
+    /// stderr line, in observation order.
+    pub fn stats_line(&self) -> String {
+        let mut parts = Vec::with_capacity(self.entries.len());
+        for (name, value) in &self.entries {
+            let rendered = match value {
+                MetricValue::Counter(c) => format!("{name}={c}"),
+                MetricValue::Gauge(g) => format!("{name}={g:.3}"),
+                MetricValue::Throughput { per_sec, .. } => format!("{name}={per_sec:.1}/s"),
+                MetricValue::Histogram { count, mean, p95, .. } => {
+                    format!("{name}{{n={count},mean={mean:.1},p95={p95:.0}}}")
+                }
+            };
+            parts.push(rendered);
+        }
+        parts.join(" ")
+    }
+
+    /// The full snapshot as a JSON object, one member per metric in
+    /// observation order.
+    pub fn to_json(&self) -> Json {
+        let mut members = Vec::with_capacity(self.entries.len());
+        for (name, value) in &self.entries {
+            let obj = match value {
+                MetricValue::Counter(c) => vec![
+                    ("kind".to_string(), Json::Str("counter".to_string())),
+                    ("value".to_string(), Json::Num(*c as f64)),
+                ],
+                MetricValue::Gauge(g) => vec![
+                    ("kind".to_string(), Json::Str("gauge".to_string())),
+                    ("value".to_string(), Json::Num(*g)),
+                ],
+                MetricValue::Throughput { count, per_sec } => vec![
+                    ("kind".to_string(), Json::Str("throughput".to_string())),
+                    ("count".to_string(), Json::Num(*count as f64)),
+                    ("per_sec".to_string(), Json::Num(*per_sec)),
+                ],
+                MetricValue::Histogram { count, mean, p50, p95, p99 } => vec![
+                    ("kind".to_string(), Json::Str("histogram".to_string())),
+                    ("count".to_string(), Json::Num(*count as f64)),
+                    ("mean".to_string(), Json::Num(*mean)),
+                    ("p50".to_string(), Json::Num(*p50)),
+                    ("p95".to_string(), Json::Num(*p95)),
+                    ("p99".to_string(), Json::Num(*p99)),
+                ],
+            };
+            members.push((name.clone(), Json::Obj(obj)));
+        }
+        Json::Obj(members)
+    }
+
+    /// Write the JSON snapshot to `path` (the `--metrics-out` dump).
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().render_pretty())
+            .map_err(|e| anyhow::anyhow!("writing metrics to {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observations_replace_by_name_and_keep_order() {
+        let mut reg = MetricsRegistry::new();
+        reg.observe_count("a.count", 1);
+        reg.observe_gauge("b.gauge", 2.5);
+        reg.observe_count("a.count", 7);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get("a.count"), Some(&MetricValue::Counter(7)));
+        let json = reg.to_json();
+        let members = json.as_obj().unwrap();
+        assert_eq!(members[0].0, "a.count");
+        assert_eq!(members[1].0, "b.gauge");
+    }
+
+    #[test]
+    fn live_instruments_snapshot_through() {
+        let counter = Counter::new();
+        counter.add(5);
+        let hist = Histogram::new(8);
+        for v in [1, 1, 2, 3] {
+            hist.record(v);
+        }
+        let mut reg = MetricsRegistry::new();
+        reg.observe_counter("evals", &counter);
+        reg.observe_histogram("lat_us", &hist, 20.0);
+        assert_eq!(reg.get("evals"), Some(&MetricValue::Counter(5)));
+        match reg.get("lat_us") {
+            Some(MetricValue::Histogram { count, mean, p50, p99, .. }) => {
+                assert_eq!(*count, 4);
+                assert!((mean - 20.0 * 7.0 / 4.0).abs() < 1e-9);
+                assert_eq!(*p50, 20.0);
+                assert_eq!(*p99, 60.0);
+            }
+            other => panic!("unexpected snapshot: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_line_renders_every_kind() {
+        let mut reg = MetricsRegistry::new();
+        reg.observe_count("decisions", 12);
+        reg.observe_gauge("clock", 3.5);
+        let hist = Histogram::new(4);
+        hist.record(2);
+        reg.observe_histogram("lat", &hist, 1.0);
+        let line = reg.stats_line();
+        assert!(line.contains("decisions=12"), "{line}");
+        assert!(line.contains("clock=3.500"), "{line}");
+        assert!(line.contains("lat{n=1,mean=2.0,p95=2}"), "{line}");
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let mut reg = MetricsRegistry::new();
+        reg.observe_count("n", 3);
+        reg.observe_gauge("g", 0.5);
+        let text = reg.to_json().render_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let n = parsed.get("n").and_then(|v| v.get("value")).and_then(|v| v.as_f64());
+        assert_eq!(n, Some(3.0));
+        let kind = parsed.get("g").and_then(|v| v.get("kind")).and_then(|v| v.as_str());
+        assert_eq!(kind, Some("gauge"));
+    }
+}

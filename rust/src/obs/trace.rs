@@ -1,0 +1,610 @@
+//! The deterministic span/event tracer (DESIGN.md §Observability).
+//!
+//! A [`Tracer`] is a cloneable handle over a shared record sink, the same
+//! `Rc<RefCell<_>>` sharing idiom as [`EvalCache`](crate::sched::EvalCache):
+//! every layer that makes a decision — a `SearchSession` step, an
+//! `EvalEngine` batch, a gang-admission attempt, a serve tick — records
+//! *spans* (open/close pairs) and *instants* (point events) against it.
+//! The default handle is disabled and records nothing: every method
+//! early-returns on a `None` state, so the hot path pays one branch.
+//! The stronger contract — that an **enabled** tracer changes no decision
+//! either — is pinned by the trace-on/trace-off bit-identity gates in
+//! `tests/observability.rs` and `scripts/verify.sh`.
+//!
+//! ## Clocks and determinism
+//!
+//! Each record is stamped once, with whichever clock the recording layer
+//! lives on:
+//!
+//! * the **virtual** clock when one is active ([`Tracer::set_virtual`] —
+//!   the cluster simulator calls it on every clock advance). Virtual
+//!   timestamps are part of the deterministic simulation state, so a
+//!   virtual-clock trace is bit-identical per `(config, seed)`;
+//! * the **wall** clock otherwise, or when the caller forces it for a
+//!   latency measurement ([`Tracer::wall_instant`]). Wall records carry
+//!   `"wall": true` so consumers can strip them before diffing — the
+//!   same convention as the serve daemon's `[wall]` output lines.
+//!
+//! Span close is checked: closing anything but the innermost open span is
+//! a hard error naming both spans, and exporting with open spans left is
+//! an error naming the innermost one. [`lint_trace`] re-checks balance on
+//! an exported file through the [`util::json`](crate::util::json) parser.
+//!
+//! ## Export
+//!
+//! * [`Tracer::render_jsonl`] — one compact JSON object per line
+//!   (`seq`/`ts`/`wall`/`ph`/`cat`/`name`/`args`), round-trippable
+//!   through [`Json::parse`];
+//! * [`Tracer::to_chrome_json`] — Chrome trace-event JSON loadable in
+//!   `chrome://tracing` or Perfetto, virtual records on tid 0 and wall
+//!   records on tid 1, timestamps scaled to microseconds.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Record phase: a span boundary or a point event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+    Event,
+}
+
+impl Phase {
+    fn letter(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Event => "I",
+        }
+    }
+}
+
+/// One recorded span boundary or event.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// Insertion order, 0-based. Deterministic even for wall records:
+    /// *when* something is recorded is program order; only the wall
+    /// timestamp value varies across runs.
+    pub seq: u64,
+    /// Seconds: the virtual clock when `wall` is false, wall-clock
+    /// seconds since the tracer was created when `wall` is true.
+    pub ts: f64,
+    pub wall: bool,
+    pub phase: Phase,
+    /// Layer tag: `sched`, `eval`, `cluster` or `serve`.
+    pub cat: &'static str,
+    pub name: String,
+    pub args: Vec<(String, Json)>,
+}
+
+impl TraceRecord {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("seq".to_string(), Json::Num(self.seq as f64)),
+            ("ts".to_string(), Json::Num(self.ts)),
+            ("wall".to_string(), Json::Bool(self.wall)),
+            ("ph".to_string(), Json::Str(self.phase.letter().to_string())),
+            ("cat".to_string(), Json::Str(self.cat.to_string())),
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("args".to_string(), Json::Obj(self.args.clone())),
+        ])
+    }
+}
+
+struct TraceState {
+    epoch: Instant,
+    virtual_now: Option<f64>,
+    next_seq: u64,
+    next_token: u64,
+    /// Innermost-last stack of open spans: (token, cat, name).
+    open: Vec<(u64, &'static str, String)>,
+    records: Vec<TraceRecord>,
+}
+
+/// Handle to an open span; pass it back to [`Tracer::close`].
+#[derive(Clone, Copy, Debug)]
+#[must_use = "an open span must be closed"]
+pub struct SpanId {
+    token: u64,
+}
+
+/// Trace export format selected by `--trace-format`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON object per line, our own schema (`util::json`).
+    Jsonl,
+    /// Chrome trace-event JSON (`chrome://tracing` / Perfetto).
+    Chrome,
+}
+
+impl TraceFormat {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "chrome" => Ok(TraceFormat::Chrome),
+            other => anyhow::bail!("unknown trace format '{other}' (expected jsonl|chrome)"),
+        }
+    }
+}
+
+/// The cloneable tracer handle. `Default`/[`Tracer::disabled`] is the
+/// no-op handle; clones of an enabled tracer share one record sink.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    state: Option<Rc<RefCell<TraceState>>>,
+}
+
+impl Tracer {
+    /// An enabled tracer with an empty sink.
+    pub fn new() -> Self {
+        Tracer {
+            state: Some(Rc::new(RefCell::new(TraceState {
+                epoch: Instant::now(),
+                virtual_now: None,
+                next_seq: 0,
+                next_token: 1,
+                open: Vec::new(),
+                records: Vec::new(),
+            }))),
+        }
+    }
+
+    /// The no-op handle: records nothing, costs one branch per call.
+    pub fn disabled() -> Self {
+        Tracer::default()
+    }
+
+    /// True when records are being kept. Callers building non-trivial
+    /// `args` should guard on this so the disabled path allocates
+    /// nothing.
+    pub fn is_enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Advance the virtual clock. Subsequent records are stamped with
+    /// this timestamp (and `wall: false`) until the next call. The
+    /// cluster simulator calls this on every event-loop advance.
+    pub fn set_virtual(&self, t: f64) {
+        if let Some(state) = &self.state {
+            state.borrow_mut().virtual_now = Some(t);
+        }
+    }
+
+    fn record(
+        &self,
+        phase: Phase,
+        cat: &'static str,
+        name: String,
+        args: Vec<(String, Json)>,
+        force_wall: bool,
+    ) {
+        let Some(state) = &self.state else { return };
+        let mut st = state.borrow_mut();
+        let (ts, wall) = match (force_wall, st.virtual_now) {
+            (false, Some(t)) => (t, false),
+            _ => (st.epoch.elapsed().as_secs_f64(), true),
+        };
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.records.push(TraceRecord { seq, ts, wall, phase, cat, name, args });
+    }
+
+    /// Open a span. Must be closed innermost-first via [`Tracer::close`].
+    pub fn open(&self, cat: &'static str, name: &str, args: Vec<(String, Json)>) -> SpanId {
+        let Some(state) = &self.state else {
+            return SpanId { token: 0 };
+        };
+        self.record(Phase::Begin, cat, name.to_string(), args, false);
+        let mut st = state.borrow_mut();
+        let token = st.next_token;
+        st.next_token += 1;
+        st.open.push((token, cat, name.to_string()));
+        SpanId { token }
+    }
+
+    /// Close a span with no closing args. Closing out of order is a hard
+    /// error naming the spans involved.
+    pub fn close(&self, id: SpanId) {
+        self.close_with(id, Vec::new());
+    }
+
+    /// Close a span, attaching `args` to the closing record (visible on
+    /// the `E` event in both export formats).
+    pub fn close_with(&self, id: SpanId, args: Vec<(String, Json)>) {
+        if id.token == 0 {
+            return;
+        }
+        let Some(state) = &self.state else { return };
+        let (cat, name) = {
+            let mut st = state.borrow_mut();
+            match st.open.last() {
+                None => panic!("unbalanced span close: no spans are open"),
+                Some((token, _, innermost)) if *token != id.token => {
+                    let target = st
+                        .open
+                        .iter()
+                        .find(|(t, _, _)| *t == id.token)
+                        .map(|(_, _, n)| n.clone());
+                    match target {
+                        Some(t) => panic!(
+                            "unbalanced span close: tried to close `{t}` while `{innermost}` is still open"
+                        ),
+                        None => panic!(
+                            "unbalanced span close: span is not open (innermost open span is `{innermost}`)"
+                        ),
+                    }
+                }
+                Some(_) => {
+                    let (_, cat, name) = st.open.pop().expect("non-empty open stack");
+                    (cat, name)
+                }
+            }
+        };
+        self.record(Phase::End, cat, name, args, false);
+    }
+
+    /// Record a point event, stamped with the active clock.
+    pub fn instant(&self, cat: &'static str, name: &str, args: Vec<(String, Json)>) {
+        if self.state.is_some() {
+            self.record(Phase::Event, cat, name.to_string(), args, false);
+        }
+    }
+
+    /// Record a point event stamped with the wall clock even when a
+    /// virtual clock is active — for latency measurements whose *value*
+    /// is inherently nondeterministic. The record carries `wall: true`
+    /// so determinism diffs can strip it.
+    pub fn wall_instant(&self, cat: &'static str, name: &str, args: Vec<(String, Json)>) {
+        if self.state.is_some() {
+            self.record(Phase::Event, cat, name.to_string(), args, true);
+        }
+    }
+
+    /// Number of records kept so far (0 for a disabled tracer).
+    pub fn len(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.borrow().records.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of currently open (unclosed) spans.
+    pub fn open_spans(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.borrow().open.len())
+    }
+
+    fn ensure_closed(&self) -> anyhow::Result<()> {
+        if let Some(state) = &self.state {
+            let st = state.borrow();
+            if let Some((_, _, name)) = st.open.last() {
+                anyhow::bail!(
+                    "trace export with {} unclosed span(s): innermost is `{name}`",
+                    st.open.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the trace as JSONL: one compact record per line, in `seq`
+    /// order. Stripping lines containing `"wall": true` leaves the
+    /// bit-deterministic virtual-clock trace.
+    pub fn render_jsonl(&self) -> String {
+        let Some(state) = &self.state else {
+            return String::new();
+        };
+        let st = state.borrow();
+        let mut out = String::new();
+        for r in &st.records {
+            out.push_str(&r.to_json().render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render the trace as Chrome trace-event JSON. Virtual-clock
+    /// records land on tid 0, wall-clock records on tid 1; the two
+    /// tracks are named via `thread_name` metadata events.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for (tid, label) in [(0.0, "virtual-clock"), (1.0, "wall-clock")] {
+            events.push(Json::Obj(vec![
+                ("name".to_string(), Json::Str("thread_name".to_string())),
+                ("ph".to_string(), Json::Str("M".to_string())),
+                ("pid".to_string(), Json::Num(0.0)),
+                ("tid".to_string(), Json::Num(tid)),
+                (
+                    "args".to_string(),
+                    Json::Obj(vec![("name".to_string(), Json::Str(label.to_string()))]),
+                ),
+            ]));
+        }
+        if let Some(state) = &self.state {
+            let st = state.borrow();
+            for r in &st.records {
+                let ph = match r.phase {
+                    Phase::Begin => "B",
+                    Phase::End => "E",
+                    Phase::Event => "i",
+                };
+                let mut args = r.args.clone();
+                args.push(("seq".to_string(), Json::Num(r.seq as f64)));
+                let mut ev = vec![
+                    ("name".to_string(), Json::Str(r.name.clone())),
+                    ("cat".to_string(), Json::Str(r.cat.to_string())),
+                    ("ph".to_string(), Json::Str(ph.to_string())),
+                    ("ts".to_string(), Json::Num(r.ts * 1e6)),
+                    ("pid".to_string(), Json::Num(0.0)),
+                    ("tid".to_string(), Json::Num(if r.wall { 1.0 } else { 0.0 })),
+                    ("args".to_string(), Json::Obj(args)),
+                ];
+                if r.phase == Phase::Event {
+                    ev.push(("s".to_string(), Json::Str("t".to_string())));
+                }
+                events.push(Json::Obj(ev));
+            }
+        }
+        Json::Obj(vec![
+            ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+            ("traceEvents".to_string(), Json::Arr(events)),
+        ])
+    }
+
+    /// Write the trace to `path` in the given format. Fails if any span
+    /// is still open (naming the innermost) or the tracer is disabled.
+    pub fn write(&self, path: &Path, format: TraceFormat) -> anyhow::Result<()> {
+        anyhow::ensure!(self.is_enabled(), "cannot export a disabled tracer");
+        self.ensure_closed()?;
+        let body = match format {
+            TraceFormat::Jsonl => self.render_jsonl(),
+            TraceFormat::Chrome => self.to_chrome_json().render_pretty(),
+        };
+        std::fs::write(path, body)
+            .map_err(|e| anyhow::anyhow!("writing trace to {}: {e}", path.display()))
+    }
+}
+
+/// What [`lint_trace`] verified about an exported trace file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LintSummary {
+    pub records: usize,
+    /// Completed Begin/End pairs.
+    pub spans: usize,
+    pub events: usize,
+    /// Records stamped with the wall clock.
+    pub wall_records: usize,
+}
+
+/// Validate an exported trace (either format, auto-detected): every
+/// record must parse through [`Json::parse`] and every span must close,
+/// innermost-first, under the name it was opened with.
+pub fn lint_trace(text: &str) -> anyhow::Result<LintSummary> {
+    let trimmed = text.trim_start();
+    if trimmed.is_empty() {
+        anyhow::bail!("empty trace");
+    }
+    // A Chrome export is one JSON document with a traceEvents array; our
+    // JSONL is one object per line.
+    let chrome = Json::parse(text).ok().and_then(|doc| {
+        doc.get("traceEvents").and_then(|e| e.as_arr().map(|a| a.to_vec()))
+    });
+    let mut summary = LintSummary::default();
+    let mut stack: Vec<String> = Vec::new();
+    let mut check = |ph: &str, name: &str, wall: bool, at: usize| -> anyhow::Result<()> {
+        summary.records += 1;
+        if wall {
+            summary.wall_records += 1;
+        }
+        match ph {
+            "B" => stack.push(name.to_string()),
+            "E" => match stack.pop() {
+                Some(open) if open == name => summary.spans += 1,
+                Some(open) => anyhow::bail!(
+                    "record {at}: span `{name}` closes while `{open}` is the innermost open span"
+                ),
+                None => anyhow::bail!("record {at}: span `{name}` closes but no span is open"),
+            },
+            "I" | "i" => summary.events += 1,
+            "M" => summary.records -= 1,
+            other => anyhow::bail!("record {at}: unknown phase '{other}'"),
+        }
+        Ok(())
+    };
+    if let Some(events) = chrome {
+        for (at, ev) in events.iter().enumerate() {
+            let ph = ev
+                .get("ph")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow::anyhow!("record {at}: missing 'ph'"))?
+                .to_string();
+            let name = ev
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("record {at}: missing 'name'"))?
+                .to_string();
+            let wall = ev.get("tid").and_then(|t| t.as_f64()) == Some(1.0);
+            check(&ph, &name, wall, at)?;
+        }
+    } else {
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let ph = rec
+                .get("ph")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing 'ph'", lineno + 1))?
+                .to_string();
+            let name = rec
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing 'name'", lineno + 1))?
+                .to_string();
+            let wall = rec.get("wall").and_then(|w| w.as_bool()).unwrap_or(false);
+            check(&ph, &name, wall, lineno)?;
+        }
+    }
+    if let Some(open) = stack.last() {
+        anyhow::bail!("{} span(s) never close: innermost is `{open}`", stack.len());
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        let sp = t.open("sched", "step", vec![]);
+        t.instant("sched", "noop", vec![]);
+        t.wall_instant("sched", "noop", vec![]);
+        t.close(sp);
+        assert!(t.is_empty());
+        assert_eq!(t.open_spans(), 0);
+        assert!(t.render_jsonl().is_empty());
+        assert!(t.write(Path::new("/tmp/never.jsonl"), TraceFormat::Jsonl).is_err());
+    }
+
+    #[test]
+    fn clones_share_one_sink_and_stamp_the_virtual_clock() {
+        let t = Tracer::new();
+        let t2 = t.clone();
+        t.set_virtual(1.5);
+        let sp = t.open("cluster", "admit", vec![("job".to_string(), num(3.0))]);
+        t2.instant("cluster", "arrival", vec![]);
+        t2.wall_instant("cluster", "decision_latency", vec![("us".to_string(), num(42.0))]);
+        t.set_virtual(2.0);
+        t.close_with(sp, vec![("feasible".to_string(), Json::Bool(true))]);
+        assert_eq!(t.len(), 4);
+        let jsonl = t.render_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("ts").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(first.get("wall").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(first.get("ph").and_then(|v| v.as_str()), Some("B"));
+        let wall = Json::parse(lines[2]).unwrap();
+        assert_eq!(wall.get("wall").and_then(|v| v.as_bool()), Some(true));
+        let end = Json::parse(lines[3]).unwrap();
+        assert_eq!(end.get("ts").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(end.get("name").and_then(|v| v.as_str()), Some("admit"));
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_json_parser() {
+        let t = Tracer::new();
+        t.set_virtual(0.25);
+        let sp = t.open("eval", "batch", vec![("n".to_string(), num(7.0))]);
+        t.instant("eval", "cache_hit", vec![]);
+        t.close(sp);
+        for line in t.render_jsonl().lines() {
+            let parsed = Json::parse(line).unwrap();
+            assert_eq!(parsed.render(), line, "line is not render-stable");
+        }
+    }
+
+    #[test]
+    fn nested_spans_close_innermost_first() {
+        let t = Tracer::new();
+        t.set_virtual(0.0);
+        let outer = t.open("sched", "outer", vec![]);
+        let inner = t.open("sched", "inner", vec![]);
+        t.close(inner);
+        t.close(outer);
+        assert_eq!(t.open_spans(), 0);
+        let summary = lint_trace(&t.render_jsonl()).unwrap();
+        assert_eq!(summary.spans, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "tried to close `outer` while `inner` is still open")]
+    fn unbalanced_close_is_a_hard_error_naming_the_span() {
+        let t = Tracer::new();
+        let outer = t.open("sched", "outer", vec![]);
+        let _inner = t.open("sched", "inner", vec![]);
+        t.close(outer);
+    }
+
+    #[test]
+    #[should_panic(expected = "no spans are open")]
+    fn closing_with_nothing_open_is_a_hard_error() {
+        let t = Tracer::new();
+        let sp = t.open("sched", "only", vec![]);
+        t.close(sp);
+        t.close(sp);
+    }
+
+    #[test]
+    fn export_refuses_unclosed_spans() {
+        let t = Tracer::new();
+        let _sp = t.open("serve", "tick", vec![]);
+        let err = t
+            .write(Path::new("/tmp/unclosed.jsonl"), TraceFormat::Jsonl)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tick"), "error must name the span: {err}");
+    }
+
+    #[test]
+    fn chrome_export_is_loadable_and_lints() {
+        let t = Tracer::new();
+        t.set_virtual(1.0);
+        let sp = t.open("cluster", "run", vec![]);
+        t.wall_instant("cluster", "decision_latency", vec![("us".to_string(), num(5.0))]);
+        t.close(sp);
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 2 thread_name metadata records + B + i + E.
+        assert_eq!(events.len(), 5);
+        let begin = &events[2];
+        assert_eq!(begin.get("ts").and_then(|v| v.as_f64()), Some(1e6));
+        assert_eq!(begin.get("tid").and_then(|v| v.as_f64()), Some(0.0));
+        let wall_ev = &events[3];
+        assert_eq!(wall_ev.get("tid").and_then(|v| v.as_f64()), Some(1.0));
+        let rendered = doc.render_pretty();
+        let summary = lint_trace(&rendered).unwrap();
+        assert_eq!(summary, LintSummary { records: 3, spans: 1, events: 1, wall_records: 1 });
+    }
+
+    #[test]
+    fn lint_rejects_mismatched_and_unclosed_spans() {
+        let bad = concat!(
+            "{\"seq\": 0, \"ts\": 0, \"wall\": false, \"ph\": \"B\", \"cat\": \"x\", ",
+            "\"name\": \"a\", \"args\": {}}\n",
+            "{\"seq\": 1, \"ts\": 0, \"wall\": false, \"ph\": \"E\", \"cat\": \"x\", ",
+            "\"name\": \"b\", \"args\": {}}\n",
+        );
+        let err = lint_trace(bad).unwrap_err().to_string();
+        assert!(err.contains('`'), "error must name spans: {err}");
+        let unclosed = concat!(
+            "{\"seq\": 0, \"ts\": 0, \"wall\": false, \"ph\": \"B\", \"cat\": \"x\", ",
+            "\"name\": \"a\", \"args\": {}}\n",
+        );
+        let err = lint_trace(unclosed).unwrap_err().to_string();
+        assert!(err.contains("never close"), "{err}");
+        assert!(lint_trace("").is_err());
+        assert!(lint_trace("not json\n").is_err());
+    }
+
+    #[test]
+    fn trace_format_parses_both_names_only() {
+        assert_eq!(TraceFormat::parse("jsonl").unwrap(), TraceFormat::Jsonl);
+        assert_eq!(TraceFormat::parse("chrome").unwrap(), TraceFormat::Chrome);
+        assert!(TraceFormat::parse("perfetto").is_err());
+    }
+}

@@ -41,8 +41,10 @@
 use crate::calib::Calibration;
 use crate::cost::{CostConfig, CostModel, PlanEval, StageProfile};
 use crate::model::ModelSpec;
+use crate::obs::Tracer;
 use crate::plan::{SchedulingPlan, StageSpan};
 use crate::resources::ResourcePool;
+use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -194,6 +196,7 @@ pub struct EvalEngine<'a> {
     cm: &'a CostModel<'a>,
     threads: usize,
     cache: EvalCache,
+    tracer: Tracer,
     ctx_eval: u64,
     ctx_prof: u64,
 }
@@ -208,6 +211,7 @@ impl<'a> EvalEngine<'a> {
             cm,
             threads: 1,
             cache: EvalCache::new(),
+            tracer: Tracer::disabled(),
             ctx_eval: context_fingerprint(cm.model, cm.pool, &cm.cfg, &cm.calib),
             ctx_prof: profile_fingerprint(cm.model, cm.pool, &cm.cfg, &cm.calib),
         }
@@ -235,6 +239,31 @@ impl<'a> EvalEngine<'a> {
     pub fn with_cache(mut self, cache: EvalCache) -> Self {
         self.cache = cache;
         self
+    }
+
+    /// Attach a tracer (disabled by default). An enabled tracer records
+    /// the engine's evaluation-context fingerprints once, then batch
+    /// dispatches and cache hit/miss/commit events — it never changes
+    /// what is computed, charged or cached.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        if tracer.is_enabled() {
+            tracer.instant(
+                "eval",
+                "context",
+                vec![
+                    ("eval_fp".to_string(), Json::Str(format!("{:016x}", self.ctx_eval))),
+                    ("profile_fp".to_string(), Json::Str(format!("{:016x}", self.ctx_prof))),
+                    ("threads".to_string(), Json::Num(self.threads as f64)),
+                ],
+            );
+        }
+        self.tracer = tracer;
+        self
+    }
+
+    /// The engine's tracer handle (the disabled no-op one by default).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     pub fn cm(&self) -> &'a CostModel<'a> {
@@ -265,6 +294,10 @@ impl<'a> EvalEngine<'a> {
         let hit = self.peek(plan);
         if hit.is_some() {
             self.cache.state.borrow_mut().cached += 1;
+        }
+        if self.tracer.is_enabled() {
+            let name = if hit.is_some() { "cache_hit" } else { "cache_miss" };
+            self.tracer.instant("eval", name, Vec::new());
         }
         hit
     }
@@ -306,11 +339,25 @@ impl<'a> EvalEngine<'a> {
 
     /// Insert a committed evaluation into the cache and charge it.
     pub fn commit(&self, plan: &SchedulingPlan, eval: &PlanEval) {
-        let mut state = self.cache.state.borrow_mut();
-        state.charged += 1;
-        let ctx = state.evals.entry(self.ctx_eval).or_default();
-        if ctx.insert(plan.assignment.clone(), eval.clone()).is_none() {
-            state.entries += 1;
+        let fresh = {
+            let mut state = self.cache.state.borrow_mut();
+            state.charged += 1;
+            let ctx = state.evals.entry(self.ctx_eval).or_default();
+            let fresh = ctx.insert(plan.assignment.clone(), eval.clone()).is_none();
+            if fresh {
+                state.entries += 1;
+            }
+            fresh
+        };
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "eval",
+                "commit",
+                vec![
+                    ("fresh".to_string(), Json::Bool(fresh)),
+                    ("feasible".to_string(), Json::Bool(eval.feasible)),
+                ],
+            );
         }
     }
 
@@ -339,6 +386,16 @@ impl<'a> EvalEngine<'a> {
         // out to workers, which read `cm` and their prepared inputs only.
         if plans.is_empty() {
             return Vec::new();
+        }
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "eval",
+                "batch",
+                vec![
+                    ("n".to_string(), Json::Num(plans.len() as f64)),
+                    ("threads".to_string(), Json::Num(self.threads.min(plans.len()) as f64)),
+                ],
+            );
         }
         let prepared: Vec<(Vec<StageSpan>, Vec<StageProfile>)> =
             plans.iter().map(|p| self.prepare(p)).collect();

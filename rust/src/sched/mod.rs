@@ -40,7 +40,9 @@ pub use eval::{context_fingerprint, EvalCache, EvalEngine, EvalStats};
 pub use spec::{lookup, registry, FixedKind, MethodInfo, RlVariant, SchedulerSpec, SpecError};
 
 use crate::cost::{CostModel, PlanEval};
+use crate::obs::Tracer;
 use crate::plan::SchedulingPlan;
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// What a scheduling run produced.
@@ -174,17 +176,78 @@ pub type ProgressObserver<'o> = &'o mut dyn FnMut(&StepReport);
 /// after every step, then return the outcome.
 pub fn drive(
     session: &mut dyn SearchSession,
-    mut observer: Option<ProgressObserver<'_>>,
+    observer: Option<ProgressObserver<'_>>,
 ) -> Result<ScheduleOutcome, ScheduleError> {
+    drive_traced(session, observer, &Tracer::disabled())
+}
+
+/// [`drive`] with span-level tracing: a `session` span wraps the whole
+/// search, every `step` gets its own span closing with that step's
+/// counters, and a budget-exhausted stop records a `budget_stop` event.
+/// With the disabled tracer this is exactly [`drive`]. These spans live
+/// on whichever clock the tracer has active — the virtual clock inside a
+/// cluster/serve run, the wall clock (flagged `wall`) for a bare
+/// `schedule`.
+pub fn drive_traced(
+    session: &mut dyn SearchSession,
+    mut observer: Option<ProgressObserver<'_>>,
+    tracer: &Tracer,
+) -> Result<ScheduleOutcome, ScheduleError> {
+    let run = if tracer.is_enabled() {
+        tracer.open(
+            "sched",
+            "session",
+            vec![("method".to_string(), Json::Str(session.name().to_string()))],
+        )
+    } else {
+        tracer.open("sched", "session", Vec::new())
+    };
     loop {
+        let step = tracer.open("sched", "step", Vec::new());
         let report = session.step();
+        if tracer.is_enabled() {
+            tracer.close_with(
+                step,
+                vec![
+                    ("evaluations".to_string(), Json::Num(report.evaluations as f64)),
+                    ("cache_hits".to_string(), Json::Num(report.cache_hits as f64)),
+                    ("converged".to_string(), Json::Bool(report.converged)),
+                    ("budget_exhausted".to_string(), Json::Bool(report.budget_exhausted)),
+                ],
+            );
+        } else {
+            tracer.close(step);
+        }
         if let Some(obs) = observer.as_mut() {
             obs(&report);
         }
         if report.converged {
-            return session.outcome();
+            if report.budget_exhausted && tracer.is_enabled() {
+                tracer.instant(
+                    "sched",
+                    "budget_stop",
+                    vec![("evaluations".to_string(), Json::Num(report.evaluations as f64))],
+                );
+            }
+            break;
         }
     }
+    let outcome = session.outcome();
+    if tracer.is_enabled() {
+        let args = match &outcome {
+            Ok(out) => vec![
+                ("evaluations".to_string(), Json::Num(out.evaluations as f64)),
+                ("cache_hits".to_string(), Json::Num(out.cache_hits as f64)),
+                ("cost_usd".to_string(), Json::Num(out.eval.cost_usd)),
+                ("feasible".to_string(), Json::Bool(out.eval.feasible)),
+            ],
+            Err(_) => vec![("error".to_string(), Json::Str("no plans evaluated".to_string()))],
+        };
+        tracer.close_with(run, args);
+    } else {
+        tracer.close(run);
+    }
+    outcome
 }
 
 /// A scheduling method.
@@ -461,7 +524,15 @@ impl<'a> SessionCore<'a> {
     }
 
     pub(crate) fn warm_start(&mut self, plan: &SchedulingPlan) {
-        if self.plan_fits(plan) {
+        let fits = self.plan_fits(plan);
+        if self.engine.tracer().is_enabled() {
+            self.engine.tracer().instant(
+                "sched",
+                "warm_start",
+                vec![("fits".to_string(), Json::Bool(fits))],
+            );
+        }
+        if fits {
             let _ = self.try_consider(plan);
         }
     }

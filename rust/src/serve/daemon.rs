@@ -24,6 +24,7 @@ use std::time::Instant;
 use crate::cluster::{
     policy_by_name, policy_names, ClusterConfig, ClusterReport, ClusterSim, JobQueue,
 };
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::resources::ResourcePool;
 use crate::util::json::Json;
 
@@ -72,6 +73,10 @@ pub struct ServeConfig {
     pub clock: ClockMode,
     /// Emit a progress line to stderr every this many arrivals (0 = off).
     pub progress_every: usize,
+    /// Emit a `[stats]` metrics-registry line to stderr every this many
+    /// arrivals (0 = off). Stderr only — the deterministic report is
+    /// unaffected.
+    pub stats_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +87,7 @@ impl Default for ServeConfig {
             probe: None,
             clock: ClockMode::Virtual,
             progress_every: 0,
+            stats_every: 0,
         }
     }
 }
@@ -114,6 +120,8 @@ pub struct ServeOutcome {
     /// Wall-clock run time and decision throughput (not deterministic).
     pub wall_secs: f64,
     pub decisions_per_sec: f64,
+    /// Final metrics-registry snapshot (the `--metrics-out` dump).
+    pub metrics: MetricsRegistry,
 }
 
 /// FNV-1a over every determinism-bearing field of the timeline.
@@ -172,8 +180,35 @@ pub fn run_serve(
     cfg: &ServeConfig,
     seed: u64,
 ) -> anyhow::Result<ServeOutcome> {
+    run_serve_traced(pool, queue, cfg, seed, &Tracer::disabled())
+}
+
+/// [`run_serve`] with a tracer attached: the run sits under a
+/// `serve`/`run` span, every arrival emits a virtual-clock `tick` event
+/// and probe retunes emit wall-flagged `probe_window` events. The
+/// outcome (and its admission digest) is bit-identical to the untraced
+/// run.
+pub fn run_serve_traced(
+    pool: &ResourcePool,
+    queue: &JobQueue,
+    cfg: &ServeConfig,
+    seed: u64,
+    tracer: &Tracer,
+) -> anyhow::Result<ServeOutcome> {
     queue.validate()?;
     cfg.validate()?;
+    let span = if tracer.is_enabled() {
+        tracer.open(
+            "serve",
+            "run",
+            vec![
+                ("policy".to_string(), Json::Str(cfg.policy.clone())),
+                ("arrivals".to_string(), Json::Num(queue.len() as f64)),
+            ],
+        )
+    } else {
+        tracer.open("serve", "run", Vec::new())
+    };
     let policy = policy_by_name(&cfg.policy, pool).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown policy `{}` (known policies: {})",
@@ -182,6 +217,7 @@ pub fn run_serve(
         )
     })?;
     let mut sim = ClusterSim::new(pool, policy.as_ref(), &cfg.cluster, seed)?;
+    sim.set_tracer(tracer.clone());
     let initial_threads = sim.eval_threads();
     let mut probe = cfg
         .probe
@@ -208,7 +244,22 @@ pub fn run_serve(
         if done >= p.window() {
             let dt =
                 (win_start.elapsed().as_secs_f64() - (paced - win_paced)).max(1e-9);
-            sim.set_eval_threads(p.observe(done as f64 / dt));
+            let tput = done as f64 / dt;
+            let threads = p.observe(tput);
+            sim.set_eval_threads(threads);
+            if tracer.is_enabled() {
+                // Wall-flagged: window throughput and the probe's verdict
+                // are wall-clock facts, stripped from determinism diffs.
+                tracer.wall_instant(
+                    "serve",
+                    "probe_window",
+                    vec![
+                        ("tput".to_string(), Json::Num(tput)),
+                        ("threads".to_string(), Json::Num(threads as f64)),
+                        ("state".to_string(), Json::Str(format!("{:?}", p.state()))),
+                    ],
+                );
+            }
             win_decisions = sim.decisions();
             win_start = Instant::now();
             win_paced = paced;
@@ -226,6 +277,25 @@ pub fn run_serve(
         paced_secs += pace(cfg.clock, wall_start, job.arrival_secs);
         sim.add_job(job.clone())?;
         tick(&mut sim, paced_secs);
+        if tracer.is_enabled() {
+            // Virtual-clock snapshot of the loop state at each arrival —
+            // deterministic, so it survives the trace determinism diff.
+            tracer.instant(
+                "serve",
+                "tick",
+                vec![
+                    ("arrival".to_string(), Json::Num((i + 1) as f64)),
+                    ("waiting".to_string(), Json::Num(sim.waiting_len() as f64)),
+                    ("running".to_string(), Json::Num(sim.running_len() as f64)),
+                    ("decisions".to_string(), Json::Num(sim.decisions() as f64)),
+                ],
+            );
+        }
+        if cfg.stats_every > 0 && (i + 1) % cfg.stats_every == 0 {
+            let mut reg = MetricsRegistry::new();
+            sim.snapshot_metrics(&mut reg);
+            eprintln!("[stats] {}", reg.stats_line());
+        }
         if cfg.progress_every > 0 && (i + 1) % cfg.progress_every == 0 {
             eprintln!(
                 "[wall] serve: {} / {} arrivals, clock {:.0} s, {} waiting, {} running, \
@@ -247,8 +317,24 @@ pub fn run_serve(
     }
     let wall_secs = wall_start.elapsed().as_secs_f64();
     let final_eval_threads = sim.eval_threads();
+    let mut metrics = MetricsRegistry::new();
+    sim.snapshot_metrics(&mut metrics);
     let report = sim.finish(&cfg.policy)?;
     let digest = admission_digest(&report);
+    if tracer.is_enabled() {
+        tracer.close_with(
+            span,
+            vec![
+                ("decisions".to_string(), Json::Num(report.decisions as f64)),
+                (
+                    "digest".to_string(),
+                    Json::Str(format!("{digest:016x}")),
+                ),
+            ],
+        );
+    } else {
+        tracer.close(span);
+    }
     Ok(ServeOutcome {
         arrivals: queue.len(),
         admission_digest: digest,
@@ -257,6 +343,7 @@ pub fn run_serve(
         probe: probe.map(|p| p.summary()),
         wall_secs,
         decisions_per_sec: report.decisions as f64 / wall_secs.max(1e-9),
+        metrics,
         report,
     })
 }
@@ -433,6 +520,7 @@ mod tests {
             probe: Some(ProbeConfig { window: 1, ..Default::default() }),
             clock,
             progress_every: 0,
+            stats_every: 0,
         };
         let virt = run_serve(&pool, &queue, &mk(ClockMode::Virtual), 17).unwrap();
         let vp = virt.probe.clone().unwrap();

@@ -24,6 +24,8 @@ pub mod daemon;
 pub mod event;
 pub mod probe;
 
-pub use daemon::{admission_digest, run_serve, ClockMode, ServeConfig, ServeOutcome};
+pub use daemon::{
+    admission_digest, run_serve, run_serve_traced, ClockMode, ServeConfig, ServeOutcome,
+};
 pub use event::{parse_stream, render_stream};
 pub use probe::{ProbeConfig, ProbeState, ProbeSummary, ThroughputProbe};

@@ -436,6 +436,29 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_numbers_render_as_null_and_round_trip() {
+        // JSON has no literal for NaN/±inf; they render as `null` so a
+        // half-measured bench row or metrics dump stays parseable.
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::Num(v).render();
+            assert_eq!(text, "null", "{v}");
+            assert_eq!(Json::parse(&text).unwrap(), Json::Null);
+        }
+        // Nested: the null survives a full render → parse → render cycle.
+        let obj = Json::Obj(vec![
+            ("lo".into(), Json::Num(f64::NEG_INFINITY)),
+            ("hi".into(), Json::Num(f64::INFINITY)),
+            ("ok".into(), Json::Num(2.5)),
+        ]);
+        let text = obj.render();
+        assert_eq!(text, "{\"lo\": null, \"hi\": null, \"ok\": 2.5}");
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("lo"), Some(&Json::Null));
+        assert_eq!(back.get("hi"), Some(&Json::Null));
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
     fn object_order_is_preserved_and_pretty_parses() {
         let v = Json::Obj(vec![
             ("z".into(), Json::Num(1.0)),

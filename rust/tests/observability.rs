@@ -1,0 +1,175 @@
+//! Integration tests for the observability layer (DESIGN.md
+//! §Observability): the tracer is provably inert — schedule, cluster and
+//! serve outcomes are bit-identical with tracing on or off — and the
+//! virtual-clock portion of a trace is itself bit-deterministic per
+//! (config, seed). Every produced trace must pass `lint_trace` in both
+//! export formats.
+
+use heterps::cluster::{self, policy_by_name, steady_mix, tight_mix, tight_pool, ClusterConfig};
+use heterps::cost::{CostConfig, CostModel};
+use heterps::model::zoo;
+use heterps::obs::{lint_trace, Tracer};
+use heterps::resources::paper_testbed;
+use heterps::sched::{self, Budget, EvalEngine, SchedulerSpec};
+use heterps::serve::{self, admission_digest, ClockMode, ServeConfig};
+
+fn cluster_cfg(method: &str) -> ClusterConfig {
+    ClusterConfig {
+        spec: SchedulerSpec::parse(method).unwrap(),
+        admit_budget_evals: 48,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(method: &str) -> ServeConfig {
+    ServeConfig {
+        cluster: cluster_cfg(method),
+        policy: "drf-cost".to_string(),
+        probe: None,
+        clock: ClockMode::Virtual,
+        progress_every: 0,
+        stats_every: 0,
+    }
+}
+
+/// Drop wall-stamped records: their presence and order are deterministic
+/// but their timestamps are not, so the determinism diff runs on the
+/// virtual-clock remainder (the `grep -v '"wall": true'` convention
+/// verify.sh uses).
+fn virtual_lines(trace: &str) -> String {
+    trace.lines().filter(|l| !l.contains("\"wall\": true")).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn tracing_is_inert_for_schedule_sessions() {
+    // One deterministic and one stochastic method: the tracer must not
+    // touch the seed stream, the cache accounting or the incumbent.
+    let model = zoo::ctrdnn();
+    let pool = paper_testbed();
+    let cm = CostModel::new(&model, &pool, CostConfig::default());
+    for method in ["greedy", "rl-tabular:rounds=10"] {
+        let spec = SchedulerSpec::parse(method).unwrap();
+        let scheduler = spec.build(42);
+        let mut session = scheduler.session_engine(EvalEngine::new(&cm), Budget::evals(200));
+        let base = sched::drive(session.as_mut(), None).unwrap();
+
+        let tracer = Tracer::new();
+        let scheduler = spec.build(42);
+        let engine = EvalEngine::new(&cm).with_tracer(tracer.clone());
+        let mut session = scheduler.session_engine(engine, Budget::evals(200));
+        let traced = sched::drive_traced(session.as_mut(), None, &tracer).unwrap();
+
+        assert_eq!(base.plan, traced.plan, "{method}: tracing changed the plan");
+        assert_eq!(
+            base.eval.cost_usd.to_bits(),
+            traced.eval.cost_usd.to_bits(),
+            "{method}: tracing changed the cost"
+        );
+        assert_eq!(
+            (base.evaluations, base.cache_hits),
+            (traced.evaluations, traced.cache_hits),
+            "{method}: tracing changed the evaluation accounting"
+        );
+
+        // The trace itself is well-formed: balanced spans, both formats.
+        assert_eq!(tracer.open_spans(), 0, "{method}: spans left open");
+        let lint = lint_trace(&tracer.render_jsonl()).unwrap();
+        assert!(lint.spans >= 2, "{method}: expected session + step spans, got {}", lint.spans);
+        assert!(lint.events >= 1, "{method}: expected eval events");
+        let chrome = lint_trace(&tracer.to_chrome_json().render()).unwrap();
+        assert_eq!((chrome.spans, chrome.events), (lint.spans, lint.events), "{method}: chrome");
+    }
+}
+
+#[test]
+fn tracing_is_inert_for_cluster_runs_and_traces_are_deterministic() {
+    // drf-cost is the plain path; srtf on the tight mix exercises the
+    // preemption-campaign spans.
+    let pool = tight_pool();
+    let queue = tight_mix(6, 42, 20_000.0);
+    let cfg = cluster_cfg("greedy");
+    for policy_name in ["drf-cost", "srtf"] {
+        let p = policy_by_name(policy_name, &pool).unwrap();
+        let base = cluster::run_cluster(&pool, &queue, p.as_ref(), &cfg, 42).unwrap();
+
+        let t1 = Tracer::new();
+        let p = policy_by_name(policy_name, &pool).unwrap();
+        let a = cluster::run_cluster_traced(&pool, &queue, p.as_ref(), &cfg, 42, &t1).unwrap();
+        let t2 = Tracer::new();
+        let p = policy_by_name(policy_name, &pool).unwrap();
+        let b = cluster::run_cluster_traced(&pool, &queue, p.as_ref(), &cfg, 42, &t2).unwrap();
+
+        // Inert: the traced report is the untraced report, bit for bit.
+        assert_eq!(
+            admission_digest(&base),
+            admission_digest(&a),
+            "{policy_name}: tracing perturbed the admission timeline"
+        );
+        assert_eq!(admission_digest(&a), admission_digest(&b), "{policy_name}: rerun digest");
+        assert_eq!(
+            base.makespan_secs.to_bits(),
+            a.makespan_secs.to_bits(),
+            "{policy_name}: makespan"
+        );
+        assert_eq!(
+            base.cumulative_cost_usd.to_bits(),
+            a.cumulative_cost_usd.to_bits(),
+            "{policy_name}: cost"
+        );
+        assert_eq!(base.total_evaluations, a.total_evaluations, "{policy_name}: evaluations");
+
+        // Deterministic: the virtual-clock records of two runs are
+        // bit-identical (wall-stamped records keep deterministic
+        // presence/order/seq but carry real timestamps).
+        let ta = t1.render_jsonl();
+        let tb = t2.render_jsonl();
+        assert_eq!(virtual_lines(&ta), virtual_lines(&tb), "{policy_name}: trace determinism");
+        assert_ne!(virtual_lines(&ta), "", "{policy_name}: no virtual-clock records at all");
+
+        let lint = lint_trace(&ta).unwrap();
+        assert!(lint.spans >= 1, "{policy_name}: no spans");
+        assert!(lint.events >= queue.len(), "{policy_name}: fewer events than arrivals");
+        assert!(lint.wall_records >= 1, "{policy_name}: decision latency not wall-stamped");
+        if policy_name == "srtf" {
+            assert!(
+                ta.contains("preempt_campaign"),
+                "srtf on the tight mix must trace a preemption campaign"
+            );
+        }
+    }
+}
+
+#[test]
+fn tracing_is_inert_for_serve_and_metrics_snapshot_is_populated() {
+    let pool = tight_pool();
+    let queue = steady_mix(60, 11, 20_000.0);
+    let cfg = serve_cfg("greedy");
+    let base = serve::run_serve(&pool, &queue, &cfg, 11).unwrap();
+
+    let t1 = Tracer::new();
+    let a = serve::run_serve_traced(&pool, &queue, &cfg, 11, &t1).unwrap();
+    let t2 = Tracer::new();
+    let b = serve::run_serve_traced(&pool, &queue, &cfg, 11, &t2).unwrap();
+
+    assert_eq!(
+        base.admission_digest, a.admission_digest,
+        "tracing perturbed serve admission decisions"
+    );
+    assert_eq!(a.admission_digest, b.admission_digest, "rerun digest");
+    assert_eq!(virtual_lines(&t1.render_jsonl()), virtual_lines(&t2.render_jsonl()));
+
+    let lint = lint_trace(&t1.render_jsonl()).unwrap();
+    assert!(lint.spans >= 1 && lint.events >= queue.len(), "serve trace too sparse: {lint:?}");
+    assert!(t1.render_jsonl().contains("\"tick\""), "no per-arrival tick events");
+
+    // The --metrics-out snapshot: named, non-empty, and in agreement
+    // with the report it was taken from.
+    assert!(!a.metrics.is_empty(), "metrics snapshot is empty");
+    for name in ["cluster.decisions", "cluster.cost_usd", "eval.charged"] {
+        assert!(a.metrics.get(name).is_some(), "metrics snapshot lacks `{name}`");
+    }
+    let line = a.metrics.stats_line();
+    assert!(line.contains("cluster.decisions="), "stats line lacks decisions: {line}");
+    let rendered = a.metrics.to_json().render();
+    assert!(rendered.contains("cluster.decision_lat_us"), "histogram missing from dump");
+}

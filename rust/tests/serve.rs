@@ -19,6 +19,7 @@ fn serve_cfg(method: &str, budget: usize) -> ServeConfig {
         probe: None,
         clock: ClockMode::Virtual,
         progress_every: 0,
+        stats_every: 0,
     }
 }
 

@@ -24,13 +24,19 @@
 #    `[wall]` lines (the streaming-admission determinism gate), plus a
 #    probe-enabled run whose deterministic output — admission digest
 #    included — must match the probe-less runs exactly;
-# 7. a `heterps calibrate` smoke: fit an overlay from the simulator
+# 7. a trace smoke: `--trace-out` on schedule/cluster/serve must be
+#    provably inert (reports diffed bit-identical trace-on vs trace-off),
+#    the virtual-clock records of two traced runs must be bit-identical
+#    (wall-stamped records stripped, the serve `[wall]` convention), every
+#    exported trace — JSONL and Chrome — must pass `heterps trace-lint`,
+#    and `--metrics-out` must write a non-empty registry dump;
+# 8. a `heterps calibrate` smoke: fit an overlay from the simulator
 #    sweep, check the emitted `[calibration]` section loads back, and
 #    pin the identity-overlay bit-identity contract (a header-only
 #    `[calibration]` config section must not change `schedule` output);
-# 8. `cargo fmt --check` when rustfmt is installed (skipped with a loud
+# 9. `cargo fmt --check` when rustfmt is installed (skipped with a loud
 #    warning otherwise);
-# 9. `cargo clippy --all-targets -- -D warnings` when the clippy
+# 10. `cargo clippy --all-targets -- -D warnings` when the clippy
 #    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
@@ -154,9 +160,71 @@ if [ ! -s "$SERVE_TMP/serve.json" ]; then
   exit 1
 fi
 
+echo "== trace smoke: --trace-out is inert, deterministic, and lint-clean"
+TRACE_TMP="$(mktemp -d)"
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$TRACE_TMP"' EXIT
+# schedule: tracing must not change the report (modulo the wall-clock line).
+"$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
+  2>/dev/null | grep -v "sched time" > "$TRACE_TMP/sched.off.txt"
+"$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
+  --trace-out "$TRACE_TMP/sched.jsonl" \
+  2>/dev/null | grep -v "sched time" > "$TRACE_TMP/sched.on.txt"
+if ! diff -u "$TRACE_TMP/sched.off.txt" "$TRACE_TMP/sched.on.txt"; then
+  echo "error: --trace-out perturbed schedule output" >&2
+  exit 1
+fi
+"$BIN" trace-lint "$TRACE_TMP/sched.jsonl"
+# cluster: traced stdout must match the untraced smoke run above, and the
+# virtual-clock records of two traced runs must be bit-identical. Records
+# stamped `"wall": true` carry real timestamps and are stripped first —
+# the trace twin of serve's `[wall]` stderr convention.
+for run in a b; do
+  "$BIN" cluster --jobs 4 --mix uniform --policy drf-cost --method greedy \
+    --budget-evals 48 --arrival-seed 7 --trace-out "$TRACE_TMP/cluster.$run.jsonl" \
+    2>/dev/null > "$TRACE_TMP/cluster.$run.txt"
+  grep -v '"wall": true' "$TRACE_TMP/cluster.$run.jsonl" > "$TRACE_TMP/cluster.$run.virt"
+done
+if ! diff -u "$CLUSTER_TMP/drf-cost.a.txt" "$TRACE_TMP/cluster.a.txt"; then
+  echo "error: --trace-out perturbed cluster output" >&2
+  exit 1
+fi
+if ! diff -u "$TRACE_TMP/cluster.a.virt" "$TRACE_TMP/cluster.b.virt"; then
+  echo "error: the cluster trace is not deterministic for a fixed (config, seed)" >&2
+  exit 1
+fi
+"$BIN" trace-lint "$TRACE_TMP/cluster.a.jsonl"
+echo "   -- chrome export loads through the same linter"
+"$BIN" cluster --jobs 4 --mix uniform --policy drf-cost --method greedy \
+  --budget-evals 48 --arrival-seed 7 --trace-out "$TRACE_TMP/cluster.chrome.json" \
+  --trace-format chrome >/dev/null 2>/dev/null
+"$BIN" trace-lint "$TRACE_TMP/cluster.chrome.json"
+# serve: the same inertness + determinism gates on the streaming daemon,
+# plus the --metrics-out registry dump (non-empty; its latency histogram
+# is wall-derived, so no cross-run diff).
+for run in a b; do
+  "$BIN" serve --stream "$SERVE_TMP/stream.jsonl" --arrival-seed 7 --budget-evals 32 \
+    --trace-out "$TRACE_TMP/serve.$run.jsonl" \
+    --metrics-out "$TRACE_TMP/serve.$run.metrics.json" \
+    2>/dev/null | grep -v '^\[wall\]' > "$TRACE_TMP/serve.$run.txt"
+  grep -v '"wall": true' "$TRACE_TMP/serve.$run.jsonl" > "$TRACE_TMP/serve.$run.virt"
+done
+if ! diff -u "$SERVE_TMP/a.txt" "$TRACE_TMP/serve.a.txt"; then
+  echo "error: --trace-out/--metrics-out perturbed serve output" >&2
+  exit 1
+fi
+if ! diff -u "$TRACE_TMP/serve.a.virt" "$TRACE_TMP/serve.b.virt"; then
+  echo "error: the serve trace is not deterministic for a fixed (stream, seed)" >&2
+  exit 1
+fi
+"$BIN" trace-lint "$TRACE_TMP/serve.a.jsonl"
+if [ ! -s "$TRACE_TMP/serve.a.metrics.json" ]; then
+  echo "error: serve --metrics-out wrote no registry dump" >&2
+  exit 1
+fi
+
 echo "== calibrate smoke: fit, reload, and the identity bit-identity contract"
 CALIB_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$CALIB_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$TRACE_TMP" "$CALIB_TMP"' EXIT
 "$BIN" calibrate --model ctrdnn --types 2 --sweep-seeds 2 --budget-evals 48 \
   --out "$CALIB_TMP/calib.toml"
 if [ ! -s "$CALIB_TMP/calib.toml" ]; then
