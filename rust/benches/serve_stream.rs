@@ -15,6 +15,7 @@ mod common;
 
 use heterps::cluster::{steady_mix, tight_pool, ClusterConfig};
 use heterps::metrics::{merge_bench_rows, BenchRow, Table};
+use heterps::obs::WatchConfig;
 use heterps::sched::SchedulerSpec;
 use heterps::serve::{self, parse_stream, render_stream, ClockMode, ProbeConfig, ServeConfig};
 
@@ -33,6 +34,7 @@ fn main() {
         clock: ClockMode::Virtual,
         progress_every: 0,
         stats_every: 0,
+        watch: None,
     };
 
     let mut table = Table::new("§Serve — streaming admission", &["op", "mean", "std", "unit"]);
@@ -97,6 +99,33 @@ fn main() {
         out.decisions_per_sec,
         0.0,
         "decisions/s",
+    );
+
+    // Watchdog on: the online detectors ride the [stats] snapshots, and
+    // like the probe they must never move the digest.
+    let mut watched = cfg(None);
+    watched.stats_every = 50;
+    watched.watch = Some(WatchConfig::default());
+    let mut last = None;
+    let (m, s) = common::time_it(1, 5, || {
+        let out = serve::run_serve(&pool, &queue, &watched, seed).unwrap();
+        assert_eq!(
+            digest,
+            Some(out.admission_digest),
+            "the watchdog perturbed admission decisions"
+        );
+        last = Some(out);
+    });
+    let out = last.take().expect("at least one run");
+    // Virtual-clock alerts only: deterministic, so the row name is stable
+    // across reruns and bench-diff can match it.
+    let alerts = out.alerts.as_ref().map_or(0, |a| a.iter().filter(|x| !x.wall).count());
+    row(
+        &mut table,
+        &format!("serve.run 1k jobs (watchdog on, {alerts} virtual alert(s))"),
+        m,
+        s,
+        "s",
     );
 
     // The JSONL codec on a 10k-line stream.

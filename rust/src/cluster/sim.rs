@@ -701,6 +701,14 @@ impl<'a> ClusterSim<'a> {
             self.records.iter().filter(|r| r.completion_secs.is_some()).count() as u64;
         reg.observe_count("cluster.completed", completed);
         reg.observe_gauge("cluster.cost_usd", self.cumulative_cost_usd);
+        // Watchdog inputs: SLA-violation seconds accrued so far (virtual,
+        // deterministic) and mean utilization as a fraction of capacity
+        // (the decile histogram's mean scaled back to [0, 1]).
+        reg.observe_gauge(
+            "cluster.sla_viol_secs",
+            self.records.iter().map(|r| r.sla_violation_secs).sum::<f64>(),
+        );
+        reg.observe_gauge("cluster.util_mean", self.util_hist.mean() / 10.0);
         reg.observe_histogram("cluster.util_decile", &self.util_hist, 1.0);
         reg.observe_histogram(
             "cluster.decision_lat_us",

@@ -193,6 +193,14 @@ fn cli() -> Cli {
                     OptSpec { name: "emit-stream", help: "write the served arrival stream as JSONL to this path (replayable via --stream)", takes_value: true, default: None },
                     OptSpec { name: "progress-every", help: "stderr progress line every N arrivals (0 = off)", takes_value: true, default: Some("0") },
                     OptSpec { name: "stats-every", help: "stderr [stats] metrics-registry line every N arrivals (0 = off)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "watch", help: "enable the online watchdog over the [stats] snapshots (requires --stats-every > 0): [alert] stderr lines and, when tracing, typed `alert` events", takes_value: false, default: None },
+                    OptSpec { name: "watch-warmup", help: "watchdog: snapshots forming the p99 warm-up baseline", takes_value: true, default: Some("4") },
+                    OptSpec { name: "watch-raise", help: "watchdog: consecutive breaching snapshots before an alert", takes_value: true, default: Some("3") },
+                    OptSpec { name: "watch-clear", help: "watchdog: consecutive clear snapshots before re-arming", takes_value: true, default: Some("2") },
+                    OptSpec { name: "watch-p99-factor", help: "watchdog: p99 regression factor vs the warm-up baseline", takes_value: true, default: Some("3") },
+                    OptSpec { name: "watch-util-floor", help: "watchdog: utilization-collapse floor (fraction of capacity)", takes_value: true, default: Some("0.05") },
+                    OptSpec { name: "watch-thrash", help: "watchdog: probe adjustments per snapshot that count as thrash", takes_value: true, default: Some("3") },
+                    OptSpec { name: "watch-history", help: "watchdog: ring capacity of each metric series", takes_value: true, default: Some("64") },
                     OptSpec { name: "tight-pool", help: "run on the bundled 48-core contention pool instead of --types", takes_value: false, default: None },
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
@@ -202,6 +210,28 @@ fn cli() -> Cli {
                 .chain(metrics_out())
                 .collect(),
                 positionals: vec![],
+            },
+            CmdSpec {
+                name: "trace-profile",
+                about: "profile a trace written by --trace-out (either format): flamegraph-style span rollup with self time and clock split, per-job JCT attribution (queueing/search/running/below-floor) and the cluster-wide critical path",
+                opts: vec![
+                    OptSpec { name: "csv", help: "write the span + job attribution tables as CSV to this path", takes_value: true, default: None },
+                    OptSpec { name: "json-out", help: "write the machine-readable profile to this path", takes_value: true, default: None },
+                ],
+                positionals: vec![("file", "trace file to profile (JSONL or Chrome trace-event JSON)")],
+            },
+            CmdSpec {
+                name: "bench-diff",
+                about: "compare two results/BENCH_perf.json artifacts row by row ((bench, op) mean deltas, direction inferred from the unit) and flag regressions beyond --threshold; `pending` benches are skips, never regressions",
+                opts: vec![
+                    OptSpec { name: "threshold", help: "relative regression threshold as a fraction (0.1 = 10%)", takes_value: true, default: Some("0.1") },
+                    OptSpec { name: "gate", help: "exit nonzero when any row regresses beyond the threshold", takes_value: false, default: None },
+                    OptSpec { name: "json-out", help: "write the machine-readable diff to this path", takes_value: true, default: None },
+                ],
+                positionals: vec![
+                    ("baseline", "baseline BENCH_perf.json artifact"),
+                    ("candidate", "candidate BENCH_perf.json artifact to compare against it"),
+                ],
             },
             CmdSpec {
                 name: "trace-lint",
@@ -271,6 +301,55 @@ fn main() {
                     "trace ok: {} records — {} spans, {} events, {} wall-stamped",
                     s.records, s.spans, s.events, s.wall_records
                 );
+                Ok(())
+            }
+            "trace-profile" => {
+                let path = args.positionals.first().ok_or_else(|| {
+                    anyhow::anyhow!("trace-profile needs a trace file argument")
+                })?;
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read trace `{path}`: {e}"))?;
+                let profile = heterps::obs::profile_trace(&text)?;
+                print!("{}", profile.render());
+                if let Some(out) = args.get("csv") {
+                    std::fs::write(out, profile.to_csv())?;
+                    eprintln!("[wall] wrote profile CSV to {out}");
+                }
+                if let Some(out) = args.get("json-out") {
+                    std::fs::write(out, profile.to_json().render_pretty())?;
+                    eprintln!("[wall] wrote profile JSON to {out}");
+                }
+                Ok(())
+            }
+            "bench-diff" => {
+                anyhow::ensure!(
+                    args.positionals.len() == 2,
+                    "bench-diff needs two artifact paths: <baseline> <candidate>"
+                );
+                let load = |which: &str, path: &str| -> anyhow::Result<heterps::util::json::Json> {
+                    let text = std::fs::read_to_string(path).map_err(|e| {
+                        anyhow::anyhow!("cannot read {which} artifact `{path}`: {e}")
+                    })?;
+                    heterps::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("{which} artifact `{path}`: {e}"))
+                };
+                let base = load("baseline", &args.positionals[0])?;
+                let cand = load("candidate", &args.positionals[1])?;
+                let threshold = args.f64_or("threshold", 0.1)?;
+                let diff = heterps::metrics::bench_diff(&base, &cand, threshold)?;
+                print!("{}", diff.render());
+                if let Some(out) = args.get("json-out") {
+                    std::fs::write(out, diff.to_json().render_pretty())?;
+                    eprintln!("[wall] wrote bench diff to {out}");
+                }
+                if args.flag("gate") {
+                    anyhow::ensure!(
+                        diff.regressions() == 0,
+                        "bench-diff gate: {} regression(s) beyond {:.1}%",
+                        diff.regressions(),
+                        threshold * 100.0
+                    );
+                }
                 Ok(())
             }
             "info" => {
@@ -505,6 +584,19 @@ fn main() {
                 } else {
                     None
                 };
+                let watch = if args.flag("watch") {
+                    Some(heterps::obs::WatchConfig {
+                        warmup: args.usize_or("watch-warmup", 4)?,
+                        raise: args.usize_or("watch-raise", 3)?,
+                        clear: args.usize_or("watch-clear", 2)?,
+                        p99_factor: args.f64_or("watch-p99-factor", 3.0)?,
+                        util_floor: args.f64_or("watch-util-floor", 0.05)?,
+                        thrash_limit: args.u64_or("watch-thrash", 3)?,
+                        history: args.usize_or("watch-history", 64)?,
+                    })
+                } else {
+                    None
+                };
                 let mut cluster_cfg = cluster::ClusterConfig {
                     spec: admission_spec(&args, file.as_ref())?,
                     admit_budget_evals: args.usize_or("budget-evals", 96)?,
@@ -523,6 +615,7 @@ fn main() {
                     )?,
                     progress_every: args.usize_or("progress-every", 0)?,
                     stats_every: args.usize_or("stats-every", 0)?,
+                    watch,
                 };
                 let (tracer, trace_sink) = tracer_from_args(&args)?;
                 let outcome = serve::run_serve_traced(&pool, &queue, &scfg, seed, &tracer)?;

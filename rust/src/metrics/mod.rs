@@ -327,6 +327,208 @@ impl Table {
     }
 }
 
+/// One compared row of a [`bench_diff`]: the same `(bench, op)` measured
+/// in two `results/BENCH_perf.json` artifacts.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub bench: String,
+    pub op: String,
+    pub unit: String,
+    pub base_mean: f64,
+    pub new_mean: f64,
+    /// Relative change `(new - base) / |base|` (not normalized by
+    /// direction; see `higher_is_better`).
+    pub rel_change: f64,
+    /// Direction inferred from the unit: throughput-style units
+    /// (`…/s`, `…-per-s`) improve upward, time-style units downward.
+    pub higher_is_better: bool,
+    /// The change crosses `threshold` in the *worse* direction.
+    pub regression: bool,
+    /// The change crosses `threshold` in the *better* direction.
+    pub improvement: bool,
+}
+
+/// Outcome of comparing two bench artifacts.
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    /// Rows measured in both artifacts, in baseline insertion order.
+    pub deltas: Vec<BenchDelta>,
+    /// Rows skipped (pending status, non-finite means, or present in
+    /// only one artifact), each with its reason.
+    pub skipped: Vec<String>,
+    /// The relative threshold the verdicts were computed against.
+    pub threshold: f64,
+}
+
+impl BenchDiff {
+    pub fn regressions(&self) -> usize {
+        self.deltas.iter().filter(|d| d.regression).count()
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "bench-diff — baseline vs candidate",
+            &["bench", "op", "unit", "base mean", "new mean", "delta %", "verdict"],
+        );
+        for d in &self.deltas {
+            let verdict = if d.regression {
+                "REGRESSED"
+            } else if d.improvement {
+                "improved"
+            } else {
+                "ok"
+            };
+            t.row(&[
+                d.bench.clone(),
+                d.op.clone(),
+                d.unit.clone(),
+                format!("{:.3}", d.base_mean),
+                format!("{:.3}", d.new_mean),
+                format!("{:+.1}", d.rel_change * 100.0),
+                verdict.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Table plus the skip list and the one-line summary the smoke greps.
+    pub fn render(&self) -> String {
+        let mut out = self.table().render();
+        for s in &self.skipped {
+            let _ = writeln!(out, "skipped: {s}");
+        }
+        let _ = writeln!(
+            out,
+            "bench-diff: {} compared, {} skipped, {} regression(s) beyond {:.1}%",
+            self.deltas.len(),
+            self.skipped.len(),
+            self.regressions(),
+            self.threshold * 100.0
+        );
+        out
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("threshold".into(), Json::Num(self.threshold)),
+            ("compared".into(), Json::Num(self.deltas.len() as f64)),
+            ("regressions".into(), Json::Num(self.regressions() as f64)),
+            (
+                "skipped".into(),
+                Json::Arr(self.skipped.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "deltas".into(),
+                Json::Arr(
+                    self.deltas
+                        .iter()
+                        .map(|d| {
+                            Json::Obj(vec![
+                                ("bench".into(), Json::Str(d.bench.clone())),
+                                ("op".into(), Json::Str(d.op.clone())),
+                                ("unit".into(), Json::Str(d.unit.clone())),
+                                ("base_mean".into(), Json::Num(d.base_mean)),
+                                ("new_mean".into(), Json::Num(d.new_mean)),
+                                ("rel_change".into(), Json::Num(d.rel_change)),
+                                ("regression".into(), Json::Bool(d.regression)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Flatten one artifact's measured rows to `(bench, op) -> (mean, unit)`,
+/// pushing every unusable row onto `skipped` tagged with `side`.
+fn bench_rows(
+    artifact: &crate::util::json::Json,
+    side: &str,
+    skipped: &mut Vec<String>,
+) -> Vec<(String, String, f64, String)> {
+    let mut out = Vec::new();
+    let Some(benches) = artifact.get("benches").and_then(|b| b.as_obj()) else {
+        skipped.push(format!("{side}: no `benches` object in artifact"));
+        return out;
+    };
+    for (bench, entry) in benches {
+        let status = entry.get("status").and_then(|s| s.as_str()).unwrap_or("measured");
+        if status == "pending" {
+            let n = entry.get("rows").and_then(|r| r.as_arr()).map_or(0, |r| r.len());
+            skipped.push(format!("{side}: bench `{bench}` pending ({n} row(s))"));
+            continue;
+        }
+        let Some(rows) = entry.get("rows").and_then(|r| r.as_arr()) else {
+            skipped.push(format!("{side}: bench `{bench}` has no rows array"));
+            continue;
+        };
+        for row in rows {
+            let op = row.get("op").and_then(|o| o.as_str()).unwrap_or("?").to_string();
+            let unit = row.get("unit").and_then(|u| u.as_str()).unwrap_or("").to_string();
+            match row.get("mean").and_then(|m| m.as_f64()) {
+                Some(mean) if mean.is_finite() => {
+                    out.push((bench.clone(), op, mean, unit));
+                }
+                _ => skipped.push(format!(
+                    "{side}: `{bench}` / `{op}` has no finite mean"
+                )),
+            }
+        }
+    }
+    out
+}
+
+/// Compare two parsed `results/BENCH_perf.json` artifacts row by row
+/// (matching on `(bench, op)`), with verdicts against the relative
+/// `threshold` (e.g. `0.1` = 10%). `pending` benches, non-finite means
+/// and unmatched rows are reported as skips, never as regressions — so
+/// the artifact the toolchain-less CI seeds (all pending) self-diffs to
+/// zero compared rows and zero regressions.
+pub fn bench_diff(
+    base: &crate::util::json::Json,
+    new: &crate::util::json::Json,
+    threshold: f64,
+) -> anyhow::Result<BenchDiff> {
+    anyhow::ensure!(
+        threshold.is_finite() && threshold >= 0.0,
+        "bench-diff threshold must be a finite fraction >= 0, got {threshold}"
+    );
+    let mut skipped = Vec::new();
+    let base_rows = bench_rows(base, "baseline", &mut skipped);
+    let new_rows = bench_rows(new, "candidate", &mut skipped);
+    let mut deltas = Vec::new();
+    for (bench, op, base_mean, unit) in &base_rows {
+        let Some((_, _, new_mean, _)) =
+            new_rows.iter().find(|(b, o, _, _)| b == bench && o == op)
+        else {
+            skipped.push(format!("`{bench}` / `{op}` only in baseline"));
+            continue;
+        };
+        let higher_is_better = unit.ends_with("/s") || unit.ends_with("-per-s");
+        let rel_change = (new_mean - base_mean) / base_mean.abs().max(1e-12);
+        let worse = if higher_is_better { -rel_change } else { rel_change };
+        deltas.push(BenchDelta {
+            bench: bench.clone(),
+            op: op.clone(),
+            unit: unit.clone(),
+            base_mean: *base_mean,
+            new_mean: *new_mean,
+            rel_change,
+            higher_is_better,
+            regression: worse > threshold,
+            improvement: -worse > threshold,
+        });
+    }
+    for (bench, op, _, _) in &new_rows {
+        if !base_rows.iter().any(|(b, o, _, _)| b == bench && o == op) {
+            skipped.push(format!("`{bench}` / `{op}` only in candidate"));
+        }
+    }
+    Ok(BenchDiff { deltas, skipped, threshold })
+}
+
 /// Labeled scalar metrics registry, rendered as `key = value` lines.
 #[derive(Clone, Debug, Default)]
 pub struct Report {
@@ -355,6 +557,87 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
+
+    fn artifact(entries: &str) -> Json {
+        Json::parse(&format!(r#"{{"benches": {entries}}}"#)).unwrap()
+    }
+
+    #[test]
+    fn bench_diff_flags_regressions_by_unit_direction() {
+        // Time-style unit: higher mean is worse. Throughput-style unit:
+        // lower mean is worse.
+        let base = artifact(
+            r#"{"b": {"status": "measured", "rows": [
+                {"op": "step", "mean": 10.0, "std": 0.1, "unit": "us"},
+                {"op": "serve", "mean": 100.0, "std": 1.0, "unit": "decisions/s"}
+            ]}}"#,
+        );
+        let new = artifact(
+            r#"{"b": {"status": "measured", "rows": [
+                {"op": "step", "mean": 13.0, "std": 0.1, "unit": "us"},
+                {"op": "serve", "mean": 70.0, "std": 1.0, "unit": "decisions/s"}
+            ]}}"#,
+        );
+        let d = bench_diff(&base, &new, 0.2).unwrap();
+        assert_eq!(d.deltas.len(), 2);
+        assert_eq!(d.regressions(), 2, "{:?}", d.deltas);
+        assert!(!d.deltas[0].higher_is_better && d.deltas[1].higher_is_better);
+        // The same changes under a looser threshold are not regressions.
+        assert_eq!(bench_diff(&base, &new, 0.5).unwrap().regressions(), 0);
+        // Swapping the artifacts turns both into improvements.
+        let swapped = bench_diff(&new, &base, 0.2).unwrap();
+        assert_eq!(swapped.regressions(), 0);
+        assert!(swapped.deltas.iter().all(|x| x.improvement), "{:?}", swapped.deltas);
+        let render = d.render();
+        assert!(render.contains("REGRESSED"), "{render}");
+        assert!(render.contains("2 regression(s)"), "{render}");
+    }
+
+    #[test]
+    fn bench_diff_skips_pending_null_and_unmatched_rows() {
+        let base = artifact(
+            r#"{
+                "p": {"status": "pending", "rows": [
+                    {"op": "x", "mean": null, "std": null, "unit": "us"}
+                ]},
+                "b": {"status": "measured", "rows": [
+                    {"op": "gone", "mean": 1.0, "std": 0.0, "unit": "us"},
+                    {"op": "nan", "mean": null, "std": 0.0, "unit": "us"}
+                ]}
+            }"#,
+        );
+        let new = artifact(
+            r#"{"b": {"status": "measured", "rows": [
+                {"op": "fresh", "mean": 2.0, "std": 0.0, "unit": "us"}
+            ]}}"#,
+        );
+        let d = bench_diff(&base, &new, 0.1).unwrap();
+        assert!(d.deltas.is_empty(), "{:?}", d.deltas);
+        assert_eq!(d.regressions(), 0);
+        assert_eq!(d.skipped.len(), 4, "{:?}", d.skipped);
+        assert!(d.skipped.iter().any(|s| s.contains("pending")), "{:?}", d.skipped);
+        assert!(d.skipped.iter().any(|s| s.contains("no finite mean")), "{:?}", d.skipped);
+        assert!(d.skipped.iter().any(|s| s.contains("only in baseline")), "{:?}", d.skipped);
+        assert!(d.skipped.iter().any(|s| s.contains("only in candidate")), "{:?}", d.skipped);
+    }
+
+    #[test]
+    fn bench_diff_self_diff_is_clean_and_json_ready() {
+        let a = artifact(
+            r#"{"b": {"status": "measured", "rows": [
+                {"op": "step", "mean": 10.0, "std": 0.1, "unit": "us"}
+            ]}}"#,
+        );
+        let d = bench_diff(&a, &a, 0.0).unwrap();
+        assert_eq!(d.deltas.len(), 1);
+        assert_eq!(d.regressions(), 0, "self-diff can never regress");
+        assert!(d.skipped.is_empty());
+        let j = d.to_json();
+        assert_eq!(j.get("regressions").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(bench_diff(&a, &a, f64::NAN).is_err());
+        assert!(bench_diff(&a, &a, -0.1).is_err());
+    }
 
     #[test]
     fn counter_accumulates() {

@@ -21,9 +21,24 @@
 //!   live `Counter`/`Throughput`/`Histogram` instruments in one place;
 //!   powers the serve daemon's periodic `[stats]` stderr line and the
 //!   `--metrics-out` JSON dump.
+//! * [`profile`] — the offline half of the PR 9 insight layer:
+//!   [`profile_trace`] re-parses an exported trace into a span rollup,
+//!   per-job JCT attribution (queueing / admission-search / running /
+//!   below-floor) and the cluster-wide critical path; surfaced by the
+//!   `trace-profile` subcommand.
+//! * [`watch`] — the online half: a [`Watchdog`] over ring-buffered
+//!   [`SeriesBuffer`] metric series, raising hysteresis-gated alerts
+//!   (SLA streak, p99 regression, utilization collapse, probe thrash)
+//!   inside the serve daemon without perturbing its decisions.
 
+pub mod profile;
 pub mod registry;
 pub mod trace;
+pub mod watch;
 
+pub use profile::{
+    profile_trace, CriticalStep, EventStat, JobAttribution, SpanStat, TraceProfile,
+};
 pub use registry::{MetricValue, MetricsRegistry};
 pub use trace::{lint_trace, LintSummary, SpanId, TraceFormat, TraceRecord, Tracer};
+pub use watch::{Alert, ProbeSnapshot, SeriesBuffer, WatchConfig, Watchdog};

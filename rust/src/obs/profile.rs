@@ -1,0 +1,937 @@
+//! Trace profiling: turn a recorded trace back into insight
+//! (DESIGN.md §Observability).
+//!
+//! [`profile_trace`] re-parses an exported trace — JSONL or Chrome,
+//! auto-detected like [`lint_trace`](super::lint_trace) — into three
+//! views:
+//!
+//! 1. **Span rollup** — a flamegraph-style aggregate per stack path
+//!    (cat, name, depth): open/close count, total and *self* time, split
+//!    by clock. Virtual durations come from the simulated clock and are
+//!    bit-deterministic per (config, seed); wall durations are real time
+//!    and vary per trace file. Spans whose open and close were stamped
+//!    from different clocks (the top-level `run` shape: wall open,
+//!    virtual close) are counted but contribute no time to either sum.
+//! 2. **Event rollup** — instant counts per (cat, name), with the
+//!    wall-stamped share.
+//! 3. **Job attribution** — for cluster/serve traces, each job's
+//!    lifecycle (`arrival` → `admit_attempt` spans → `admit` /
+//!    `preempt` / `complete` instants) replayed into a JCT
+//!    decomposition: *queueing* (waiting for admission, minus search),
+//!    *search* (virtual width of the job's own `admit_attempt` spans —
+//!    zero by construction today, since gang-admission searches consume
+//!    no virtual time), *running* (service at or above the SLA floor)
+//!    and *below-floor* (service under it). The four segments sum to
+//!    the job's JCT exactly, and `queueing + below-floor` reproduces
+//!    the simulator's `sla_violation_secs`. A backwards walk from the
+//!    last completion through admit/release events names the
+//!    cluster-wide critical path.
+//!
+//! Everything here is a pure function of the trace text, so the
+//! rendered output is deterministic per trace file.
+
+use std::collections::HashMap;
+
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+/// One normalized trace record (both export formats reduce to this).
+#[derive(Clone, Debug)]
+struct Rec {
+    ts: f64,
+    wall: bool,
+    ph: char,
+    cat: String,
+    name: String,
+    args: Json,
+}
+
+/// Aggregate for one span stack path.
+#[derive(Clone, Debug)]
+pub struct SpanStat {
+    pub cat: String,
+    pub name: String,
+    /// Nesting depth of this path (0 = top level).
+    pub depth: usize,
+    /// Completed open/close pairs.
+    pub count: u64,
+    pub virt_total_secs: f64,
+    /// Virtual time not covered by virtual-clock children.
+    pub virt_self_secs: f64,
+    pub wall_total_secs: f64,
+    pub wall_self_secs: f64,
+    /// Spans whose open/close clocks differ — counted, never timed.
+    pub mixed: u64,
+}
+
+/// Aggregate for one instant-event name.
+#[derive(Clone, Debug)]
+pub struct EventStat {
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub wall_count: u64,
+}
+
+/// One job's JCT decomposition, replayed from its trace events.
+#[derive(Clone, Debug)]
+pub struct JobAttribution {
+    pub job: u64,
+    pub arrival_secs: f64,
+    pub sla_floor: f64,
+    pub completion_secs: Option<f64>,
+    pub rejected: bool,
+    /// Waiting for admission (initial queueing + post-preemption waits),
+    /// with admission-search time carved out.
+    pub queueing_secs: f64,
+    /// Virtual width of this job's own `admit_attempt` spans.
+    pub search_secs: f64,
+    /// Service at or above the SLA floor.
+    pub running_secs: f64,
+    /// Service below the SLA floor (counts toward SLA violation).
+    pub below_floor_secs: f64,
+    pub admissions: u64,
+    pub preemptions: u64,
+}
+
+impl JobAttribution {
+    /// Completion minus arrival; `None` until the job completes.
+    pub fn jct_secs(&self) -> Option<f64> {
+        self.completion_secs.map(|c| c - self.arrival_secs)
+    }
+
+    /// The decomposition's total — equals `jct_secs` for completed jobs
+    /// (within f64 tolerance), by construction of the replay.
+    pub fn segments_sum_secs(&self) -> f64 {
+        self.queueing_secs + self.search_secs + self.running_secs + self.below_floor_secs
+    }
+}
+
+/// One hop of the cluster-wide critical path, chronological order.
+#[derive(Clone, Debug)]
+pub struct CriticalStep {
+    pub job: u64,
+    /// `arrival`, `queued` or `running`.
+    pub kind: &'static str,
+    pub from_secs: f64,
+    pub to_secs: f64,
+    /// For `queued` steps: the release event that ended the wait.
+    pub via: Option<String>,
+}
+
+/// Everything [`profile_trace`] extracts from one trace file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceProfile {
+    pub records: usize,
+    pub wall_records: usize,
+    /// First-seen stack-path order (deterministic per trace).
+    pub spans: Vec<SpanStat>,
+    pub events: Vec<EventStat>,
+    /// Ascending job id.
+    pub jobs: Vec<JobAttribution>,
+    /// Chronological; empty unless the trace holds a completed job.
+    pub critical_path: Vec<CriticalStep>,
+    /// Last completion timestamp, if any job completed.
+    pub makespan_secs: Option<f64>,
+}
+
+/// Parse either export format into normalized records, preserving file
+/// order (which is seq order for every trace the crate writes).
+fn parse_records(text: &str) -> anyhow::Result<Vec<Rec>> {
+    if text.trim_start().is_empty() {
+        anyhow::bail!("empty trace");
+    }
+    let chrome = Json::parse(text)
+        .ok()
+        .and_then(|doc| doc.get("traceEvents").and_then(|e| e.as_arr().map(|a| a.to_vec())));
+    let mut out = Vec::new();
+    if let Some(events) = chrome {
+        for (at, ev) in events.iter().enumerate() {
+            let ph = ev
+                .get("ph")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow::anyhow!("record {at}: missing 'ph'"))?;
+            if ph == "M" {
+                continue;
+            }
+            let ph = match ph {
+                "B" => 'B',
+                "E" => 'E',
+                "I" | "i" => 'I',
+                other => anyhow::bail!("record {at}: unknown phase '{other}'"),
+            };
+            let name = ev
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("record {at}: missing 'name'"))?;
+            let cat = ev.get("cat").and_then(|c| c.as_str()).unwrap_or("");
+            let ts = ev
+                .get("ts")
+                .and_then(|t| t.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("record {at}: `{name}` lacks a numeric 'ts'"))?;
+            out.push(Rec {
+                // Chrome timestamps are microseconds.
+                ts: ts / 1e6,
+                wall: ev.get("tid").and_then(|t| t.as_f64()) == Some(1.0),
+                ph,
+                cat: cat.to_string(),
+                name: name.to_string(),
+                args: ev.get("args").cloned().unwrap_or(Json::Obj(Vec::new())),
+            });
+        }
+    } else {
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let ph = rec
+                .get("ph")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing 'ph'", lineno + 1))?;
+            let ph = match ph {
+                "B" => 'B',
+                "E" => 'E',
+                "I" | "i" => 'I',
+                other => anyhow::bail!("line {}: unknown phase '{other}'", lineno + 1),
+            };
+            let name = rec
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing 'name'", lineno + 1))?;
+            let cat = rec.get("cat").and_then(|c| c.as_str()).unwrap_or("");
+            let ts = rec.get("ts").and_then(|t| t.as_f64()).ok_or_else(|| {
+                anyhow::anyhow!("line {}: `{name}` lacks a numeric 'ts'", lineno + 1)
+            })?;
+            out.push(Rec {
+                ts,
+                wall: rec.get("wall").and_then(|w| w.as_bool()).unwrap_or(false),
+                ph,
+                cat: cat.to_string(),
+                name: name.to_string(),
+                args: rec.get("args").cloned().unwrap_or(Json::Obj(Vec::new())),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Profile an exported trace (either format). Errors mirror
+/// [`lint_trace`](super::lint_trace): unparseable records, unbalanced or
+/// misnamed spans.
+pub fn profile_trace(text: &str) -> anyhow::Result<TraceProfile> {
+    let recs = parse_records(text)?;
+    let mut profile = TraceProfile { records: recs.len(), ..TraceProfile::default() };
+
+    // --- span + event rollup ------------------------------------------------
+    struct Frame {
+        path: usize,
+        ts: f64,
+        wall: bool,
+        child_virt: f64,
+        child_wall: f64,
+    }
+    let mut path_index: HashMap<(Option<usize>, String, String), usize> = HashMap::new();
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut event_index: HashMap<(String, String), usize> = HashMap::new();
+    for (at, r) in recs.iter().enumerate() {
+        if r.wall {
+            profile.wall_records += 1;
+        }
+        match r.ph {
+            'B' => {
+                let parent = stack.last().map(|f| f.path);
+                let key = (parent, r.cat.clone(), r.name.clone());
+                let path = *path_index.entry(key).or_insert_with(|| {
+                    profile.spans.push(SpanStat {
+                        cat: r.cat.clone(),
+                        name: r.name.clone(),
+                        depth: stack.len(),
+                        count: 0,
+                        virt_total_secs: 0.0,
+                        virt_self_secs: 0.0,
+                        wall_total_secs: 0.0,
+                        wall_self_secs: 0.0,
+                        mixed: 0,
+                    });
+                    profile.spans.len() - 1
+                });
+                stack.push(Frame { path, ts: r.ts, wall: r.wall, child_virt: 0.0, child_wall: 0.0 });
+            }
+            'E' => {
+                let frame = match stack.pop() {
+                    Some(f) => f,
+                    None => {
+                        anyhow::bail!("record {at}: span `{}` closes but no span is open", r.name)
+                    }
+                };
+                let stat = &mut profile.spans[frame.path];
+                anyhow::ensure!(
+                    stat.name == r.name,
+                    "record {at}: span `{}` closes while `{}` is the innermost open span",
+                    r.name,
+                    stat.name
+                );
+                stat.count += 1;
+                if frame.wall == r.wall {
+                    let dur = (r.ts - frame.ts).max(0.0);
+                    if r.wall {
+                        stat.wall_total_secs += dur;
+                        stat.wall_self_secs += (dur - frame.child_wall).max(0.0);
+                        if let Some(parent) = stack.last_mut() {
+                            parent.child_wall += dur;
+                        }
+                    } else {
+                        stat.virt_total_secs += dur;
+                        stat.virt_self_secs += (dur - frame.child_virt).max(0.0);
+                        if let Some(parent) = stack.last_mut() {
+                            parent.child_virt += dur;
+                        }
+                    }
+                } else {
+                    stat.mixed += 1;
+                }
+            }
+            _ => {
+                let key = (r.cat.clone(), r.name.clone());
+                let idx = *event_index.entry(key).or_insert_with(|| {
+                    profile.events.push(EventStat {
+                        cat: r.cat.clone(),
+                        name: r.name.clone(),
+                        count: 0,
+                        wall_count: 0,
+                    });
+                    profile.events.len() - 1
+                });
+                profile.events[idx].count += 1;
+                if r.wall {
+                    profile.events[idx].wall_count += 1;
+                }
+            }
+        }
+    }
+    if !stack.is_empty() {
+        let open = &profile.spans[stack.last().unwrap().path].name;
+        anyhow::bail!("{} span(s) never close: innermost is `{open}`", stack.len());
+    }
+
+    // --- per-job replay -----------------------------------------------------
+    attribute_jobs(&recs, &mut profile);
+    Ok(profile)
+}
+
+/// Lifecycle events the critical-path walk reasons over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EvKind {
+    Arrival,
+    Admit,
+    Preempt,
+    Complete,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CEv {
+    idx: usize,
+    kind: EvKind,
+    job: u64,
+    ts: f64,
+}
+
+/// What one waiting/running job looks like mid-replay.
+enum JobState {
+    Waiting { since: f64 },
+    Running { since: f64, below: bool },
+    Done,
+}
+
+struct JobReplay {
+    attr: JobAttribution,
+    state: JobState,
+}
+
+fn attribute_jobs(recs: &[Rec], profile: &mut TraceProfile) {
+    let job_of = |args: &Json| args.get("job").and_then(|j| j.as_f64()).map(|j| j as u64);
+    let mut jobs: HashMap<u64, JobReplay> = HashMap::new();
+    let mut evs: Vec<CEv> = Vec::new();
+    // Open `admit_attempt` spans, outermost-first (they never nest in
+    // practice, but a stack keeps the replay shape-agnostic).
+    let mut attempts: Vec<(Option<u64>, f64, bool)> = Vec::new();
+    for (idx, r) in recs.iter().enumerate() {
+        if r.cat != "cluster" {
+            continue;
+        }
+        if r.ph == 'B' && r.name == "admit_attempt" {
+            attempts.push((job_of(&r.args), r.ts, r.wall));
+            continue;
+        }
+        if r.ph == 'E' && r.name == "admit_attempt" {
+            if let Some((job, open_ts, open_wall)) = attempts.pop() {
+                if let Some(rep) = job.and_then(|j| jobs.get_mut(&j)) {
+                    if !open_wall && !r.wall {
+                        rep.attr.search_secs += (r.ts - open_ts).max(0.0);
+                    }
+                }
+            }
+            continue;
+        }
+        if r.ph != 'I' {
+            continue;
+        }
+        let Some(job) = job_of(&r.args) else { continue };
+        match r.name.as_str() {
+            "arrival" => {
+                let sla_floor =
+                    r.args.get("sla_floor").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                jobs.insert(
+                    job,
+                    JobReplay {
+                        attr: JobAttribution {
+                            job,
+                            arrival_secs: r.ts,
+                            sla_floor,
+                            completion_secs: None,
+                            rejected: false,
+                            queueing_secs: 0.0,
+                            search_secs: 0.0,
+                            running_secs: 0.0,
+                            below_floor_secs: 0.0,
+                            admissions: 0,
+                            preemptions: 0,
+                        },
+                        state: JobState::Waiting { since: r.ts },
+                    },
+                );
+                evs.push(CEv { idx, kind: EvKind::Arrival, job, ts: r.ts });
+            }
+            "reject" => {
+                if let Some(rep) = jobs.get_mut(&job) {
+                    rep.attr.rejected = true;
+                    rep.state = JobState::Done;
+                }
+            }
+            "admit" => {
+                if let Some(rep) = jobs.get_mut(&job) {
+                    if let JobState::Waiting { since } = rep.state {
+                        rep.attr.queueing_secs += (r.ts - since).max(0.0);
+                    }
+                    let tput =
+                        r.args.get("throughput").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let below = rep.attr.sla_floor > 0.0 && tput < rep.attr.sla_floor;
+                    rep.attr.admissions += 1;
+                    rep.state = JobState::Running { since: r.ts, below };
+                    evs.push(CEv { idx, kind: EvKind::Admit, job, ts: r.ts });
+                }
+            }
+            "preempt" => {
+                if let Some(rep) = jobs.get_mut(&job) {
+                    if let JobState::Running { since, below } = rep.state {
+                        let dur = (r.ts - since).max(0.0);
+                        if below {
+                            rep.attr.below_floor_secs += dur;
+                        } else {
+                            rep.attr.running_secs += dur;
+                        }
+                    }
+                    rep.attr.preemptions += 1;
+                    rep.state = JobState::Waiting { since: r.ts };
+                    evs.push(CEv { idx, kind: EvKind::Preempt, job, ts: r.ts });
+                }
+            }
+            "complete" => {
+                if let Some(rep) = jobs.get_mut(&job) {
+                    if let JobState::Running { since, below } = rep.state {
+                        let dur = (r.ts - since).max(0.0);
+                        if below {
+                            rep.attr.below_floor_secs += dur;
+                        } else {
+                            rep.attr.running_secs += dur;
+                        }
+                    }
+                    rep.attr.completion_secs = Some(r.ts);
+                    rep.state = JobState::Done;
+                    evs.push(CEv { idx, kind: EvKind::Complete, job, ts: r.ts });
+                }
+            }
+            // `stale_completion` is a fenced epoch, `admit_fail` /
+            // `admit_skip` leave the job waiting: no state change.
+            _ => {}
+        }
+    }
+    // Search time happens while the job waits for admission, so it is
+    // carved out of the raw waiting total to keep the four segments
+    // disjoint (today searches have zero virtual width, so this is the
+    // identity — the subtraction is the contract, not a correction).
+    let mut out: Vec<JobAttribution> = jobs
+        .into_values()
+        .map(|mut rep| {
+            rep.attr.queueing_secs = (rep.attr.queueing_secs - rep.attr.search_secs).max(0.0);
+            rep.attr
+        })
+        .collect();
+    out.sort_by_key(|a| a.job);
+    profile.jobs = out;
+    profile.makespan_secs =
+        evs.iter().filter(|e| e.kind == EvKind::Complete).map(|e| e.ts).reduce(f64::max);
+    profile.critical_path = critical_path(&evs);
+}
+
+/// Walk backwards from the last completion: through the finishing job's
+/// running stretch, across the wait that preceded its admission to the
+/// release event (completion or preemption of another job) that freed
+/// the capacity, and so on until an arrival with no wait. Each hop moves
+/// strictly earlier in the event order, so the walk terminates.
+fn critical_path(evs: &[CEv]) -> Vec<CriticalStep> {
+    let mut steps: Vec<CriticalStep> = Vec::new();
+    let Some(mut cur) = evs
+        .iter()
+        .filter(|e| e.kind == EvKind::Complete)
+        .max_by(|a, b| a.ts.total_cmp(&b.ts).then(a.idx.cmp(&b.idx)))
+        .copied()
+    else {
+        return steps;
+    };
+    let mut guard = evs.len() + 1;
+    loop {
+        guard -= 1;
+        if guard == 0 {
+            break;
+        }
+        // `cur` ends a running stretch of `cur.job` (complete/preempt).
+        // `idx` fields are record indices, strictly increasing along
+        // `evs`, so "latest before X" is a reverse scan on `e.idx`.
+        let Some(admit) = evs
+            .iter()
+            .rev()
+            .find(|e| e.idx < cur.idx && e.job == cur.job && e.kind == EvKind::Admit)
+            .copied()
+        else {
+            break;
+        };
+        steps.push(CriticalStep {
+            job: cur.job,
+            kind: "running",
+            from_secs: admit.ts,
+            to_secs: cur.ts,
+            via: None,
+        });
+        let Some(prev) = evs
+            .iter()
+            .rev()
+            .find(|e| {
+                e.idx < admit.idx
+                    && e.job == cur.job
+                    && matches!(e.kind, EvKind::Arrival | EvKind::Preempt)
+            })
+            .copied()
+        else {
+            break;
+        };
+        if admit.ts > prev.ts {
+            // The job waited; name the release that ended the wait.
+            let blocker = evs
+                .iter()
+                .rev()
+                .find(|e| {
+                    e.idx < admit.idx
+                        && e.job != cur.job
+                        && matches!(e.kind, EvKind::Complete | EvKind::Preempt)
+                        && e.ts >= prev.ts
+                })
+                .copied();
+            match blocker {
+                Some(b) => {
+                    let what = match b.kind {
+                        EvKind::Complete => "complete",
+                        _ => "preempt",
+                    };
+                    steps.push(CriticalStep {
+                        job: cur.job,
+                        kind: "queued",
+                        from_secs: prev.ts,
+                        to_secs: admit.ts,
+                        via: Some(format!("{what} of job {}", b.job)),
+                    });
+                    cur = b;
+                    continue;
+                }
+                None => {
+                    steps.push(CriticalStep {
+                        job: cur.job,
+                        kind: "queued",
+                        from_secs: prev.ts,
+                        to_secs: admit.ts,
+                        via: None,
+                    });
+                    steps.push(CriticalStep {
+                        job: cur.job,
+                        kind: "arrival",
+                        from_secs: prev.ts,
+                        to_secs: prev.ts,
+                        via: None,
+                    });
+                    break;
+                }
+            }
+        } else if prev.kind == EvKind::Preempt {
+            // Re-admitted the instant it was preempted: keep walking this
+            // job's own earlier history.
+            cur = prev;
+            continue;
+        } else {
+            steps.push(CriticalStep {
+                job: cur.job,
+                kind: "arrival",
+                from_secs: prev.ts,
+                to_secs: prev.ts,
+                via: None,
+            });
+            break;
+        }
+    }
+    steps.reverse();
+    steps
+}
+
+impl TraceProfile {
+    /// The flamegraph-style span rollup, names indented by depth.
+    pub fn span_table(&self) -> Table {
+        let mut t = Table::new(
+            "Span rollup — total/self seconds by clock",
+            &["span", "cat", "count", "virt total s", "virt self s", "wall total s",
+              "wall self s", "mixed"],
+        );
+        for s in &self.spans {
+            t.row(&[
+                format!("{}{}", "  ".repeat(s.depth), s.name),
+                s.cat.clone(),
+                s.count.to_string(),
+                format!("{:.6}", s.virt_total_secs),
+                format!("{:.6}", s.virt_self_secs),
+                format!("{:.6}", s.wall_total_secs),
+                format!("{:.6}", s.wall_self_secs),
+                s.mixed.to_string(),
+            ]);
+        }
+        t
+    }
+
+    pub fn event_table(&self) -> Table {
+        let mut t = Table::new("Event rollup", &["event", "cat", "count", "wall"]);
+        for e in &self.events {
+            t.row(&[e.name.clone(), e.cat.clone(), e.count.to_string(), e.wall_count.to_string()]);
+        }
+        t
+    }
+
+    /// Per-job JCT decomposition; empty for traces without cluster events.
+    pub fn job_table(&self) -> Table {
+        let mut t = Table::new(
+            "Job attribution — JCT = queue + search + run + below-floor",
+            &["job", "arrival s", "jct s", "queue s", "search s", "run s", "below s",
+              "preempts", "admits", "status"],
+        );
+        for j in &self.jobs {
+            let (jct, status) = match (j.jct_secs(), j.rejected) {
+                (_, true) => ("-".to_string(), "rejected"),
+                (Some(v), _) => (format!("{v:.3}"), "done"),
+                (None, _) => ("-".to_string(), "unfinished"),
+            };
+            t.row(&[
+                j.job.to_string(),
+                format!("{:.3}", j.arrival_secs),
+                jct,
+                format!("{:.3}", j.queueing_secs),
+                format!("{:.3}", j.search_secs),
+                format!("{:.3}", j.running_secs),
+                format!("{:.3}", j.below_floor_secs),
+                j.preemptions.to_string(),
+                j.admissions.to_string(),
+                status.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Full human rendering: rollups, job attribution, critical path.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} records ({} wall-stamped)",
+            self.records, self.wall_records
+        );
+        out.push('\n');
+        out.push_str(&self.span_table().render());
+        out.push('\n');
+        out.push_str(&self.event_table().render());
+        if !self.jobs.is_empty() {
+            out.push('\n');
+            out.push_str(&self.job_table().render());
+            out.push('\n');
+            out.push_str("== Critical path ==\n");
+            if self.critical_path.is_empty() {
+                out.push_str("(no completed job in this trace)\n");
+            }
+            for s in &self.critical_path {
+                let line = match s.kind {
+                    "arrival" => format!("job {} arrival @ {:.3} s", s.job, s.from_secs),
+                    "queued" => {
+                        let via = s
+                            .via
+                            .as_deref()
+                            .map(|v| format!(", unblocked by {v}"))
+                            .unwrap_or_default();
+                        format!(
+                            "job {} queued {:.3} s ({:.3} -> {:.3}{via})",
+                            s.job,
+                            s.to_secs - s.from_secs,
+                            s.from_secs,
+                            s.to_secs
+                        )
+                    }
+                    _ => format!(
+                        "job {} running {:.3} s ({:.3} -> {:.3})",
+                        s.job,
+                        s.to_secs - s.from_secs,
+                        s.from_secs,
+                        s.to_secs
+                    ),
+                };
+                let _ = writeln!(out, "  {line}");
+            }
+            if let Some(m) = self.makespan_secs {
+                let _ = writeln!(out, "  makespan {m:.3} s");
+            }
+        }
+        out
+    }
+
+    /// CSV: span rollup then job attribution, blank-line separated.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.span_table().to_csv();
+        out.push('\n');
+        out.push_str(&self.job_table().to_csv());
+        out
+    }
+
+    /// The full profile as a JSON object (`--json-out`).
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("cat".to_string(), Json::Str(s.cat.clone())),
+                    ("name".to_string(), Json::Str(s.name.clone())),
+                    ("depth".to_string(), Json::Num(s.depth as f64)),
+                    ("count".to_string(), Json::Num(s.count as f64)),
+                    ("virt_total_secs".to_string(), Json::Num(s.virt_total_secs)),
+                    ("virt_self_secs".to_string(), Json::Num(s.virt_self_secs)),
+                    ("wall_total_secs".to_string(), Json::Num(s.wall_total_secs)),
+                    ("wall_self_secs".to_string(), Json::Num(s.wall_self_secs)),
+                    ("mixed".to_string(), Json::Num(s.mixed as f64)),
+                ])
+            })
+            .collect();
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::Obj(vec![
+                    ("cat".to_string(), Json::Str(e.cat.clone())),
+                    ("name".to_string(), Json::Str(e.name.clone())),
+                    ("count".to_string(), Json::Num(e.count as f64)),
+                    ("wall_count".to_string(), Json::Num(e.wall_count as f64)),
+                ])
+            })
+            .collect();
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::Obj(vec![
+                    ("job".to_string(), Json::Num(j.job as f64)),
+                    ("arrival_secs".to_string(), Json::Num(j.arrival_secs)),
+                    ("sla_floor".to_string(), Json::Num(j.sla_floor)),
+                    (
+                        "jct_secs".to_string(),
+                        j.jct_secs().map_or(Json::Null, Json::Num),
+                    ),
+                    ("rejected".to_string(), Json::Bool(j.rejected)),
+                    ("queueing_secs".to_string(), Json::Num(j.queueing_secs)),
+                    ("search_secs".to_string(), Json::Num(j.search_secs)),
+                    ("running_secs".to_string(), Json::Num(j.running_secs)),
+                    ("below_floor_secs".to_string(), Json::Num(j.below_floor_secs)),
+                    ("admissions".to_string(), Json::Num(j.admissions as f64)),
+                    ("preemptions".to_string(), Json::Num(j.preemptions as f64)),
+                ])
+            })
+            .collect();
+        let path = self
+            .critical_path
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("job".to_string(), Json::Num(s.job as f64)),
+                    ("kind".to_string(), Json::Str(s.kind.to_string())),
+                    ("from_secs".to_string(), Json::Num(s.from_secs)),
+                    ("to_secs".to_string(), Json::Num(s.to_secs)),
+                    (
+                        "via".to_string(),
+                        s.via.as_ref().map_or(Json::Null, |v| Json::Str(v.clone())),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("records".to_string(), Json::Num(self.records as f64)),
+            ("wall_records".to_string(), Json::Num(self.wall_records as f64)),
+            ("spans".to_string(), Json::Arr(spans)),
+            ("events".to_string(), Json::Arr(events)),
+            ("jobs".to_string(), Json::Arr(jobs)),
+            ("critical_path".to_string(), Json::Arr(path)),
+            (
+                "makespan_secs".to_string(),
+                self.makespan_secs.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn arg(k: &str, v: f64) -> (String, Json) {
+        (k.to_string(), Json::Num(v))
+    }
+
+    /// Hand-build a two-job cluster trace: job 1 runs at the floor from
+    /// t=0 to t=10; job 2 arrives at t=2, waits for job 1's completion,
+    /// then runs below its floor until t=18.
+    fn two_job_trace() -> Tracer {
+        let t = Tracer::new();
+        let run = t.open("cluster", "run", vec![]);
+        t.set_virtual(0.0);
+        t.instant("cluster", "arrival", vec![arg("job", 1.0), arg("sla_floor", 100.0)]);
+        let a = t.open("cluster", "admit_attempt", vec![arg("job", 1.0), arg("attempt", 1.0)]);
+        t.close(a);
+        t.instant("cluster", "admit", vec![arg("job", 1.0), arg("throughput", 120.0)]);
+        t.set_virtual(2.0);
+        t.instant("cluster", "arrival", vec![arg("job", 2.0), arg("sla_floor", 100.0)]);
+        let a = t.open("cluster", "admit_attempt", vec![arg("job", 2.0), arg("attempt", 1.0)]);
+        t.close(a);
+        t.instant("cluster", "admit_fail", vec![arg("job", 2.0)]);
+        t.set_virtual(10.0);
+        t.instant("cluster", "complete", vec![arg("job", 1.0), arg("epoch", 1.0)]);
+        let a = t.open("cluster", "admit_attempt", vec![arg("job", 2.0), arg("attempt", 2.0)]);
+        t.close(a);
+        t.instant("cluster", "admit", vec![arg("job", 2.0), arg("throughput", 60.0)]);
+        t.set_virtual(18.0);
+        t.instant("cluster", "complete", vec![arg("job", 2.0), arg("epoch", 1.0)]);
+        t.close(run);
+        t
+    }
+
+    #[test]
+    fn decomposes_jct_into_disjoint_segments() {
+        let t = two_job_trace();
+        let p = profile_trace(&t.render_jsonl()).unwrap();
+        assert_eq!(p.jobs.len(), 2);
+        let j1 = &p.jobs[0];
+        assert_eq!(j1.job, 1);
+        assert_eq!(j1.jct_secs(), Some(10.0));
+        assert_eq!(j1.queueing_secs, 0.0);
+        assert_eq!(j1.running_secs, 10.0);
+        assert_eq!(j1.below_floor_secs, 0.0);
+        let j2 = &p.jobs[1];
+        assert_eq!(j2.job, 2);
+        assert_eq!(j2.jct_secs(), Some(16.0));
+        assert_eq!(j2.queueing_secs, 8.0);
+        assert_eq!(j2.running_secs, 0.0);
+        assert_eq!(j2.below_floor_secs, 8.0, "60 tput under a 100 floor is below-floor service");
+        for j in &p.jobs {
+            let jct = j.jct_secs().unwrap();
+            assert!((j.segments_sum_secs() - jct).abs() < 1e-9, "segments must sum to JCT");
+        }
+        assert_eq!(p.makespan_secs, Some(18.0));
+    }
+
+    #[test]
+    fn names_the_critical_path_through_the_blocking_release() {
+        let t = two_job_trace();
+        let p = profile_trace(&t.render_jsonl()).unwrap();
+        let kinds: Vec<(&str, u64)> = p.critical_path.iter().map(|s| (s.kind, s.job)).collect();
+        assert_eq!(
+            kinds,
+            vec![("arrival", 1), ("running", 1), ("queued", 2), ("running", 2)],
+            "{:?}",
+            p.critical_path
+        );
+        let queued = &p.critical_path[2];
+        assert_eq!(queued.via.as_deref(), Some("complete of job 1"));
+        assert_eq!((queued.from_secs, queued.to_secs), (2.0, 10.0));
+    }
+
+    #[test]
+    fn span_rollup_splits_clocks_and_attributes_self_time() {
+        let t = Tracer::new();
+        t.set_virtual(0.0);
+        let outer = t.open("sched", "outer", vec![]);
+        t.set_virtual(1.0);
+        let inner = t.open("sched", "inner", vec![]);
+        t.set_virtual(4.0);
+        t.close(inner);
+        t.set_virtual(5.0);
+        t.close(outer);
+        let p = profile_trace(&t.render_jsonl()).unwrap();
+        assert_eq!(p.spans.len(), 2);
+        let outer = &p.spans[0];
+        assert_eq!((outer.name.as_str(), outer.depth, outer.count), ("outer", 0, 1));
+        assert_eq!(outer.virt_total_secs, 5.0);
+        assert_eq!(outer.virt_self_secs, 2.0, "inner's 3 s must be subtracted");
+        assert_eq!(outer.wall_total_secs, 0.0);
+        let inner = &p.spans[1];
+        assert_eq!((inner.depth, inner.virt_total_secs, inner.virt_self_secs), (1, 3.0, 3.0));
+    }
+
+    #[test]
+    fn chrome_and_jsonl_exports_profile_identically() {
+        let t = two_job_trace();
+        let a = profile_trace(&t.render_jsonl()).unwrap();
+        let b = profile_trace(&t.to_chrome_json().render_pretty()).unwrap();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.job, y.job);
+            assert!((x.segments_sum_secs() - y.segments_sum_secs()).abs() < 1e-6);
+        }
+        assert_eq!(a.critical_path.len(), b.critical_path.len());
+    }
+
+    #[test]
+    fn rendering_and_json_are_deterministic_per_trace() {
+        let t = two_job_trace();
+        let text = t.render_jsonl();
+        let a = profile_trace(&text).unwrap();
+        let b = profile_trace(&text).unwrap();
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_json().render(), b.to_json().render());
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert!(a.render().contains("Critical path"));
+    }
+
+    #[test]
+    fn rejects_malformed_traces_like_the_linter() {
+        assert!(profile_trace("").is_err());
+        assert!(profile_trace("not json\n").is_err());
+        let unclosed = concat!(
+            "{\"seq\": 0, \"ts\": 0, \"wall\": false, \"ph\": \"B\", \"cat\": \"x\", ",
+            "\"name\": \"a\", \"args\": {}}\n",
+        );
+        let err = profile_trace(unclosed).unwrap_err().to_string();
+        assert!(err.contains("never close"), "{err}");
+    }
+}

@@ -382,8 +382,17 @@ pub struct LintSummary {
 }
 
 /// Validate an exported trace (either format, auto-detected): every
-/// record must parse through [`Json::parse`] and every span must close,
-/// innermost-first, under the name it was opened with.
+/// record must parse through [`Json::parse`], every span must close,
+/// innermost-first, under the name it was opened with, virtual-clock
+/// (`"wall": false`) timestamps must be non-decreasing within a run,
+/// and no span may close at a virtual timestamp earlier than its open.
+///
+/// One file may hold several top-level runs (`cluster --policy all`
+/// traces every policy through one tracer), each restarting its virtual
+/// clock at zero, so the monotonicity baseline resets whenever a span
+/// opens at stack depth 0. The close-before-open check only binds when
+/// both endpoints are virtual: top-level `run` spans legitimately open
+/// wall-stamped (before the simulator pins the clock) and close virtual.
 pub fn lint_trace(text: &str) -> anyhow::Result<LintSummary> {
     let trimmed = text.trim_start();
     if trimmed.is_empty() {
@@ -395,27 +404,59 @@ pub fn lint_trace(text: &str) -> anyhow::Result<LintSummary> {
         doc.get("traceEvents").and_then(|e| e.as_arr().map(|a| a.to_vec()))
     });
     let mut summary = LintSummary::default();
-    let mut stack: Vec<String> = Vec::new();
-    let mut check = |ph: &str, name: &str, wall: bool, at: usize| -> anyhow::Result<()> {
-        summary.records += 1;
-        if wall {
-            summary.wall_records += 1;
-        }
-        match ph {
-            "B" => stack.push(name.to_string()),
-            "E" => match stack.pop() {
-                Some(open) if open == name => summary.spans += 1,
-                Some(open) => anyhow::bail!(
-                    "record {at}: span `{name}` closes while `{open}` is the innermost open span"
-                ),
-                None => anyhow::bail!("record {at}: span `{name}` closes but no span is open"),
-            },
-            "I" | "i" => summary.events += 1,
-            "M" => summary.records -= 1,
-            other => anyhow::bail!("record {at}: unknown phase '{other}'"),
-        }
-        Ok(())
-    };
+    let mut stack: Vec<(String, f64, bool)> = Vec::new();
+    let mut last_virtual: Option<f64> = None;
+    let mut check =
+        |ph: &str, name: &str, wall: bool, ts: Option<f64>, at: usize| -> anyhow::Result<()> {
+            if ph == "M" {
+                // Chrome metadata: carries no clock and opens no span.
+                return Ok(());
+            }
+            summary.records += 1;
+            if wall {
+                summary.wall_records += 1;
+            }
+            let ts = ts.ok_or_else(|| {
+                anyhow::anyhow!("record {at}: `{name}` lacks a numeric 'ts'")
+            })?;
+            if ph == "B" && stack.is_empty() {
+                // A new top-level run may restart the virtual clock.
+                last_virtual = None;
+            }
+            match ph {
+                "B" => stack.push((name.to_string(), ts, wall)),
+                "E" => match stack.pop() {
+                    Some((open, open_ts, open_wall)) if open == name => {
+                        anyhow::ensure!(
+                            wall || open_wall || ts >= open_ts,
+                            "record {at}: span `{name}` closes at {ts}, earlier than its \
+                             open at {open_ts}"
+                        );
+                        summary.spans += 1;
+                    }
+                    Some((open, _, _)) => anyhow::bail!(
+                        "record {at}: span `{name}` closes while `{open}` is the innermost \
+                         open span"
+                    ),
+                    None => {
+                        anyhow::bail!("record {at}: span `{name}` closes but no span is open")
+                    }
+                },
+                "I" | "i" => summary.events += 1,
+                other => anyhow::bail!("record {at}: unknown phase '{other}'"),
+            }
+            if !wall {
+                if let Some(prev) = last_virtual {
+                    anyhow::ensure!(
+                        ts >= prev,
+                        "record {at}: virtual timestamp {ts} on `{name}` precedes {prev} — \
+                         virtual-clock records must be non-decreasing within a run"
+                    );
+                }
+                last_virtual = Some(ts);
+            }
+            Ok(())
+        };
     if let Some(events) = chrome {
         for (at, ev) in events.iter().enumerate() {
             let ph = ev
@@ -429,7 +470,8 @@ pub fn lint_trace(text: &str) -> anyhow::Result<LintSummary> {
                 .ok_or_else(|| anyhow::anyhow!("record {at}: missing 'name'"))?
                 .to_string();
             let wall = ev.get("tid").and_then(|t| t.as_f64()) == Some(1.0);
-            check(&ph, &name, wall, at)?;
+            let ts = ev.get("ts").and_then(|t| t.as_f64());
+            check(&ph, &name, wall, ts, at)?;
         }
     } else {
         for (lineno, line) in text.lines().enumerate() {
@@ -449,10 +491,11 @@ pub fn lint_trace(text: &str) -> anyhow::Result<LintSummary> {
                 .ok_or_else(|| anyhow::anyhow!("line {}: missing 'name'", lineno + 1))?
                 .to_string();
             let wall = rec.get("wall").and_then(|w| w.as_bool()).unwrap_or(false);
-            check(&ph, &name, wall, lineno)?;
+            let ts = rec.get("ts").and_then(|t| t.as_f64());
+            check(&ph, &name, wall, ts, lineno)?;
         }
     }
-    if let Some(open) = stack.last() {
+    if let Some((open, _, _)) = stack.last() {
         anyhow::bail!("{} span(s) never close: innermost is `{open}`", stack.len());
     }
     Ok(summary)
@@ -599,6 +642,75 @@ mod tests {
         assert!(err.contains("never close"), "{err}");
         assert!(lint_trace("").is_err());
         assert!(lint_trace("not json\n").is_err());
+    }
+
+    #[test]
+    fn lint_rejects_nonmonotone_virtual_timestamps() {
+        let line = |seq: usize, ts: f64, wall: bool, ph: &str, name: &str| {
+            format!(
+                "{{\"seq\": {seq}, \"ts\": {ts}, \"wall\": {wall}, \"ph\": \"{ph}\", \
+                 \"cat\": \"x\", \"name\": \"{name}\", \"args\": {{}}}}\n"
+            )
+        };
+        // Virtual clock running backwards between records.
+        let bad = format!(
+            "{}{}{}",
+            line(0, 0.0, false, "B", "run"),
+            line(1, 5.0, false, "I", "a"),
+            line(2, 3.0, false, "E", "run"),
+        );
+        let err = lint_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("non-decreasing"), "{err}");
+        // Wall records are exempt: their timestamps are real time.
+        let ok = format!(
+            "{}{}{}{}",
+            line(0, 0.0, false, "B", "run"),
+            line(1, 9.0, true, "I", "decision_latency"),
+            line(2, 2.0, false, "I", "a"),
+            line(3, 2.0, false, "E", "run"),
+        );
+        assert!(lint_trace(&ok).is_ok());
+        // A new top-level run restarts the virtual clock legitimately
+        // (`cluster --policy all` traces every policy into one file).
+        let two_runs = format!(
+            "{}{}{}{}",
+            line(0, 0.0, false, "B", "run"),
+            line(1, 7.0, false, "E", "run"),
+            line(2, 0.0, false, "B", "run"),
+            line(3, 4.0, false, "E", "run"),
+        );
+        assert!(lint_trace(&two_runs).is_ok(), "per-run clock restart must lint clean");
+    }
+
+    #[test]
+    fn lint_rejects_spans_closing_before_they_open() {
+        // Both endpoints virtual with the close earlier than the open —
+        // caught even when record order hides it from the monotonicity
+        // check (the open is the first virtual record of its run).
+        let bad = concat!(
+            "{\"seq\": 0, \"ts\": 6, \"wall\": false, \"ph\": \"B\", \"cat\": \"x\", ",
+            "\"name\": \"run\", \"args\": {}}\n",
+            "{\"seq\": 1, \"ts\": 2, \"wall\": false, \"ph\": \"E\", \"cat\": \"x\", ",
+            "\"name\": \"run\", \"args\": {}}\n",
+        );
+        let err = lint_trace(bad).unwrap_err().to_string();
+        assert!(err.contains("earlier than"), "{err}");
+        // A wall-stamped open closing at a small virtual timestamp is the
+        // top-level `run` span shape and must stay legal.
+        let mixed = concat!(
+            "{\"seq\": 0, \"ts\": 1722.5, \"wall\": true, \"ph\": \"B\", \"cat\": \"x\", ",
+            "\"name\": \"run\", \"args\": {}}\n",
+            "{\"seq\": 1, \"ts\": 3, \"wall\": false, \"ph\": \"E\", \"cat\": \"x\", ",
+            "\"name\": \"run\", \"args\": {}}\n",
+        );
+        assert!(lint_trace(mixed).is_ok());
+        // Records without a numeric ts are rejected outright.
+        let no_ts = concat!(
+            "{\"seq\": 0, \"wall\": false, \"ph\": \"I\", \"cat\": \"x\", ",
+            "\"name\": \"a\", \"args\": {}}\n",
+        );
+        let err = lint_trace(no_ts).unwrap_err().to_string();
+        assert!(err.contains("lacks a numeric 'ts'"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! The online SLA watchdog (DESIGN.md §Observability).
+//!
+//! The serve daemon already snapshots its [`MetricsRegistry`] every
+//! `--stats-every` arrivals; a [`Watchdog`] turns those snapshots into
+//! ring-buffered time series ([`SeriesBuffer`]) and runs four detectors
+//! with hysteresis over them:
+//!
+//! | detector         | clock   | breach condition                                  |
+//! |------------------|---------|---------------------------------------------------|
+//! | `sla_streak`     | virtual | SLA-violation seconds accruing between snapshots  |
+//! | `util_collapse`  | virtual | windowed mean utilization under the floor while jobs wait |
+//! | `p99_regression` | wall    | decision-latency p99 above `factor ×` the warm-up baseline |
+//! | `probe_thrash`   | wall    | probe thread adjustments per snapshot at/over the limit |
+//!
+//! **Hysteresis contract:** a detector *raises* only after `raise`
+//! consecutive breaching snapshots, emits exactly one [`Alert`] on that
+//! rising edge, stays active (silent) while the breach persists, and
+//! re-arms only after `clear` consecutive clear snapshots — so a
+//! flapping signal emits at most one alert per raise/clear cycle.
+//!
+//! **Determinism contract:** the watchdog only *reads* snapshots — it
+//! cannot perturb admission decisions, so watchdog-on and watchdog-off
+//! runs are bit-identical (digest and cost bits). Virtual-clock
+//! detectors consume only deterministic inputs (virtual clock, SLA
+//! seconds, utilization, queue depth), so their alerts are emitted as
+//! virtual `alert` trace instants and are bit-identical across reruns
+//! per (config, seed). Wall-clock detectors (p99, probe) consume real
+//! time and are emitted via `wall_instant` / flagged lines, stripped by
+//! the same conventions as every other wall record. Both contracts are
+//! pinned in `tests/observability.rs` and `scripts/verify.sh`.
+
+use std::collections::VecDeque;
+
+use super::registry::{MetricValue, MetricsRegistry};
+
+/// Fixed-capacity ring buffer of `(t, value)` samples with rate and
+/// derivative views — the time-series backing one watchdog signal.
+#[derive(Clone, Debug)]
+pub struct SeriesBuffer {
+    cap: usize,
+    data: VecDeque<(f64, f64)>,
+}
+
+impl SeriesBuffer {
+    /// `cap` is clamped to at least 2 (a rate needs two samples).
+    pub fn new(cap: usize) -> Self {
+        SeriesBuffer { cap: cap.max(2), data: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, t: f64, value: f64) {
+        if self.data.len() == self.cap {
+            self.data.pop_front();
+        }
+        self.data.push_back((t, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.data.back().copied()
+    }
+
+    /// Newest minus previous value (the discrete derivative in value).
+    pub fn delta(&self) -> Option<f64> {
+        let n = self.data.len();
+        if n < 2 {
+            return None;
+        }
+        Some(self.data[n - 1].1 - self.data[n - 2].1)
+    }
+
+    /// Value change per unit `t` over the newest interval; `None` until
+    /// two samples exist or when `t` did not advance.
+    pub fn rate(&self) -> Option<f64> {
+        self.rate_over(1)
+    }
+
+    /// Value change per unit `t` over the newest `k` intervals.
+    pub fn rate_over(&self, k: usize) -> Option<f64> {
+        let n = self.data.len();
+        if k == 0 || n < k + 1 {
+            return None;
+        }
+        let (t0, v0) = self.data[n - 1 - k];
+        let (t1, v1) = self.data[n - 1];
+        let dt = t1 - t0;
+        if dt <= 0.0 {
+            return None;
+        }
+        Some((v1 - v0) / dt)
+    }
+
+    /// Mean of the buffered values.
+    pub fn mean(&self) -> Option<f64> {
+        if self.data.is_empty() {
+            return None;
+        }
+        Some(self.data.iter().map(|(_, v)| v).sum::<f64>() / self.data.len() as f64)
+    }
+}
+
+/// Watchdog knobs; every field has a serving-sane default.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchConfig {
+    /// Snapshots that form the p99 warm-up baseline.
+    pub warmup: usize,
+    /// Consecutive breaching snapshots before a detector raises.
+    pub raise: usize,
+    /// Consecutive clear snapshots before a raised detector re-arms.
+    pub clear: usize,
+    /// p99 regression factor vs the warm-up baseline.
+    pub p99_factor: f64,
+    /// Utilization-collapse floor, as a fraction in [0, 1].
+    pub util_floor: f64,
+    /// Probe adjustments per snapshot interval that count as thrash.
+    pub thrash_limit: u64,
+    /// Ring capacity of each series.
+    pub history: usize,
+}
+
+impl Default for WatchConfig {
+    fn default() -> Self {
+        WatchConfig {
+            warmup: 4,
+            raise: 3,
+            clear: 2,
+            p99_factor: 3.0,
+            util_floor: 0.05,
+            thrash_limit: 3,
+            history: 64,
+        }
+    }
+}
+
+impl WatchConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.warmup >= 1, "watch warmup must be >= 1 snapshot");
+        anyhow::ensure!(self.raise >= 1, "watch raise must be >= 1 snapshot");
+        anyhow::ensure!(self.clear >= 1, "watch clear must be >= 1 snapshot");
+        anyhow::ensure!(
+            self.p99_factor.is_finite() && self.p99_factor > 1.0,
+            "watch p99 factor must be a finite value > 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.util_floor),
+            "watch utilization floor must be a fraction in [0, 1]"
+        );
+        anyhow::ensure!(self.history >= 2, "watch history must hold >= 2 samples");
+        Ok(())
+    }
+}
+
+/// One raised alert (the rising edge of a detector).
+#[derive(Clone, Debug)]
+pub struct Alert {
+    /// `sla_streak`, `util_collapse`, `p99_regression` or `probe_thrash`.
+    pub detector: &'static str,
+    /// Wall-clock detectors vary across reruns; virtual ones do not.
+    pub wall: bool,
+    /// Virtual clock at the snapshot that raised the alert.
+    pub at_secs: f64,
+    pub value: f64,
+    pub threshold: f64,
+    /// Consecutive breaching snapshots at the moment of raising.
+    pub streak: usize,
+    pub message: String,
+}
+
+impl Alert {
+    /// Args for the typed `alert` trace instant.
+    pub fn trace_args(&self) -> Vec<(String, crate::util::json::Json)> {
+        use crate::util::json::Json;
+        vec![
+            ("detector".to_string(), Json::Str(self.detector.to_string())),
+            ("value".to_string(), Json::Num(self.value)),
+            ("threshold".to_string(), Json::Num(self.threshold)),
+            ("streak".to_string(), Json::Num(self.streak as f64)),
+        ]
+    }
+
+    /// The `[alert]` stderr line; wall-clock detectors carry the
+    /// `[wall]` tag so deterministic line streams stay filterable.
+    pub fn stderr_line(&self) -> String {
+        let tag = if self.wall { "[alert][wall]" } else { "[alert]" };
+        format!("{tag} {} at clock {:.1} s: {}", self.detector, self.at_secs, self.message)
+    }
+}
+
+/// Per-detector hysteresis state.
+#[derive(Clone, Copy, Debug, Default)]
+struct DetectorState {
+    breaches: usize,
+    clears: usize,
+    active: bool,
+}
+
+impl DetectorState {
+    /// Feed one snapshot's breach verdict; `true` exactly on the rising
+    /// edge (see the hysteresis contract in the module docs).
+    fn step(&mut self, breach: bool, raise: usize, clear: usize) -> bool {
+        if breach {
+            self.clears = 0;
+            self.breaches += 1;
+            if !self.active && self.breaches >= raise {
+                self.active = true;
+                return true;
+            }
+        } else {
+            self.breaches = 0;
+            if self.active {
+                self.clears += 1;
+                if self.clears >= clear {
+                    self.active = false;
+                    self.clears = 0;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Probe facts the daemon passes alongside each snapshot (the probe is
+/// wall-throughput-driven, so everything here is wall-clock).
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeSnapshot {
+    /// `kStable` / `kUp` / `kDown` ([`ProbeState::k_name`](crate::serve::ProbeState::k_name)).
+    pub state: &'static str,
+    /// Cumulative thread adjustments so far.
+    pub adjustments: u64,
+    pub eval_threads: usize,
+}
+
+/// The online watchdog: feed it one registry snapshot per `--stats-every`
+/// tick, collect the alerts it raises. Read-only over the snapshots, so
+/// provably inert with respect to admission decisions.
+#[derive(Clone, Debug)]
+pub struct Watchdog {
+    cfg: WatchConfig,
+    snapshots: usize,
+    sla: SeriesBuffer,
+    util_integral: SeriesBuffer,
+    p99: SeriesBuffer,
+    adjustments: SeriesBuffer,
+    p99_warm_sum: f64,
+    p99_warm_n: usize,
+    p99_baseline: Option<f64>,
+    sla_state: DetectorState,
+    util_state: DetectorState,
+    p99_state: DetectorState,
+    thrash_state: DetectorState,
+}
+
+impl Watchdog {
+    pub fn new(cfg: WatchConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Watchdog {
+            cfg,
+            snapshots: 0,
+            sla: SeriesBuffer::new(cfg.history),
+            util_integral: SeriesBuffer::new(cfg.history),
+            p99: SeriesBuffer::new(cfg.history),
+            adjustments: SeriesBuffer::new(cfg.history),
+            p99_warm_sum: 0.0,
+            p99_warm_n: 0,
+            p99_baseline: None,
+            sla_state: DetectorState::default(),
+            util_state: DetectorState::default(),
+            p99_state: DetectorState::default(),
+            thrash_state: DetectorState::default(),
+        })
+    }
+
+    pub fn snapshots(&self) -> usize {
+        self.snapshots
+    }
+
+    /// The frozen p99 warm-up baseline, once `warmup` snapshots with
+    /// recorded decisions have been seen.
+    pub fn p99_baseline_us(&self) -> Option<f64> {
+        self.p99_baseline
+    }
+
+    /// Feed one snapshot; returns the alerts raised by it (rising edges
+    /// only — an already-active detector stays silent).
+    pub fn observe(&mut self, reg: &MetricsRegistry, probe: Option<ProbeSnapshot>) -> Vec<Alert> {
+        let scalar = |name: &str| match reg.get(name) {
+            Some(MetricValue::Gauge(v)) => Some(*v),
+            Some(MetricValue::Counter(c)) => Some(*c as f64),
+            _ => None,
+        };
+        self.snapshots += 1;
+        let clock = scalar("cluster.clock_secs").unwrap_or(0.0);
+        let mut alerts = Vec::new();
+
+        // sla_streak (virtual): cumulative violation seconds accruing.
+        if let Some(sla) = scalar("cluster.sla_viol_secs") {
+            self.sla.push(clock, sla);
+            let rate = self.sla.rate().unwrap_or(0.0);
+            let breach = rate > 0.0;
+            if self.sla_state.step(breach, self.cfg.raise, self.cfg.clear) {
+                alerts.push(Alert {
+                    detector: "sla_streak",
+                    wall: false,
+                    at_secs: clock,
+                    value: rate,
+                    threshold: 0.0,
+                    streak: self.sla_state.breaches,
+                    message: format!(
+                        "SLA violation accruing at {rate:.4} s/s for {} consecutive snapshots",
+                        self.sla_state.breaches
+                    ),
+                });
+            }
+        }
+
+        // util_collapse (virtual): windowed mean utilization under the
+        // floor while jobs queue. The cumulative mean × clock integral
+        // makes the newest interval's rate the windowed utilization.
+        if let (Some(util), Some(waiting)) =
+            (scalar("cluster.util_mean"), scalar("cluster.waiting"))
+        {
+            self.util_integral.push(clock, util * clock);
+            let windowed = self.util_integral.rate().unwrap_or(util);
+            let breach = windowed < self.cfg.util_floor && waiting >= 1.0;
+            if self.util_state.step(breach, self.cfg.raise, self.cfg.clear) {
+                alerts.push(Alert {
+                    detector: "util_collapse",
+                    wall: false,
+                    at_secs: clock,
+                    value: windowed,
+                    threshold: self.cfg.util_floor,
+                    streak: self.util_state.breaches,
+                    message: format!(
+                        "utilization {windowed:.4} under the {:.4} floor with {waiting:.0} \
+                         job(s) waiting",
+                        self.cfg.util_floor
+                    ),
+                });
+            }
+        }
+
+        // p99_regression (wall): decision latency vs a warm-up baseline.
+        if let Some(MetricValue::Histogram { count, p99, .. }) =
+            reg.get("cluster.decision_lat_us")
+        {
+            let (count, p99) = (*count, *p99);
+            if count > 0 {
+                self.p99.push(self.snapshots as f64, p99);
+                if self.p99_baseline.is_none() {
+                    self.p99_warm_sum += p99;
+                    self.p99_warm_n += 1;
+                    if self.p99_warm_n >= self.cfg.warmup {
+                        self.p99_baseline = Some(self.p99_warm_sum / self.p99_warm_n as f64);
+                    }
+                } else if let Some(base) = self.p99_baseline {
+                    let threshold = self.cfg.p99_factor * base;
+                    let breach = base > 0.0 && p99 > threshold;
+                    if self.p99_state.step(breach, self.cfg.raise, self.cfg.clear) {
+                        alerts.push(Alert {
+                            detector: "p99_regression",
+                            wall: true,
+                            at_secs: clock,
+                            value: p99,
+                            threshold,
+                            streak: self.p99_state.breaches,
+                            message: format!(
+                                "decision-latency p99 {p99:.0} us above {threshold:.0} us \
+                                 ({}x the {base:.0} us warm-up baseline)",
+                                self.cfg.p99_factor
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        // probe_thrash (wall): thread adjustments per snapshot interval.
+        if let Some(p) = probe {
+            self.adjustments.push(self.snapshots as f64, p.adjustments as f64);
+            let delta = self.adjustments.delta().unwrap_or(0.0);
+            let breach = delta >= self.cfg.thrash_limit as f64;
+            if self.thrash_state.step(breach, self.cfg.raise, self.cfg.clear) {
+                alerts.push(Alert {
+                    detector: "probe_thrash",
+                    wall: true,
+                    at_secs: clock,
+                    value: delta,
+                    threshold: self.cfg.thrash_limit as f64,
+                    streak: self.thrash_state.breaches,
+                    message: format!(
+                        "probe made {delta:.0} adjustments in one snapshot interval \
+                         (state {}, {} eval threads)",
+                        p.state, p.eval_threads
+                    ),
+                });
+            }
+        }
+
+        alerts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(clock: f64, sla: f64, util: f64, waiting: u64) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.observe_gauge("cluster.clock_secs", clock);
+        r.observe_gauge("cluster.sla_viol_secs", sla);
+        r.observe_gauge("cluster.util_mean", util);
+        r.observe_count("cluster.waiting", waiting);
+        r
+    }
+
+    #[test]
+    fn series_buffer_rates_and_eviction() {
+        let mut s = SeriesBuffer::new(3);
+        assert!(s.rate().is_none() && s.delta().is_none() && s.mean().is_none());
+        s.push(0.0, 0.0);
+        s.push(10.0, 5.0);
+        assert_eq!(s.rate(), Some(0.5));
+        assert_eq!(s.delta(), Some(5.0));
+        s.push(20.0, 20.0);
+        assert_eq!(s.rate(), Some(1.5));
+        assert_eq!(s.rate_over(2), Some(1.0));
+        assert!(s.rate_over(3).is_none(), "only 3 samples buffered");
+        s.push(30.0, 20.0);
+        assert_eq!(s.len(), 3, "capacity evicts the oldest");
+        assert_eq!(s.last(), Some((30.0, 20.0)));
+        assert_eq!(s.mean(), Some(45.0 / 3.0));
+        // A stalled clock yields no rate rather than an infinity.
+        s.push(30.0, 25.0);
+        assert!(s.rate().is_none());
+    }
+
+    #[test]
+    fn sla_streak_respects_hysteresis() {
+        let cfg = WatchConfig { raise: 2, clear: 2, ..WatchConfig::default() };
+        let mut w = Watchdog::new(cfg).unwrap();
+        let mut fired = Vec::new();
+        // Two breaching snapshots raise exactly once; the third stays
+        // silent while active.
+        for (clock, sla) in [(10.0, 0.0), (20.0, 1.0), (30.0, 2.0), (40.0, 3.0)] {
+            fired.extend(w.observe(&snap(clock, sla, 0.8, 0), None));
+        }
+        assert_eq!(fired.len(), 1, "{fired:?}");
+        assert_eq!(fired[0].detector, "sla_streak");
+        assert!(!fired[0].wall);
+        assert_eq!(fired[0].streak, 2);
+        // One clear snapshot is not enough to re-arm (clear = 2)…
+        fired.extend(w.observe(&snap(50.0, 3.0, 0.8, 0), None));
+        fired.extend(w.observe(&snap(60.0, 4.0, 0.8, 0), None));
+        assert_eq!(fired.len(), 1, "detector must stay active through a 1-snapshot clear");
+        // …but two are, and a fresh streak raises a second alert.
+        fired.extend(w.observe(&snap(70.0, 4.0, 0.8, 0), None));
+        fired.extend(w.observe(&snap(80.0, 4.0, 0.8, 0), None));
+        fired.extend(w.observe(&snap(90.0, 5.0, 0.8, 0), None));
+        fired.extend(w.observe(&snap(100.0, 6.0, 0.8, 0), None));
+        assert_eq!(fired.len(), 2, "{fired:?}");
+    }
+
+    #[test]
+    fn util_collapse_needs_waiting_jobs() {
+        let cfg = WatchConfig { raise: 2, ..WatchConfig::default() };
+        // Idle-and-empty is not a collapse: no alert without waiters.
+        let mut w = Watchdog::new(cfg).unwrap();
+        let mut fired = Vec::new();
+        for i in 1..=4 {
+            fired.extend(w.observe(&snap(i as f64 * 10.0, 0.0, 0.01, 0), None));
+        }
+        assert!(fired.is_empty(), "{fired:?}");
+        // Starved with queued jobs is: raises once.
+        let mut w = Watchdog::new(cfg).unwrap();
+        let mut fired = Vec::new();
+        for i in 1..=4 {
+            fired.extend(w.observe(&snap(i as f64 * 10.0, 0.0, 0.01, 2), None));
+        }
+        assert_eq!(fired.len(), 1, "{fired:?}");
+        assert_eq!(fired[0].detector, "util_collapse");
+        assert!(!fired[0].wall);
+    }
+
+    #[test]
+    fn probe_thrash_counts_adjustments_per_interval() {
+        let cfg = WatchConfig { raise: 1, thrash_limit: 2, ..WatchConfig::default() };
+        let mut w = Watchdog::new(cfg).unwrap();
+        let probe = |adjustments| {
+            Some(ProbeSnapshot { state: "kUp", adjustments, eval_threads: 4 })
+        };
+        let mut fired = Vec::new();
+        fired.extend(w.observe(&snap(10.0, 0.0, 0.5, 0), probe(0)));
+        fired.extend(w.observe(&snap(20.0, 0.0, 0.5, 0), probe(1)));
+        assert!(fired.is_empty(), "one adjustment per interval is healthy: {fired:?}");
+        fired.extend(w.observe(&snap(30.0, 0.0, 0.5, 0), probe(4)));
+        assert_eq!(fired.len(), 1, "{fired:?}");
+        assert_eq!(fired[0].detector, "probe_thrash");
+        assert!(fired[0].wall);
+        assert!(fired[0].message.contains("kUp"), "{}", fired[0].message);
+    }
+
+    #[test]
+    fn p99_regression_compares_against_the_warmup_baseline() {
+        use crate::metrics::Histogram;
+        let cfg = WatchConfig { warmup: 2, raise: 2, ..WatchConfig::default() };
+        let mut w = Watchdog::new(cfg).unwrap();
+        let hist = Histogram::new(64);
+        let snap_with_lat = |hist: &Histogram, clock: f64| {
+            let mut r = MetricsRegistry::new();
+            r.observe_gauge("cluster.clock_secs", clock);
+            r.observe_histogram("cluster.decision_lat_us", hist, 1.0);
+            r
+        };
+        // Warm-up: p99 around 2 over two snapshots.
+        for v in [1, 2, 2, 1] {
+            hist.record(v);
+        }
+        assert!(w.observe(&snap_with_lat(&hist, 10.0), None).is_empty());
+        assert!(w.observe(&snap_with_lat(&hist, 20.0), None).is_empty());
+        assert_eq!(w.p99_baseline_us(), Some(2.0));
+        // Regression: flood the histogram so p99 lands far above 3×2.
+        for _ in 0..200 {
+            hist.record(40);
+        }
+        assert!(w.observe(&snap_with_lat(&hist, 30.0), None).is_empty(), "raise = 2");
+        let fired = w.observe(&snap_with_lat(&hist, 40.0), None);
+        assert_eq!(fired.len(), 1, "{fired:?}");
+        assert_eq!(fired[0].detector, "p99_regression");
+        assert!(fired[0].wall);
+        assert!(fired[0].value > fired[0].threshold);
+    }
+
+    #[test]
+    fn identical_snapshot_streams_fire_identical_alerts() {
+        let cfg = WatchConfig { raise: 2, ..WatchConfig::default() };
+        let stream: Vec<MetricsRegistry> = (1..=8)
+            .map(|i| snap(i as f64 * 5.0, if i > 2 { i as f64 } else { 0.0 }, 0.6, 1))
+            .collect();
+        let run = |mut w: Watchdog| -> Vec<(String, u64, u64)> {
+            stream
+                .iter()
+                .flat_map(|r| w.observe(r, None))
+                .map(|a| (a.detector.to_string(), a.at_secs.to_bits(), a.value.to_bits()))
+                .collect()
+        };
+        let a = run(Watchdog::new(cfg).unwrap());
+        let b = run(Watchdog::new(cfg).unwrap());
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "the stream must raise at least one alert");
+    }
+
+    #[test]
+    fn config_validation_names_the_offending_knob() {
+        assert!(WatchConfig { raise: 0, ..WatchConfig::default() }.validate().is_err());
+        assert!(WatchConfig { clear: 0, ..WatchConfig::default() }.validate().is_err());
+        assert!(WatchConfig { warmup: 0, ..WatchConfig::default() }.validate().is_err());
+        assert!(WatchConfig { p99_factor: 1.0, ..WatchConfig::default() }
+            .validate()
+            .is_err());
+        assert!(WatchConfig { util_floor: 1.5, ..WatchConfig::default() }
+            .validate()
+            .is_err());
+        assert!(WatchConfig { history: 1, ..WatchConfig::default() }.validate().is_err());
+        assert!(WatchConfig::default().validate().is_ok());
+    }
+}

@@ -24,7 +24,7 @@ use std::time::Instant;
 use crate::cluster::{
     policy_by_name, policy_names, ClusterConfig, ClusterReport, ClusterSim, JobQueue,
 };
-use crate::obs::{MetricsRegistry, Tracer};
+use crate::obs::{Alert, MetricsRegistry, ProbeSnapshot, Tracer, WatchConfig, Watchdog};
 use crate::resources::ResourcePool;
 use crate::util::json::Json;
 
@@ -77,6 +77,10 @@ pub struct ServeConfig {
     /// arrivals (0 = off). Stderr only — the deterministic report is
     /// unaffected.
     pub stats_every: usize,
+    /// `None` disables the online watchdog. When set, every `[stats]`
+    /// snapshot also feeds the [`Watchdog`]'s detectors; requires
+    /// `stats_every > 0` (the watchdog samples at the stats cadence).
+    pub watch: Option<WatchConfig>,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +92,7 @@ impl Default for ServeConfig {
             clock: ClockMode::Virtual,
             progress_every: 0,
             stats_every: 0,
+            watch: None,
         }
     }
 }
@@ -97,6 +102,13 @@ impl ServeConfig {
         self.cluster.validate()?;
         if let Some(p) = &self.probe {
             p.validate()?;
+        }
+        if let Some(w) = &self.watch {
+            w.validate()?;
+            anyhow::ensure!(
+                self.stats_every > 0,
+                "the watchdog samples at the stats cadence: --watch requires --stats-every > 0"
+            );
         }
         if let ClockMode::Wall { speedup } = self.clock {
             anyhow::ensure!(speedup > 0.0 && speedup.is_finite(), "invalid wall speedup");
@@ -117,6 +129,10 @@ pub struct ServeOutcome {
     pub initial_eval_threads: usize,
     pub final_eval_threads: usize,
     pub probe: Option<ProbeSummary>,
+    /// Alerts the watchdog raised, in snapshot order; `None` when the
+    /// watchdog was disabled. Virtual-clock alerts are deterministic per
+    /// `(config, seed)`; wall-clock ones vary run to run.
+    pub alerts: Option<Vec<Alert>>,
     /// Wall-clock run time and decision throughput (not deterministic).
     pub wall_secs: f64,
     pub decisions_per_sec: f64,
@@ -224,6 +240,8 @@ pub fn run_serve_traced(
         .clone()
         .map(|p| ThroughputProbe::new(p, initial_threads))
         .transpose()?;
+    let mut watchdog = cfg.watch.map(Watchdog::new).transpose()?;
+    let mut alerts: Vec<Alert> = Vec::new();
     let wall_start = Instant::now();
     // The probe's measurement window: decisions counted and wall time
     // elapsed since the window opened. Pacing sleeps are tracked
@@ -236,7 +254,7 @@ pub fn run_serve_traced(
     let mut win_decisions = 0u64;
     let mut win_start = Instant::now();
     let mut win_paced = 0.0f64;
-    let mut tick = |sim: &mut ClusterSim, paced: f64| {
+    let mut tick = |sim: &mut ClusterSim, probe: &mut Option<ThroughputProbe>, paced: f64| {
         let Some(p) = probe.as_mut() else {
             return;
         };
@@ -272,11 +290,11 @@ pub fn run_serve_traced(
             }
             paced_secs += pace(cfg.clock, wall_start, at);
             sim.step()?;
-            tick(&mut sim, paced_secs);
+            tick(&mut sim, &mut probe, paced_secs);
         }
         paced_secs += pace(cfg.clock, wall_start, job.arrival_secs);
         sim.add_job(job.clone())?;
-        tick(&mut sim, paced_secs);
+        tick(&mut sim, &mut probe, paced_secs);
         if tracer.is_enabled() {
             // Virtual-clock snapshot of the loop state at each arrival —
             // deterministic, so it survives the trace determinism diff.
@@ -294,7 +312,31 @@ pub fn run_serve_traced(
         if cfg.stats_every > 0 && (i + 1) % cfg.stats_every == 0 {
             let mut reg = MetricsRegistry::new();
             sim.snapshot_metrics(&mut reg);
-            eprintln!("[stats] {}", reg.stats_line());
+            let probe_facts = match probe.as_ref() {
+                None => format!("probe=off eval_threads={}", sim.eval_threads()),
+                Some(p) => {
+                    format!("probe={} eval_threads={}", p.state().k_name(), p.current())
+                }
+            };
+            eprintln!("[stats] {} {probe_facts}", reg.stats_line());
+            if let Some(w) = watchdog.as_mut() {
+                let probe_snap = probe.as_ref().map(|p| ProbeSnapshot {
+                    state: p.state().k_name(),
+                    adjustments: p.summary().adjustments,
+                    eval_threads: p.current(),
+                });
+                for alert in w.observe(&reg, probe_snap) {
+                    if tracer.is_enabled() {
+                        if alert.wall {
+                            tracer.wall_instant("serve", "alert", alert.trace_args());
+                        } else {
+                            tracer.instant("serve", "alert", alert.trace_args());
+                        }
+                    }
+                    eprintln!("{}", alert.stderr_line());
+                    alerts.push(alert);
+                }
+            }
         }
         if cfg.progress_every > 0 && (i + 1) % cfg.progress_every == 0 {
             eprintln!(
@@ -313,7 +355,7 @@ pub fn run_serve_traced(
     while let Some(at) = sim.next_event_at() {
         paced_secs += pace(cfg.clock, wall_start, at);
         sim.step()?;
-        tick(&mut sim, paced_secs);
+        tick(&mut sim, &mut probe, paced_secs);
     }
     let wall_secs = wall_start.elapsed().as_secs_f64();
     let final_eval_threads = sim.eval_threads();
@@ -341,6 +383,7 @@ pub fn run_serve_traced(
         initial_eval_threads: initial_threads,
         final_eval_threads,
         probe: probe.map(|p| p.summary()),
+        alerts: watchdog.map(|_| alerts),
         wall_secs,
         decisions_per_sec: report.decisions as f64 / wall_secs.max(1e-9),
         metrics,
@@ -420,6 +463,18 @@ impl ServeOutcome {
                 );
             }
         }
+        if let Some(alerts) = &self.alerts {
+            // Virtual-clock alerts are deterministic per (config, seed),
+            // so their count may sit on a plain line; wall-clock alert
+            // counts vary run to run and carry the [wall] prefix.
+            let virt = alerts.iter().filter(|a| !a.wall).count();
+            let _ = writeln!(out, "watchdog: {virt} virtual-clock alert(s)");
+            let _ = writeln!(
+                out,
+                "[wall] watchdog: {} wall-clock alert(s)",
+                alerts.len() - virt
+            );
+        }
         out
     }
 
@@ -476,6 +531,31 @@ impl ServeOutcome {
                 ]),
             ),
             ("probe".into(), probe),
+            (
+                "watchdog".into(),
+                match &self.alerts {
+                    None => Json::Null,
+                    Some(alerts) => {
+                        let virt = alerts.iter().filter(|a| !a.wall).count();
+                        Json::Obj(vec![
+                            ("virtual_alerts".into(), Json::Num(virt as f64)),
+                            (
+                                "wall_alerts".into(),
+                                Json::Num((alerts.len() - virt) as f64),
+                            ),
+                            (
+                                "detectors".into(),
+                                Json::Arr(
+                                    alerts
+                                        .iter()
+                                        .map(|a| Json::Str(a.detector.to_string()))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    }
+                },
+            ),
         ])
     }
 }
@@ -521,6 +601,7 @@ mod tests {
             clock,
             progress_every: 0,
             stats_every: 0,
+            watch: None,
         };
         let virt = run_serve(&pool, &queue, &mk(ClockMode::Virtual), 17).unwrap();
         let vp = virt.probe.clone().unwrap();

@@ -79,6 +79,18 @@ pub enum ProbeState {
     Down,
 }
 
+impl ProbeState {
+    /// The mongo-convention name (`kStable`/`kUp`/`kDown`), used by the
+    /// serve `[stats]` line and the watchdog's probe snapshots.
+    pub fn k_name(self) -> &'static str {
+        match self {
+            ProbeState::Stable => "kStable",
+            ProbeState::Up => "kUp",
+            ProbeState::Down => "kDown",
+        }
+    }
+}
+
 /// End-of-run probe summary for reports.
 #[derive(Clone, Debug)]
 pub struct ProbeSummary {

@@ -15,6 +15,14 @@
 
 use std::fmt::Write as _;
 
+/// Maximum container nesting the parser accepts. Operator-supplied
+/// files (`trace-profile`, `trace-lint`, `bench-diff`) go through this
+/// parser, and recursive descent turns adversarial nesting into a stack
+/// overflow — an abort, not a catchable error — so depth is bounded
+/// here with a positioned [`JsonError`] instead. Every artifact the
+/// crate itself emits nests a handful of levels deep.
+pub const MAX_DEPTH: usize = 64;
+
 /// One JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -38,7 +46,7 @@ pub struct JsonError {
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let chars: Vec<char> = text.chars().collect();
-        let mut p = Parser { chars, pos: 0 };
+        let mut p = Parser { chars, pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -203,11 +211,23 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser {
     chars: Vec<char>,
     pos: usize,
+    depth: usize,
 }
 
 impl Parser {
     fn err(&self, msg: impl Into<String>) -> JsonError {
         JsonError { at: self.pos, msg: msg.into() }
+    }
+
+    /// Entering a container (`[` / `{`); errors past [`MAX_DEPTH`].
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(format!(
+                "JSON nested deeper than the supported maximum depth of {MAX_DEPTH}"
+            )));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<char> {
@@ -336,10 +356,12 @@ impl Parser {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect('[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -348,7 +370,10 @@ impl Parser {
             self.skip_ws();
             match self.bump() {
                 Some(',') => continue,
-                Some(']') => return Ok(Json::Arr(items)),
+                Some(']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 Some(c) => {
                     return Err(self.err(format!("expected `,` or `]` in array, found `{c}`")));
                 }
@@ -359,10 +384,12 @@ impl Parser {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect('{')?;
+        self.enter()?;
         let mut members = Vec::new();
         self.skip_ws();
         if self.peek() == Some('}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(members));
         }
         loop {
@@ -376,7 +403,10 @@ impl Parser {
             self.skip_ws();
             match self.bump() {
                 Some(',') => continue,
-                Some('}') => return Ok(Json::Obj(members)),
+                Some('}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(members));
+                }
                 Some(c) => {
                     return Err(self.err(format!("expected `,` or `}}` in object, found `{c}`")));
                 }
@@ -456,6 +486,30 @@ mod tests {
         assert_eq!(back.get("lo"), Some(&Json::Null));
         assert_eq!(back.get("hi"), Some(&Json::Null));
         assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded_with_a_named_limit() {
+        // Exactly MAX_DEPTH levels parse; one more is a positioned error
+        // naming the limit, not a recursion-driven stack overflow.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&too_deep).unwrap_err();
+        assert!(e.to_string().contains("maximum depth of 64"), "{e}");
+        // Objects count against the same budget as arrays.
+        let mixed = format!(
+            "{}{}1{}{}",
+            "{\"k\": ".repeat(40),
+            "[".repeat(40),
+            "]".repeat(40),
+            "}".repeat(40)
+        );
+        let e = Json::parse(&mixed).unwrap_err();
+        assert!(e.to_string().contains("maximum depth of 64"), "{e}");
+        // Siblings do not accumulate: depth is nesting, not total count.
+        let wide = format!("[{}]", vec!["[1]"; 500].join(", "));
+        assert!(Json::parse(&wide).is_ok());
     }
 
     #[test]

@@ -7,8 +7,9 @@
 
 use heterps::cluster::{self, policy_by_name, steady_mix, tight_mix, tight_pool, ClusterConfig};
 use heterps::cost::{CostConfig, CostModel};
+use heterps::metrics::Histogram;
 use heterps::model::zoo;
-use heterps::obs::{lint_trace, Tracer};
+use heterps::obs::{lint_trace, profile_trace, MetricValue, MetricsRegistry, Tracer, WatchConfig};
 use heterps::resources::paper_testbed;
 use heterps::sched::{self, Budget, EvalEngine, SchedulerSpec};
 use heterps::serve::{self, admission_digest, ClockMode, ServeConfig};
@@ -29,6 +30,7 @@ fn serve_cfg(method: &str) -> ServeConfig {
         clock: ClockMode::Virtual,
         progress_every: 0,
         stats_every: 0,
+        watch: None,
     }
 }
 
@@ -172,4 +174,191 @@ fn tracing_is_inert_for_serve_and_metrics_snapshot_is_populated() {
     assert!(line.contains("cluster.decisions="), "stats line lacks decisions: {line}");
     let rendered = a.metrics.to_json().render();
     assert!(rendered.contains("cluster.decision_lat_us"), "histogram missing from dump");
+}
+
+/// The PR 9 acceptance contract for `trace-profile`: on a real cluster
+/// trace (preemptions included), every completed job's JCT decomposes
+/// into queueing / admission-search / running / below-floor segments
+/// that sum back to the JCT, and the queueing + search + below-floor
+/// side of the split reproduces the simulator's own SLA-violation
+/// accounting.
+#[test]
+fn trace_profile_decomposes_every_jct_on_a_real_cluster_trace() {
+    let pool = tight_pool();
+    let queue = tight_mix(6, 42, 20_000.0);
+    let cfg = cluster_cfg("greedy");
+    let tracer = Tracer::new();
+    let policy = policy_by_name("srtf", &pool).unwrap();
+    let report =
+        cluster::run_cluster_traced(&pool, &queue, policy.as_ref(), &cfg, 42, &tracer).unwrap();
+    let profile = profile_trace(&tracer.render_jsonl()).unwrap();
+
+    assert_eq!(profile.jobs.len(), queue.len(), "one attribution per arrival");
+    let mut completed = 0usize;
+    let mut viol = 0.0f64;
+    for j in &profile.jobs {
+        let Some(jct) = j.jct_secs() else { continue };
+        completed += 1;
+        let sum = j.segments_sum_secs();
+        assert!(
+            (sum - jct).abs() <= 1e-6 * jct.max(1.0),
+            "job {}: segments {sum} != jct {jct} \
+             (queue {} + search {} + run {} + below {})",
+            j.job,
+            j.queueing_secs,
+            j.search_secs,
+            j.running_secs,
+            j.below_floor_secs
+        );
+        assert!(
+            j.queueing_secs >= 0.0
+                && j.search_secs >= 0.0
+                && j.running_secs >= 0.0
+                && j.below_floor_secs >= 0.0,
+            "job {}: negative segment",
+            j.job
+        );
+        viol += j.queueing_secs + j.search_secs + j.below_floor_secs;
+    }
+    assert_eq!(completed, report.completed(), "completed-job count mismatch");
+    let report_viol = report.total_sla_violation_secs();
+    assert!(
+        (viol - report_viol).abs() <= 1e-6 * report_viol.max(1.0),
+        "attributed violation {viol} != simulator violation {report_viol}"
+    );
+    let preempts: u64 = profile.jobs.iter().map(|j| j.preemptions).sum();
+    let report_preempts: u64 = report.jobs.iter().map(|j| j.preemptions as u64).sum();
+    assert_eq!(preempts, report_preempts, "preemption counts diverge");
+    assert!(preempts >= 1, "srtf on the tight mix must preempt for the test to bite");
+
+    // The critical path is chronological and ends at the final completion.
+    assert!(!profile.critical_path.is_empty(), "no critical path on a completed run");
+    for pair in profile.critical_path.windows(2) {
+        assert!(pair[0].to_secs <= pair[1].from_secs + 1e-9, "critical path not chronological");
+    }
+    let last = profile.critical_path.last().unwrap();
+    assert!(
+        (last.to_secs - report.makespan_secs).abs() <= 1e-6,
+        "critical path ends at {}, makespan {}",
+        last.to_secs,
+        report.makespan_secs
+    );
+
+    // Deterministic per trace: profiling the identical text twice renders
+    // identically, and the chrome export profiles to the same attribution.
+    let again = profile_trace(&tracer.render_jsonl()).unwrap();
+    assert_eq!(profile.render(), again.render());
+    assert_eq!(profile.to_json().render(), again.to_json().render());
+}
+
+/// The PR 9 watchdog contract: enabling `--watch` changes neither the
+/// admission digest nor the cost bits, and two watchdog runs raise
+/// bit-identical virtual-clock alert streams.
+#[test]
+fn watchdog_is_inert_and_virtual_alerts_are_bit_deterministic() {
+    let pool = tight_pool();
+    let queue = steady_mix(80, 11, 20_000.0);
+    let off = serve_cfg("greedy");
+    let base = serve::run_serve(&pool, &queue, &off, 11).unwrap();
+    assert!(base.alerts.is_none(), "watchdog off must report no alert stream");
+    assert!(
+        base.report.total_sla_violation_secs() > 0.0,
+        "precondition: the tight pool must accrue SLA violations for the streak detector"
+    );
+
+    let mut on = serve_cfg("greedy");
+    on.stats_every = 5;
+    on.watch = Some(WatchConfig { raise: 1, clear: 1, util_floor: 0.0, ..Default::default() });
+    let t1 = Tracer::new();
+    let a = serve::run_serve_traced(&pool, &queue, &on, 11, &t1).unwrap();
+    let t2 = Tracer::new();
+    let b = serve::run_serve_traced(&pool, &queue, &on, 11, &t2).unwrap();
+
+    // Inert: watchdog-on == watchdog-off, bit for bit.
+    assert_eq!(base.admission_digest, a.admission_digest, "watchdog perturbed admissions");
+    assert_eq!(
+        base.report.cumulative_cost_usd.to_bits(),
+        a.report.cumulative_cost_usd.to_bits(),
+        "watchdog perturbed the cost bits"
+    );
+    assert_eq!(
+        base.report.makespan_secs.to_bits(),
+        a.report.makespan_secs.to_bits(),
+        "watchdog perturbed the makespan"
+    );
+    assert_eq!(a.admission_digest, b.admission_digest, "rerun digest");
+
+    // Bit-identical virtual alert streams across reruns (wall-clock
+    // detectors are exempt: their inputs are real time).
+    let virt_alerts = |o: &serve::ServeOutcome| -> Vec<(String, u64, u64, usize)> {
+        o.alerts
+            .as_ref()
+            .expect("watchdog on")
+            .iter()
+            .filter(|al| !al.wall)
+            .map(|al| {
+                (al.detector.to_string(), al.at_secs.to_bits(), al.value.to_bits(), al.streak)
+            })
+            .collect()
+    };
+    let va = virt_alerts(&a);
+    assert_eq!(va, virt_alerts(&b), "virtual alert streams diverged across reruns");
+    assert!(
+        !va.is_empty(),
+        "a tight pool accruing {} s of SLA violation must raise the streak detector",
+        a.report.total_sla_violation_secs()
+    );
+
+    // The typed `alert` trace events are part of the deterministic
+    // virtual-clock trace, one per virtual alert.
+    let j1 = t1.render_jsonl();
+    assert_eq!(virtual_lines(&j1), virtual_lines(&t2.render_jsonl()));
+    let traced_virtual_alerts = virtual_lines(&j1)
+        .lines()
+        .filter(|l| l.contains("\"alert\""))
+        .count();
+    assert_eq!(traced_virtual_alerts, va.len(), "trace and outcome disagree on alerts");
+    lint_trace(&j1).unwrap();
+}
+
+/// Satellite: registry snapshots keep insertion order across reruns, the
+/// two watchdog input gauges are present, and the Histogram mean/count
+/// accessors round-trip through `observe_histogram` (the watchdog's p99
+/// baseline path).
+#[test]
+fn metrics_registry_snapshots_are_insertion_order_stable() {
+    let snapshot_names = || -> Vec<String> {
+        let pool = tight_pool();
+        let queue = steady_mix(30, 7, 20_000.0);
+        let out = serve::run_serve(&pool, &queue, &serve_cfg("greedy"), 7).unwrap();
+        out.metrics
+            .to_json()
+            .as_obj()
+            .expect("registry dump is an object")
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect()
+    };
+    let names = snapshot_names();
+    assert_eq!(names, snapshot_names(), "registry name order varied across reruns");
+    for required in ["cluster.clock_secs", "cluster.sla_viol_secs", "cluster.util_mean"] {
+        assert!(names.iter().any(|n| n == required), "snapshot lacks `{required}`: {names:?}");
+    }
+    assert_eq!(names[0], "cluster.clock_secs", "clock must lead the stats line");
+
+    let h = Histogram::new(8);
+    for v in [1, 2, 3] {
+        h.record(v);
+    }
+    assert_eq!(h.count(), 3);
+    assert!((h.mean() - 2.0).abs() < 1e-12);
+    let mut reg = MetricsRegistry::new();
+    reg.observe_histogram("lat", &h, 2.0);
+    match reg.get("lat") {
+        Some(MetricValue::Histogram { count, mean, .. }) => {
+            assert_eq!(*count, 3);
+            assert!((mean - 4.0).abs() < 1e-12, "scale must apply to the mean, got {mean}");
+        }
+        other => panic!("expected a histogram snapshot, got {other:?}"),
+    }
 }

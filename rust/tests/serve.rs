@@ -20,6 +20,7 @@ fn serve_cfg(method: &str, budget: usize) -> ServeConfig {
         clock: ClockMode::Virtual,
         progress_every: 0,
         stats_every: 0,
+        watch: None,
     }
 }
 

@@ -30,13 +30,25 @@
 #    (wall-stamped records stripped, the serve `[wall]` convention), every
 #    exported trace — JSONL and Chrome — must pass `heterps trace-lint`,
 #    and `--metrics-out` must write a non-empty registry dump;
-# 8. a `heterps calibrate` smoke: fit an overlay from the simulator
+# 8. a `heterps trace-profile` smoke: profiling the two identical traced
+#    cluster runs must render bit-identically (the profile is a pure
+#    function of the trace), both export formats must profile, and
+#    --csv/--json-out must write non-empty artifacts;
+# 9. a watchdog smoke: `serve --watch` output (modulo `[wall]` lines) and
+#    the virtual-clock records of its trace — typed `alert` events
+#    included — must be bit-identical across reruns, and the admission
+#    digest must match the watch-less run exactly (the PR 8 inertness
+#    contract extended to the watchdog);
+# 10. a `heterps bench-diff` smoke: a self-diff of the checked-in
+#    BENCH_perf.json must gate clean (pending rows are skips, never
+#    regressions), and a synthetic regression must trip `--gate`;
+# 11. a `heterps calibrate` smoke: fit an overlay from the simulator
 #    sweep, check the emitted `[calibration]` section loads back, and
 #    pin the identity-overlay bit-identity contract (a header-only
 #    `[calibration]` config section must not change `schedule` output);
-# 9. `cargo fmt --check` when rustfmt is installed (skipped with a loud
+# 12. `cargo fmt --check` when rustfmt is installed (skipped with a loud
 #    warning otherwise);
-# 10. `cargo clippy --all-targets -- -D warnings` when the clippy
+# 13. `cargo clippy --all-targets -- -D warnings` when the clippy
 #    component is installed (skipped with a loud warning otherwise).
 set -euo pipefail
 
@@ -219,6 +231,75 @@ fi
 "$BIN" trace-lint "$TRACE_TMP/serve.a.jsonl"
 if [ ! -s "$TRACE_TMP/serve.a.metrics.json" ]; then
   echo "error: serve --metrics-out wrote no registry dump" >&2
+  exit 1
+fi
+
+echo "== trace-profile smoke: the profile is a pure function of the trace"
+# Two traced cluster runs differ only in wall-stamped records, and the
+# profile's timing columns are virtual-clock only for cluster traces —
+# so profiling run a and run b must render bit-identically.
+"$BIN" trace-profile "$TRACE_TMP/cluster.a.jsonl" > "$TRACE_TMP/profile.a.txt"
+"$BIN" trace-profile "$TRACE_TMP/cluster.b.jsonl" > "$TRACE_TMP/profile.b.txt"
+if ! diff -u "$TRACE_TMP/profile.a.txt" "$TRACE_TMP/profile.b.txt"; then
+  echo "error: trace-profile is not deterministic across identical traced runs" >&2
+  exit 1
+fi
+# Both export formats must profile, and the sinks must write artifacts.
+"$BIN" trace-profile "$TRACE_TMP/cluster.chrome.json" >/dev/null
+"$BIN" trace-profile "$TRACE_TMP/serve.a.jsonl" \
+  --csv "$TRACE_TMP/profile.csv" --json-out "$TRACE_TMP/profile.json" >/dev/null 2>/dev/null
+if [ ! -s "$TRACE_TMP/profile.csv" ] || [ ! -s "$TRACE_TMP/profile.json" ]; then
+  echo "error: trace-profile --csv/--json-out wrote no artifact" >&2
+  exit 1
+fi
+
+echo "== watchdog smoke: --watch is inert and its virtual alerts are deterministic"
+for run in a b; do
+  "$BIN" serve --stream "$SERVE_TMP/stream.jsonl" --arrival-seed 7 --budget-evals 32 \
+    --stats-every 4 --watch --watch-raise 1 --watch-clear 1 --watch-util-floor 0 \
+    --trace-out "$TRACE_TMP/watch.$run.jsonl" \
+    2>/dev/null | grep -v '^\[wall\]' > "$TRACE_TMP/watch.$run.txt"
+  grep -v '"wall": true' "$TRACE_TMP/watch.$run.jsonl" > "$TRACE_TMP/watch.$run.virt"
+done
+if ! diff -u "$TRACE_TMP/watch.a.txt" "$TRACE_TMP/watch.b.txt"; then
+  echo "error: serve --watch output is not deterministic across reruns" >&2
+  exit 1
+fi
+if ! diff -u "$TRACE_TMP/watch.a.virt" "$TRACE_TMP/watch.b.virt"; then
+  echo "error: the watchdog's virtual-clock alert stream is not deterministic" >&2
+  exit 1
+fi
+# Inertness: the watchdog only observes — the admission digest must match
+# the watch-less run from the serve smoke exactly.
+grep 'admission digest' "$SERVE_TMP/a.txt" > "$TRACE_TMP/digest.off.txt"
+grep 'admission digest' "$TRACE_TMP/watch.a.txt" > "$TRACE_TMP/digest.on.txt"
+if ! diff -u "$TRACE_TMP/digest.off.txt" "$TRACE_TMP/digest.on.txt"; then
+  echo "error: the watchdog perturbed the admission digest" >&2
+  exit 1
+fi
+# Typed alert events ride the trace and must pass the linter.
+"$BIN" trace-lint "$TRACE_TMP/watch.a.jsonl"
+
+echo "== bench-diff smoke: self-diff gates clean, a synthetic regression trips"
+# The checked-in artifact self-diffs to zero regressions under --gate
+# (pending benches contribute skips, never regressions).
+if [ -s "$ROOT/results/BENCH_perf.json" ]; then
+  BENCH_ART="$ROOT/results/BENCH_perf.json"
+else
+  BENCH_ART="$TRACE_TMP/bench.pending.json"
+  printf '{"note": "synthetic", "benches": {"p": {"status": "pending", "rows": []}}}\n' > "$BENCH_ART"
+fi
+"$BIN" bench-diff "$BENCH_ART" "$BENCH_ART" --gate > "$TRACE_TMP/benchdiff.txt"
+if ! grep -q '0 regression(s)' "$TRACE_TMP/benchdiff.txt"; then
+  echo "error: bench-diff self-diff reported regressions" >&2
+  exit 1
+fi
+# A 2x latency regression beyond a 10% threshold must trip the gate.
+printf '{"benches": {"b": {"status": "measured", "rows": [{"op": "x", "mean": 1.0, "std": 0.0, "unit": "us"}]}}}\n' > "$TRACE_TMP/bench.base.json"
+printf '{"benches": {"b": {"status": "measured", "rows": [{"op": "x", "mean": 2.0, "std": 0.0, "unit": "us"}]}}}\n' > "$TRACE_TMP/bench.cand.json"
+if "$BIN" bench-diff "$TRACE_TMP/bench.base.json" "$TRACE_TMP/bench.cand.json" \
+    --threshold 0.1 --gate >/dev/null 2>&1; then
+  echo "error: bench-diff --gate did not trip on a 2x regression" >&2
   exit 1
 fi
 
