@@ -225,4 +225,61 @@ fn main() {
         ]);
     }
     t2.emit("fig14_comm_vs_sync_baseline");
+
+    // --- Fig 14c: recovery overhead of elastic membership vs the
+    //     fixed-membership baseline. The virtual-clock engine replays the
+    //     same workload under scripted kill/restart faults; every row is
+    //     bit-reproducible, so the overhead numbers are exact, not
+    //     sampled. ------------------------------------------------------
+    use heterps::comm::{run_membership, FaultPlan};
+    use heterps::obs::Tracer;
+    let mut t3 = Table::new(
+        "Figure 14c — membership engine: recovery overhead vs fixed membership (virtual clock)",
+        &["fault plan", "virtual s", "samples/s", "evictions", "joins", "recovery s", "vs fixed"],
+    );
+    let mcfg = sweep_config(4, Codec::SparseF16, 1);
+    let plans = [
+        ("none", FaultPlan::empty()),
+        (
+            "kill:1@5,restart:1@10",
+            FaultPlan::parse("kill:1@5,restart:1@10", mcfg.workers, mcfg.steps, mcfg.seed)
+                .expect("scripted plan"),
+        ),
+        (
+            "seed:7",
+            FaultPlan::parse("seed:7", mcfg.workers, mcfg.steps, mcfg.seed).expect("seeded plan"),
+        ),
+    ];
+    let mut fixed_secs = 0.0f64;
+    for (name, plan) in &plans {
+        let r = run_membership(&mcfg, &pool, &store_for(&mcfg), plan, &Tracer::disabled())
+            .expect("membership run");
+        let again = run_membership(&mcfg, &pool, &store_for(&mcfg), plan, &Tracer::disabled())
+            .expect("membership replay");
+        assert_eq!(r.digest, again.digest, "{name}: replay must be bit-identical");
+        assert_eq!(
+            r.virtual_secs.to_bits(),
+            again.virtual_secs.to_bits(),
+            "{name}: virtual clock must be bit-identical"
+        );
+        if *name == "none" {
+            fixed_secs = r.virtual_secs;
+        }
+        t3.row(&[
+            name.to_string(),
+            format!("{:.4}", r.virtual_secs),
+            format!("{:.0}", r.throughput),
+            r.server.evictions.to_string(),
+            r.server.joins.to_string(),
+            format!("{:.4}", r.snapshot.recovery_secs),
+            format!("{:+.1}%", (r.virtual_secs / fixed_secs.max(1e-12) - 1.0) * 100.0),
+        ]);
+        if r.server.joins > 0 {
+            assert!(
+                r.snapshot.recovery_secs > 0.0,
+                "{name}: a rejoin handoff must pay recovery time"
+            );
+        }
+    }
+    t3.emit("fig14_membership_recovery");
 }

@@ -77,6 +77,21 @@ fn main() {
         drf.mean_jct_secs()
     );
 
+    // Preemption is not free: every srtf pause ships the job's parameter
+    // state off the freed units and back on re-admission, priced from
+    // weight bytes over the plan's slowest link — so srtf's JCT win above
+    // is *net* of a real checkpoint/restore bill.
+    let srtf_preemptions: usize = srtf.jobs.iter().map(|j| j.preemptions).sum();
+    let srtf_ckpt_secs: f64 = srtf.jobs.iter().map(|j| j.ckpt_restore_secs).sum();
+    assert!(
+        srtf_preemptions > 0 && srtf_ckpt_secs > 0.0,
+        "tight/greedy srtf should preempt and pay a nonzero checkpoint/restore cost \
+         (got {srtf_preemptions} preemptions, {srtf_ckpt_secs:.3} s)"
+    );
+    println!(
+        "[fig15] srtf ckpt/restore bill: {srtf_ckpt_secs:.1} s across {srtf_preemptions} preemptions"
+    );
+
     // Online calibration: rerun tight/greedy srtf with the ledger-derived
     // preemption margin (observed residual spread, capped at the stock
     // 1.25 knob). Deriving the margin from measurements must not cost

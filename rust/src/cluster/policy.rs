@@ -63,12 +63,18 @@ pub struct Waiting {
     /// which the run-wide eval cache files this residual's evaluations,
     /// replacing the old bespoke residual-vector equality lookup.
     pub failed_attempts: Option<(u64, u32)>,
+    /// Checkpoint + restore seconds owed from the last preemption
+    /// ([`crate::cost::ckpt_restore_secs`]): dead time the next admission
+    /// pays before training resumes. Zero for never-preempted jobs.
+    pub restore_debt_secs: f64,
 }
 
 impl Waiting {
-    /// Estimated remaining service time under the request profile.
+    /// Estimated remaining service time under the request profile,
+    /// restore debt included — a preempted job genuinely needs the wire
+    /// time back before it trains, and SRTF should rank it accordingly.
     pub fn est_remaining_secs(&self) -> f64 {
-        self.remaining_samples / self.profile.est_throughput.max(1e-9)
+        self.remaining_samples / self.profile.est_throughput.max(1e-9) + self.restore_debt_secs
     }
 }
 
@@ -93,6 +99,10 @@ pub struct Running {
     /// running stretch counts as SLA violation.
     pub below_floor: bool,
     pub started_secs: f64,
+    /// Restore transfer paid at the head of this admission (the last
+    /// preemption's checkpoint coming back over the wire): the job holds
+    /// its units but trains nothing until `started_secs + restore_secs`.
+    pub restore_secs: f64,
     pub remaining_at_start: f64,
     /// Admission epoch: completion events carry the epoch they were
     /// scheduled under, so a preempted job's stale completion is ignored.
@@ -104,8 +114,12 @@ pub struct Running {
 }
 
 impl Running {
+    /// Training progress starts only after the restore transfer lands,
+    /// so a job re-preempted while its state is still on the wire has
+    /// made no progress — the trained stretch clamps at zero.
     pub fn remaining_samples(&self, now: f64) -> f64 {
-        (self.remaining_at_start - (now - self.started_secs) * self.measured_throughput).max(0.0)
+        let trained = (now - self.started_secs - self.restore_secs).max(0.0);
+        (self.remaining_at_start - trained * self.measured_throughput).max(0.0)
     }
 
     pub fn remaining_secs(&self, now: f64) -> f64 {
@@ -302,6 +316,7 @@ mod tests {
             started_before: false,
             attempts: 0,
             failed_attempts: None,
+            restore_debt_secs: 0.0,
         }
     }
 
@@ -349,6 +364,7 @@ mod tests {
             analytic_throughput: 20_000.0,
             below_floor: false,
             started_secs: 0.0,
+            restore_secs: 0.0,
             remaining_at_start: remaining,
             epoch: 0,
             profile: w.profile.clone(),

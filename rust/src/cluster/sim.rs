@@ -175,6 +175,12 @@ pub struct JobRecord {
     /// plus running stretches whose measured throughput missed the floor.
     pub sla_violation_secs: f64,
     pub preemptions: usize,
+    /// Checkpoint + restore seconds this job's preemptions cost it
+    /// ([`crate::cost::ckpt_restore_secs`]: parameter bytes over the
+    /// plan's slowest link, out and back) — dead time added to the
+    /// re-admission's service, so SRTF's preemption wins are net of a
+    /// real state-migration bill.
+    pub ckpt_restore_secs: f64,
     pub admissions: usize,
     /// Cost-model evaluations actually computed scheduling this job
     /// (profile plus every admission attempt) — the eval engine's
@@ -561,6 +567,7 @@ impl<'a> ClusterSim<'a> {
             queueing_delay_secs: 0.0,
             sla_violation_secs: 0.0,
             preemptions: 0,
+            ckpt_restore_secs: 0.0,
             admissions: 0,
             evaluations: 0,
             cached_evals: 0,
@@ -707,6 +714,10 @@ impl<'a> ClusterSim<'a> {
         reg.observe_gauge(
             "cluster.sla_viol_secs",
             self.records.iter().map(|r| r.sla_violation_secs).sum::<f64>(),
+        );
+        reg.observe_gauge(
+            "cluster.ckpt_secs",
+            self.records.iter().map(|r| r.ckpt_restore_secs).sum::<f64>(),
         );
         reg.observe_gauge("cluster.util_mean", self.util_hist.mean() / 10.0);
         reg.observe_histogram("cluster.util_decile", &self.util_hist, 1.0);
@@ -951,6 +962,7 @@ impl<'a> ClusterSim<'a> {
             started_before: false,
             attempts: 1,
             failed_attempts: None,
+            restore_debt_secs: 0.0,
         });
         self.admission_pass(now)
     }
@@ -1106,7 +1118,11 @@ impl<'a> ClusterSim<'a> {
             rec.queueing_delay_secs = now - w.job.arrival_secs;
         }
         rec.admissions += 1;
-        let service = w.remaining_samples / measured.max(1e-9);
+        // Restore debt from the last preemption is dead time before
+        // training resumes: it delays completion and shifts the progress
+        // origin, so a re-preempted job is not credited samples for the
+        // stretch its state spent on the wire.
+        let service = w.remaining_samples / measured.max(1e-9) + w.restore_debt_secs;
         self.push_event(now + service, Pending::Completion { job_id: jid, epoch });
         self.timeline.push(EventRecord {
             at_secs: now,
@@ -1137,6 +1153,7 @@ impl<'a> ClusterSim<'a> {
             hourly_usd: hourly,
             measured_throughput: measured,
             started_secs: now,
+            restore_secs: w.restore_debt_secs,
             remaining_at_start: w.remaining_samples,
             epoch,
             profile: w.profile,
@@ -1148,13 +1165,20 @@ impl<'a> ClusterSim<'a> {
     }
 
     /// Gang-release `running[ridx]` and put it back in the queue with its
-    /// progress preserved.
+    /// progress preserved — minus the checkpoint/restore bill: pausing a
+    /// job means shipping its parameter state off the freed units and back
+    /// again on re-admission, priced from the model's weight bytes over
+    /// the plan's slowest link (the comm fabric's wire model). The bill
+    /// rides on the `Waiting` entry and lands as dead time in the next
+    /// admission's service.
     fn preempt(&mut self, ridx: usize, now: f64) {
         let r = self.running.remove(ridx);
         let jid = r.job.id;
         let remaining = r.remaining_samples(now);
+        let debt = crate::cost::ckpt_restore_secs(&r.job.model, self.pool, &r.plan);
         let rec = &mut self.records[jid];
         rec.preemptions += 1;
+        rec.ckpt_restore_secs += debt;
         if r.below_floor {
             rec.sla_violation_secs += now - r.started_secs;
         }
@@ -1171,6 +1195,7 @@ impl<'a> ClusterSim<'a> {
                 vec![
                     ("job".to_string(), Json::Num(jid as f64)),
                     ("remaining_samples".to_string(), Json::Num(remaining)),
+                    ("ckpt_restore_secs".to_string(), Json::Num(debt)),
                 ],
             );
         }
@@ -1183,6 +1208,7 @@ impl<'a> ClusterSim<'a> {
             started_before: true,
             attempts: r.attempts,
             failed_attempts: None,
+            restore_debt_secs: debt,
         });
     }
 

@@ -116,6 +116,12 @@ impl CommConfig {
     pub fn total_samples(&self) -> u64 {
         (self.workers * self.steps * self.rows) as u64
     }
+
+    /// Parameter-state bytes of the full table — what a join checkpoint
+    /// hands over, and the size its transfer is priced from.
+    pub fn ckpt_bytes(&self) -> u64 {
+        (self.vocab * self.dim * 4) as u64
+    }
 }
 
 /// What one engine (or sync-reference) run produced.
@@ -135,7 +141,7 @@ pub struct CommReport {
 /// The occurrence-level sparse ids worker `w` touches at step `t` —
 /// deterministic in `(seed, w, t)` and Zipf-skewed like production click
 /// logs, so coalescing has something to coalesce.
-fn worker_ids(cfg: &CommConfig, w: usize, t: usize) -> Vec<u32> {
+pub(crate) fn worker_ids(cfg: &CommConfig, w: usize, t: usize) -> Vec<u32> {
     let mut rng = Rng::new(
         cfg.seed ^ ((w as u64 + 1) << 32) ^ (t as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
     );
@@ -156,7 +162,7 @@ fn synth_grad(param: f32) -> f32 {
 }
 
 /// Occurrence-aligned gradients from the coalesced reply rows.
-fn grads_from_rows(cfg: &CommConfig, rows: &[f32], index: &[u32]) -> Vec<f32> {
+pub(crate) fn grads_from_rows(cfg: &CommConfig, rows: &[f32], index: &[u32]) -> Vec<f32> {
     let dim = cfg.dim;
     let mut grads = vec![0f32; index.len() * dim];
     for (i, &u) in index.iter().enumerate() {
@@ -185,7 +191,9 @@ fn worker_loop(cfg: &CommConfig, w: usize, transport: &ChannelTransport, metrics
             metrics.record_coalesce(occ.len(), n_unique);
             let req = PullRequest { worker: w as u32, step: t as u64, ids: unique };
             transport.send_to_server(w, Message::PullReq(req).encode())?;
-            let reply = Message::decode(&transport.recv_at_worker(w)?)?;
+            // Bounded typed receive: a hung or dead server names this
+            // worker, step, and direction instead of parking forever.
+            let reply = Message::decode(&transport.recv_reply(w, t as u64)?)?;
             let rows = match reply {
                 Message::PullRep(PullReply { step, frame, .. }) => {
                     anyhow::ensure!(step == t as u64, "reply for wrong step");
@@ -240,7 +248,7 @@ pub fn run_async<S: SparseStore>(
         let server = scope.spawn(|| {
             // Contain panics for the same reason as in `worker_loop`.
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                server::serve(store, &transport, cfg.staleness, &metrics)
+                server::serve(store, &transport, cfg.staleness, cfg.ckpt_bytes(), &metrics)
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("server panicked")));
             // Unblock any worker still parked in recv on the error path.

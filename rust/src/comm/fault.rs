@@ -1,0 +1,376 @@
+//! Deterministic fault plans for the SSP fabric.
+//!
+//! A [`FaultPlan`] scripts membership churn against the virtual-clock
+//! membership engine (`super::membership`): *kill* a worker before a fixed
+//! local step, *slow* its compute over a step range, *restart* it once the
+//! surviving clock reaches a fixed step. Plans are plain data —
+//! hand-written, seeded ([`FaultPlan::seeded`], mirroring the elastic
+//! traces' seeded generators), parsed from a CLI spec
+//! ([`FaultPlan::parse`]), or derived from an elastic trace's `pool_frac`
+//! series ([`FaultPlan::from_pool_fracs`]) so one scenario exercises
+//! trace → controller → fabric together. Everything is keyed on steps and
+//! virtual seconds, never wall time, so two runs of the same
+//! `(config, plan)` are bit-identical.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// Virtual seconds of silence after which the server's failure detector
+/// evicts a dead worker — the bounded recovery window: until it elapses
+/// the dead worker still gates the min clock (a barrier stall at
+/// staleness 0), after it the survivors' clock re-derives without it.
+pub const DEFAULT_RECOVERY_WINDOW_SECS: f64 = 0.05;
+
+/// One scripted membership event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Worker `worker` crashes before starting local step `at_step`
+    /// (its pushes for steps `0..at_step` are already on the wire; any
+    /// not-yet-fired barrier contribution is discarded on eviction).
+    Kill { worker: usize, at_step: u64 },
+    /// A previously killed (and evicted) `worker` rejoins once the live
+    /// membership's min SSP clock reaches `at_min_clock`.
+    Restart { worker: usize, at_min_clock: u64 },
+    /// Worker `worker`'s compute runs `factor`× slower over local steps
+    /// `[from_step, from_step + steps)`.
+    Slow { worker: usize, from_step: u64, steps: u64, factor: f64 },
+}
+
+/// A scripted schedule of membership churn, plus the failure detector's
+/// recovery window. The empty plan is the fixed-membership baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// See [`DEFAULT_RECOVERY_WINDOW_SECS`].
+    pub recovery_window_secs: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { events: Vec::new(), recovery_window_secs: DEFAULT_RECOVERY_WINDOW_SECS }
+    }
+}
+
+impl FaultPlan {
+    /// The fixed-membership baseline: no churn, default window.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The step worker `w` is killed before, if any.
+    pub fn kill_step(&self, w: usize) -> Option<u64> {
+        self.events.iter().find_map(|e| match e {
+            FaultEvent::Kill { worker, at_step } if *worker == w => Some(*at_step),
+            _ => None,
+        })
+    }
+
+    /// The min-clock step at which worker `w` rejoins, if any.
+    pub fn restart_clock(&self, w: usize) -> Option<u64> {
+        self.events.iter().find_map(|e| match e {
+            FaultEvent::Restart { worker, at_min_clock } if *worker == w => Some(*at_min_clock),
+            _ => None,
+        })
+    }
+
+    /// Compute slowdown of worker `w` at local step `t` (overlapping slow
+    /// windows compose multiplicatively; 1.0 = full speed).
+    pub fn slow_factor(&self, w: usize, t: u64) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Slow { worker, from_step, steps, factor }
+                    if *worker == w && (*from_step..from_step + steps).contains(&t) =>
+                {
+                    Some(*factor)
+                }
+                _ => None,
+            })
+            .product()
+    }
+
+    pub fn validate(&self, workers: usize, steps: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.recovery_window_secs.is_finite() && self.recovery_window_secs > 0.0,
+            "recovery window must be a positive number of seconds"
+        );
+        let mut kills = vec![false; workers];
+        let mut restarts = vec![false; workers];
+        for e in &self.events {
+            match e {
+                FaultEvent::Kill { worker, at_step } => {
+                    anyhow::ensure!(*worker < workers, "kill of unknown worker {worker}");
+                    anyhow::ensure!(!kills[*worker], "worker {worker} killed twice");
+                    anyhow::ensure!(
+                        *at_step <= steps as u64,
+                        "kill of worker {worker} at step {at_step} beyond the {steps}-step run"
+                    );
+                    kills[*worker] = true;
+                }
+                FaultEvent::Restart { worker, at_min_clock } => {
+                    anyhow::ensure!(*worker < workers, "restart of unknown worker {worker}");
+                    anyhow::ensure!(!restarts[*worker], "worker {worker} restarted twice");
+                    anyhow::ensure!(
+                        *at_min_clock <= steps as u64,
+                        "restart of worker {worker} at clock {at_min_clock} beyond the run"
+                    );
+                    restarts[*worker] = true;
+                }
+                FaultEvent::Slow { worker, steps: n, factor, .. } => {
+                    anyhow::ensure!(*worker < workers, "slow of unknown worker {worker}");
+                    anyhow::ensure!(*n >= 1, "slow window must cover at least one step");
+                    anyhow::ensure!(
+                        factor.is_finite() && *factor >= 1.0,
+                        "slow factor {factor} must be >= 1 (use kill for removal)"
+                    );
+                }
+            }
+        }
+        for w in 0..workers {
+            anyhow::ensure!(
+                !restarts[w] || kills[w],
+                "worker {w} restarts without having been killed"
+            );
+        }
+        Ok(())
+    }
+
+    /// Seeded random plan, mirroring the elastic traces' generators: each
+    /// worker independently draws a kill (40%), a restart after its kill
+    /// (60% of kills), or a 2–8× slow window (30%). Worker 0 is always
+    /// spared so at least one first-generation member survives to the end.
+    /// Deterministic in `(seed, workers, steps)`.
+    pub fn seeded(seed: u64, workers: usize, steps: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_B07);
+        let mut events = Vec::new();
+        let last = (steps.max(1) - 1).max(1);
+        for w in 1..workers {
+            if rng.chance(0.4) {
+                let at_step = rng.range(1, last + 1) as u64;
+                events.push(FaultEvent::Kill { worker: w, at_step });
+                if rng.chance(0.6) {
+                    let lo = at_step as usize;
+                    let at_min_clock = rng.range(lo.min(steps), steps + 1) as u64;
+                    events.push(FaultEvent::Restart { worker: w, at_min_clock });
+                }
+            } else if rng.chance(0.3) {
+                let from_step = rng.below(last) as u64;
+                let n = rng.range(1, 4) as u64;
+                let factor = 2.0 + 6.0 * rng.f64();
+                events.push(FaultEvent::Slow { worker: w, from_step, steps: n, factor });
+            }
+        }
+        FaultPlan { events, ..Default::default() }
+    }
+
+    /// Derive membership churn from an elastic trace's `pool_frac` series
+    /// (the §5 contention signal): the step range is split into
+    /// `fracs.len()` equal segments; at each boundary the live target is
+    /// `max(1, round(workers · frac))`, highest worker ids are killed
+    /// first when the pool shrinks and restarted (most recently killed
+    /// first) when it grows back. This is the trace → controller → fabric
+    /// wiring: the same series `elastic`'s controller scales its pool by
+    /// also sizes the fabric's membership.
+    pub fn from_pool_fracs(fracs: &[f64], workers: usize, steps: usize) -> FaultPlan {
+        let mut events = Vec::new();
+        if fracs.is_empty() || workers == 0 || steps == 0 {
+            return FaultPlan::empty();
+        }
+        // Each worker gets at most one kill/restart cycle (the plan
+        // grammar's contract), so a trace that dips twice spends fresh
+        // ids on the second dip — or stops shrinking once all are spent.
+        let mut up: Vec<usize> = (0..workers).collect();
+        let mut down: Vec<usize> = Vec::new(); // kill stack, newest last
+        let mut spent = vec![false; workers];
+        for (i, &frac) in fracs.iter().enumerate() {
+            let boundary = (i * steps / fracs.len()) as u64;
+            let target = ((workers as f64 * frac).round() as usize).clamp(1, workers);
+            while up.len() > target {
+                // Kill the highest live id whose cycle is unused.
+                let Some(pos) = up
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &w)| !spent[w])
+                    .max_by_key(|&(_, &w)| w)
+                    .map(|(pos, _)| pos)
+                else {
+                    break;
+                };
+                let w = up.remove(pos);
+                events.push(FaultEvent::Kill { worker: w, at_step: boundary });
+                down.push(w);
+            }
+            while up.len() < target {
+                let Some(w) = down.pop() else { break };
+                spent[w] = true;
+                events.push(FaultEvent::Restart { worker: w, at_min_clock: boundary });
+                up.push(w);
+            }
+        }
+        FaultPlan { events, ..Default::default() }
+    }
+
+    /// Parse a CLI `--faults` spec:
+    ///
+    /// - `none` — the empty plan (fixed membership);
+    /// - `seed:<n>` — [`FaultPlan::seeded`] with seed `n`;
+    /// - `trace:<name>` — [`FaultPlan::from_pool_fracs`] over the named
+    ///   elastic trace's `pool_frac` series (seeded with `seed`);
+    /// - a comma list of `kill:<w>@<step>`, `restart:<w>@<clock>`, and
+    ///   `slow:<w>@<from>+<steps>x<factor>`.
+    pub fn parse(spec: &str, workers: usize, steps: usize, seed: u64) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        let plan = if spec == "none" || spec.is_empty() {
+            FaultPlan::empty()
+        } else if let Some(n) = spec.strip_prefix("seed:") {
+            let n: u64 = n.parse().map_err(|_| anyhow::anyhow!("bad fault seed `{n}`"))?;
+            FaultPlan::seeded(n, workers, steps)
+        } else if let Some(name) = spec.strip_prefix("trace:") {
+            let cfg = crate::elastic::trace::TraceConfig::default();
+            let trace = crate::elastic::trace::by_name(name, &cfg, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace `{name}` in fault spec"))?;
+            let fracs: Vec<f64> = trace.points.iter().map(|p| p.pool_frac).collect();
+            FaultPlan::from_pool_fracs(&fracs, workers, steps)
+        } else {
+            let mut events = Vec::new();
+            for part in spec.split(',') {
+                events.push(parse_event(part.trim())?);
+            }
+            FaultPlan { events, ..Default::default() }
+        };
+        plan.validate(workers, steps)?;
+        Ok(plan)
+    }
+
+    /// One-line human summary for deterministic CLI output.
+    pub fn summary(&self) -> String {
+        let mut kills = 0;
+        let mut restarts = 0;
+        let mut slows = 0;
+        for e in &self.events {
+            match e {
+                FaultEvent::Kill { .. } => kills += 1,
+                FaultEvent::Restart { .. } => restarts += 1,
+                FaultEvent::Slow { .. } => slows += 1,
+            }
+        }
+        format!(
+            "{} events ({kills} kill, {restarts} restart, {slows} slow), window {:.3}s",
+            self.events.len(),
+            self.recovery_window_secs
+        )
+    }
+}
+
+fn parse_event(part: &str) -> Result<FaultEvent> {
+    let (kind, body) = part
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("fault event `{part}` is not kind:worker@where"))?;
+    let (w, rest) = body
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("fault event `{part}` is missing `@`"))?;
+    let worker: usize =
+        w.parse().map_err(|_| anyhow::anyhow!("bad worker in fault event `{part}`"))?;
+    match kind {
+        "kill" => {
+            let at_step: u64 =
+                rest.parse().map_err(|_| anyhow::anyhow!("bad step in `{part}`"))?;
+            Ok(FaultEvent::Kill { worker, at_step })
+        }
+        "restart" => {
+            let at_min_clock: u64 =
+                rest.parse().map_err(|_| anyhow::anyhow!("bad clock in `{part}`"))?;
+            Ok(FaultEvent::Restart { worker, at_min_clock })
+        }
+        "slow" => {
+            let (from, tail) = rest
+                .split_once('+')
+                .ok_or_else(|| anyhow::anyhow!("slow event `{part}` wants from+steps x factor"))?;
+            let (n, factor) = tail
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("slow event `{part}` wants steps x factor"))?;
+            Ok(FaultEvent::Slow {
+                worker,
+                from_step: from.parse().map_err(|_| anyhow::anyhow!("bad step in `{part}`"))?,
+                steps: n.parse().map_err(|_| anyhow::anyhow!("bad span in `{part}`"))?,
+                factor: factor.parse().map_err(|_| anyhow::anyhow!("bad factor in `{part}`"))?,
+            })
+        }
+        other => anyhow::bail!("unknown fault kind `{other}` in `{part}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_valid() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        p.validate(4, 10).unwrap();
+        assert_eq!(p.slow_factor(0, 0), 1.0);
+        assert_eq!(p.kill_step(0), None);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_spare_worker_zero() {
+        for seed in 0..20u64 {
+            let a = FaultPlan::seeded(seed, 6, 12);
+            let b = FaultPlan::seeded(seed, 6, 12);
+            assert_eq!(a, b);
+            a.validate(6, 12).unwrap();
+            assert_eq!(a.kill_step(0), None, "worker 0 must survive");
+        }
+        // Distinct seeds eventually differ.
+        assert!((0..20u64).any(|s| FaultPlan::seeded(s, 6, 12) != FaultPlan::seeded(s + 20, 6, 12)));
+    }
+
+    #[test]
+    fn parse_round_trips_the_event_grammar() {
+        let p = FaultPlan::parse("kill:1@3,restart:1@5,slow:2@2+3x4.5", 4, 10, 42).unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(p.kill_step(1), Some(3));
+        assert_eq!(p.restart_clock(1), Some(5));
+        assert_eq!(p.slow_factor(2, 4), 4.5);
+        assert_eq!(p.slow_factor(2, 5), 1.0);
+        assert!(FaultPlan::parse("none", 4, 10, 42).unwrap().is_empty());
+        assert!(!FaultPlan::parse("seed:7", 8, 10, 42).unwrap().is_empty());
+        assert!(FaultPlan::parse("explode:1@2", 4, 10, 42).is_err());
+        // Restart without a kill is rejected.
+        assert!(FaultPlan::parse("restart:1@5", 4, 10, 42).is_err());
+        // Killing a worker twice is rejected.
+        assert!(FaultPlan::parse("kill:1@2,kill:1@4", 4, 10, 42).is_err());
+    }
+
+    #[test]
+    fn pool_frac_derivation_kills_high_ids_first_and_restarts_them() {
+        // 4 workers, fracs 1.0 -> 0.5 -> 1.0: workers 3 and 2 die at the
+        // middle boundary and rejoin at the last.
+        let p = FaultPlan::from_pool_fracs(&[1.0, 0.5, 1.0], 4, 9);
+        p.validate(4, 9).unwrap();
+        assert_eq!(p.kill_step(3), Some(3));
+        assert_eq!(p.kill_step(2), Some(3));
+        assert_eq!(p.restart_clock(2), Some(6));
+        assert_eq!(p.restart_clock(3), Some(6));
+        assert_eq!(p.kill_step(0), None);
+        assert_eq!(p.kill_step(1), None);
+    }
+
+    #[test]
+    fn trace_spec_builds_a_plan_from_pool_fracs() {
+        // The diurnal trace tightens its pool at peak: with enough
+        // workers the derived plan has churn.
+        let p = FaultPlan::parse("trace:diurnal", 8, 40, 7).unwrap();
+        p.validate(8, 40).unwrap();
+        assert!(!p.is_empty(), "diurnal pool_frac dips below 1.0");
+        // And a flat-pool trace derives the empty plan.
+        let q = FaultPlan::parse("trace:ramp", 8, 40, 7).unwrap();
+        assert!(q.is_empty(), "ramp keeps pool_frac at 1.0");
+    }
+}

@@ -1,0 +1,637 @@
+//! The deterministic virtual-clock membership engine: the SSP fabric under
+//! injected faults, with zero run-to-run variance.
+//!
+//! The threaded engine (`super::engine::run_async`) is bit-reproducible
+//! only at `staleness = 0` — with slack, push application order follows
+//! thread interleaving. Fault injection must be *replayable*: the
+//! acceptance bar is that any seeded [`FaultPlan`] over any staleness
+//! yields bit-identical traces and digests across runs. So membership runs
+//! on a single-threaded discrete-event simulation of the same fabric: the
+//! identical workload generators, wire codecs, and [`ServerCore`] the
+//! threaded engine uses, with frame latency modeled from each worker's
+//! [`LinkSpec`] (one lane sends one frame at a time, so a small frame
+//! never overtakes a big one) and compute modeled as
+//! `compute_ms × slow_factor` of virtual time. With an empty plan at
+//! `staleness = 0` the state transitions are the synchronous reference's,
+//! so the final digest is bit-identical to both `run_sync_reference` and
+//! the threaded engine.
+//!
+//! Fault semantics (DESIGN.md §Membership-and-Recovery):
+//!
+//! * a **kill** silences the worker before its scripted step: its last
+//!   push is already on the wire and still lands, but nothing follows.
+//!   After [`FaultPlan::recovery_window_secs`] of silence the failure
+//!   detector synthesizes a `Fail` frame and [`ServerCore`] evicts the
+//!   corpse — discarding its parked pull and un-fired barrier pushes
+//!   (applied pushes are durable), bumping the membership epoch, and
+//!   re-deriving the min clock from the survivors;
+//! * a **restart** fires once the worker is evicted and the survivors'
+//!   min clock reaches the scripted step: the worker sends `Join`, the
+//!   server admits it at `max(own pushes, min clock)` — skipped steps are
+//!   dropped work — and answers with a [`Checkpoint`] whose
+//!   parameter-state bytes are priced over the joiner's link exactly like
+//!   any other frame. Eviction→handoff time is the *recovery time*
+//!   ([`CommMetrics::record_recovery`], the `comm.recovery_secs` metric,
+//!   and a `recovery` trace span);
+//! * a **slow** scales the worker's virtual compute time — the straggler
+//!   the SSP bound exists for.
+//!
+//! Membership edges surface as typed `comm` instants (`kill`, `fail`,
+//! `join`, `leave`, `recover`) on the virtual clock; recovery intervals
+//! are additionally emitted as depth-0 `recovery` spans after the run
+//! span closes (they may overlap each other, which the strict-LIFO
+//! in-run span stack cannot represent).
+
+use std::collections::BinaryHeap;
+
+use super::engine::{grads_from_rows, state_digest, worker_ids, CommConfig};
+use super::fault::FaultPlan;
+use super::link::LinkSpec;
+use super::metrics::{CommMetrics, CommSnapshot};
+use super::msg::{coalesce, Message, PullReply, PushGrad};
+use super::server::{ServerCore, ServerStats};
+use crate::data::compress::{compress_f32, decompress_f32};
+use crate::obs::Tracer;
+use crate::resources::ResourcePool;
+use crate::train::SparseStore;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// What one membership run produced. The whole struct is deterministic
+/// per `(config, plan)` — including `virtual_secs` and `throughput`,
+/// which are virtual-clock quantities, not wall measurements.
+#[derive(Clone, Debug)]
+pub struct MembershipReport {
+    /// Virtual seconds from first pull to last landed frame.
+    pub virtual_secs: f64,
+    /// Samples actually trained (dead workers' dropped steps excluded).
+    pub samples: u64,
+    /// Samples per *virtual* second.
+    pub throughput: f64,
+    /// FNV-1a digest of the final table — the bit-for-bit handle.
+    pub digest: u64,
+    /// Final membership epoch (joins + leaves + evictions).
+    pub epoch: u64,
+    pub server: ServerStats,
+    pub snapshot: CommSnapshot,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Ev {
+    /// A frame from worker `w` lands at the server.
+    ServerRecv { w: usize, frame: Vec<u8> },
+    /// A frame from the server lands at worker `w`.
+    WorkerRecv { w: usize, frame: Vec<u8> },
+    /// Worker `w` finishes its step-`t` compute.
+    ComputeDone { w: usize, t: u64 },
+    /// The failure detector times out worker `w`'s silence.
+    Detect { w: usize, step: u64 },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+struct Event {
+    at: f64,
+    /// Insertion order: the deterministic tie-break for equal times.
+    seq: u64,
+    what: Ev,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest (then
+        // first-inserted) event surfaces first.
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct VirtualFabric<'a, S: SparseStore> {
+    cfg: &'a CommConfig,
+    plan: &'a FaultPlan,
+    core: ServerCore<'a, S>,
+    links: Vec<LinkSpec>,
+    metrics: &'a CommMetrics,
+    tracer: &'a Tracer,
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    now: f64,
+    /// Per-worker lane cursors: a lane transmits one frame at a time, so
+    /// a frame departs only once the previous one has landed.
+    up_free: Vec<f64>,
+    down_free: Vec<f64>,
+    /// The step each worker is currently pulling/computing.
+    step: Vec<u64>,
+    /// Rows decompressed from the pull reply, held until compute ends —
+    /// gradients are a function of the snapshot the server served, not of
+    /// the (possibly since-advanced) live table.
+    pending_rows: Vec<Option<Vec<f32>>>,
+    killed_at: Vec<Option<f64>>,
+    /// Set when the server evicts the corpse; taken at checkpoint
+    /// delivery, closing the recovery interval.
+    evicted_at: Vec<Option<f64>>,
+    rejoin_sent: Vec<bool>,
+    /// (evicted, handoff-complete, worker): recovery intervals, emitted
+    /// as depth-0 trace spans after the run.
+    recoveries: Vec<(f64, f64, usize)>,
+}
+
+impl<'a, S: SparseStore> VirtualFabric<'a, S> {
+    fn schedule(&mut self, at: f64, what: Ev) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { at, seq, what });
+    }
+
+    /// Send a worker→server frame: departs when the uplink frees, lands
+    /// one modeled transfer later.
+    fn send_up(&mut self, w: usize, msg: &Message) {
+        let frame = msg.encode();
+        let secs = self.links[w].transfer_secs(frame.len());
+        let arrive = self.up_free[w].max(self.now) + secs;
+        self.up_free[w] = arrive;
+        self.metrics.record_frame(self.links[w].class, frame.len(), secs);
+        self.schedule(arrive, Ev::ServerRecv { w, frame });
+    }
+
+    /// Send a server→worker frame. A [`Message::Ckpt`] additionally
+    /// carries its priced parameter-state bytes: the handoff occupies the
+    /// joiner's downlink for the full state transfer, the same
+    /// latency + bytes/bandwidth model every other frame pays.
+    fn send_down(&mut self, w: usize, msg: &Message) {
+        let frame = msg.encode();
+        let priced = frame.len()
+            + if let Message::Ckpt(c) = msg { c.bytes as usize } else { 0 };
+        let secs = self.links[w].transfer_secs(priced);
+        let arrive = self.down_free[w].max(self.now) + secs;
+        self.down_free[w] = arrive;
+        self.metrics.record_frame(self.links[w].class, priced, secs);
+        self.schedule(arrive, Ev::WorkerRecv { w, frame });
+    }
+
+    /// Worker `w` begins local step `t`: dies if the plan kills it here,
+    /// says bye if the workload is done, otherwise pulls.
+    fn start_step(&mut self, w: usize, t: u64) -> Result<()> {
+        if self.killed_at[w].is_none() && self.plan.kill_step(w) == Some(t) {
+            self.killed_at[w] = Some(self.now);
+            if self.tracer.is_enabled() {
+                self.tracer.instant(
+                    "comm",
+                    "kill",
+                    vec![
+                        ("worker".to_string(), Json::Num(w as f64)),
+                        ("step".to_string(), Json::Num(t as f64)),
+                    ],
+                );
+            }
+            // A real crash leaves silence; the detector notices after the
+            // recovery window and synthesizes the eviction.
+            self.schedule(self.now + self.plan.recovery_window_secs, Ev::Detect { w, step: t });
+            return Ok(());
+        }
+        if t >= self.cfg.steps as u64 {
+            self.send_up(w, &Message::Bye { worker: w as u32 });
+            return Ok(());
+        }
+        self.step[w] = t;
+        let occ = worker_ids(self.cfg, w, t as usize);
+        let (unique, _) = coalesce(&occ);
+        self.metrics.record_coalesce(occ.len(), unique.len());
+        let req =
+            super::msg::PullRequest { worker: w as u32, step: t, ids: unique };
+        self.send_up(w, &Message::PullReq(req));
+        Ok(())
+    }
+
+    fn on_worker_recv(&mut self, w: usize, frame: &[u8]) -> Result<()> {
+        match Message::decode(frame)? {
+            Message::PullRep(PullReply { worker, step, frame }) => {
+                anyhow::ensure!(worker as usize == w, "reply lane/worker mismatch");
+                anyhow::ensure!(step == self.step[w], "reply for wrong step");
+                let rows = decompress_f32(&frame)?;
+                let occ = worker_ids(self.cfg, w, step as usize);
+                let (unique, _) = coalesce(&occ);
+                anyhow::ensure!(rows.len() == unique.len() * self.cfg.dim, "reply arity");
+                self.pending_rows[w] = Some(rows);
+                let dur = self.cfg.compute_ms / 1e3 * self.plan.slow_factor(w, step);
+                self.schedule(self.now + dur, Ev::ComputeDone { w, t: step });
+            }
+            Message::Ckpt(c) => {
+                anyhow::ensure!(c.worker as usize == w, "checkpoint lane/worker mismatch");
+                let from = self.evicted_at[w]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint for never-evicted worker {w}"))?;
+                let secs = self.now - from;
+                self.metrics.record_recovery(secs);
+                self.recoveries.push((from, self.now, w));
+                if self.tracer.is_enabled() {
+                    self.tracer.instant(
+                        "comm",
+                        "recover",
+                        vec![
+                            ("worker".to_string(), Json::Num(w as f64)),
+                            ("resume_step".to_string(), Json::Num(c.resume_step as f64)),
+                            ("epoch".to_string(), Json::Num(c.epoch as f64)),
+                            ("secs".to_string(), Json::Num(secs)),
+                        ],
+                    );
+                }
+                self.start_step(w, c.resume_step)?;
+            }
+            other => anyhow::bail!("worker expected a pull reply or checkpoint, got {other:?}"),
+        }
+        Ok(())
+    }
+
+    fn on_compute_done(&mut self, w: usize, t: u64) -> Result<()> {
+        let rows = self.pending_rows[w]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("compute finished with no pulled rows"))?;
+        let occ = worker_ids(self.cfg, w, t as usize);
+        let (_, index) = coalesce(&occ);
+        let grads = grads_from_rows(self.cfg, &rows, &index);
+        let frame = compress_f32(&grads, self.cfg.codec);
+        self.metrics.record_push_payload(grads.len() * 4, frame.len());
+        let push = PushGrad { worker: w as u32, step: t, ids: occ, frame };
+        self.send_up(w, &Message::Push(push));
+        // The worker loops straight into its next step; the lane cursor
+        // keeps the next pull behind the push it just sent.
+        self.start_step(w, t + 1)
+    }
+
+    fn on_server_recv(&mut self, w: usize, frame: &[u8]) -> Result<()> {
+        let msg = Message::decode(frame)?;
+        let edge = match &msg {
+            Message::Bye { .. } => Some("leave"),
+            Message::Join { .. } => Some("join"),
+            _ => None,
+        };
+        self.core.on_message(w, msg)?;
+        if let Some(name) = edge {
+            if self.tracer.is_enabled() {
+                self.tracer.instant(
+                    "comm",
+                    name,
+                    vec![
+                        ("worker".to_string(), Json::Num(w as f64)),
+                        ("epoch".to_string(), Json::Num(self.core.epoch() as f64)),
+                    ],
+                );
+            }
+        }
+        self.drain_server()
+    }
+
+    fn on_detect(&mut self, w: usize, step: u64) -> Result<()> {
+        // The eviction travels the same codec path as a real frame would.
+        let fail = Message::Fail { worker: w as u32, step }.encode();
+        self.core.on_message(w, Message::decode(&fail)?)?;
+        self.evicted_at[w] = Some(self.now);
+        if self.tracer.is_enabled() {
+            self.tracer.instant(
+                "comm",
+                "fail",
+                vec![
+                    ("worker".to_string(), Json::Num(w as f64)),
+                    ("step".to_string(), Json::Num(step as f64)),
+                    ("epoch".to_string(), Json::Num(self.core.epoch() as f64)),
+                ],
+            );
+        }
+        self.drain_server()
+    }
+
+    /// Ship the server's replies, then fire any scripted restart the
+    /// (possibly advanced) clock now allows.
+    fn drain_server(&mut self) -> Result<()> {
+        for (w, reply) in self.core.take_outbox() {
+            self.send_down(w, &reply);
+        }
+        let min = self.core.min_completed();
+        for w in 0..self.cfg.workers {
+            if !self.rejoin_sent[w] && self.evicted_at[w].is_some() {
+                if let Some(clock) = self.plan.restart_clock(w) {
+                    // `min` is `u64::MAX` when nobody is live: a restart
+                    // then fires immediately and the joiner resumes from
+                    // its own push count (`ServerCore::on_join`).
+                    if min >= clock {
+                        self.rejoin_sent[w] = true;
+                        self.send_up(w, &Message::Join { worker: w as u32 });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run(&mut self) -> Result<()> {
+        while let Some(Event { at, what, .. }) = self.heap.pop() {
+            debug_assert!(at >= self.now, "virtual clock ran backwards");
+            self.now = at;
+            self.tracer.set_virtual(at);
+            match what {
+                Ev::ServerRecv { w, frame } => self.on_server_recv(w, &frame)?,
+                Ev::WorkerRecv { w, frame } => self.on_worker_recv(w, &frame)?,
+                Ev::ComputeDone { w, t } => self.on_compute_done(w, t)?,
+                Ev::Detect { w, step } => self.on_detect(w, step)?,
+            }
+        }
+        anyhow::ensure!(
+            !self.core.any_live(),
+            "virtual fabric drained its event heap with live members — \
+             a worker is wedged (unserved pull or missing restart)"
+        );
+        Ok(())
+    }
+}
+
+/// Run the fabric under `plan` on the virtual clock. Deterministic per
+/// `(cfg, plan)`: same digest, same virtual timings, same trace, every
+/// run. An empty plan at `staleness = 0` is bit-identical to
+/// [`super::engine::run_sync_reference`].
+pub fn run_membership<S: SparseStore>(
+    cfg: &CommConfig,
+    pool: &ResourcePool,
+    store: &S,
+    plan: &FaultPlan,
+    tracer: &Tracer,
+) -> Result<MembershipReport> {
+    cfg.validate(pool)?;
+    plan.validate(cfg.workers, cfg.steps)?;
+    anyhow::ensure!(
+        store.dim() == cfg.dim,
+        "store dim {} != config dim {}",
+        store.dim(),
+        cfg.dim
+    );
+    let metrics = CommMetrics::new();
+    let server_rt = pool.get(cfg.server_type);
+    let links: Vec<LinkSpec> = (0..cfg.workers)
+        .map(|w| LinkSpec::between(pool.get(cfg.worker_type(w, pool)), server_rt))
+        .collect();
+    let n = cfg.workers;
+    let mut fab = VirtualFabric {
+        cfg,
+        plan,
+        core: ServerCore::new(store, &metrics, cfg.staleness, cfg.ckpt_bytes(), n),
+        links,
+        metrics: &metrics,
+        tracer,
+        heap: BinaryHeap::new(),
+        next_seq: 0,
+        now: 0.0,
+        up_free: vec![0.0; n],
+        down_free: vec![0.0; n],
+        step: vec![0; n],
+        pending_rows: vec![None; n],
+        killed_at: vec![None; n],
+        evicted_at: vec![None; n],
+        rejoin_sent: vec![false; n],
+        recoveries: Vec::new(),
+    };
+    tracer.set_virtual(0.0);
+    let span = if tracer.is_enabled() {
+        Some(tracer.open(
+            "comm",
+            "membership",
+            vec![
+                ("workers".to_string(), Json::Num(cfg.workers as f64)),
+                ("steps".to_string(), Json::Num(cfg.steps as f64)),
+                ("staleness".to_string(), Json::Num(cfg.staleness as f64)),
+                ("faults".to_string(), Json::Num(plan.events.len() as f64)),
+            ],
+        ))
+    } else {
+        None
+    };
+    for w in 0..n {
+        fab.start_step(w, 0)?;
+    }
+    fab.run()?;
+    let virtual_secs = fab.now;
+    let epoch = fab.core.epoch();
+    let mut recoveries = fab.recoveries.clone();
+    let stats = fab.core.finish()?;
+    tracer.set_virtual(virtual_secs);
+    if let Some(span) = span {
+        tracer.close_with(
+            span,
+            vec![
+                ("epoch".to_string(), Json::Num(epoch as f64)),
+                ("evictions".to_string(), Json::Num(stats.evictions as f64)),
+                ("joins".to_string(), Json::Num(stats.joins as f64)),
+            ],
+        );
+        // Recovery intervals may overlap each other, which the strict-LIFO
+        // in-run stack cannot hold; emitted whole at depth 0 (a span
+        // opening at depth 0 legitimately rewinds the lint baseline), each
+        // is still stamped with its true virtual interval.
+        recoveries.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)));
+        for (from, to, w) in recoveries {
+            tracer.set_virtual(from);
+            let sp = tracer.open(
+                "comm",
+                "recovery",
+                vec![("worker".to_string(), Json::Num(w as f64))],
+            );
+            tracer.set_virtual(to);
+            tracer.close_with(sp, vec![("secs".to_string(), Json::Num(to - from))]);
+        }
+        tracer.set_virtual(virtual_secs);
+    }
+    let samples = stats.applied_pushes * cfg.rows as u64;
+    Ok(MembershipReport {
+        virtual_secs,
+        samples,
+        throughput: if virtual_secs > 0.0 { samples as f64 / virtual_secs } else { 0.0 },
+        digest: state_digest(store, cfg.vocab)?,
+        epoch,
+        server: stats,
+        snapshot: metrics.snapshot(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::run_sync_reference;
+    use super::super::fault::FaultEvent;
+    use super::*;
+    use crate::data::compress::Codec;
+    use crate::obs::lint_trace;
+    use crate::resources::paper_testbed;
+    use crate::train::ParamServer;
+
+    fn small(staleness: u64, codec: Codec) -> CommConfig {
+        CommConfig {
+            workers: 3,
+            steps: 6,
+            rows: 8,
+            slots: 4,
+            dim: 8,
+            vocab: 300,
+            staleness,
+            codec,
+            ..Default::default()
+        }
+    }
+
+    fn store(cfg: &CommConfig) -> ParamServer {
+        ParamServer::new(cfg.dim, 8, 0.3, cfg.seed)
+    }
+
+    #[test]
+    fn empty_plan_matches_sync_reference_at_staleness_zero() {
+        let pool = paper_testbed();
+        for codec in [Codec::F32, Codec::SparseF16] {
+            let cfg = small(0, codec);
+            let s1 = store(&cfg);
+            let virt =
+                run_membership(&cfg, &pool, &s1, &FaultPlan::empty(), &Tracer::disabled())
+                    .unwrap();
+            let s2 = store(&cfg);
+            let sync = run_sync_reference(&cfg, &s2).unwrap();
+            assert_eq!(
+                virt.digest, sync.digest,
+                "{codec:?}: empty-plan virtual run diverged from the synchronous reference"
+            );
+            assert_eq!(virt.server.applied_pushes, sync.server.applied_pushes);
+            assert_eq!(virt.server.evictions, 0);
+            assert_eq!(virt.server.joins, 0);
+            // Clean run: the epoch counts exactly the graceful byes.
+            assert_eq!(virt.epoch, cfg.workers as u64);
+            assert!(virt.virtual_secs > 0.0, "link latency must accrue virtual time");
+        }
+    }
+
+    #[test]
+    fn runs_are_bit_identical_per_plan_at_every_staleness() {
+        let pool = paper_testbed();
+        for staleness in [0u64, 2] {
+            for plan in [
+                FaultPlan::empty(),
+                FaultPlan::seeded(9, 3, 6),
+                FaultPlan {
+                    events: vec![
+                        FaultEvent::Kill { worker: 1, at_step: 1 },
+                        FaultEvent::Restart { worker: 1, at_min_clock: 3 },
+                    ],
+                    ..Default::default()
+                },
+            ] {
+                let cfg = small(staleness, Codec::SparseF16);
+                let a = run_membership(&cfg, &pool, &store(&cfg), &plan, &Tracer::disabled())
+                    .unwrap();
+                let b = run_membership(&cfg, &pool, &store(&cfg), &plan, &Tracer::disabled())
+                    .unwrap();
+                assert_eq!(a.digest, b.digest, "staleness {staleness}, plan {plan:?}");
+                assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits());
+                assert_eq!(a.server, b.server);
+                assert_eq!(a.epoch, b.epoch);
+                assert_eq!(a.snapshot.recovery_secs.to_bits(), b.snapshot.recovery_secs.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn kill_without_restart_converges_the_survivors() {
+        let pool = paper_testbed();
+        let cfg = small(0, Codec::F32);
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Kill { worker: 2, at_step: 2 }],
+            ..Default::default()
+        };
+        let r = run_membership(&cfg, &pool, &store(&cfg), &plan, &Tracer::disabled()).unwrap();
+        assert_eq!(r.server.evictions, 1);
+        assert_eq!(r.server.joins, 0);
+        // Survivors finish all steps; the corpse landed exactly its
+        // pre-kill pushes.
+        assert_eq!(r.server.applied_pushes, (2 * cfg.steps + 2) as u64);
+        assert_eq!(r.samples, r.server.applied_pushes * cfg.rows as u64);
+        assert_eq!(r.snapshot.failures, 1);
+        assert_eq!(r.snapshot.recovery_secs, 0.0, "nobody rejoined");
+    }
+
+    #[test]
+    fn kill_and_restart_pays_a_recovery_cost() {
+        let pool = paper_testbed();
+        let cfg = small(0, Codec::F32);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Kill { worker: 1, at_step: 1 },
+                FaultEvent::Restart { worker: 1, at_min_clock: 3 },
+            ],
+            ..Default::default()
+        };
+        let r = run_membership(&cfg, &pool, &store(&cfg), &plan, &Tracer::disabled()).unwrap();
+        assert_eq!(r.server.evictions, 1);
+        assert_eq!(r.server.joins, 1);
+        assert_eq!((r.snapshot.failures, r.snapshot.joins), (1, 1));
+        // The checkpoint handoff took real virtual time: at least the
+        // recovery window plus the priced parameter-state transfer.
+        assert!(
+            r.snapshot.recovery_secs > 0.0,
+            "recovery cost must be nonzero: {}",
+            r.snapshot.recovery_secs
+        );
+        // Rejoining at the min clock drops the missed steps, so strictly
+        // fewer pushes land than a clean run's.
+        assert!(r.server.applied_pushes < (cfg.workers * cfg.steps) as u64);
+        // Everyone alive at the end leaves gracefully: kill + join + 3 byes.
+        assert_eq!(r.epoch, 5);
+    }
+
+    #[test]
+    fn slow_faults_stretch_virtual_time_without_changing_membership() {
+        let pool = paper_testbed();
+        let mut cfg = small(1, Codec::F32);
+        cfg.compute_ms = 1.0;
+        let base = run_membership(&cfg, &pool, &store(&cfg), &FaultPlan::empty(), &Tracer::disabled())
+            .unwrap();
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Slow { worker: 0, from_step: 0, steps: 6, factor: 10.0 }],
+            ..Default::default()
+        };
+        let slow = run_membership(&cfg, &pool, &store(&cfg), &plan, &Tracer::disabled()).unwrap();
+        assert!(
+            slow.virtual_secs > base.virtual_secs,
+            "10x straggler must stretch the run: {} !> {}",
+            slow.virtual_secs,
+            base.virtual_secs
+        );
+        assert_eq!(slow.server.evictions, 0);
+        assert_eq!(slow.server.applied_pushes, (cfg.workers * cfg.steps) as u64);
+    }
+
+    #[test]
+    fn traces_are_bit_identical_and_lint_clean_under_faults() {
+        let pool = paper_testbed();
+        let cfg = small(0, Codec::F32);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Kill { worker: 1, at_step: 1 },
+                FaultEvent::Restart { worker: 1, at_min_clock: 2 },
+                FaultEvent::Kill { worker: 2, at_step: 3 },
+            ],
+            ..Default::default()
+        };
+        let render = || {
+            let t = Tracer::new();
+            run_membership(&cfg, &pool, &store(&cfg), &plan, &t).unwrap();
+            t.render_jsonl()
+        };
+        let a = render();
+        let b = render();
+        assert_eq!(a, b, "virtual-clock trace must be bit-identical per (config, plan)");
+        let summary = lint_trace(&a).unwrap();
+        assert_eq!(summary.wall_records, 0, "nothing in a virtual run is wall-stamped");
+        for name in ["\"kill\"", "\"fail\"", "\"join\"", "\"leave\"", "\"recover\"", "\"recovery\""] {
+            assert!(a.contains(name), "trace lacks {name}");
+        }
+    }
+}

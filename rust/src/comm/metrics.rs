@@ -42,6 +42,15 @@ pub struct CommMetrics {
     staleness_true_max: AtomicU64,
     /// Unique ids per coalesced pull, bucketed by `COALESCE_BUCKET_WIDTH`.
     pub coalesce_sizes: Histogram,
+    /// Membership: admissions after the initial set (restarts/joins),
+    /// graceful leaves (byes), and failure evictions.
+    pub joins: Counter,
+    pub leaves: Counter,
+    pub failures: Counter,
+    /// Recovery time — eviction to checkpoint-handoff-complete per
+    /// rejoining worker — accumulated in nanoseconds (virtual clock under
+    /// the membership engine, so deterministic per plan).
+    recovery_nanos: AtomicU64,
 }
 
 impl Default for CommMetrics {
@@ -68,7 +77,31 @@ impl CommMetrics {
             staleness: Histogram::new(STALENESS_BUCKETS),
             staleness_true_max: AtomicU64::new(0),
             coalesce_sizes: Histogram::new(COALESCE_BUCKETS),
+            joins: Counter::new(),
+            leaves: Counter::new(),
+            failures: Counter::new(),
+            recovery_nanos: AtomicU64::new(0),
         }
+    }
+
+    /// A worker (re)joined the membership.
+    pub fn record_join(&self) {
+        self.joins.add(1);
+    }
+
+    /// A worker left gracefully (bye).
+    pub fn record_leave(&self) {
+        self.leaves.add(1);
+    }
+
+    /// A dead worker was evicted from the membership.
+    pub fn record_failure(&self) {
+        self.failures.add(1);
+    }
+
+    /// One worker's recovery completed, `secs` after its eviction.
+    pub fn record_recovery(&self, secs: f64) {
+        self.recovery_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
     }
 
     /// A coalesced pull went out: `raw` occurrence ids became `unique`.
@@ -133,6 +166,10 @@ impl CommMetrics {
             staleness_max: self.staleness_true_max.load(Ordering::Relaxed),
             staleness_render: self.staleness.render(),
             coalesce_render: self.coalesce_sizes.render(),
+            joins: self.joins.get(),
+            leaves: self.leaves.get(),
+            failures: self.failures.get(),
+            recovery_secs: self.recovery_nanos.load(Ordering::Relaxed) as f64 / 1e9,
         }
     }
 }
@@ -165,6 +202,12 @@ pub struct CommSnapshot {
     pub staleness_max: u64,
     pub staleness_render: String,
     pub coalesce_render: String,
+    /// Membership: (re)admissions, graceful leaves, failure evictions,
+    /// and total eviction→rejoined recovery time.
+    pub joins: u64,
+    pub leaves: u64,
+    pub failures: u64,
+    pub recovery_secs: f64,
 }
 
 impl CommSnapshot {
@@ -237,6 +280,11 @@ impl CommSnapshot {
             format!("{:.2} / {}", self.staleness_mean, self.staleness_max),
         );
         kv("staleness histogram", self.staleness_render.clone());
+        kv(
+            "membership (joins/leaves/fails)",
+            format!("{} / {} / {}", self.joins, self.leaves, self.failures),
+        );
+        kv("recovery time (s)", format!("{:.6}", self.recovery_secs));
         t
     }
 }
@@ -285,5 +333,23 @@ mod tests {
         assert_eq!(s.push_compression_ratio(), 1.0);
         assert_eq!(s.coalesce_ratio(), 1.0);
         assert_eq!(s.wire_bytes_total(), 0);
+        assert_eq!((s.joins, s.leaves, s.failures), (0, 0, 0));
+        assert_eq!(s.recovery_secs, 0.0);
+    }
+
+    #[test]
+    fn membership_counters_accumulate() {
+        let m = CommMetrics::new();
+        m.record_failure();
+        m.record_join();
+        m.record_leave();
+        m.record_leave();
+        m.record_recovery(0.25);
+        m.record_recovery(0.5);
+        let s = m.snapshot();
+        assert_eq!((s.joins, s.leaves, s.failures), (1, 2, 1));
+        assert!((s.recovery_secs - 0.75).abs() < 1e-9);
+        let rendered = s.table("t").render();
+        assert!(rendered.contains("membership"));
     }
 }

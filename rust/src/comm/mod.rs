@@ -13,17 +13,27 @@
 //!   [`ChannelTransport`] whose frames are charged to their links.
 //! * [`metrics`] — bytes, compression ratios, coalescing and staleness
 //!   distributions, modeled transfer time per link class.
-//! * [`server`] — the SSP service loop over any [`crate::train::SparseStore`].
+//! * [`server`] — the SSP service loop over any [`crate::train::SparseStore`],
+//!   now a sans-IO [`server::ServerCore`] tracking a membership epoch.
 //! * [`engine`] — worker threads, the synchronous reference, the state
 //!   digest, and the analytic-vs-measured cost-model cross-check.
+//! * [`fault`] — seeded, scripted [`FaultPlan`]s (kill/slow/restart).
+//! * [`membership`] — the deterministic virtual-clock engine that drives
+//!   the same `ServerCore` under a fault plan, pricing join checkpoints
+//!   through the link model.
 //!
 //! Semantics contract (asserted in tests and `scripts/verify.sh`):
 //! `staleness = 0` reproduces bulk-synchronous training bit-for-bit per
 //! (config, seed); `staleness >= 1` trades that determinism for async
-//! throughput under the SSP bound. See DESIGN.md §Comm-Fabric.
+//! throughput under the SSP bound; the membership engine is bit-identical
+//! per (config, plan) and, with an empty plan at staleness 0, matches the
+//! synchronous reference digest. See DESIGN.md §Comm-Fabric and
+//! §Membership-and-Recovery.
 
 pub mod engine;
+pub mod fault;
 pub mod link;
+pub mod membership;
 pub mod metrics;
 pub mod msg;
 pub mod server;
@@ -33,8 +43,10 @@ pub use engine::{
     analytic_comm_check, run_async, run_sync_reference, state_digest, CommCheck, CommConfig,
     CommReport,
 };
+pub use fault::{FaultEvent, FaultPlan, DEFAULT_RECOVERY_WINDOW_SECS};
 pub use link::{LinkClass, LinkSpec};
+pub use membership::{run_membership, MembershipReport};
 pub use metrics::{CommMetrics, CommSnapshot, LinkUsage};
-pub use msg::{coalesce, Message, PullReply, PullRequest, PushGrad};
+pub use msg::{coalesce, Checkpoint, Message, PullReply, PullRequest, PushGrad};
 pub use server::{serve, ServerStats};
-pub use transport::{ChannelTransport, Transport};
+pub use transport::{ChannelTransport, Direction, FabricError, Transport};

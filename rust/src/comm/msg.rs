@@ -3,7 +3,10 @@
 //! Three message kinds cross the fabric — [`PullRequest`] (worker asks for
 //! rows), [`PullReply`] (server answers with parameter values), and
 //! [`PushGrad`] (worker sends gradients) — plus a `Bye` that lets workers
-//! hang up cleanly. Row values travel inside the self-describing
+//! hang up cleanly and the membership triple `Fail`/`Join`/[`Checkpoint`]
+//! that lets them crash, rejoin, and receive a priced parameter-state
+//! handoff (see `super::membership`). Row values travel inside the
+//! self-describing
 //! [`crate::data::compress`] frames, so the fabric reuses the §3 codecs:
 //! replies are always exact `F32` (parameters do not tolerate lossy
 //! transport), pushes use the configured gradient codec.
@@ -20,6 +23,9 @@ const TAG_PULL_REQ: u8 = 0x01;
 const TAG_PULL_REP: u8 = 0x02;
 const TAG_PUSH: u8 = 0x03;
 const TAG_BYE: u8 = 0x04;
+const TAG_FAIL: u8 = 0x05;
+const TAG_JOIN: u8 = 0x06;
+const TAG_CKPT: u8 = 0x07;
 
 /// Worker→server: send the rows for `ids` (sorted, unique) at clock `step`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -49,6 +55,21 @@ pub struct PushGrad {
     pub frame: Vec<u8>,
 }
 
+/// Server→joiner: the parameter-state handoff that completes a (re)join.
+/// `resume_step` is the SSP clock the joiner resumes at, `epoch` the
+/// membership epoch its admission created, and `bytes` the size of the
+/// parameter state conceptually transferred — the full table, priced over
+/// the joiner's [`LinkSpec`](super::link::LinkSpec) rather than shipped
+/// row-by-row through this frame (the joiner pulls working rows on
+/// demand like everyone else).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub worker: u32,
+    pub epoch: u64,
+    pub resume_step: u64,
+    pub bytes: u64,
+}
+
 /// Everything that can cross the fabric.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Message {
@@ -56,6 +77,13 @@ pub enum Message {
     PullRep(PullReply),
     Push(PushGrad),
     Bye { worker: u32 },
+    /// Worker→server: worker `worker` crashed before starting local step
+    /// `step`. Sent by the fault injector (or synthesized by a failure
+    /// detector) in lieu of the silence a real crash would leave.
+    Fail { worker: u32, step: u64 },
+    /// Worker→server: (re)admit `worker` into the membership.
+    Join { worker: u32 },
+    Ckpt(Checkpoint),
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -142,6 +170,22 @@ impl Message {
                 out.push(TAG_BYE);
                 put_u32(&mut out, *worker);
             }
+            Message::Fail { worker, step } => {
+                out.push(TAG_FAIL);
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *step);
+            }
+            Message::Join { worker } => {
+                out.push(TAG_JOIN);
+                put_u32(&mut out, *worker);
+            }
+            Message::Ckpt(c) => {
+                out.push(TAG_CKPT);
+                put_u32(&mut out, c.worker);
+                put_u64(&mut out, c.epoch);
+                put_u64(&mut out, c.resume_step);
+                put_u64(&mut out, c.bytes);
+            }
         }
         out
     }
@@ -190,6 +234,25 @@ impl Message {
                 let worker = r.u32()?;
                 anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after bye");
                 Ok(Message::Bye { worker })
+            }
+            TAG_FAIL => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after fail");
+                Ok(Message::Fail { worker, step })
+            }
+            TAG_JOIN => {
+                let worker = r.u32()?;
+                anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after join");
+                Ok(Message::Join { worker })
+            }
+            TAG_CKPT => {
+                let worker = r.u32()?;
+                let epoch = r.u64()?;
+                let resume_step = r.u64()?;
+                let bytes = r.u64()?;
+                anyhow::ensure!(r.pos == r.buf.len(), "trailing bytes after checkpoint");
+                Ok(Message::Ckpt(Checkpoint { worker, epoch, resume_step, bytes }))
             }
             other => anyhow::bail!("unknown message tag {other:#x}"),
         }
@@ -244,6 +307,22 @@ mod tests {
     fn bye_roundtrips() {
         let frame = Message::Bye { worker: 12 }.encode();
         assert_eq!(Message::decode(&frame).unwrap(), Message::Bye { worker: 12 });
+    }
+
+    #[test]
+    fn membership_messages_roundtrip() {
+        for msg in [
+            Message::Fail { worker: 5, step: 11 },
+            Message::Join { worker: 2 },
+            Message::Ckpt(Checkpoint { worker: 2, epoch: 7, resume_step: 4, bytes: 1_280_000 }),
+        ] {
+            let frame = msg.encode();
+            assert_eq!(Message::decode(&frame).unwrap(), msg);
+        }
+        // Trailing garbage after fixed-size membership frames is rejected.
+        let mut frame = Message::Join { worker: 2 }.encode();
+        frame.push(0);
+        assert!(Message::decode(&frame).is_err());
     }
 
     #[test]

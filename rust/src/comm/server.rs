@@ -1,6 +1,7 @@
-//! The parameter-server side of the fabric: a single service loop that
-//! decodes wire messages, enforces the bounded-staleness (SSP) clock, and
-//! applies gradients to a [`SparseStore`] backend.
+//! The parameter-server side of the fabric: a single service core that
+//! decodes wire messages, enforces the bounded-staleness (SSP) clock,
+//! tracks dynamic worker membership, and applies gradients to a
+//! [`SparseStore`] backend.
 //!
 //! SSP semantics: a worker about to run step `t` (i.e. it has pushed steps
 //! `0..t`) may have its step-`t` pull served only when
@@ -11,9 +12,26 @@
 //! the single-threaded synchronous reference regardless of thread
 //! interleaving. With `staleness >= 1`, pushes apply on arrival and fast
 //! workers run ahead, trading reproducibility for throughput.
+//!
+//! Membership semantics (see DESIGN.md §Membership-and-Recovery): the
+//! membership *epoch* counts every join/leave/fail since the run started.
+//! A `Bye` is a graceful leave — the departing worker's buffered barrier
+//! pushes still participate. A `Fail` is an eviction: the dead worker's
+//! *in-flight* state (parked pull, un-fired barrier pushes) is discarded —
+//! only applied pushes are durable — and the survivors' clock re-derives
+//! without it. A `Join` (re)admits a worker at the current min clock via a
+//! [`Checkpoint`] handoff whose `bytes` field carries the parameter-state
+//! size the transport layer prices over the joiner's link.
+//!
+//! The core is transport-free ("sans IO"): [`ServerCore::on_message`]
+//! consumes one decoded frame and appends any replies to an outbox the
+//! caller drains. The threaded [`serve`] loop drains it straight into the
+//! real transport; the deterministic virtual-clock engine
+//! (`super::membership`) drains it into its event heap with modeled
+//! transfer delays.
 
 use super::metrics::CommMetrics;
-use super::msg::{Message, PullReply, PullRequest, PushGrad};
+use super::msg::{Checkpoint, Message, PullReply, PullRequest, PushGrad};
 use super::transport::Transport;
 use crate::data::compress::{compress_f32, decompress_f32, Codec};
 use crate::train::SparseStore;
@@ -25,34 +43,80 @@ use std::collections::BTreeMap;
 pub struct ServerStats {
     pub served_pulls: u64,
     pub applied_pushes: u64,
+    /// Worker admissions after the initial membership (restarts/joins).
+    pub joins: u64,
+    /// Evictions of failed workers (graceful byes not included).
+    pub evictions: u64,
 }
 
-struct ServerState<'a, S: SparseStore> {
+pub(crate) struct ServerCore<'a, S: SparseStore> {
     store: &'a S,
-    transport: &'a dyn Transport,
     metrics: &'a CommMetrics,
     staleness: u64,
+    /// Parameter-state bytes a joiner is handed (the full table).
+    ckpt_bytes: u64,
+    /// Membership epoch: bumped on every join, leave, and eviction.
+    epoch: u64,
     /// Pushes received per worker (each worker pushes steps 0,1,2,... in
     /// order, so this is also the step its next push must carry).
     received: Vec<u64>,
     /// Pushes *applied* per worker — the SSP clock. Equal to `received`
     /// in async mode; lags until the step barrier in synchronous mode.
     completed: Vec<u64>,
-    /// Workers that have not said bye. A departed worker leaves the SSP
-    /// clock and barrier membership, so one early-exiting worker (error
-    /// path, ragged workload) cannot wedge the survivors.
+    /// Workers currently in the membership. A departed worker leaves the
+    /// SSP clock and barrier membership, so one early-exiting worker
+    /// (error path, ragged workload, injected kill) cannot wedge the
+    /// survivors.
     live: Vec<bool>,
     /// At most one outstanding pull per worker, parked until admissible.
     deferred: Vec<Option<PullRequest>>,
     /// Synchronous mode only: step -> pushes waiting for the barrier.
     barrier: BTreeMap<u64, Vec<PushGrad>>,
+    /// Replies produced by `on_message`, drained by the caller.
+    outbox: Vec<(usize, Message)>,
     stats: ServerStats,
 }
 
-impl<'a, S: SparseStore> ServerState<'a, S> {
-    fn min_completed(&self) -> u64 {
-        // Min over live workers; departed workers no longer gate anyone.
-        // (With nobody left the service loop is about to exit anyway.)
+impl<'a, S: SparseStore> ServerCore<'a, S> {
+    pub(crate) fn new(
+        store: &'a S,
+        metrics: &'a CommMetrics,
+        staleness: u64,
+        ckpt_bytes: u64,
+        n: usize,
+    ) -> Self {
+        ServerCore {
+            store,
+            metrics,
+            staleness,
+            ckpt_bytes,
+            epoch: 0,
+            received: vec![0; n],
+            completed: vec![0; n],
+            live: vec![true; n],
+            deferred: vec![None; n],
+            barrier: BTreeMap::new(),
+            outbox: Vec::new(),
+            stats: ServerStats::default(),
+        }
+    }
+
+    pub(crate) fn any_live(&self) -> bool {
+        self.live.iter().any(|&l| l)
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub(crate) fn stats(&self) -> ServerStats {
+        self.stats
+    }
+
+    /// Min of the SSP clock over live workers; `u64::MAX` with nobody
+    /// left (the service loop is then about to exit, and a lone joiner
+    /// resumes from its own received count instead).
+    pub(crate) fn min_completed(&self) -> u64 {
         self.completed
             .iter()
             .zip(&self.live)
@@ -73,7 +137,7 @@ impl<'a, S: SparseStore> ServerState<'a, S> {
         let frame = compress_f32(&rows, Codec::F32); // parameters travel exact
         self.metrics.record_pull_payload(rows.len() * 4, frame.len());
         let reply = Message::PullRep(PullReply { worker: req.worker, step: req.step, frame });
-        self.transport.send_to_worker(w, reply.encode())?;
+        self.outbox.push((w, reply));
         self.stats.served_pulls += 1;
         Ok(())
     }
@@ -135,9 +199,9 @@ impl<'a, S: SparseStore> ServerState<'a, S> {
     }
 
     /// A parked step is ready once every live worker's push is in (a
-    /// departed worker's buffered pushes still participate). Fire ready
-    /// steps in ascending order; stop at the first incomplete one so
-    /// worker-order application within a step stays deterministic.
+    /// gracefully departed worker's buffered pushes still participate).
+    /// Fire ready steps in ascending order; stop at the first incomplete
+    /// one so worker-order application within a step stays deterministic.
     fn fire_ready_barriers(&mut self) -> Result<()> {
         while let Some((&step, slot)) = self.barrier.iter().next() {
             let ready = self
@@ -157,88 +221,162 @@ impl<'a, S: SparseStore> ServerState<'a, S> {
         }
         Ok(())
     }
+
+    /// Graceful leave: the worker's buffered barrier pushes still count,
+    /// only its forward clock membership ends.
+    fn on_bye(&mut self, w: usize) -> Result<()> {
+        anyhow::ensure!(self.live[w], "worker {w} said bye twice");
+        self.live[w] = false;
+        // A worker that leaves with a pull in flight abandons it.
+        self.deferred[w] = None;
+        self.epoch += 1;
+        self.metrics.record_leave();
+        // The departing worker leaves the clock/barrier membership:
+        // parked steps may now be complete and parked pulls admissible
+        // for the survivors.
+        if self.staleness == 0 {
+            self.fire_ready_barriers()?;
+        }
+        self.drain_deferred()
+    }
+
+    /// Eviction of a crashed worker: in-flight state (the parked pull and
+    /// any barrier pushes whose step has not fired) is discarded — applied
+    /// pushes are durable, unacknowledged ones are not — then the
+    /// survivors' clock re-derives without the dead worker.
+    fn on_fail(&mut self, w: usize) -> Result<()> {
+        anyhow::ensure!(w < self.live.len(), "fail from unknown worker {w}");
+        anyhow::ensure!(self.live[w], "worker {w} failed after departing");
+        self.live[w] = false;
+        self.deferred[w] = None;
+        for slot in self.barrier.values_mut() {
+            slot.retain(|p| p.worker as usize != w);
+        }
+        self.barrier.retain(|_, slot| !slot.is_empty());
+        self.epoch += 1;
+        self.stats.evictions += 1;
+        self.metrics.record_failure();
+        if self.staleness == 0 {
+            self.fire_ready_barriers()?;
+        }
+        self.drain_deferred()
+    }
+
+    /// (Re)admission: the joiner enters at the survivors' min clock (it
+    /// must not drag the SSP bound backwards), never below its own applied
+    /// count, and is handed a [`Checkpoint`] naming the resume step, the
+    /// new epoch, and the parameter-state bytes the handoff moves.
+    fn on_join(&mut self, w: usize) -> Result<()> {
+        anyhow::ensure!(w < self.live.len(), "join from unknown worker {w}");
+        anyhow::ensure!(!self.live[w], "worker {w} joined while already live");
+        let clock = self.min_completed();
+        let resume = if clock == u64::MAX { self.received[w] } else { self.received[w].max(clock) };
+        self.live[w] = true;
+        self.received[w] = resume;
+        self.completed[w] = resume;
+        self.epoch += 1;
+        self.stats.joins += 1;
+        self.metrics.record_join();
+        let ckpt = Checkpoint {
+            worker: w as u32,
+            epoch: self.epoch,
+            resume_step: resume,
+            bytes: self.ckpt_bytes,
+        };
+        self.outbox.push((w, Message::Ckpt(ckpt)));
+        Ok(())
+    }
+
+    /// Consume one decoded frame from lane `lane`; replies land in the
+    /// outbox ([`Self::take_outbox`]).
+    pub(crate) fn on_message(&mut self, lane: usize, msg: Message) -> Result<()> {
+        match msg {
+            Message::PullReq(req) => {
+                anyhow::ensure!(req.worker as usize == lane, "pull lane/worker mismatch");
+                anyhow::ensure!(
+                    self.deferred[lane].is_none(),
+                    "worker {lane} has two pulls in flight"
+                );
+                if self.admissible(req.step) {
+                    self.serve_pull(req)?;
+                } else {
+                    self.deferred[lane] = Some(req);
+                }
+                Ok(())
+            }
+            Message::Push(p) => {
+                anyhow::ensure!(p.worker as usize == lane, "push lane/worker mismatch");
+                self.on_push(p)
+            }
+            Message::Bye { worker } => {
+                anyhow::ensure!(worker as usize == lane, "bye lane/worker mismatch");
+                self.on_bye(lane)
+            }
+            Message::Fail { worker, .. } => {
+                anyhow::ensure!(worker as usize == lane, "fail lane/worker mismatch");
+                self.on_fail(lane)
+            }
+            Message::Join { worker } => {
+                anyhow::ensure!(worker as usize == lane, "join lane/worker mismatch");
+                self.on_join(lane)
+            }
+            Message::PullRep(_) => anyhow::bail!("pull reply arrived at the server"),
+            Message::Ckpt(_) => anyhow::bail!("checkpoint arrived at the server"),
+        }
+    }
+
+    pub(crate) fn take_outbox(&mut self) -> Vec<(usize, Message)> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// End-of-run flush: land every still-buffered barrier push in
+    /// deterministic `(step, worker)` order (uniform-step workloads leave
+    /// nothing parked — the last barrier fires before the last bye — but a
+    /// ragged workload must still land every acknowledged gradient), and
+    /// assert no pull was abandoned un-served.
+    pub(crate) fn finish(&mut self) -> Result<ServerStats> {
+        let mut leftovers: Vec<PushGrad> =
+            std::mem::take(&mut self.barrier).into_values().flatten().collect();
+        leftovers.sort_by_key(|p| (p.step, p.worker));
+        for p in &leftovers {
+            self.apply_push(p)?;
+        }
+        anyhow::ensure!(
+            self.deferred.iter().all(Option::is_none),
+            "a worker left with a pull still parked"
+        );
+        Ok(self.stats)
+    }
 }
 
-/// Run the service loop until every worker has said bye. Returns the tally;
-/// errors (malformed frames, backend failures, transport hangups) abort the
-/// loop — callers should then shut the transport down so blocked workers
-/// unblock.
+/// Run the service loop until every member has departed. Returns the
+/// tally; errors (malformed frames, backend failures, transport hangups)
+/// abort the loop — callers should then shut the transport down so blocked
+/// workers unblock.
 pub fn serve<S: SparseStore>(
     store: &S,
     transport: &dyn Transport,
     staleness: u64,
+    ckpt_bytes: u64,
     metrics: &CommMetrics,
 ) -> Result<ServerStats> {
     let n = transport.n_workers();
-    let mut st = ServerState {
-        store,
-        transport,
-        metrics,
-        staleness,
-        received: vec![0; n],
-        completed: vec![0; n],
-        live: vec![true; n],
-        deferred: vec![None; n],
-        barrier: BTreeMap::new(),
-        stats: ServerStats::default(),
-    };
-    let mut byes = 0usize;
-    while byes < n {
+    let mut core = ServerCore::new(store, metrics, staleness, ckpt_bytes, n);
+    while core.any_live() {
         let (lane, frame) = transport.recv_at_server()?;
-        match Message::decode(&frame)? {
-            Message::PullReq(req) => {
-                anyhow::ensure!(req.worker as usize == lane, "pull lane/worker mismatch");
-                anyhow::ensure!(
-                    st.deferred[lane].is_none(),
-                    "worker {lane} has two pulls in flight"
-                );
-                if st.admissible(req.step) {
-                    st.serve_pull(req)?;
-                } else {
-                    st.deferred[lane] = Some(req);
-                }
-            }
-            Message::Push(p) => {
-                anyhow::ensure!(p.worker as usize == lane, "push lane/worker mismatch");
-                st.on_push(p)?;
-            }
-            Message::Bye { worker } => {
-                anyhow::ensure!(worker as usize == lane, "bye lane/worker mismatch");
-                anyhow::ensure!(st.live[lane], "worker {lane} said bye twice");
-                st.live[lane] = false;
-                // A worker that dies with a pull in flight abandons it.
-                st.deferred[lane] = None;
-                byes += 1;
-                // The departing worker leaves the clock/barrier membership:
-                // parked steps may now be complete and parked pulls
-                // admissible for the survivors.
-                if st.staleness == 0 {
-                    st.fire_ready_barriers()?;
-                }
-                st.drain_deferred()?;
-            }
-            Message::PullRep(_) => anyhow::bail!("pull reply arrived at the server"),
+        core.on_message(lane, Message::decode(&frame)?)?;
+        for (w, reply) in core.take_outbox() {
+            transport.send_to_worker(w, reply.encode())?;
         }
     }
-    // Uniform-step workloads leave nothing parked: the last barrier fires
-    // before the last bye. Flush defensively (deterministic order) so a
-    // ragged workload still lands every gradient.
-    let mut leftovers: Vec<PushGrad> =
-        std::mem::take(&mut st.barrier).into_values().flatten().collect();
-    leftovers.sort_by_key(|p| (p.step, p.worker));
-    for p in &leftovers {
-        st.apply_push(p)?;
-    }
-    anyhow::ensure!(
-        st.deferred.iter().all(Option::is_none),
-        "a worker left with a pull still parked"
-    );
-    Ok(st.stats)
+    core.finish()
 }
 
 #[cfg(test)]
 mod tests {
     // The service loop is exercised end-to-end (threads, transport,
     // barriers, deferral) by the engine tests in `super::engine` and the
-    // cross-backend integration tests in `rust/tests/comm_fabric.rs`.
+    // cross-backend integration tests in `rust/tests/comm_fabric.rs`; the
+    // membership paths (fail/join/checkpoint) by the virtual-clock engine
+    // tests in `super::membership` and `rust/tests/comm_chaos.rs`.
 }

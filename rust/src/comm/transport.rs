@@ -11,8 +11,62 @@
 use super::link::LinkSpec;
 use super::metrics::CommMetrics;
 use anyhow::Result;
-use std::sync::mpsc;
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which way a frame was traveling when the fabric failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Server→worker (a pull reply or checkpoint on the downlink).
+    Down,
+    /// Worker→server (a pull request, push, or control frame).
+    Up,
+}
+
+impl std::fmt::Display for Direction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Direction::Down => "downlink",
+            Direction::Up => "uplink",
+        })
+    }
+}
+
+/// Typed transport failure: names the worker, the SSP step it was on
+/// (when the caller knows it), and the direction — so a hung or dead
+/// server surfaces as a diagnosable fault, not a generic "hung up".
+/// The engine still prefers the server's own root-cause error over these
+/// derivative worker-side errors (see `engine::run_async`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FabricError {
+    /// The peer's channel closed: it exited, cleanly or not.
+    Hangup { worker: usize, step: Option<u64>, direction: Direction },
+    /// No frame arrived within the bounded receive window, despite
+    /// `attempts` timed waits with exponential backoff.
+    Timeout { worker: usize, step: Option<u64>, direction: Direction, waited_ms: u64, attempts: u32 },
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let step = |s: &Option<u64>| match s {
+            Some(t) => format!(" at step {t}"),
+            None => String::new(),
+        };
+        match self {
+            FabricError::Hangup { worker, step: s, direction } => {
+                write!(f, "server hung up on worker {worker}{} ({direction})", step(s))
+            }
+            FabricError::Timeout { worker, step: s, direction, waited_ms, attempts } => write!(
+                f,
+                "worker {worker}{} timed out after {waited_ms} ms / {attempts} waits ({direction})",
+                step(s)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
 
 /// A worker↔server message fabric. Implementations must be safe to share
 /// across the server thread and every worker thread.
@@ -35,6 +89,15 @@ type UpFrame = (usize, Vec<u8>);
 /// Closable sender lane (taken on shutdown so receivers observe hangup).
 type Lane<T> = Mutex<Option<mpsc::Sender<T>>>;
 
+/// Default bounded wait for a pull reply: generous enough that a healthy
+/// in-process server (or an emulated wire) never trips it, small enough
+/// that a wedged server turns into a typed [`FabricError::Timeout`]
+/// instead of an eternally parked worker thread.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
+/// First retry backoff; doubles per timed-out wait up to [`MAX_BACKOFF`].
+const INITIAL_BACKOFF: Duration = Duration::from_millis(1);
+const MAX_BACKOFF: Duration = Duration::from_millis(250);
+
 /// In-process channel transport with link-modeled accounting.
 pub struct ChannelTransport {
     links: Vec<LinkSpec>,
@@ -44,6 +107,8 @@ pub struct ChannelTransport {
     /// downlink frames, never on the server thread — so measured
     /// wall-clock includes the wire (off by default: accounting only).
     emulate_wire: bool,
+    /// Total bounded wait per worker-side receive (see `recv_reply`).
+    recv_timeout: Duration,
     up_tx: Vec<Lane<UpFrame>>,
     up_rx: Mutex<mpsc::Receiver<UpFrame>>,
     down_tx: Vec<Lane<Vec<u8>>>,
@@ -69,10 +134,65 @@ impl ChannelTransport {
             links,
             metrics,
             emulate_wire,
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
             up_tx,
             up_rx: Mutex::new(up_recv),
             down_tx,
             down_rx,
+        }
+    }
+
+    /// Override the bounded worker-side receive window (tests mostly).
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
+        self.recv_timeout = timeout;
+        self
+    }
+
+    /// Worker side: bounded receive of worker `w`'s pull reply for SSP
+    /// step `step`. Waits in exponentially backed-off slices up to the
+    /// transport's receive window; a dead server yields a typed
+    /// [`FabricError::Hangup`] immediately, a hung one a typed
+    /// [`FabricError::Timeout`] — both naming the worker, step, and
+    /// direction.
+    pub fn recv_reply(&self, w: usize, step: u64) -> Result<Vec<u8>> {
+        self.recv_bounded(w, Some(step))
+    }
+
+    fn recv_bounded(&self, w: usize, step: Option<u64>) -> Result<Vec<u8>> {
+        let rx = self.down_rx[w].lock().unwrap();
+        let mut waited = Duration::ZERO;
+        let mut backoff = INITIAL_BACKOFF;
+        let mut attempts = 0u32;
+        loop {
+            if waited >= self.recv_timeout {
+                return Err(FabricError::Timeout {
+                    worker: w,
+                    step,
+                    direction: Direction::Down,
+                    waited_ms: waited.as_millis() as u64,
+                    attempts,
+                }
+                .into());
+            }
+            let slice = backoff.min(self.recv_timeout - waited);
+            attempts += 1;
+            match rx.recv_timeout(slice) {
+                Ok(frame) => {
+                    // Delivery delay of the downlink frame, paid on the
+                    // worker's own clock (already recorded by the sender;
+                    // do not account twice).
+                    self.emulate(self.links[w].transfer_secs(frame.len()));
+                    return Ok(frame);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(FabricError::Hangup { worker: w, step, direction: Direction::Down }
+                        .into());
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    waited += slice;
+                    backoff = (backoff * 2).min(MAX_BACKOFF);
+                }
+            }
         }
     }
 
@@ -142,15 +262,7 @@ impl Transport for ChannelTransport {
     }
 
     fn recv_at_worker(&self, w: usize) -> Result<Vec<u8>> {
-        let frame = self.down_rx[w]
-            .lock()
-            .unwrap()
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server hung up"))?;
-        // Delivery delay of the downlink frame, paid on the worker's own
-        // clock (already recorded by the sender; do not account twice).
-        self.emulate(self.links[w].transfer_secs(frame.len()));
-        Ok(frame)
+        self.recv_bounded(w, None)
     }
 
     fn link(&self, w: usize) -> &LinkSpec {
@@ -195,6 +307,38 @@ mod tests {
         t.shutdown_workers();
         assert!(t.recv_at_worker(0).is_err());
         assert!(t.send_to_worker(0, vec![0]).is_err());
+    }
+
+    #[test]
+    fn dead_server_yields_a_typed_hangup_naming_worker_step_and_direction() {
+        let (t, _) = transport(2);
+        t.shutdown_workers();
+        let err = t.recv_reply(1, 7).unwrap_err();
+        let fab = err.downcast_ref::<FabricError>().expect("typed transport error");
+        assert_eq!(
+            *fab,
+            FabricError::Hangup { worker: 1, step: Some(7), direction: Direction::Down }
+        );
+        let msg = format!("{fab}");
+        assert!(msg.contains("worker 1") && msg.contains("step 7") && msg.contains("downlink"));
+    }
+
+    #[test]
+    fn hung_server_yields_a_typed_timeout_after_backed_off_retries() {
+        let (t, _) = transport(1);
+        // Nothing ever sent: the sender end is alive (held by the
+        // transport) but silent — the hung-server regime.
+        let t = t.with_recv_timeout(Duration::from_millis(20));
+        let err = t.recv_reply(0, 3).unwrap_err();
+        match err.downcast_ref::<FabricError>() {
+            Some(FabricError::Timeout { worker: 0, step: Some(3), direction: Direction::Down, waited_ms, attempts }) => {
+                assert!(*waited_ms >= 20, "waited {waited_ms} ms");
+                // 1+2+4+8+... ms backoff slices: several attempts, not a
+                // single blocking wait.
+                assert!(*attempts >= 3, "attempts {attempts}");
+            }
+            other => panic!("expected a typed timeout, got {other:?}"),
+        }
     }
 
     #[test]

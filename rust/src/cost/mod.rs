@@ -388,6 +388,27 @@ pub fn layer_sync_bytes(layer: &crate::model::LayerSpec, batch: u64) -> f64 {
     }
 }
 
+/// Checkpoint + restore wall seconds the cluster charges a preempted
+/// job: the model's full parameter state crosses the wire twice — out to
+/// the CPU-hosted checkpoint store when the job is paused, back when it
+/// is re-admitted — priced over the comm fabric's
+/// [`LinkSpec`](crate::comm::link::LinkSpec) between the slowest-linked
+/// resource type the job's plan occupies and the checkpoint host (the
+/// pool's CPU type when present, else type 0). This is the same
+/// parameter-size x link-bandwidth pricing the SSP membership engine
+/// charges a rejoining worker's `Ckpt` frame, so preemption in the
+/// cluster sim and worker recovery in the comm fabric pay one bill.
+pub fn ckpt_restore_secs(model: &ModelSpec, pool: &ResourcePool, plan: &SchedulingPlan) -> f64 {
+    use crate::comm::link::LinkSpec;
+    let host = pool.cpu_type().unwrap_or_else(|| pool.get(0));
+    let bytes = model.total_weight_bytes() as usize;
+    let mut worst = 0.0f64;
+    for &t in &plan.assignment {
+        worst = worst.max(LinkSpec::between(pool.get(t), host).transfer_secs(bytes));
+    }
+    2.0 * worst
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -396,6 +417,25 @@ mod tests {
 
     fn fixture() -> (ModelSpec, ResourcePool) {
         (zoo::ctrdnn(), paper_testbed())
+    }
+
+    #[test]
+    fn ckpt_restore_prices_parameter_bytes_over_the_slowest_link() {
+        let (m, p) = fixture();
+        let nl = m.num_layers();
+        let intra = ckpt_restore_secs(&m, &p, &SchedulingPlan::uniform(nl, 0));
+        let cross = ckpt_restore_secs(&m, &p, &SchedulingPlan::uniform(nl, 1));
+        assert!(intra > 0.0);
+        assert!(cross > intra, "cross-kind restore pays the backbone derate");
+        // Twice the one-way transfer of the full parameter state.
+        let host = p.cpu_type().expect("testbed has a CPU type");
+        let link = crate::comm::link::LinkSpec::between(p.get(1), host);
+        let expect = 2.0 * link.transfer_secs(m.total_weight_bytes() as usize);
+        assert!((cross - expect).abs() < 1e-12);
+        // A mixed plan prices at its slowest link.
+        let mut mixed = SchedulingPlan::uniform(nl, 0);
+        mixed.assignment[0] = 1;
+        assert_eq!(ckpt_restore_secs(&m, &p, &mixed).to_bits(), cross.to_bits());
     }
 
     #[test]

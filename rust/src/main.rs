@@ -141,7 +141,13 @@ fn cli() -> Cli {
                     OptSpec { name: "types", help: "number of resource types (>=1; type 0 is CPU unless --no-cpu)", takes_value: true, default: Some("2") },
                     OptSpec { name: "no-cpu", help: "exclude the CPU type from the pool", takes_value: false, default: None },
                     OptSpec { name: "seed", help: "workload + init seed", takes_value: true, default: Some("42") },
-                ],
+                    OptSpec { name: "faults", help: "run the deterministic virtual-clock membership engine under a fault plan: none | seed:<n> | trace:<name> | kill:<w>@<s>,restart:<w>@<c>,slow:<w>@<s>+<n>x<f>", takes_value: true, default: None },
+                    OptSpec { name: "recovery-window", help: "failure-detector eviction window in virtual seconds (fault runs only)", takes_value: true, default: Some("0.05") },
+                ]
+                .into_iter()
+                .chain(trace())
+                .chain(metrics_out())
+                .collect(),
                 positionals: vec![],
             },
             CmdSpec {
@@ -413,7 +419,47 @@ fn main() {
                 let pool = heterps::cli::pool_from_args(&args, None)?;
                 let shards = args.usize_or("shards", 16)?;
                 let lr = args.f64_or("lr", 0.3)? as f32;
-                run_comm(&cfg, &pool, shards, lr, args.flag("tiered"))?;
+                match args.get("faults") {
+                    Some(spec) => {
+                        anyhow::ensure!(
+                            !args.flag("tiered"),
+                            "--faults drives the virtual-clock engine on the in-memory store; drop --tiered"
+                        );
+                        let mut plan = heterps::comm::FaultPlan::parse(
+                            spec,
+                            cfg.workers,
+                            cfg.steps,
+                            cfg.seed,
+                        )?;
+                        plan.recovery_window_secs =
+                            args.f64_or("recovery-window", plan.recovery_window_secs)?;
+                        let (tracer, trace_sink) = tracer_from_args(&args)?;
+                        run_comm_faults(
+                            &cfg,
+                            &pool,
+                            shards,
+                            lr,
+                            &plan,
+                            &tracer,
+                            args.get("metrics-out"),
+                        )?;
+                        write_trace(&tracer, trace_sink.as_ref())?;
+                    }
+                    None => {
+                        anyhow::ensure!(
+                            args.get("trace-out").is_none(),
+                            "--trace-out needs the virtual-clock engine; add `--faults none` for a fixed-membership trace"
+                        );
+                        run_comm(
+                            &cfg,
+                            &pool,
+                            shards,
+                            lr,
+                            args.flag("tiered"),
+                            args.get("metrics-out"),
+                        )?;
+                    }
+                }
                 Ok(())
             }
             "cluster" => {
@@ -1091,6 +1137,7 @@ fn run_comm(
     shards: usize,
     lr: f32,
     tiered: bool,
+    metrics_out: Option<&str>,
 ) -> anyhow::Result<()> {
     use heterps::train::{ParamServer, TieredParamServer};
 
@@ -1098,7 +1145,7 @@ fn run_comm(
         use std::sync::atomic::{AtomicU64, Ordering};
         static SEQ: AtomicU64 = AtomicU64::new(0);
         let base = std::env::temp_dir().join(format!("heterps-comm-{}", std::process::id()));
-        let result = drive_comm(cfg, pool, || {
+        let result = drive_comm(cfg, pool, metrics_out, || {
             let dir = base.join(SEQ.fetch_add(1, Ordering::Relaxed).to_string());
             TieredParamServer::new(dir, cfg.dim, 4096, lr, cfg.seed)
         });
@@ -1107,8 +1154,86 @@ fn run_comm(
         let _ = std::fs::remove_dir_all(&base);
         result
     } else {
-        drive_comm(cfg, pool, || Ok(ParamServer::new(cfg.dim, shards, lr, cfg.seed)))
+        drive_comm(cfg, pool, metrics_out, || {
+            Ok(ParamServer::new(cfg.dim, shards, lr, cfg.seed))
+        })
     }
+}
+
+/// `heterps comm --faults`: replay the same deterministic workload
+/// through the virtual-clock membership engine under a fault plan.
+/// Everything on stdout derives from the virtual clock, so two runs of
+/// the same (config, plan) are bit-identical; wall-clock chatter goes to
+/// stderr under the `[wall]` prefix. An empty plan at `--staleness 0`
+/// must still match the synchronous reference digest — the no-fault
+/// path through the membership engine is not allowed to drift.
+fn run_comm_faults(
+    cfg: &heterps::comm::CommConfig,
+    pool: &heterps::resources::ResourcePool,
+    shards: usize,
+    lr: f32,
+    plan: &heterps::comm::FaultPlan,
+    tracer: &heterps::obs::Tracer,
+    metrics_out: Option<&str>,
+) -> anyhow::Result<()> {
+    use heterps::comm::{run_membership, run_sync_reference};
+    use heterps::train::ParamServer;
+
+    let wall = std::time::Instant::now();
+    let store = ParamServer::new(cfg.dim, shards, lr, cfg.seed);
+    let report = run_membership(cfg, pool, &store, plan, tracer)?;
+    eprintln!("[wall] membership run finished in {:.3} s", wall.elapsed().as_secs_f64());
+    println!(
+        "membership run: {} workers, {} steps, staleness {}, codec {}",
+        cfg.workers,
+        cfg.steps,
+        cfg.staleness,
+        cfg.codec.name()
+    );
+    println!("fault plan    : {}", plan.summary());
+    println!("virtual time  : {:.6} s", report.virtual_secs);
+    println!("throughput    : {:>9.0} samples/s (virtual)", report.throughput);
+    println!("digest        : {:016x}", report.digest);
+    println!(
+        "membership    : epoch {} (joins {}, evictions {}, leaves {})",
+        report.epoch, report.server.joins, report.server.evictions, report.snapshot.leaves
+    );
+    println!("recovery time : {:.6} s", report.snapshot.recovery_secs);
+    println!();
+    println!("{}", report.snapshot.table("Comm fabric metrics (membership run)").render());
+    if plan.is_empty() && cfg.staleness == 0 {
+        let sync_store = ParamServer::new(cfg.dim, shards, lr, cfg.seed);
+        let sync = run_sync_reference(cfg, &sync_store)?;
+        anyhow::ensure!(
+            report.digest == sync.digest,
+            "an empty fault plan at staleness 0 must reproduce the synchronous reference bit-for-bit \
+             (membership {:016x} vs sync {:016x})",
+            report.digest,
+            sync.digest
+        );
+        println!("[comm] empty plan at staleness 0 verified bit-identical to the synchronous reference");
+    }
+    write_comm_metrics(&report.snapshot, metrics_out)?;
+    Ok(())
+}
+
+/// `--metrics-out` for both comm paths: membership counters plus the
+/// wire totals, in the same registry format the cluster subcommand
+/// emits.
+fn write_comm_metrics(
+    snapshot: &heterps::comm::CommSnapshot,
+    metrics_out: Option<&str>,
+) -> anyhow::Result<()> {
+    if let Some(path) = metrics_out {
+        let mut reg = heterps::obs::MetricsRegistry::new();
+        reg.observe_count("comm.joins", snapshot.joins);
+        reg.observe_count("comm.leaves", snapshot.leaves);
+        reg.observe_count("comm.failures", snapshot.failures);
+        reg.observe_gauge("comm.recovery_secs", snapshot.recovery_secs);
+        reg.write_json(std::path::Path::new(path))?;
+        eprintln!("[wall] wrote metrics to {path}");
+    }
+    Ok(())
 }
 
 /// Run the async engine and the synchronous reference on fresh same-seed
@@ -1116,6 +1241,7 @@ fn run_comm(
 fn drive_comm<S: heterps::train::SparseStore>(
     cfg: &heterps::comm::CommConfig,
     pool: &heterps::resources::ResourcePool,
+    metrics_out: Option<&str>,
     mk_store: impl Fn() -> anyhow::Result<S>,
 ) -> anyhow::Result<()> {
     use heterps::comm::{analytic_comm_check, run_async, run_sync_reference};
@@ -1158,6 +1284,7 @@ fn drive_comm<S: heterps::train::SparseStore>(
         );
         println!("[comm] staleness 0 verified bit-identical to the synchronous reference");
     }
+    write_comm_metrics(&report.snapshot, metrics_out)?;
     Ok(())
 }
 

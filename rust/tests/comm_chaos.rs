@@ -1,0 +1,203 @@
+//! Chaos propcheck suite for the membership engine: randomized seeded
+//! [`FaultPlan`]s across worker counts and staleness bounds must replay
+//! bit-identically, survivors must converge, killing every worker but
+//! one must not deadlock the barrier, an empty plan must match the
+//! fixed-membership engine, and trace-derived `pool_frac` plans must
+//! drive real evictions and recoveries.
+
+use heterps::comm::{
+    run_membership, run_sync_reference, CommConfig, FaultEvent, FaultPlan, MembershipReport,
+};
+use heterps::data::compress::Codec;
+use heterps::obs::Tracer;
+use heterps::resources::paper_testbed;
+use heterps::train::ParamServer;
+
+fn cfg(workers: usize, staleness: u64, codec: Codec) -> CommConfig {
+    CommConfig {
+        workers,
+        steps: 6,
+        rows: 8,
+        slots: 4,
+        dim: 8,
+        vocab: 300,
+        staleness,
+        codec,
+        compute_ms: 0.0,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn store(c: &CommConfig) -> ParamServer {
+    ParamServer::new(c.dim, 8, 0.3, c.seed)
+}
+
+fn run(c: &CommConfig, plan: &FaultPlan) -> MembershipReport {
+    let pool = paper_testbed();
+    let s = store(c);
+    run_membership(c, &pool, &s, plan, &Tracer::disabled()).expect("membership run")
+}
+
+fn assert_bit_identical(a: &MembershipReport, b: &MembershipReport, ctx: &str) {
+    assert_eq!(a.digest, b.digest, "{ctx}: digest");
+    assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits(), "{ctx}: virtual clock");
+    assert_eq!(a.server, b.server, "{ctx}: server stats");
+    assert_eq!(a.epoch, b.epoch, "{ctx}: epoch");
+    assert_eq!(a.samples, b.samples, "{ctx}: samples");
+    assert_eq!(
+        a.snapshot.recovery_secs.to_bits(),
+        b.snapshot.recovery_secs.to_bits(),
+        "{ctx}: recovery time"
+    );
+    assert_eq!(
+        (a.snapshot.joins, a.snapshot.leaves, a.snapshot.failures),
+        (b.snapshot.joins, b.snapshot.leaves, b.snapshot.failures),
+        "{ctx}: membership counters"
+    );
+}
+
+#[test]
+fn random_seeded_plans_replay_bit_identically_and_survivors_converge() {
+    for workers in [3usize, 4] {
+        for staleness in [0u64, 2] {
+            for plan_seed in 0u64..6 {
+                let c = cfg(workers, staleness, Codec::SparseF16);
+                let plan = FaultPlan::seeded(plan_seed, c.workers, c.steps);
+                let ctx = format!("w{workers}/s{staleness}/seed{plan_seed}");
+                let a = run(&c, &plan);
+                let b = run(&c, &plan);
+                assert_bit_identical(&a, &b, &ctx);
+                // Worker 0 is always spared by seeded plans: at least its
+                // full stream of pushes survives whatever the plan does
+                // to the rest, and the table genuinely trained.
+                assert!(
+                    a.server.applied_pushes >= c.steps as u64,
+                    "{ctx}: survivors applied {} < {} pushes",
+                    a.server.applied_pushes,
+                    c.steps
+                );
+                assert!(a.digest != 0, "{ctx}: degenerate digest");
+                assert!(a.virtual_secs > 0.0, "{ctx}: no virtual time elapsed");
+                // Metric coherence: every eviction is a failure tick and
+                // every rejoin handoff accrues recovery time.
+                assert_eq!(a.snapshot.failures, a.server.evictions, "{ctx}: failures");
+                assert_eq!(a.snapshot.joins, a.server.joins, "{ctx}: joins");
+                if a.server.joins > 0 {
+                    assert!(a.snapshot.recovery_secs > 0.0, "{ctx}: free recovery");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn killing_all_but_one_worker_neither_deadlocks_nor_drops_durable_pushes() {
+    for staleness in [0u64, 2] {
+        let c = cfg(4, staleness, Codec::SparseF16);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Kill { worker: 1, at_step: 1 },
+                FaultEvent::Kill { worker: 2, at_step: 2 },
+                FaultEvent::Kill { worker: 3, at_step: 3 },
+            ],
+            ..Default::default()
+        };
+        let r = run(&c, &plan);
+        assert_eq!(r.server.evictions, 3, "staleness {staleness}: evictions");
+        assert_eq!(r.server.joins, 0, "staleness {staleness}: no restarts scripted");
+        // Only the lone survivor says a graceful goodbye.
+        assert_eq!(r.snapshot.leaves, 1, "staleness {staleness}: leaves");
+        // Worker 0 runs every step; workers 1..3 land exactly the pushes
+        // for the steps they completed before their scripted kill.
+        assert_eq!(
+            r.server.applied_pushes,
+            (c.steps + 1 + 2 + 3) as u64,
+            "staleness {staleness}: durable pushes"
+        );
+        // Epoch = 1 bye + 3 evictions on top of the starting membership.
+        assert_eq!(r.epoch, 4, "staleness {staleness}: epoch");
+    }
+}
+
+#[test]
+fn empty_plan_is_bit_identical_to_the_fixed_membership_engine() {
+    for staleness in [0u64, 2] {
+        for codec in [Codec::F32, Codec::SparseF16] {
+            let c = cfg(3, staleness, codec);
+            let ctx = format!("s{staleness}/{codec:?}");
+            let a = run(&c, &FaultPlan::empty());
+            let b = run(&c, &FaultPlan::empty());
+            assert_bit_identical(&a, &b, &ctx);
+            assert_eq!(a.server.evictions, 0, "{ctx}: phantom eviction");
+            assert_eq!(a.snapshot.recovery_secs, 0.0, "{ctx}: phantom recovery");
+            assert_eq!(
+                a.server.applied_pushes,
+                (c.workers * c.steps) as u64,
+                "{ctx}: every push lands"
+            );
+            if staleness == 0 {
+                // No faults + barrier = the synchronous reference, and the
+                // threaded engine's own staleness-0 contract ties it to
+                // `run_async` as well.
+                let sync = run_sync_reference(&c, &store(&c)).unwrap();
+                assert_eq!(a.digest, sync.digest, "{ctx}: sync reference digest");
+                assert_eq!(a.server.applied_pushes, sync.server.applied_pushes, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn slow_only_plans_stretch_the_clock_but_not_the_barrier_digest() {
+    // A straggler changes *when* pushes land, never *what* is applied at
+    // staleness 0 — the barrier fixes the application order, so the
+    // digest must match the synchronous reference with or without slow
+    // faults while the virtual clock visibly stretches.
+    for plan_seed in 0u64..4 {
+        let c = CommConfig { compute_ms: 1.0, ..cfg(3, 0, Codec::F32) };
+        let slow = FaultPlan {
+            events: vec![FaultEvent::Slow {
+                worker: (plan_seed as usize) % c.workers,
+                from_step: 1,
+                steps: 3,
+                factor: 4.0 + plan_seed as f64,
+            }],
+            ..Default::default()
+        };
+        let baseline = run(&c, &FaultPlan::empty());
+        let stretched = run(&c, &slow);
+        let sync = run_sync_reference(&c, &store(&c)).unwrap();
+        assert_eq!(stretched.digest, sync.digest, "seed {plan_seed}: digest drifted");
+        assert_eq!(stretched.digest, baseline.digest, "seed {plan_seed}");
+        assert!(
+            stretched.virtual_secs > baseline.virtual_secs,
+            "seed {plan_seed}: a {}x straggler must stretch virtual time \
+             ({} !> {})",
+            4.0 + plan_seed as f64,
+            stretched.virtual_secs,
+            baseline.virtual_secs
+        );
+    }
+}
+
+#[test]
+fn trace_derived_pool_fracs_drive_evictions_and_recoveries() {
+    // The elastic wiring: a diurnal `pool_frac` trace shrinks membership
+    // in its trough and restores it on the way back up, which must show
+    // up as real evictions, rejoins, and paid recovery time — and the
+    // whole derived run must replay bit-identically.
+    let c = CommConfig { steps: 12, ..cfg(4, 1, Codec::SparseF16) };
+    let plan = FaultPlan::parse("trace:diurnal", c.workers, c.steps, c.seed).unwrap();
+    assert!(!plan.is_empty(), "diurnal trough must derive kills");
+    let a = run(&c, &plan);
+    let b = run(&c, &plan);
+    assert_bit_identical(&a, &b, "trace:diurnal");
+    assert!(a.server.evictions >= 1, "trough must evict");
+    assert!(a.server.joins >= 1, "ramp back up must rejoin");
+    assert!(a.snapshot.recovery_secs > 0.0, "rejoin handoff must cost time");
+    // A flat trace derives the empty plan and stays on the no-fault path.
+    let flat = FaultPlan::parse("trace:ramp", c.workers, c.steps, c.seed).unwrap();
+    assert!(flat.is_empty(), "ramp keeps pool_frac at 1.0");
+    assert_eq!(run(&c, &flat).digest, run(&c, &FaultPlan::empty()).digest);
+}

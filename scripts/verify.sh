@@ -127,9 +127,54 @@ echo "   -- tiered backend, staleness 0"
 "$BIN" comm --workers 3 --steps 6 --rows 16 --slots 4 --dim 8 \
   --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 0 --tiered >/dev/null
 
+echo "== comm fault smoke: membership engine, seeded plan diffed across reruns"
+FAULT_TMP="$(mktemp -d)"
+trap 'rm -rf "$EVAL_TMP" "$FAULT_TMP"' EXIT
+# The membership engine runs on a virtual clock, so its whole report —
+# digests, epochs, recovery time — must agree byte-for-byte across reruns
+# once [wall] lines are stripped.
+for run in a b; do
+  "$BIN" comm --workers 4 --steps 8 --rows 16 --slots 4 --dim 8 \
+    --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 2 \
+    --faults seed:7 \
+    2>/dev/null | grep -v '^\[wall\]' > "$FAULT_TMP/seeded.$run.txt"
+done
+if ! diff -u "$FAULT_TMP/seeded.a.txt" "$FAULT_TMP/seeded.b.txt"; then
+  echo "error: seeded fault run is not bit-deterministic across reruns" >&2
+  exit 1
+fi
+# An empty plan must be the fixed-membership engine in disguise: the binary
+# asserts the staleness-0 digest equals the synchronous reference (the same
+# anchor the threaded fault-free path is checked against), and the run must
+# also be bit-stable across reruns.
+for run in a b; do
+  "$BIN" comm --workers 3 --steps 8 --rows 16 --slots 4 --dim 8 \
+    --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 0 \
+    --faults none \
+    2>/dev/null | grep -v '^\[wall\]' > "$FAULT_TMP/nofault.$run.txt"
+done
+if ! diff -u "$FAULT_TMP/nofault.a.txt" "$FAULT_TMP/nofault.b.txt"; then
+  echo "error: no-fault membership run is not bit-deterministic across reruns" >&2
+  exit 1
+fi
+if ! grep -q 'verified bit-identical to the synchronous reference' "$FAULT_TMP/nofault.a.txt"; then
+  echo "error: no-fault membership run did not verify against the fault-free digest" >&2
+  exit 1
+fi
+# Membership counters land in the metrics registry via --metrics-out.
+"$BIN" comm --workers 4 --steps 8 --rows 16 --slots 4 --dim 8 \
+  --vocab 2000 --compute-ms 0 --codec sparsef16 --staleness 2 \
+  --faults seed:7 --metrics-out "$FAULT_TMP/comm.json" >/dev/null 2>/dev/null
+for key in comm.joins comm.leaves comm.failures comm.recovery_secs; do
+  if ! grep -q "\"$key\"" "$FAULT_TMP/comm.json"; then
+    echo "error: comm --metrics-out is missing counter $key" >&2
+    exit 1
+  fi
+done
+
 echo "== cluster smoke: 4-job mix, every policy, bit-determinism across reruns"
 CLUSTER_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$FAULT_TMP"' EXIT
 for policy in fifo srtf drf-cost; do
   echo "   -- policy $policy"
   "$BIN" cluster --jobs 4 --mix uniform --policy "$policy" --method greedy \
@@ -147,7 +192,7 @@ echo "   -- tight mix, all policies (contention + preemption path)"
 
 echo "== serve smoke: JSONL stream served twice + probe run, diffed modulo [wall]"
 SERVE_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$FAULT_TMP" "$SERVE_TMP"' EXIT
 # Generate a small steady stream and persist it as the replayable JSONL.
 "$BIN" serve --mix steady --jobs 40 --arrival-seed 7 --budget-evals 32 \
   --emit-stream "$SERVE_TMP/stream.jsonl" >/dev/null 2>/dev/null
@@ -174,7 +219,7 @@ fi
 
 echo "== trace smoke: --trace-out is inert, deterministic, and lint-clean"
 TRACE_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$TRACE_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$FAULT_TMP" "$SERVE_TMP" "$TRACE_TMP"' EXIT
 # schedule: tracing must not change the report (modulo the wall-clock line).
 "$BIN" schedule greedy --model ctrdnn --types 2 --budget-evals 100 \
   2>/dev/null | grep -v "sched time" > "$TRACE_TMP/sched.off.txt"
@@ -305,7 +350,7 @@ fi
 
 echo "== calibrate smoke: fit, reload, and the identity bit-identity contract"
 CALIB_TMP="$(mktemp -d)"
-trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$SERVE_TMP" "$TRACE_TMP" "$CALIB_TMP"' EXIT
+trap 'rm -rf "$CLUSTER_TMP" "$EVAL_TMP" "$FAULT_TMP" "$SERVE_TMP" "$TRACE_TMP" "$CALIB_TMP"' EXIT
 "$BIN" calibrate --model ctrdnn --types 2 --sweep-seeds 2 --budget-evals 48 \
   --out "$CALIB_TMP/calib.toml"
 if [ ! -s "$CALIB_TMP/calib.toml" ]; then
